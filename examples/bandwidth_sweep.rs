@@ -1,0 +1,52 @@
+//! Bandwidth sweep (the supplementary Figure 9 scenario, as an API demo):
+//! how does the warmup vs compression stage step time move as the
+//! interconnect degrades from 100 Gb InfiniBand to 50 Mb shaped Ethernet?
+//!
+//!     cargo run --release --example bandwidth_sweep [-- --gpus 256]
+
+use onebit_adam::metrics::Table;
+use onebit_adam::netsim::collectives::{
+    compressed_allreduce_time, fp16_allreduce_time,
+};
+use onebit_adam::netsim::{ComputeModel, NetworkModel};
+use onebit_adam::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let gpus = args.usize_or("gpus", 256).unwrap_or(256);
+    let params = args.usize_or("params", 340_000_000).unwrap_or(340_000_000);
+    let compute = ComputeModel::bert_large_v100();
+
+    println!(
+        "step time vs interconnect — {gpus} GPUs, {}M params",
+        params / 1_000_000
+    );
+    let mut t = Table::new(&[
+        "network", "adam step", "1bit step", "speedup", "adam samples/s",
+        "1bit samples/s",
+    ]);
+    let nets: Vec<(String, NetworkModel)> = vec![
+        ("infiniband-100G".into(), NetworkModel::infiniband()),
+        ("ethernet-40G(4.1eff)".into(), NetworkModel::ethernet()),
+        ("tcp-10G".into(), NetworkModel::tcp(10.0)),
+        ("tcp-1G".into(), NetworkModel::tcp(1.0)),
+        ("shaped-200Mbit".into(), NetworkModel::shaped_ethernet(200e6)),
+        ("shaped-50Mbit".into(), NetworkModel::shaped_ethernet(50e6)),
+    ];
+    for (name, net) in nets {
+        let adam =
+            compute.step_compute(1) + fp16_allreduce_time(&net, gpus, params);
+        let onebit = compute.step_compute(1)
+            + compressed_allreduce_time(&net, gpus, params);
+        let batch = (gpus * 16) as f64;
+        t.row(&[
+            name,
+            format!("{adam:.2}s"),
+            format!("{onebit:.2}s"),
+            format!("{:.2}x", adam / onebit),
+            format!("{:.0}", batch / adam),
+            format!("{:.0}", batch / onebit),
+        ]);
+    }
+    println!("{}", t.render());
+}

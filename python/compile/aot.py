@@ -1,0 +1,221 @@
+"""AOT lowering: JAX/Pallas entry points → HLO text + manifest.json.
+
+This is the *only* place Python runs — once, at build time.  The Rust
+coordinator loads ``artifacts/manifest.json`` plus the referenced
+``*.hlo.txt`` files and never imports Python again.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--sizes lm-tiny,lm-small]
+                          [--with-100m]
+
+Artifacts per LM size ``S`` with parameter count ``P`` and batch ``B``:
+
+    lm_train_step_<S>   (params[P], tokens[B,T] i32, targets[B,T] i32)
+                        → (loss[], grads[P])
+    adam_step_<P>       (p[P], m[P], v[P], g[P], lr[1]) → (p', m', v')
+    onebit_compress_<P> (val[P], err[P]) → (quantized[P], new_err[P], scale[])
+    momentum_update_<P> (m[P], g[P]) → m'[P]
+    precond_step_<P>    (p[P], m_agg[P], v_frozen[P], lr[1]) → p'[P]
+
+plus the CNN classifier and GAN steps (fixed sizes) and a small
+``N=65536`` optimizer-kernel set used by tests and micro-benches.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import adam_step as K_adam
+from .kernels import momentum as K_mom
+from .kernels import onebit as K_ob
+
+# Default per-size batch shapes for the lowered train steps.  The batch is a
+# *microbatch per worker*; the Rust coordinator owns gradient accumulation
+# and data parallelism.
+LM_BATCH = {"lm-tiny": 8, "lm-small": 8, "lm-med": 4, "lm-base": 2,
+            "lm-100m": 2}
+CNN_BATCH = 64
+GAN_BATCH = 64
+KERNEL_TEST_N = 65536
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+class Exporter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name, fn, arg_specs, outputs, meta=None):
+        """Lower ``fn`` at the given abstract args and write HLO text."""
+        t0 = time.time()
+        shaped = [jax.ShapeDtypeStruct(tuple(s["shape"]),
+                                       {"f32": jnp.float32,
+                                        "i32": jnp.int32}[s["dtype"]])
+                  for s in arg_specs]
+        lowered = jax.jit(fn).lower(*shaped)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.entries.append({
+            "name": name,
+            "file": fname,
+            "inputs": arg_specs,
+            "outputs": outputs,
+            "meta": meta or {},
+        })
+        print(f"  {name}: {len(text)} chars ({time.time() - t0:.1f}s)")
+
+    def write_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump({"version": 1, "artifacts": self.entries}, f, indent=1)
+        print(f"wrote {path} ({len(self.entries)} artifacts)")
+
+
+def export_optimizer_kernels(ex: Exporter, n: int):
+    """The per-size L1 kernel set over flat vectors of length ``n``."""
+    vec = _spec([n])
+    lr = _spec([1])
+
+    def adam(p, m, v, g, lr):
+        return K_adam.adam_step(p, m, v, g, lr[0])
+
+    def compress(val, err):
+        return K_ob.onebit_compress(val, err)
+
+    def momentum(m, g):
+        return K_mom.momentum_update(m, g)
+
+    def precond(p, m_agg, v_frozen, lr):
+        return K_mom.precond_step(p, m_agg, v_frozen, lr[0])
+
+    ex.export(f"adam_step_{n}", adam, [vec] * 4 + [lr],
+              [vec, vec, vec], {"kind": "adam_step", "n": n})
+    ex.export(f"onebit_compress_{n}", compress, [vec, vec],
+              [vec, vec, _spec([])], {"kind": "onebit_compress", "n": n})
+    ex.export(f"momentum_update_{n}", momentum, [vec, vec],
+              [vec], {"kind": "momentum_update", "n": n})
+    ex.export(f"precond_step_{n}", precond, [vec] * 3 + [lr],
+              [vec], {"kind": "precond_step", "n": n})
+
+
+def export_lm(ex: Exporter, size: str, with_kernels: bool = True):
+    cfg = M.LM_PRESETS[size]
+    p = cfg.n_params
+    b = LM_BATCH[size]
+    tok = _spec([b, cfg.seq], "i32")
+
+    def step(flat, tokens, targets):
+        return M.lm_loss_and_grads(cfg, flat, tokens, targets)
+
+    ex.export(f"lm_train_step_{size}", step,
+              [_spec([p]), tok, tok],
+              [_spec([]), _spec([p])],
+              {"kind": "lm_train_step", "size": size, "params": p,
+               "batch": b, "seq": cfg.seq, "vocab": cfg.vocab,
+               "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+               "n_heads": cfg.n_heads})
+    if with_kernels:
+        export_optimizer_kernels(ex, p)
+
+
+def export_cnn(ex: Exporter):
+    cfg = M.CnnConfig()
+    p = cfg.n_params
+    x = _spec([CNN_BATCH, cfg.in_dim])
+    y = _spec([CNN_BATCH], "i32")
+
+    def step(flat, xb, yb):
+        return M.cnn_loss_and_grads(cfg, flat, xb, yb)
+
+    def acc(flat, xb, yb):
+        return M.cnn_accuracy(cfg, flat, xb, yb)
+
+    meta = {"kind": "cnn_train_step", "params": p, "batch": CNN_BATCH,
+            "in_dim": cfg.in_dim, "hidden": cfg.hidden,
+            "n_blocks": cfg.n_blocks, "classes": cfg.classes}
+    ex.export("cnn_train_step", step, [_spec([p]), x, y],
+              [_spec([]), _spec([p])], meta)
+    ex.export("cnn_accuracy", acc, [_spec([p]), x, y],
+              [_spec([])], {**meta, "kind": "cnn_accuracy"})
+    export_optimizer_kernels(ex, p)
+
+
+def export_gan(ex: Exporter):
+    cfg = M.GanConfig()
+    gp, dp = cfg.g_spec().total, cfg.d_spec().total
+    z = _spec([GAN_BATCH, cfg.z_dim])
+    real = _spec([GAN_BATCH, cfg.data_dim])
+
+    def d_step(d_flat, g_flat, real, z):
+        return M.gan_d_loss_and_grads(cfg, d_flat, g_flat, real, z)
+
+    def g_step(d_flat, g_flat, z):
+        return M.gan_g_loss_and_grads(cfg, d_flat, g_flat, z)
+
+    meta = {"kind": "gan", "g_params": gp, "d_params": dp,
+            "batch": GAN_BATCH, "z_dim": cfg.z_dim,
+            "data_dim": cfg.data_dim}
+    ex.export("gan_d_step", d_step,
+              [_spec([dp]), _spec([gp]), real, z],
+              [_spec([]), _spec([dp])], {**meta, "kind": "gan_d_step"})
+    ex.export("gan_g_step", g_step,
+              [_spec([dp]), _spec([gp]), z],
+              [_spec([]), _spec([gp])], {**meta, "kind": "gan_g_step"})
+    export_optimizer_kernels(ex, gp)
+    export_optimizer_kernels(ex, dp)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="lm-tiny,lm-small,lm-med")
+    ap.add_argument("--with-100m", action="store_true",
+                    help="also export the ~91M-parameter lm-100m step")
+    args = ap.parse_args()
+
+    ex = Exporter(args.out_dir)
+    print("exporting L1 kernel test set")
+    export_optimizer_kernels(ex, KERNEL_TEST_N)
+    for size in [s for s in args.sizes.split(",") if s]:
+        print(f"exporting {size}")
+        export_lm(ex, size)
+    if args.with_100m:
+        print("exporting lm-100m")
+        export_lm(ex, "lm-100m")
+    print("exporting cnn")
+    export_cnn(ex)
+    print("exporting gan")
+    export_gan(ex)
+    ex.write_manifest()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (interpret=True on CPU) + pure-jnp reference oracles."""
+
+from . import adam_step, momentum, onebit, ref  # noqa: F401

@@ -1,0 +1,81 @@
+"""L1 Pallas kernels for the compression stage's local compute.
+
+Two fused elementwise passes (Algorithm 1, lines 6 and 13):
+
+* :func:`momentum_update` — worker-local momentum refresh
+  ``m' = beta * m + (1 - beta) * g``.
+* :func:`precond_step` — the variance-preconditioned parameter update
+  ``p' = p - lr * m_agg / (sqrt(v_frozen) + eps)`` where ``v_frozen`` is the
+  Adam variance captured at the end of warmup (``v_{T_w}``).
+
+Same VPU tiling rationale as :mod:`kernels.adam_step`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 128 * 8
+
+
+def _momentum_kernel(beta, m_ref, g_ref, m_out):
+    m_out[...] = beta * m_ref[...] + (1.0 - beta) * g_ref[...]
+
+
+def _precond_kernel(eps, p_ref, m_ref, v_ref, lr_ref, p_out):
+    p_out[...] = p_ref[...] - lr_ref[0] * m_ref[...] / (
+        jnp.sqrt(v_ref[...]) + eps)
+
+
+def _pad(x, block):
+    rem = (-x.shape[0]) % block
+    return x if rem == 0 else jnp.pad(x, (0, rem))
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "block"))
+def momentum_update(m, g, *, beta=0.9, block=BLOCK):
+    """Fused ``beta * m + (1 - beta) * g`` over a flat f32 vector."""
+    n = m.shape[0]
+    m_p, g_p = _pad(m, block), _pad(g, block)
+    nblocks = m_p.shape[0] // block
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    out = pl.pallas_call(
+        functools.partial(_momentum_kernel, beta),
+        grid=(nblocks,),
+        in_specs=[vec, vec],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct(m_p.shape, m.dtype),
+        interpret=True,
+    )(m_p, g_p)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block"))
+def precond_step(p, m_agg, v_frozen, lr, *, eps=1e-8, block=BLOCK):
+    """Preconditioned parameter update against the frozen Adam variance.
+
+    ``v_frozen`` is padded with ones (not zeros) so the padding lanes never
+    divide by ``sqrt(0)``; the result is sliced back to the true length.
+    """
+    n = p.shape[0]
+    p_p, m_p = _pad(p, block), _pad(m_agg, block)
+    rem = (-n) % block
+    v_p = v_frozen if rem == 0 else jnp.pad(
+        v_frozen, (0, rem), constant_values=1.0)
+    nblocks = p_p.shape[0] // block
+    lr_arr = jnp.reshape(jnp.asarray(lr, dtype=p.dtype), (1,))
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    out = pl.pallas_call(
+        functools.partial(_precond_kernel, eps),
+        grid=(nblocks,),
+        in_specs=[vec, vec, vec, scalar],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct(p_p.shape, p.dtype),
+        interpret=True,
+    )(p_p, m_p, v_p, lr_arr)
+    return out[:n]

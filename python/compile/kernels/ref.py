@@ -1,0 +1,61 @@
+"""Pure-jnp reference oracles for every L1 Pallas kernel.
+
+These are the ground truth for the pytest/hypothesis correctness suite and
+mirror the math in the paper exactly:
+
+* ``onebit_compress_ref`` — error-compensated 1-bit compression
+  (Algorithm 1, lines 7/10).  ``quantized = sign(val + err) * scale`` with
+  ``scale = ||val + err||_1 / ||sign||_1`` so the compressed tensor has the
+  same L1 magnitude as the compensated input, and
+  ``new_err = (val + err) - quantized`` is the error feedback carried to the
+  next step.
+* ``adam_step_ref`` — bias-correction-free Adam (paper eq. (1); bias
+  correction disabled to match BertAdam, see Section 3.3).
+* ``momentum_ref`` / ``precond_step_ref`` — the compression-stage update
+  (Algorithm 1, lines 6 and 13): local momentum refresh and the
+  variance-preconditioned parameter step ``x -= lr * m / (sqrt(v_Tw)+eps)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sign_pm1(x: jnp.ndarray) -> jnp.ndarray:
+    """Strict {-1,+1} sign: zero maps to +1 (a true 1-bit code has no 0)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def onebit_compress_ref(val: jnp.ndarray, err: jnp.ndarray):
+    """Error-compensated 1-bit compression.
+
+    Returns ``(quantized, new_err, scale)`` where ``quantized`` is the
+    dequantized representation (sign * scale) that the receiving side
+    reconstructs, ``new_err`` is the updated local compression error, and
+    ``scale`` is the single f32 scaling factor that accompanies the sign
+    bits on the wire.
+    """
+    compensated = val + err
+    n = jnp.asarray(compensated.size, dtype=compensated.dtype)
+    scale = jnp.sum(jnp.abs(compensated)) / n
+    quantized = sign_pm1(compensated) * scale
+    new_err = compensated - quantized
+    return quantized, new_err, scale
+
+
+def adam_step_ref(p, m, v, g, lr, beta1=0.9, beta2=0.999, eps=1e-8):
+    """One bias-correction-free Adam step (paper eq. (1))."""
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * jnp.square(g)
+    p_new = p - lr * m_new / (jnp.sqrt(v_new) + eps)
+    return p_new, m_new, v_new
+
+
+def momentum_ref(m, g, beta=0.9):
+    """Local momentum refresh (Algorithm 1, line 6)."""
+    return beta * m + (1.0 - beta) * g
+
+
+def precond_step_ref(p, m_agg, v_frozen, lr, eps=1e-8):
+    """Variance-preconditioned parameter update (Algorithm 1, line 13)."""
+    return p - lr * m_agg / (jnp.sqrt(v_frozen) + eps)

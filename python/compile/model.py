@@ -1,0 +1,358 @@
+"""L2: JAX compute graphs, AOT-lowered to HLO for the Rust coordinator.
+
+All entry points operate on a **flat f32 parameter vector** so the Rust side
+needs no pytree knowledge — the paper's optimizer/communication layer works
+on fused flat tensors anyway (Section 3.3 "fuse the variance of all
+parameters").  Unflattening happens inside the traced function and therefore
+inside the compiled HLO.
+
+Workloads:
+
+* :class:`LmConfig` / :func:`lm_loss_and_grads` — a pre-LN causal
+  transformer LM (the BERT substitute; DESIGN.md §2) with tied embeddings.
+* :class:`CnnConfig` / :func:`cnn_loss_and_grads` — a small residual-MLP
+  image classifier (the ResNet-18/CIFAR substitute for Figures 6, 10–13).
+* :class:`GanConfig` / :func:`gan_d_loss_and_grads` /
+  :func:`gan_g_loss_and_grads` — a tiny MLP GAN (the DCGAN/CelebA
+  substitute for Figure 8).
+
+The optimizer hot spots call the L1 Pallas kernels in
+:mod:`compile.kernels`, so the lowered HLO contains the same fused
+structure that would run on a real TPU.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Flat-parameter plumbing
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Ordered list of named shapes that defines the flat-vector layout."""
+
+    entries: Tuple[Tuple[str, Tuple[int, ...]], ...]
+
+    @property
+    def total(self) -> int:
+        return sum(math.prod(s) for _, s in self.entries)
+
+    def offsets(self) -> Dict[str, Tuple[int, Tuple[int, ...]]]:
+        out, off = {}, 0
+        for name, shape in self.entries:
+            out[name] = (off, shape)
+            off += math.prod(shape)
+        return out
+
+    def unflatten(self, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        out = {}
+        for name, (off, shape) in self.offsets().items():
+            size = math.prod(shape)
+            out[name] = jax.lax.dynamic_slice(flat, (off,), (size,)).reshape(shape)
+        return out
+
+    def init(self, seed: int = 0, scale: float = 0.02) -> jnp.ndarray:
+        """Deterministic init of the flat vector (fan-in scaled normal)."""
+        key = jax.random.PRNGKey(seed)
+        chunks: List[jnp.ndarray] = []
+        for name, shape in self.entries:
+            key, sub = jax.random.split(key)
+            if name.endswith("_b") or "_ln" in name and name.endswith("_bias"):
+                chunks.append(jnp.zeros((math.prod(shape),), jnp.float32))
+            elif "_ln" in name and name.endswith("_scale"):
+                chunks.append(jnp.ones((math.prod(shape),), jnp.float32))
+            else:
+                fan_in = shape[0] if len(shape) > 1 else math.prod(shape)
+                std = scale if len(shape) == 1 else 1.0 / math.sqrt(fan_in)
+                chunks.append(
+                    (jax.random.normal(sub, shape, jnp.float32) * std).reshape(-1))
+        return jnp.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# Transformer LM (BERT substitute)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LmConfig:
+    """Pre-LN causal transformer LM, tied input/output embedding."""
+
+    vocab: int = 256
+    seq: int = 64
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = field(default=0)  # 0 => 4 * d_model
+
+    @property
+    def ff(self) -> int:
+        return self.d_ff if self.d_ff else 4 * self.d_model
+
+    def param_spec(self) -> ParamSpec:
+        entries: List[Tuple[str, Tuple[int, ...]]] = [
+            ("tok_emb", (self.vocab, self.d_model)),
+            ("pos_emb", (self.seq, self.d_model)),
+        ]
+        for i in range(self.n_layers):
+            entries += [
+                (f"l{i}_ln1_scale", (self.d_model,)),
+                (f"l{i}_ln1_bias", (self.d_model,)),
+                (f"l{i}_qkv_w", (self.d_model, 3 * self.d_model)),
+                (f"l{i}_qkv_b", (3 * self.d_model,)),
+                (f"l{i}_proj_w", (self.d_model, self.d_model)),
+                (f"l{i}_proj_b", (self.d_model,)),
+                (f"l{i}_ln2_scale", (self.d_model,)),
+                (f"l{i}_ln2_bias", (self.d_model,)),
+                (f"l{i}_fc1_w", (self.d_model, self.ff)),
+                (f"l{i}_fc1_b", (self.ff,)),
+                (f"l{i}_fc2_w", (self.ff, self.d_model)),
+                (f"l{i}_fc2_b", (self.d_model,)),
+            ]
+        entries += [
+            ("final_ln_scale", (self.d_model,)),
+            ("final_ln_bias", (self.d_model,)),
+        ]
+        return ParamSpec(tuple(entries))
+
+    @property
+    def n_params(self) -> int:
+        return self.param_spec().total
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attention(x, qkv_w, qkv_b, proj_w, proj_b, n_heads):
+    b, s, d = x.shape
+    hd = d // n_heads
+    qkv = x @ qkv_w + qkv_b  # [B,S,3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):
+        return t.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(hd)  # [B,H,S,S]
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    att = jnp.where(mask == 0, -1e9, att)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d)
+    return out @ proj_w + proj_b
+
+
+def lm_forward(cfg: LmConfig, params: Dict[str, jnp.ndarray],
+               tokens: jnp.ndarray) -> jnp.ndarray:
+    """Logits [B, S, vocab] for int32 tokens [B, S]."""
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :, :]
+    for i in range(cfg.n_layers):
+        h = _layer_norm(x, params[f"l{i}_ln1_scale"], params[f"l{i}_ln1_bias"])
+        x = x + _attention(h, params[f"l{i}_qkv_w"], params[f"l{i}_qkv_b"],
+                           params[f"l{i}_proj_w"], params[f"l{i}_proj_b"],
+                           cfg.n_heads)
+        h = _layer_norm(x, params[f"l{i}_ln2_scale"], params[f"l{i}_ln2_bias"])
+        h = jax.nn.gelu(h @ params[f"l{i}_fc1_w"] + params[f"l{i}_fc1_b"])
+        x = x + h @ params[f"l{i}_fc2_w"] + params[f"l{i}_fc2_b"]
+    x = _layer_norm(x, params["final_ln_scale"], params["final_ln_bias"])
+    return x @ params["tok_emb"].T  # tied embedding
+
+
+def lm_loss(cfg: LmConfig, flat: jnp.ndarray, tokens: jnp.ndarray,
+            targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy of next-token prediction."""
+    params = cfg.param_spec().unflatten(flat)
+    logits = lm_forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def lm_loss_and_grads(cfg: LmConfig, flat, tokens, targets):
+    """AOT entry point: ``(params[P], tokens[B,S], targets[B,S]) → (loss, grads[P])``."""
+    return jax.value_and_grad(lambda f: lm_loss(cfg, f, tokens, targets))(flat)
+
+
+# --------------------------------------------------------------------------
+# Residual-MLP classifier (ResNet/CIFAR substitute)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CnnConfig:
+    """Residual MLP classifier on flattened images.
+
+    The ResNet-18/CIFAR-10 substitute: residual blocks preserve the
+    skip-connection optimization landscape that makes the momentum-SGD
+    family competitive (supplementary Figures 10/11).
+    """
+
+    in_dim: int = 256   # e.g. 16x16 synthetic grayscale images
+    hidden: int = 128
+    n_blocks: int = 3
+    classes: int = 10
+
+    def param_spec(self) -> ParamSpec:
+        entries: List[Tuple[str, Tuple[int, ...]]] = [
+            ("stem_w", (self.in_dim, self.hidden)),
+            ("stem_b", (self.hidden,)),
+        ]
+        for i in range(self.n_blocks):
+            entries += [
+                (f"b{i}_fc1_w", (self.hidden, self.hidden)),
+                (f"b{i}_fc1_b", (self.hidden,)),
+                (f"b{i}_fc2_w", (self.hidden, self.hidden)),
+                (f"b{i}_fc2_b", (self.hidden,)),
+            ]
+        entries += [("head_w", (self.hidden, self.classes)),
+                    ("head_b", (self.classes,))]
+        return ParamSpec(tuple(entries))
+
+    @property
+    def n_params(self) -> int:
+        return self.param_spec().total
+
+
+def cnn_forward(cfg: CnnConfig, params, x):
+    h = jax.nn.relu(x @ params["stem_w"] + params["stem_b"])
+    for i in range(cfg.n_blocks):
+        r = jax.nn.relu(h @ params[f"b{i}_fc1_w"] + params[f"b{i}_fc1_b"])
+        h = h + r @ params[f"b{i}_fc2_w"] + params[f"b{i}_fc2_b"]
+    return h @ params["head_w"] + params["head_b"]
+
+
+def cnn_loss(cfg: CnnConfig, flat, x, y):
+    params = cfg.param_spec().unflatten(flat)
+    logits = cnn_forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def cnn_loss_and_grads(cfg: CnnConfig, flat, x, y):
+    """AOT entry point: ``(params[P], x[B,D], y[B]) → (loss, grads[P])``."""
+    return jax.value_and_grad(lambda f: cnn_loss(cfg, f, x, y))(flat)
+
+
+def cnn_accuracy(cfg: CnnConfig, flat, x, y):
+    """AOT entry point: fraction of correct top-1 predictions."""
+    params = cfg.param_spec().unflatten(flat)
+    pred = jnp.argmax(cnn_forward(cfg, params, x), axis=-1)
+    return jnp.mean((pred == y).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# Tiny GAN (DCGAN/CelebA substitute)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GanConfig:
+    z_dim: int = 16
+    data_dim: int = 64   # e.g. 8x8 synthetic "faces"
+    g_hidden: int = 64
+    d_hidden: int = 64
+
+    def g_spec(self) -> ParamSpec:
+        return ParamSpec((
+            ("g_fc1_w", (self.z_dim, self.g_hidden)),
+            ("g_fc1_b", (self.g_hidden,)),
+            ("g_fc2_w", (self.g_hidden, self.g_hidden)),
+            ("g_fc2_b", (self.g_hidden,)),
+            ("g_out_w", (self.g_hidden, self.data_dim)),
+            ("g_out_b", (self.data_dim,)),
+        ))
+
+    def d_spec(self) -> ParamSpec:
+        return ParamSpec((
+            ("d_fc1_w", (self.data_dim, self.d_hidden)),
+            ("d_fc1_b", (self.d_hidden,)),
+            ("d_fc2_w", (self.d_hidden, self.d_hidden)),
+            ("d_fc2_b", (self.d_hidden,)),
+            ("d_out_w", (self.d_hidden, 1)),
+            ("d_out_b", (1,)),
+        ))
+
+
+def gan_generate(cfg: GanConfig, g_flat, z):
+    p = cfg.g_spec().unflatten(g_flat)
+    h = jax.nn.relu(z @ p["g_fc1_w"] + p["g_fc1_b"])
+    h = jax.nn.relu(h @ p["g_fc2_w"] + p["g_fc2_b"])
+    return jnp.tanh(h @ p["g_out_w"] + p["g_out_b"])
+
+
+def _discriminate(cfg: GanConfig, d_flat, x):
+    p = cfg.d_spec().unflatten(d_flat)
+    h = jax.nn.leaky_relu(x @ p["d_fc1_w"] + p["d_fc1_b"], 0.2)
+    h = jax.nn.leaky_relu(h @ p["d_fc2_w"] + p["d_fc2_b"], 0.2)
+    return (h @ p["d_out_w"] + p["d_out_b"])[:, 0]
+
+
+def _bce_logits(logits, label):
+    # label in {0., 1.}; numerically stable BCE-with-logits.
+    return jnp.mean(jnp.maximum(logits, 0) - logits * label
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def gan_d_loss_and_grads(cfg: GanConfig, d_flat, g_flat, real, z):
+    """AOT entry point: discriminator BCE loss + grads wrt D params."""
+    def loss(d):
+        fake = gan_generate(cfg, g_flat, z)
+        l_real = _bce_logits(_discriminate(cfg, d, real), 1.0)
+        l_fake = _bce_logits(_discriminate(cfg, d, fake), 0.0)
+        return l_real + l_fake
+    return jax.value_and_grad(loss)(d_flat)
+
+
+def gan_g_loss_and_grads(cfg: GanConfig, d_flat, g_flat, z):
+    """AOT entry point: generator non-saturating loss + grads wrt G params."""
+    def loss(g):
+        fake = gan_generate(cfg, g, z)
+        return _bce_logits(_discriminate(cfg, d_flat, fake), 1.0)
+    return jax.value_and_grad(loss)(g_flat)
+
+
+# --------------------------------------------------------------------------
+# Optimizer-step graphs (wrap the L1 Pallas kernels for AOT export)
+# --------------------------------------------------------------------------
+
+def optimizer_graphs():
+    """Entry points wrapping the L1 kernels, for per-size AOT export."""
+    from .kernels import adam_step as _adam
+    from .kernels import momentum as _mom
+    from .kernels import onebit as _ob
+
+    def adam(p, m, v, g, lr):
+        return _adam.adam_step(p, m, v, g, lr)
+
+    def compress(val, err):
+        return _ob.onebit_compress(val, err)
+
+    def momentum(m, g):
+        return _mom.momentum_update(m, g)
+
+    def precond(p, m_agg, v_frozen, lr):
+        return _mom.precond_step(p, m_agg, v_frozen, lr)
+
+    return {"adam_step": adam, "onebit_compress": compress,
+            "momentum_update": momentum, "precond_step": precond}
+
+
+# Named model-size presets (paper Table 2 analogues, scaled to this testbed).
+LM_PRESETS: Dict[str, LmConfig] = {
+    "lm-tiny": LmConfig(vocab=256, seq=32, d_model=32, n_layers=2, n_heads=2),
+    "lm-small": LmConfig(vocab=512, seq=64, d_model=128, n_layers=4, n_heads=4),
+    "lm-med": LmConfig(vocab=2048, seq=64, d_model=256, n_layers=8, n_heads=8),
+    # BERT-Base-shaped substitute (~45M params with vocab 4096).
+    "lm-base": LmConfig(vocab=4096, seq=128, d_model=512, n_layers=12,
+                        n_heads=8),
+    # ~100M-parameter configuration for the headline E2E run.
+    "lm-100m": LmConfig(vocab=8192, seq=64, d_model=768, n_layers=12,
+                        n_heads=12),
+}

@@ -1,0 +1,153 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes (including non-block-aligned lengths) and value
+distributions; every kernel must match its ``ref.py`` oracle to float32
+tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adam_step as K_adam
+from compile.kernels import momentum as K_mom
+from compile.kernels import onebit as K_ob
+from compile.kernels import ref
+
+SIZES = [1, 7, 64, 1000, 8192, 8193, 65536]
+
+
+def _vec(rng, n, scale=1.0):
+    return jnp.asarray(rng.normal(size=n).astype(np.float32) * scale)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_onebit_matches_ref(n):
+    rng = np.random.default_rng(n)
+    val, err = _vec(rng, n), _vec(rng, n, 0.3)
+    q, e, s = K_ob.onebit_compress(val, err, block=1024)
+    qr, er, sr = ref.onebit_compress_ref(val, err)
+    np.testing.assert_allclose(q, qr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(e, er, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(s, sr, rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_adam_matches_ref(n):
+    rng = np.random.default_rng(n + 1)
+    p, g = _vec(rng, n), _vec(rng, n)
+    m, v = _vec(rng, n, 0.1), jnp.abs(_vec(rng, n, 0.01))
+    pn, mn, vn = K_adam.adam_step(p, m, v, g, 1e-3, block=1024)
+    pr, mr, vr = ref.adam_step_ref(p, m, v, g, 1e-3)
+    np.testing.assert_allclose(pn, pr, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(mn, mr, rtol=1e-6, atol=1e-8)
+    np.testing.assert_allclose(vn, vr, rtol=1e-6, atol=1e-10)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_momentum_and_precond_match_ref(n):
+    rng = np.random.default_rng(n + 2)
+    p, m, g = _vec(rng, n), _vec(rng, n, 0.1), _vec(rng, n)
+    vf = jnp.abs(_vec(rng, n)) + 1e-3
+    mn = K_mom.momentum_update(m, g, block=1024)
+    np.testing.assert_allclose(mn, ref.momentum_ref(m, g), rtol=1e-6,
+                               atol=1e-8)
+    pn = K_mom.precond_step(p, m, vf, 1e-3, block=1024)
+    np.testing.assert_allclose(pn, ref.precond_step_ref(p, m, vf, 1e-3),
+                               rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Invariants of the compression operator itself
+# ---------------------------------------------------------------------------
+
+def test_onebit_error_feedback_telescopes():
+    """After T steps, sum(quantized) + final_err == sum(values) (eq. (5))."""
+    rng = np.random.default_rng(7)
+    n, steps = 4096, 20
+    err = jnp.zeros(n)
+    total_q = np.zeros(n, dtype=np.float64)
+    total_v = np.zeros(n, dtype=np.float64)
+    for _ in range(steps):
+        v = _vec(rng, n)
+        q, err, _ = K_ob.onebit_compress(v, err, block=1024)
+        total_q += np.asarray(q, dtype=np.float64)
+        total_v += np.asarray(v, dtype=np.float64)
+    resid = total_v - (total_q + np.asarray(err, dtype=np.float64))
+    assert np.max(np.abs(resid)) < 1e-3  # f32 accumulation noise only
+
+
+def test_onebit_scale_preserves_l1_magnitude():
+    rng = np.random.default_rng(8)
+    val = _vec(rng, 2048, 3.0)
+    q, _, s = K_ob.onebit_compress(val, jnp.zeros(2048), block=512)
+    np.testing.assert_allclose(np.sum(np.abs(np.asarray(q))),
+                               np.sum(np.abs(np.asarray(val))), rtol=1e-5)
+
+
+def test_onebit_output_is_two_valued():
+    rng = np.random.default_rng(9)
+    val = _vec(rng, 1024)
+    q, _, s = K_ob.onebit_compress(val, jnp.zeros(1024), block=256)
+    uq = np.unique(np.asarray(q))
+    assert len(uq) <= 2
+    np.testing.assert_allclose(np.abs(uq), float(s), rtol=1e-6)
+
+
+def test_onebit_zero_input():
+    q, e, s = K_ob.onebit_compress(jnp.zeros(512), jnp.zeros(512), block=256)
+    assert float(s) == 0.0
+    np.testing.assert_array_equal(np.asarray(q), 0.0)
+    np.testing.assert_array_equal(np.asarray(e), 0.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 5000), seed=st.integers(0, 2**31 - 1),
+       scale=st.sampled_from([1e-4, 1.0, 1e4]))
+def test_onebit_hypothesis_sweep(n, seed, scale):
+    rng = np.random.default_rng(seed)
+    val, err = _vec(rng, n, scale), _vec(rng, n, scale * 0.1)
+    q, e, s = K_ob.onebit_compress(val, err, block=512)
+    qr, er, sr = ref.onebit_compress_ref(val, err)
+    np.testing.assert_allclose(q, qr, rtol=1e-5, atol=scale * 1e-5)
+    np.testing.assert_allclose(e, er, rtol=1e-4, atol=scale * 1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 5000), seed=st.integers(0, 2**31 - 1),
+       lr=st.sampled_from([1e-5, 1e-3, 1e-1]),
+       beta1=st.sampled_from([0.0, 0.9, 0.99]),
+       beta2=st.sampled_from([0.9, 0.999]))
+def test_adam_hypothesis_sweep(n, seed, lr, beta1, beta2):
+    rng = np.random.default_rng(seed)
+    p, g = _vec(rng, n), _vec(rng, n)
+    m, v = _vec(rng, n, 0.1), jnp.abs(_vec(rng, n, 0.01))
+    pn, mn, vn = K_adam.adam_step(p, m, v, g, lr, beta1=beta1, beta2=beta2,
+                                  block=512)
+    pr, mr, vr = ref.adam_step_ref(p, m, v, g, lr, beta1=beta1, beta2=beta2)
+    np.testing.assert_allclose(pn, pr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(vn, vr, rtol=1e-5, atol=1e-9)
+
+
+def test_adam_equals_precond_momentum_when_v_frozen():
+    """The paper's key identity: Adam with frozen v == preconditioned
+    momentum SGD (Section 3.3)."""
+    rng = np.random.default_rng(11)
+    n = 2048
+    p, g = _vec(rng, n), _vec(rng, n)
+    m = _vec(rng, n, 0.1)
+    v_frozen = jnp.abs(_vec(rng, n)) + 1e-2
+    # 1-bit Adam compression-stage update with identity compression:
+    m_new = K_mom.momentum_update(m, g, block=512)
+    p_onebit = K_mom.precond_step(p, m_new, v_frozen, 1e-3, block=512)
+    # Adam step with beta2=1.0 (v never changes) starting from v=v_frozen:
+    p_adam, m_adam, v_adam = K_adam.adam_step(
+        p, m, v_frozen, g, 1e-3, beta2=1.0, block=512)
+    np.testing.assert_allclose(np.asarray(v_adam), np.asarray(v_frozen),
+                               rtol=1e-7)
+    np.testing.assert_allclose(np.asarray(p_onebit), np.asarray(p_adam),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(m_new), np.asarray(m_adam),
+                               rtol=1e-6)

@@ -1,0 +1,46 @@
+//! End-to-end bench of the collectives' *data-plane* cost: the full
+//! compressed_allreduce (compress → chunk → pack → average → recompress →
+//! gather) vs the plain fp32 average, on realistic tensor sizes.
+//!
+//!     cargo bench --bench comm_primitives
+
+use onebit_adam::comm::plain::allreduce_average;
+use onebit_adam::comm::CompressedAllreduce;
+use onebit_adam::compress::CompressionKind;
+use onebit_adam::util::bench::{black_box, Bencher};
+use onebit_adam::util::prng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    for workers in [4usize, 8, 16] {
+        for n in [1 << 18, 1 << 21] {
+            let base = Rng::new(7);
+            let inputs: Vec<Vec<f32>> = (0..workers)
+                .map(|i| base.fork(i as u64).normal_vec(n, 1.0))
+                .collect();
+            let mut out = vec![0.0f32; n];
+
+            let r = b.run(
+                &format!("plain_average w={workers} n={n}"),
+                || {
+                    black_box(allreduce_average(&inputs, &mut out));
+                },
+            );
+            println!("{}", r.report());
+
+            let mut car =
+                CompressedAllreduce::new(workers, n, CompressionKind::OneBit);
+            let r = b.run(
+                &format!("compressed_allreduce w={workers} n={n}"),
+                || {
+                    black_box(car.allreduce(&inputs, &mut out));
+                },
+            );
+            println!(
+                "{}  => {:.2} GB/s of input tensors",
+                r.report(),
+                r.throughput((n * workers) as f64 * 4.0) / 1e9
+            );
+        }
+    }
+}

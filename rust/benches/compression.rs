@@ -1,0 +1,61 @@
+//! Micro-bench: the L3 hot path — error-compensated 1-bit compression and
+//! sign packing — across tensor sizes.  This is the per-step CPU cost the
+//! compressed_allreduce adds on top of the wire transfer.
+//!
+//!     cargo bench --bench compression
+
+use onebit_adam::compress::onebit::onebit_compress_ec;
+use onebit_adam::compress::pack::{pack_signs, unpack_signs_scaled, wire_size};
+use onebit_adam::util::bench::{black_box, Bencher};
+use onebit_adam::util::prng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    println!("== error-compensated 1-bit compression (fused quantize) ==");
+    for n in [65_536usize, 1 << 20, 1 << 23] {
+        let mut rng = Rng::new(1);
+        let val = rng.normal_vec(n, 1.0);
+        let mut err = vec![0.0f32; n];
+        let mut scratch = vec![0.0f32; n];
+        let mut out = vec![0.0f32; n];
+        let r = b.run(&format!("onebit_compress_ec n={n}"), || {
+            black_box(onebit_compress_ec(&val, &mut err, &mut scratch, &mut out));
+        });
+        println!(
+            "{}  => {:.2} GB/s effective",
+            r.report(),
+            r.throughput(n as f64 * 4.0) / 1e9
+        );
+    }
+
+    println!("\n== sign packing / unpacking (the wire format) ==");
+    for n in [1 << 20, 1 << 23] {
+        let mut rng = Rng::new(2);
+        let q = rng.normal_vec(n, 1.0);
+        let r = b.run(&format!("pack_signs n={n}"), || {
+            black_box(pack_signs(&q));
+        });
+        println!(
+            "{}  => {:.2} Gelem/s",
+            r.report(),
+            r.throughput(n as f64) / 1e9
+        );
+        let words = pack_signs(&q);
+        let mut out = vec![0.0f32; n];
+        let r = b.run(&format!("unpack_signs n={n}"), || {
+            unpack_signs_scaled(&words, 0.5, &mut out);
+            black_box(&out);
+        });
+        println!(
+            "{}  => {:.2} Gelem/s",
+            r.report(),
+            r.throughput(n as f64) / 1e9
+        );
+        println!(
+            "  wire: {} B for {} elements ({:.1}x smaller than fp32)",
+            wire_size(n),
+            n,
+            (n * 4) as f64 / wire_size(n) as f64
+        );
+    }
+}

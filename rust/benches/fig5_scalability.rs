@@ -1,0 +1,15 @@
+//! Bench/repro: Figure 5 (a)(b)(c) — warmup vs compression-stage
+//! throughput scaling on the Ethernet and InfiniBand clusters, plus the
+//! Figure 4(b)/Figure 7 end-to-end time projections.
+//!
+//!     cargo bench --bench fig5_scalability
+
+use onebit_adam::repro::timing::{fig4b, fig5, fig7, Fig5Variant};
+
+fn main() {
+    fig5(Fig5Variant::A).expect("fig5a");
+    fig5(Fig5Variant::B).expect("fig5b");
+    fig5(Fig5Variant::C).expect("fig5c");
+    fig4b().expect("fig4b");
+    fig7().expect("fig7");
+}

@@ -1,0 +1,8 @@
+//! Bench/repro: Figure 9 — compression-stage speedup under `tc`-shaped
+//! bandwidth from 50 Mbit to 3 Gbit at 256 GPUs.
+//!
+//!     cargo bench --bench fig9_bandwidth_sweep
+
+fn main() {
+    onebit_adam::repro::timing::fig9().expect("fig9");
+}

@@ -1,0 +1,67 @@
+//! Bench: full optimizer steps (native math backend) — Adam warmup step vs
+//! 1-bit compression step — the L3 per-step CPU budget.  Also times the
+//! PJRT (L1 Pallas artifact) path when `artifacts/` is present, giving the
+//! native-vs-PJRT dispatch overhead the ExecMode choice is based on.
+//!
+//!     cargo bench --bench optimizer_step
+
+use onebit_adam::optim::onebit_adam::{OneBitAdam, OneBitAdamConfig};
+use onebit_adam::optim::{Adam, DistOptimizer};
+use onebit_adam::runtime::Runtime;
+use onebit_adam::util::bench::{black_box, Bencher};
+use onebit_adam::util::prng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let workers = 4;
+    for n in [65_536usize, 1 << 20] {
+        let base = Rng::new(3);
+        let grads: Vec<Vec<f32>> = (0..workers)
+            .map(|i| base.fork(i as u64).normal_vec(n, 1.0))
+            .collect();
+
+        let mut adam = Adam::new(workers, vec![0.1; n]);
+        let r = b.run(&format!("adam_step (native) n={n}"), || {
+            black_box(adam.step(&grads, 1e-4));
+        });
+        println!("{}", r.report());
+
+        let mut onebit = OneBitAdam::new(
+            workers,
+            vec![0.1; n],
+            OneBitAdamConfig { warmup_steps: Some(0), ..Default::default() },
+        );
+        onebit.step(&grads, 1e-4); // enter compression phase
+        let r = b.run(&format!("onebit_step (native) n={n}"), || {
+            black_box(onebit.step(&grads, 1e-4));
+        });
+        println!(
+            "{}  => {:.2} GB/s over {workers} momenta",
+            r.report(),
+            r.throughput((n * workers) as f64 * 4.0) / 1e9
+        );
+    }
+
+    // PJRT path (L1 Pallas artifacts) if available
+    if let Ok(rt) = Runtime::load("artifacts") {
+        let n = 65_536usize;
+        if rt.has(&format!("adam_step_{n}")) {
+            let mut rng = Rng::new(5);
+            let p = rng.normal_vec(n, 1.0);
+            let m = vec![0.0f32; n];
+            let v = vec![0.0f32; n];
+            let g = rng.normal_vec(n, 1.0);
+            let r = b.run(&format!("adam_step (pjrt) n={n}"), || {
+                black_box(rt.adam_step(n, &p, &m, &v, &g, 1e-4).unwrap());
+            });
+            println!("{}", r.report());
+            let err = vec![0.0f32; n];
+            let r = b.run(&format!("onebit_compress (pjrt) n={n}"), || {
+                black_box(rt.onebit_compress(n, &g, &err).unwrap());
+            });
+            println!("{}", r.report());
+        }
+    } else {
+        println!("(artifacts/ missing — PJRT path skipped)");
+    }
+}

@@ -1,0 +1,9 @@
+//! Bench/repro: Table 1 — step-time breakdown and allreduce%% across the
+//! paper's cluster configurations (netsim model vs the paper's numbers).
+//!
+//!     cargo bench --bench table1_profiling
+
+fn main() {
+    onebit_adam::repro::timing::table1().expect("table1");
+    onebit_adam::repro::timing::volume().expect("volume");
+}

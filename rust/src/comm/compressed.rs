@@ -1,0 +1,439 @@
+//! The paper's `compressed_allreduce` (Figure 3), data movement included.
+//!
+//! Three phases over `n` workers and a fused tensor of length `len`,
+//! chunked `n` ways ([`ChunkLayout`]):
+//!
+//! 1. **All-to-all** — worker `i` error-compensates and 1-bit-compresses
+//!    its whole local tensor (local error `δ^(i)`), then sends the packed
+//!    chunk `j` (signs + its scale) to worker `j`.
+//! 2. **Average** — worker `j` decodes the `n` received chunks, averages
+//!    them, and re-compresses the average with its *server* error `δ̄_j`
+//!    (Algorithm 1, line 10 — the double compression that makes the final
+//!    momentum identical on all workers while still 1-bit on the wire).
+//! 3. **All-gather** — the compressed averaged chunks are gathered so every
+//!    worker reconstructs the same full-length tensor.
+//!
+//! With `CompressionKind::None` the result equals the exact average (unit
+//! tests assert this), which is also the paper's "1-bit Adam (32-bits)"
+//! ablation path.
+
+use crate::compress::pack;
+use crate::compress::CompressionKind;
+use crate::compress::onebit::onebit_compress_ec;
+use crate::compress::nbit::nbit_compress_ec;
+use crate::tensor::chunk::ChunkLayout;
+
+use super::CommStats;
+
+/// One worker's compressed chunk on the wire.
+#[derive(Debug, Clone)]
+enum WirePayload {
+    /// Packed 1-bit: sign words + scale.
+    OneBit { n: usize, scale: f32, signs: Vec<u32> },
+    /// Full precision (baseline / ablation).
+    Full(Vec<f32>),
+    /// n-bit quantized, carried dequantized with its true wire cost.
+    NBit { values: Vec<f32>, bytes: usize },
+}
+
+impl WirePayload {
+    fn wire_bytes(&self) -> usize {
+        match self {
+            WirePayload::OneBit { n, .. } => pack::wire_size(*n),
+            WirePayload::Full(v) => v.len() * 4,
+            WirePayload::NBit { bytes, .. } => *bytes,
+        }
+    }
+
+    fn decode_into(&self, out: &mut [f32]) {
+        match self {
+            WirePayload::OneBit { n, scale, signs } => {
+                assert_eq!(out.len(), *n);
+                pack::unpack_signs_scaled(signs, *scale, out);
+            }
+            WirePayload::Full(v) => out.copy_from_slice(v),
+            WirePayload::NBit { values, .. } => out.copy_from_slice(values),
+        }
+    }
+}
+
+/// Stateful compressed-allreduce: carries the per-worker local errors and
+/// the per-chunk server errors across steps (Algorithm 1 state).
+pub struct CompressedAllreduce {
+    n: usize,
+    len: usize,
+    kind: CompressionKind,
+    layout: ChunkLayout,
+    /// `δ^(i)`: local compression error per worker (full length).
+    worker_err: Vec<Vec<f32>>,
+    /// `δ̄_j`: server compression error for chunk `j` (chunk length).
+    server_err: Vec<Vec<f32>>,
+    // scratch buffers
+    comp_scratch: Vec<f32>,
+    quant_scratch: Vec<f32>,
+}
+
+impl CompressedAllreduce {
+    pub fn new(n_workers: usize, len: usize, kind: CompressionKind) -> Self {
+        assert!(n_workers > 0);
+        let layout = ChunkLayout::new(len, n_workers);
+        CompressedAllreduce {
+            n: n_workers,
+            len,
+            kind,
+            worker_err: (0..n_workers).map(|_| vec![0.0; len]).collect(),
+            server_err: (0..n_workers)
+                .map(|i| vec![0.0; layout.size(i)])
+                .collect(),
+            comp_scratch: vec![0.0; len],
+            quant_scratch: vec![0.0; len],
+            layout,
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Reset all carried errors (warmup→compression boundary).
+    pub fn reset_errors(&mut self) {
+        for e in self.worker_err.iter_mut() {
+            e.iter_mut().for_each(|x| *x = 0.0);
+        }
+        for e in self.server_err.iter_mut() {
+            e.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    /// Carried worker error for invariant checks.
+    pub fn worker_error(&self, i: usize) -> &[f32] {
+        &self.worker_err[i]
+    }
+
+    /// Carried server error for chunk `j` (invariant checks).
+    pub fn server_error(&self, j: usize) -> &[f32] {
+        &self.server_err[j]
+    }
+
+    /// Chunk layout (invariant checks).
+    pub fn layout(&self) -> &ChunkLayout {
+        &self.layout
+    }
+
+    /// Compress+quantize `value + err` per `kind` into `quant_out`,
+    /// updating `err`.  Returns the 1-bit scale factor (0 for other kinds).
+    fn compress_into(
+        kind: CompressionKind,
+        value: &[f32],
+        err: &mut [f32],
+        comp_scratch: &mut [f32],
+        quant_out: &mut [f32],
+    ) -> f32 {
+        match kind {
+            CompressionKind::None => {
+                quant_out.copy_from_slice(value);
+                0.0
+            }
+            CompressionKind::OneBit => onebit_compress_ec(
+                value,
+                err,
+                &mut comp_scratch[..value.len()],
+                quant_out,
+            ),
+            CompressionKind::NBit(bits) => {
+                nbit_compress_ec(bits, value, err, quant_out);
+                0.0
+            }
+        }
+    }
+
+    /// Build the wire payload for one chunk of an already-quantized tensor.
+    fn chunk_payload(kind: CompressionKind, chunk: &[f32], scale: f32) -> WirePayload {
+        match kind {
+            CompressionKind::None => WirePayload::Full(chunk.to_vec()),
+            CompressionKind::OneBit => WirePayload::OneBit {
+                n: chunk.len(),
+                scale,
+                signs: pack::pack_signs(chunk),
+            },
+            CompressionKind::NBit(bits) => WirePayload::NBit {
+                values: chunk.to_vec(),
+                bytes: (chunk.len() * bits as usize).div_ceil(8) + 8,
+            },
+        }
+    }
+
+    /// Run the collective: `inputs[i]` is worker `i`'s local tensor (the
+    /// freshly-updated momentum); on return `output` holds the identical
+    /// aggregated tensor every worker ends with.
+    pub fn allreduce(
+        &mut self,
+        inputs: &[Vec<f32>],
+        output: &mut [f32],
+    ) -> CommStats {
+        assert_eq!(inputs.len(), self.n);
+        assert_eq!(output.len(), self.len);
+        for inp in inputs {
+            assert_eq!(inp.len(), self.len);
+        }
+
+        // ---- Phase 1: per-worker compression of the full tensor, then
+        // all-to-all of the packed chunks.  mailbox[j][i] = chunk j from
+        // worker i.
+        let mut alltoall_bytes = 0usize;
+        let mut mailbox: Vec<Vec<WirePayload>> =
+            (0..self.n).map(|_| Vec::with_capacity(self.n)).collect();
+        for i in 0..self.n {
+            let scale = Self::compress_into(
+                self.kind,
+                &inputs[i],
+                &mut self.worker_err[i],
+                &mut self.comp_scratch,
+                &mut self.quant_scratch,
+            );
+            // Split the worker's compressed tensor into n wire chunks.
+            // (For the packed 1-bit format the chunk is re-packed from the
+            // dequantized view — on MPI this is just pointer arithmetic
+            // into the sign buffer; byte counts are identical.)
+            let mut sent = 0usize;
+            for j in 0..self.n {
+                let r = self.layout.range(j);
+                let chunk = &self.quant_scratch[r];
+                let payload = Self::chunk_payload(self.kind, chunk, scale);
+                // chunk i stays local — no wire cost.
+                if j != i {
+                    sent += payload.wire_bytes();
+                }
+                mailbox[j].push(payload);
+            }
+            alltoall_bytes = alltoall_bytes.max(sent);
+        }
+
+        // ---- Phase 2: each "server" worker j averages its n received
+        // chunks and re-compresses with its server error.  The max chunk
+        // size bounds all scratch; buffers are reused across servers.
+        let max_chunk = self.layout.max_size();
+        let mut gathered: Vec<WirePayload> = Vec::with_capacity(self.n);
+        let mut allgather_bytes = 0usize;
+        let mut avg = vec![0.0f32; max_chunk];
+        let mut decode = vec![0.0f32; max_chunk];
+        let mut quant = vec![0.0f32; max_chunk];
+        for j in 0..self.n {
+            let clen = self.layout.size(j);
+            let avg = &mut avg[..clen];
+            let decode = &mut decode[..clen];
+            let quant = &mut quant[..clen];
+            avg.iter_mut().for_each(|a| *a = 0.0);
+            for payload in &mailbox[j] {
+                payload.decode_into(decode);
+                for k in 0..clen {
+                    avg[k] += decode[k];
+                }
+            }
+            let inv = 1.0 / self.n as f32;
+            for a in avg.iter_mut() {
+                *a *= inv;
+            }
+            let scale = Self::compress_into(
+                self.kind,
+                avg,
+                &mut self.server_err[j],
+                &mut self.comp_scratch,
+                quant,
+            );
+            let payload = Self::chunk_payload(self.kind, quant, scale);
+            // all-gather: worker j broadcasts its chunk to n-1 peers; the
+            // per-GPU *send* volume is its own chunk once (ring gather).
+            allgather_bytes = allgather_bytes.max(payload.wire_bytes());
+            gathered.push(payload);
+        }
+
+        // ---- Phase 3: every worker reconstructs the full tensor from the
+        // gathered compressed chunks.
+        for j in 0..self.n {
+            let r = self.layout.range(j);
+            gathered[j].decode_into(&mut output[r]);
+        }
+
+        CommStats {
+            alltoall_bytes_per_gpu: alltoall_bytes,
+            allgather_bytes_per_gpu: allgather_bytes,
+            uncompressed_bytes: self.len * 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::plain::allreduce_average;
+    use crate::tensor;
+    use crate::util::prng::Rng;
+
+    fn random_inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let base = Rng::new(seed);
+        (0..n)
+            .map(|i| base.fork(i as u64).normal_vec(len, 1.0))
+            .collect()
+    }
+
+    #[test]
+    fn identity_compression_equals_exact_average() {
+        let inputs = random_inputs(4, 1000, 1);
+        let mut car = CompressedAllreduce::new(4, 1000, CompressionKind::None);
+        let mut out = vec![0.0f32; 1000];
+        car.allreduce(&inputs, &mut out);
+        let mut exact = vec![0.0f32; 1000];
+        allreduce_average(&inputs, &mut exact);
+        assert!(tensor::max_abs_diff(&out, &exact) < 1e-6);
+    }
+
+    #[test]
+    fn onebit_output_identical_across_reconstruction() {
+        // The whole point of the double compression: every worker decodes
+        // the same gathered chunks, so the final tensor is single-valued.
+        // (Reconstruction happens once here, but chunk payloads must be
+        // self-contained: decode twice and compare.)
+        let inputs = random_inputs(4, 257, 2);
+        let mut car =
+            CompressedAllreduce::new(4, 257, CompressionKind::OneBit);
+        let mut out1 = vec![0.0f32; 257];
+        car.allreduce(&inputs, &mut out1);
+        // run again with same state ⇒ different (error state advanced),
+        // but both decode deterministically
+        let mut out2 = vec![0.0f32; 257];
+        let mut car2 =
+            CompressedAllreduce::new(4, 257, CompressionKind::OneBit);
+        car2.allreduce(&inputs, &mut out2);
+        assert_eq!(out1, out2, "deterministic across fresh instances");
+    }
+
+    #[test]
+    fn onebit_wire_volume_is_tiny() {
+        let inputs = random_inputs(8, 100_000, 3);
+        let mut car =
+            CompressedAllreduce::new(8, 100_000, CompressionKind::OneBit);
+        let mut out = vec![0.0f32; 100_000];
+        let stats = car.allreduce(&inputs, &mut out);
+        // >20x reduction vs fp32 ring
+        assert!(
+            stats.reduction_vs_fp32() > 20.0,
+            "reduction {}",
+            stats.reduction_vs_fp32()
+        );
+    }
+
+    #[test]
+    fn onebit_error_feedback_telescopes_exactly() {
+        // The exact double-EC identity (supplementary §11):
+        //   Σ_t m̄_t  =  Σ_t v̄_t  −  (1/n) Σ_i δ^(i)_T  −  δ̄_T .
+        // Verified coordinate-wise in f64 over fresh random inputs.
+        let n = 4;
+        let len = 512;
+        let mut car = CompressedAllreduce::new(n, len, CompressionKind::OneBit);
+        let base = Rng::new(42);
+        let mut sum_out = vec![0.0f64; len];
+        let mut sum_avg = vec![0.0f64; len];
+        let mut out = vec![0.0f32; len];
+        let steps = 60;
+        let mut rngs: Vec<Rng> =
+            (0..n).map(|i| base.fork(100 + i as u64)).collect();
+        for _ in 0..steps {
+            let inputs: Vec<Vec<f32>> =
+                rngs.iter_mut().map(|r| r.normal_vec(len, 1.0)).collect();
+            let mut avg = vec![0.0f32; len];
+            allreduce_average(&inputs, &mut avg);
+            car.allreduce(&inputs, &mut out);
+            for i in 0..len {
+                sum_out[i] += out[i] as f64;
+                sum_avg[i] += avg[i] as f64;
+            }
+        }
+        // reconstruct the residual error state
+        let mut resid = vec![0.0f64; len];
+        for i in 0..n {
+            for (k, &e) in car.worker_error(i).iter().enumerate() {
+                resid[k] += e as f64 / n as f64;
+            }
+        }
+        for j in 0..n {
+            let r = car.layout().range(j);
+            for (off, &e) in car.server_error(j).iter().enumerate() {
+                resid[r.start + off] += e as f64;
+            }
+        }
+        for k in 0..len {
+            let lhs = sum_out[k];
+            let rhs = sum_avg[k] - resid[k];
+            assert!(
+                (lhs - rhs).abs() < 2e-2,
+                "telescoping violated at {k}: {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn uneven_lengths_work() {
+        for len in [1usize, 7, 63, 100, 1001] {
+            for n in [1usize, 2, 3, 5] {
+                let inputs = random_inputs(n, len, 5);
+                let mut car =
+                    CompressedAllreduce::new(n, len, CompressionKind::OneBit);
+                let mut out = vec![0.0f32; len];
+                car.allreduce(&inputs, &mut out);
+                assert!(out.iter().all(|x| x.is_finite()), "len={len} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_onebit_is_ec_quantize() {
+        let inputs = random_inputs(1, 128, 6);
+        let mut car = CompressedAllreduce::new(1, 128, CompressionKind::OneBit);
+        let mut out = vec![0.0f32; 128];
+        let stats = car.allreduce(&inputs, &mut out);
+        // one worker: no alltoall traffic (its chunk stays local)
+        assert_eq!(stats.alltoall_bytes_per_gpu, 0);
+        // output magnitudes equal double-compressed scale — two-valued
+        let uniq: std::collections::BTreeSet<u32> =
+            out.iter().map(|f| f.abs().to_bits()).collect();
+        assert!(uniq.len() <= 2);
+    }
+
+    #[test]
+    fn reset_errors_zeroes_state() {
+        let inputs = random_inputs(2, 64, 7);
+        let mut car = CompressedAllreduce::new(2, 64, CompressionKind::OneBit);
+        let mut out = vec![0.0f32; 64];
+        car.allreduce(&inputs, &mut out);
+        assert!(car.worker_error(0).iter().any(|&e| e != 0.0));
+        car.reset_errors();
+        assert!(car.worker_error(0).iter().all(|&e| e == 0.0));
+        assert!(car.worker_error(1).iter().all(|&e| e == 0.0));
+    }
+
+    #[test]
+    fn nbit_8_is_close_to_exact_average() {
+        let inputs = random_inputs(4, 2048, 8);
+        let mut exact = vec![0.0f32; 2048];
+        allreduce_average(&inputs, &mut exact);
+        let mut car =
+            CompressedAllreduce::new(4, 2048, CompressionKind::NBit(8));
+        let mut out = vec![0.0f32; 2048];
+        car.allreduce(&inputs, &mut out);
+        let rms: f64 = (0..2048)
+            .map(|i| ((out[i] - exact[i]) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+            / (2048f64).sqrt();
+        assert!(rms < 0.05, "rms={rms}");
+    }
+}

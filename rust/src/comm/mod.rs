@@ -1,0 +1,42 @@
+//! Communication layer: the paper's `compressed_allreduce` (Figure 3) plus
+//! the full-precision baseline, with byte-accurate wire accounting.
+//!
+//! Data movement here is *real*: sign bits are packed into u32 words,
+//! "transferred" (moved between per-worker buffers), and decoded exactly as
+//! on an MPI cluster.  Only the elapsed time is modeled (see
+//! [`crate::netsim`]).  The SPMD lock-step driver owns all workers'
+//! buffers, which makes every run bit-deterministic.
+
+pub mod compressed;
+pub mod fabric;
+pub mod plain;
+
+pub use compressed::CompressedAllreduce;
+pub use fabric::ThreadedFabric;
+pub use plain::allreduce_average;
+
+/// Bytes that crossed the (simulated) wire during one collective, split by
+/// phase — feeds both the volume ledger (§7.1 claim) and the netsim clock.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommStats {
+    /// Payload bytes each GPU sent during the all-to-all/scatter phase.
+    pub alltoall_bytes_per_gpu: usize,
+    /// Payload bytes each GPU sent during the all-gather phase.
+    pub allgather_bytes_per_gpu: usize,
+    /// Equivalent uncompressed (fp32) bytes, for ratio reporting.
+    pub uncompressed_bytes: usize,
+}
+
+impl CommStats {
+    pub fn total_per_gpu(&self) -> usize {
+        self.alltoall_bytes_per_gpu + self.allgather_bytes_per_gpu
+    }
+
+    /// Volume reduction vs fp32 allreduce (ring: ~2x payload per GPU).
+    pub fn reduction_vs_fp32(&self) -> f64 {
+        if self.total_per_gpu() == 0 {
+            return 1.0;
+        }
+        (2 * self.uncompressed_bytes) as f64 / self.total_per_gpu() as f64
+    }
+}

@@ -1,0 +1,71 @@
+//! Full-precision baseline collective: average over workers.
+//!
+//! Numerically this is what a ring allreduce computes; the ring's *time* is
+//! modeled in [`crate::netsim::collectives`], and its per-GPU wire volume
+//! (2·(n−1)/n·bytes) is reported in the returned [`CommStats`].
+
+use super::CommStats;
+
+/// Average `inputs` (one tensor per worker) into `out`; returns wire stats
+/// for an fp32 ring allreduce of the same tensor.
+pub fn allreduce_average(inputs: &[Vec<f32>], out: &mut [f32]) -> CommStats {
+    let n = inputs.len();
+    assert!(n > 0);
+    let len = out.len();
+    for inp in inputs {
+        assert_eq!(inp.len(), len);
+    }
+    // f64 accumulation: the reference average the compressed path is
+    // compared against in tests must not drift.
+    for i in 0..len {
+        let mut acc = 0.0f64;
+        for inp in inputs {
+            acc += inp[i] as f64;
+        }
+        out[i] = (acc / n as f64) as f32;
+    }
+    let bytes = len * 4;
+    let ring_per_gpu = if n > 1 {
+        2 * bytes * (n - 1) / n
+    } else {
+        0
+    };
+    CommStats {
+        alltoall_bytes_per_gpu: ring_per_gpu / 2,
+        allgather_bytes_per_gpu: ring_per_gpu / 2,
+        uncompressed_bytes: bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averages_exactly() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![3.0f32, 2.0, 1.0];
+        let mut out = vec![0.0f32; 3];
+        let stats = allreduce_average(&[a, b], &mut out);
+        assert_eq!(out, vec![2.0, 2.0, 2.0]);
+        assert_eq!(stats.uncompressed_bytes, 12);
+    }
+
+    #[test]
+    fn single_worker_is_identity_with_zero_traffic() {
+        let a = vec![5.0f32, -1.0];
+        let mut out = vec![0.0f32; 2];
+        let stats = allreduce_average(&[a.clone()], &mut out);
+        assert_eq!(out, a);
+        assert_eq!(stats.total_per_gpu(), 0);
+    }
+
+    #[test]
+    fn ring_volume_formula() {
+        let inputs: Vec<Vec<f32>> = (0..4).map(|_| vec![0.0f32; 100]).collect();
+        let mut out = vec![0.0f32; 100];
+        let stats = allreduce_average(&inputs, &mut out);
+        // 2 * 400 B * 3/4 = 600 B per GPU
+        assert_eq!(stats.total_per_gpu(), 600);
+    }
+}

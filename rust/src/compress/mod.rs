@@ -1,0 +1,226 @@
+//! Error-compensated compression operators and the 1-bit wire format.
+//!
+//! The native implementations here mirror the L1 Pallas kernels bit-for-bit
+//! (parity-tested against the AOT artifacts in `rust/tests/parity.rs`);
+//! they exist because the netsim convergence sweeps run 8–64 workers for
+//! 10⁴–10⁵ steps where per-call PJRT dispatch would dominate.  The E2E
+//! drivers use the PJRT path (`ExecMode::Pjrt`).
+
+pub mod onebit;
+pub mod nbit;
+pub mod pack;
+
+pub use onebit::{onebit_compress, OneBitPayload};
+pub use pack::{pack_signs, unpack_signs};
+
+/// A compression operator `C_ω[·]` with its own carried error state.
+///
+/// `compress(value)` returns the *dequantized* representation `C_ω[value +
+/// err]` and internally updates `err += value - returned` (error feedback,
+/// paper eq. (5)).  `wire_bytes` reports what the payload would cost on the
+/// network — the netsim charges exactly this.
+pub trait Compressor: Send {
+    /// Compress `value + carried_error`, update the error, and write the
+    /// dequantized result into `out`.  Returns the wire cost in bytes.
+    fn compress_into(&mut self, value: &[f32], out: &mut [f32]) -> usize;
+
+    /// Length this compressor is sized for.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Reset carried error (e.g. at the warmup→compression boundary).
+    fn reset_error(&mut self);
+
+    /// Current carried error (for invariant tests / monitoring).
+    fn error(&self) -> &[f32];
+}
+
+/// Identity "compression": full-precision pass-through with zero error.
+/// This is the paper's **1-bit Adam (32-bits)** ablation — variance frozen
+/// but momentum uncompressed.
+pub struct IdentityCompressor {
+    err: Vec<f32>,
+}
+
+impl IdentityCompressor {
+    pub fn new(n: usize) -> Self {
+        IdentityCompressor { err: vec![0.0; n] }
+    }
+}
+
+impl Compressor for IdentityCompressor {
+    fn compress_into(&mut self, value: &[f32], out: &mut [f32]) -> usize {
+        out.copy_from_slice(value);
+        value.len() * 4
+    }
+
+    fn len(&self) -> usize {
+        self.err.len()
+    }
+
+    fn reset_error(&mut self) {}
+
+    fn error(&self) -> &[f32] {
+        &self.err
+    }
+}
+
+/// Error-compensated 1-bit compressor (the paper's `C_ω`).
+pub struct OneBitCompressor {
+    err: Vec<f32>,
+    /// Scratch for the compensated tensor.
+    comp: Vec<f32>,
+}
+
+impl OneBitCompressor {
+    pub fn new(n: usize) -> Self {
+        OneBitCompressor { err: vec![0.0; n], comp: vec![0.0; n] }
+    }
+
+    /// Wire cost of a length-`n` 1-bit payload: packed sign bits + one f32
+    /// scale (+ 4-byte length header, matching `pack::wire_size`).
+    pub fn wire_cost(n: usize) -> usize {
+        pack::wire_size(n)
+    }
+}
+
+impl Compressor for OneBitCompressor {
+    fn compress_into(&mut self, value: &[f32], out: &mut [f32]) -> usize {
+        assert_eq!(value.len(), self.err.len());
+        assert_eq!(out.len(), self.err.len());
+        onebit::onebit_compress_ec(value, &mut self.err, &mut self.comp, out);
+        Self::wire_cost(value.len())
+    }
+
+    fn len(&self) -> usize {
+        self.err.len()
+    }
+
+    fn reset_error(&mut self) {
+        self.err.iter_mut().for_each(|e| *e = 0.0);
+    }
+
+    fn error(&self) -> &[f32] {
+        &self.err
+    }
+}
+
+/// Error-compensated n-bit linear quantizer (Figure 12 ablation and the
+/// fp16-style baselines).  Quantizes to `2^bits` levels over the symmetric
+/// range `[-max_abs, max_abs]`.
+pub struct NBitCompressor {
+    bits: u32,
+    err: Vec<f32>,
+}
+
+impl NBitCompressor {
+    pub fn new(n: usize, bits: u32) -> Self {
+        assert!((1..=16).contains(&bits));
+        NBitCompressor { bits, err: vec![0.0; n] }
+    }
+}
+
+impl Compressor for NBitCompressor {
+    fn compress_into(&mut self, value: &[f32], out: &mut [f32]) -> usize {
+        nbit::nbit_compress_ec(self.bits, value, &mut self.err, out);
+        // payload: packed codes + one f32 max_abs + 4-byte header
+        (value.len() * self.bits as usize).div_ceil(8) + 8
+    }
+
+    fn len(&self) -> usize {
+        self.err.len()
+    }
+
+    fn reset_error(&mut self) {
+        self.err.iter_mut().for_each(|e| *e = 0.0);
+    }
+
+    fn error(&self) -> &[f32] {
+        &self.err
+    }
+}
+
+/// Factory for the compressors used across the experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressionKind {
+    /// Full precision (fp32).
+    None,
+    /// Error-compensated 1-bit (the paper's method).
+    OneBit,
+    /// Error-compensated linear quantizer with `bits` bits.
+    NBit(u32),
+}
+
+impl CompressionKind {
+    pub fn build(self, n: usize) -> Box<dyn Compressor> {
+        match self {
+            CompressionKind::None => Box::new(IdentityCompressor::new(n)),
+            CompressionKind::OneBit => Box::new(OneBitCompressor::new(n)),
+            CompressionKind::NBit(b) => Box::new(NBitCompressor::new(n, b)),
+        }
+    }
+
+    /// Wire bytes for a length-`n` payload under this compression.
+    pub fn wire_bytes(self, n: usize) -> usize {
+        match self {
+            CompressionKind::None => n * 4,
+            CompressionKind::OneBit => pack::wire_size(n),
+            CompressionKind::NBit(b) => (n * b as usize).div_ceil(8) + 8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn identity_has_zero_error_and_full_cost() {
+        let mut c = IdentityCompressor::new(4);
+        let mut out = vec![0.0f32; 4];
+        let bytes = c.compress_into(&[1.0, -2.0, 3.0, -4.0], &mut out);
+        assert_eq!(out, vec![1.0, -2.0, 3.0, -4.0]);
+        assert_eq!(bytes, 16);
+        assert!(c.error().iter().all(|&e| e == 0.0));
+    }
+
+    #[test]
+    fn onebit_cost_is_32x_smaller_plus_header() {
+        let n = 1024;
+        let full = CompressionKind::None.wire_bytes(n);
+        let bit = CompressionKind::OneBit.wire_bytes(n);
+        // 1024 f32 = 4096 B vs 128 B signs + 8 B scale/header
+        assert_eq!(full, 4096);
+        assert!(bit <= 4096 / 32 + 16, "bit={bit}");
+    }
+
+    #[test]
+    fn nbit_cost_scales_with_bits() {
+        let n = 1000;
+        let b2 = CompressionKind::NBit(2).wire_bytes(n);
+        let b8 = CompressionKind::NBit(8).wire_bytes(n);
+        assert!(b8 > 3 * b2);
+    }
+
+    #[test]
+    fn compressor_trait_objects_work() {
+        let mut rng = Rng::new(0);
+        for kind in [
+            CompressionKind::None,
+            CompressionKind::OneBit,
+            CompressionKind::NBit(4),
+        ] {
+            let n = 256;
+            let mut c = kind.build(n);
+            let v = rng.normal_vec(n, 1.0);
+            let mut out = vec![0.0f32; n];
+            let bytes = c.compress_into(&v, &mut out);
+            assert_eq!(bytes, kind.wire_bytes(n));
+            assert!(out.iter().all(|x| x.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Error-compensated linear n-bit quantizer.
+//!
+//! Used by the Figure 12 ablation ("Adam with n-bits variance compression")
+//! and as an fp16-ish baseline.  Symmetric linear quantization over
+//! `[-max_abs, max_abs]` with `2^bits` levels and error feedback.
+
+/// Quantize `value + err` to `2^bits` levels, update `err`, write the
+/// dequantized result to `out`.  Returns the max-abs range used.
+pub fn nbit_compress_ec(
+    bits: u32,
+    value: &[f32],
+    err: &mut [f32],
+    out: &mut [f32],
+) -> f32 {
+    let n = value.len();
+    assert_eq!(err.len(), n);
+    assert_eq!(out.len(), n);
+    if n == 0 {
+        return 0.0;
+    }
+    let levels = (1u64 << bits) as f32 - 1.0;
+
+    let mut max_abs = 0.0f32;
+    for i in 0..n {
+        let c = value[i] + err[i];
+        // stash compensated in out temporarily
+        out[i] = c;
+        max_abs = max_abs.max(c.abs());
+    }
+    if max_abs == 0.0 {
+        for i in 0..n {
+            err[i] = 0.0;
+            out[i] = 0.0;
+        }
+        return 0.0;
+    }
+    let step = 2.0 * max_abs / levels;
+    for i in 0..n {
+        let c = out[i];
+        // midtread quantizer: round((c + max)/step) clamped to [0, levels]
+        let code = ((c + max_abs) / step).round().clamp(0.0, levels);
+        let q = code * step - max_abs;
+        out[i] = q;
+        err[i] = c - q;
+    }
+    max_abs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn high_bits_is_near_lossless() {
+        let mut rng = Rng::new(0);
+        let v = rng.normal_vec(1000, 1.0);
+        let mut err = vec![0.0f32; 1000];
+        let mut out = vec![0.0f32; 1000];
+        nbit_compress_ec(16, &v, &mut err, &mut out);
+        let max_err = err.iter().map(|e| e.abs()).fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "max_err={max_err}");
+    }
+
+    #[test]
+    fn one_bit_equivalent_has_two_levels_plus_zero() {
+        let v = [0.9f32, -0.9, 0.1, -0.1];
+        let mut err = vec![0.0f32; 4];
+        let mut out = vec![0.0f32; 4];
+        nbit_compress_ec(1, &v, &mut err, &mut out);
+        // 1 bit => 1 level step => values in {-max, +max} after rounding...
+        for o in out {
+            assert!(o.abs() <= 0.9 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn error_feedback_telescopes() {
+        let mut rng = Rng::new(1);
+        let n = 256;
+        let mut err = vec![0.0f32; n];
+        let mut out = vec![0.0f32; n];
+        let mut sq = vec![0.0f64; n];
+        let mut sv = vec![0.0f64; n];
+        for _ in 0..40 {
+            let v = rng.normal_vec(n, 1.0);
+            nbit_compress_ec(4, &v, &mut err, &mut out);
+            for i in 0..n {
+                sq[i] += out[i] as f64;
+                sv[i] += v[i] as f64;
+            }
+        }
+        for i in 0..n {
+            assert!((sv[i] - sq[i] - err[i] as f64).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn zero_input() {
+        let mut err = vec![0.0f32; 8];
+        let mut out = vec![1.0f32; 8];
+        let r = nbit_compress_ec(4, &[0.0; 8], &mut err, &mut out);
+        assert_eq!(r, 0.0);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn quantization_error_shrinks_with_bits() {
+        let mut rng = Rng::new(2);
+        let v = rng.normal_vec(2000, 1.0);
+        let mut errs = Vec::new();
+        for bits in [2u32, 4, 8] {
+            let mut err = vec![0.0f32; v.len()];
+            let mut out = vec![0.0f32; v.len()];
+            nbit_compress_ec(bits, &v, &mut err, &mut out);
+            let rms = (err.iter().map(|e| (*e as f64).powi(2)).sum::<f64>()
+                / v.len() as f64)
+                .sqrt();
+            errs.push(rms);
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+}

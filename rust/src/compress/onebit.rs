@@ -1,0 +1,220 @@
+//! The paper's 1-bit error-compensated compression (Algorithm 1, l. 7/10).
+//!
+//! Native mirror of the L1 Pallas kernel `kernels/onebit.py`:
+//!
+//! ```text
+//! compensated = value + err
+//! scale       = ||compensated||_1 / N
+//! quantized   = sign(compensated) * scale     (sign(0) := +1)
+//! err         = compensated - quantized
+//! ```
+//!
+//! The hot loop is fused: one pass computes the compensated tensor and its
+//! L1 norm, a second pass emits the quantized values and the new error.
+
+use super::pack;
+
+/// A 1-bit payload as it travels on the (simulated) wire: packed sign bits
+/// plus one f32 scale.  `n` is the logical element count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OneBitPayload {
+    pub n: usize,
+    pub scale: f32,
+    pub signs: Vec<u32>,
+}
+
+impl OneBitPayload {
+    /// Bytes this payload occupies on the wire.
+    pub fn wire_bytes(&self) -> usize {
+        pack::wire_size(self.n)
+    }
+
+    /// Reconstruct the dequantized tensor.
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n];
+        self.decode_into(&mut out);
+        out
+    }
+
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n);
+        pack::unpack_signs_scaled(&self.signs, self.scale, out);
+    }
+
+    /// Encode a dequantized ±scale tensor back into a payload (used by the
+    /// wire-level transport in `comm`).
+    pub fn encode(x: &[f32], scale: f32) -> Self {
+        OneBitPayload { n: x.len(), scale, signs: pack::pack_signs(x) }
+    }
+}
+
+/// Error-compensated 1-bit compression, fused, allocation-free.
+///
+/// * `value` — input tensor (momentum chunk)
+/// * `err` — carried compression error, updated in place
+/// * `comp_scratch` — scratch buffer (same length)
+/// * `out` — dequantized output `sign(value+err) * scale`
+///
+/// Returns the scale factor.
+pub fn onebit_compress_ec(
+    value: &[f32],
+    err: &mut [f32],
+    comp_scratch: &mut [f32],
+    out: &mut [f32],
+) -> f32 {
+    let n = value.len();
+    assert_eq!(err.len(), n);
+    assert_eq!(comp_scratch.len(), n);
+    assert_eq!(out.len(), n);
+    if n == 0 {
+        return 0.0;
+    }
+
+    // Pass 1: compensated tensor + L1 norm.  Blocked accumulation: f32
+    // partial sums inside a 4096-lane block (autovectorizes), f64 across
+    // blocks (no catastrophic accumulation for n up to 10⁹).
+    let mut l1 = 0.0f64;
+    const BLK: usize = 4096;
+    let mut i = 0;
+    while i < n {
+        let end = (i + BLK).min(n);
+        let mut part = 0.0f32;
+        for k in i..end {
+            let c = value[k] + err[k];
+            comp_scratch[k] = c;
+            part += c.abs();
+        }
+        l1 += part as f64;
+        i = end;
+    }
+    let scale = (l1 / n as f64) as f32;
+
+    // Pass 2: quantize + error feedback.
+    for i in 0..n {
+        let c = comp_scratch[i];
+        let q = if c >= 0.0 { scale } else { -scale };
+        out[i] = q;
+        err[i] = c - q;
+    }
+    scale
+}
+
+/// Convenience wrapper returning owned buffers (test/diagnostic use).
+pub fn onebit_compress(value: &[f32], err: &[f32]) -> (Vec<f32>, Vec<f32>, f32) {
+    let mut e = err.to_vec();
+    let mut scratch = vec![0.0f32; value.len()];
+    let mut out = vec![0.0f32; value.len()];
+    let scale = onebit_compress_ec(value, &mut e, &mut scratch, &mut out);
+    (out, e, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{forall, gen_vec};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn matches_definition_on_small_input() {
+        let value = [1.0f32, -3.0, 0.5, -0.5];
+        let err = [0.0f32; 4];
+        let (q, e, s) = onebit_compress(&value, &err);
+        // scale = (1 + 3 + 0.5 + 0.5)/4 = 1.25
+        assert!((s - 1.25).abs() < 1e-6);
+        assert_eq!(q, vec![1.25, -1.25, 1.25, -1.25]);
+        for i in 0..4 {
+            assert!((e[i] - (value[i] - q[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sign_of_zero_is_positive() {
+        let (q, _, s) = onebit_compress(&[0.0, 1.0], &[0.0, 0.0]);
+        assert_eq!(q[0], s);
+        assert!(q[0] > 0.0);
+    }
+
+    #[test]
+    fn zero_input_gives_zero_scale() {
+        let (q, e, s) = onebit_compress(&[0.0; 8], &[0.0; 8]);
+        assert_eq!(s, 0.0);
+        assert!(q.iter().all(|&x| x == 0.0));
+        assert!(e.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn error_feedback_telescopes() {
+        // Σ_t quantized_t + err_T == Σ_t value_t (paper eq. (5)).
+        let n = 512;
+        let mut rng = Rng::new(1);
+        let mut err = vec![0.0f32; n];
+        let mut scratch = vec![0.0f32; n];
+        let mut out = vec![0.0f32; n];
+        let mut sum_q = vec![0.0f64; n];
+        let mut sum_v = vec![0.0f64; n];
+        for _ in 0..50 {
+            let v = rng.normal_vec(n, 1.0);
+            onebit_compress_ec(&v, &mut err, &mut scratch, &mut out);
+            for i in 0..n {
+                sum_q[i] += out[i] as f64;
+                sum_v[i] += v[i] as f64;
+            }
+        }
+        for i in 0..n {
+            let resid = sum_v[i] - (sum_q[i] + err[i] as f64);
+            assert!(resid.abs() < 1e-3, "i={i} resid={resid}");
+        }
+    }
+
+    #[test]
+    fn l1_magnitude_is_preserved() {
+        let mut rng = Rng::new(2);
+        let v = rng.normal_vec(1000, 2.0);
+        let (q, _, _) = onebit_compress(&v, &vec![0.0; 1000]);
+        let l1v: f64 = v.iter().map(|&x| x.abs() as f64).sum();
+        let l1q: f64 = q.iter().map(|&x| x.abs() as f64).sum();
+        assert!((l1v - l1q).abs() / l1v < 1e-5);
+    }
+
+    #[test]
+    fn error_is_bounded_by_scale_property() {
+        // |err_i| <= |compensated_i| + scale <= ... — concretely the new
+        // error can never exceed max(|compensated|) + scale.
+        forall(
+            100,
+            |r| gen_vec(r, 1, 500, 1.0),
+            |v: &Vec<f32>| {
+                let (q, e, s) = onebit_compress(v, &vec![0.0; v.len()]);
+                let max_c =
+                    v.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+                for (i, &ei) in e.iter().enumerate() {
+                    if ei.abs() > max_c + s + 1e-5 {
+                        return Err(format!(
+                            "err[{i}]={ei} exceeds {max_c}+{s} (q={})",
+                            q[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn payload_roundtrip_property() {
+        forall(
+            100,
+            |r| gen_vec(r, 1, 300, 1.0),
+            |v: &Vec<f32>| {
+                let (q, _, s) = onebit_compress(v, &vec![0.0; v.len()]);
+                let payload = OneBitPayload::encode(&q, s);
+                let back = payload.decode();
+                if back == q {
+                    Ok(())
+                } else {
+                    Err("decode(encode(q)) != q".into())
+                }
+            },
+        );
+    }
+}

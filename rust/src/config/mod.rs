@@ -1,0 +1,110 @@
+//! Experiment configuration: typed presets for the paper's published
+//! schedules (Table 2) plus a small key=value config-file loader so runs
+//! are launchable as `obadam train --config configs/bert_large_128.cfg`.
+
+pub mod presets;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+
+pub use presets::{SchedulePreset, TABLE2_PRESETS};
+
+/// A parsed `key = value` config file (`#` comments, blank lines ok).
+#[derive(Debug, Default, Clone)]
+pub struct ConfigFile {
+    values: BTreeMap<String, String>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<ConfigFile> {
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!(
+                    "config line {}: expected 'key = value', got '{raw}'",
+                    lineno + 1
+                ))
+            })?;
+            values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(ConfigFile { values })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<ConfigFile> {
+        ConfigFile::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| {
+                Error::Config(format!("{key}={v}: not a usize ({e})"))
+            }),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| {
+                Error::Config(format!("{key}={v}: not a float ({e})"))
+            }),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_key_values_with_comments() {
+        let c = ConfigFile::parse(
+            "# a comment\nsteps = 100\nlr = 4e-4  # peak\n\nname = bert\n",
+        )
+        .unwrap();
+        assert_eq!(c.usize_or("steps", 0).unwrap(), 100);
+        assert!((c.f32_or("lr", 0.0).unwrap() - 4e-4).abs() < 1e-9);
+        assert_eq!(c.get("name"), Some("bert"));
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn missing_keys_fall_back() {
+        let c = ConfigFile::parse("").unwrap();
+        assert_eq!(c.usize_or("steps", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(ConfigFile::parse("not a kv line").is_err());
+    }
+
+    #[test]
+    fn bad_types_error() {
+        let c = ConfigFile::parse("steps = banana").unwrap();
+        assert!(c.usize_or("steps", 0).is_err());
+    }
+}

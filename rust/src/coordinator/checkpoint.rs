@@ -1,0 +1,223 @@
+//! Checkpointing: save/restore training state to a compact binary format.
+//!
+//! The paper's two-stage structure makes checkpoints first-class: the
+//! warmup can run once (expensive, full-precision) and the compression
+//! stage can be relaunched from `v_{T_w}` repeatedly — exactly how the
+//! DeepSpeed release is used in practice.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "OBAD" | version u32 | step u64 | phase u8 | dim u64
+//! | params f32×dim | m f32×dim | v f32×dim
+//! | crc32-like checksum u64 (fletcher)
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::optim::Phase;
+use crate::util::error::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"OBAD";
+const VERSION: u32 = 1;
+
+/// Serialized training state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub phase: Phase,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+fn fletcher64(data: &[u8]) -> u64 {
+    let mut a: u64 = 0;
+    let mut b: u64 = 0;
+    for chunk in data.chunks(4) {
+        let mut word = [0u8; 4];
+        word[..chunk.len()].copy_from_slice(chunk);
+        a = (a + u32::from_le_bytes(word) as u64) % 0xFFFF_FFFF;
+        b = (b + a) % 0xFFFF_FFFF;
+    }
+    (b << 32) | a
+}
+
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.reserve(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn read_f32s(data: &[u8], off: &mut usize, n: usize) -> Result<Vec<f32>> {
+    let need = n * 4;
+    if *off + need > data.len() {
+        return Err(Error::msg("checkpoint truncated"));
+    }
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let s = *off + i * 4;
+        out.push(f32::from_le_bytes([
+            data[s],
+            data[s + 1],
+            data[s + 2],
+            data[s + 3],
+        ]));
+    }
+    *off += need;
+    Ok(out)
+}
+
+impl Checkpoint {
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let dim = self.params.len();
+        assert_eq!(self.m.len(), dim);
+        assert_eq!(self.v.len(), dim);
+        let mut buf = Vec::with_capacity(21 + dim * 12 + 8);
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.step.to_le_bytes());
+        buf.push(match self.phase {
+            Phase::Warmup => 0,
+            Phase::Compression => 1,
+        });
+        buf.extend_from_slice(&(dim as u64).to_le_bytes());
+        push_f32s(&mut buf, &self.params);
+        push_f32s(&mut buf, &self.m);
+        push_f32s(&mut buf, &self.v);
+        let sum = fletcher64(&buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+        buf
+    }
+
+    /// Parse from bytes (validates magic, version, length, checksum).
+    pub fn from_bytes(data: &[u8]) -> Result<Checkpoint> {
+        if data.len() < 29 {
+            return Err(Error::msg("checkpoint too short"));
+        }
+        let (body, sum_bytes) = data.split_at(data.len() - 8);
+        let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        if fletcher64(body) != stored {
+            return Err(Error::msg("checkpoint checksum mismatch"));
+        }
+        if &body[..4] != MAGIC {
+            return Err(Error::msg("bad checkpoint magic"));
+        }
+        let version = u32::from_le_bytes(body[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(Error::msg(format!(
+                "unsupported checkpoint version {version}"
+            )));
+        }
+        let step = u64::from_le_bytes(body[8..16].try_into().unwrap());
+        let phase = match body[16] {
+            0 => Phase::Warmup,
+            1 => Phase::Compression,
+            p => return Err(Error::msg(format!("bad phase byte {p}"))),
+        };
+        let dim = u64::from_le_bytes(body[17..25].try_into().unwrap()) as usize;
+        let mut off = 25usize;
+        let params = read_f32s(body, &mut off, dim)?;
+        let m = read_f32s(body, &mut off, dim)?;
+        let v = read_f32s(body, &mut off, dim)?;
+        if off != body.len() {
+            return Err(Error::msg("checkpoint has trailing bytes"));
+        }
+        Ok(Checkpoint { step, phase, params, m, v })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut data = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut data)?;
+        Checkpoint::from_bytes(&data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn sample(dim: usize) -> Checkpoint {
+        let mut rng = Rng::new(1);
+        Checkpoint {
+            step: 12345,
+            phase: Phase::Compression,
+            params: rng.normal_vec(dim, 1.0),
+            m: rng.normal_vec(dim, 0.1),
+            v: rng.normal_vec(dim, 0.01).iter().map(|x| x.abs()).collect(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let ck = sample(1000);
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let dir = std::env::temp_dir().join("obadam_ck_test");
+        let path = dir.join("test.ckpt");
+        let ck = sample(257);
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let ck = sample(64);
+        let mut bytes = ck.to_bytes();
+        // flip one payload bit
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let ck = sample(64);
+        let bytes = ck.to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 9]).is_err());
+        assert!(Checkpoint::from_bytes(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn warmup_phase_roundtrips() {
+        let mut ck = sample(8);
+        ck.phase = Phase::Warmup;
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.phase, Phase::Warmup);
+    }
+
+    #[test]
+    fn empty_dim_roundtrips() {
+        let ck = Checkpoint {
+            step: 0,
+            phase: Phase::Warmup,
+            params: vec![],
+            m: vec![],
+            v: vec![],
+        };
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(ck, back);
+    }
+}

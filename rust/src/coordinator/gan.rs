@@ -1,0 +1,113 @@
+//! Adversarial training driver (Figure 8): discriminator + generator, each
+//! with its own distributed optimizer, trained in alternation over the
+//! synthetic face-mode data.
+
+use std::rc::Rc;
+
+use crate::data::GanData;
+use crate::optim::DistOptimizer;
+use crate::runtime::Runtime;
+use crate::util::error::{Error, Result};
+use crate::util::prng::Rng;
+
+/// One recorded GAN step.
+#[derive(Debug, Clone, Copy)]
+pub struct GanRecord {
+    pub step: usize,
+    pub d_loss: f32,
+    pub g_loss: f32,
+    pub comm_bytes: usize,
+}
+
+/// Alternating D/G training; both optimizers run the same data-parallel
+/// collective machinery as the classifier experiments.
+pub struct GanTrainer {
+    rt: Rc<Runtime>,
+    data: GanData,
+    rngs: Vec<Rng>,
+    batch: usize,
+    z_dim: usize,
+    data_dim: usize,
+}
+
+impl GanTrainer {
+    pub fn new(rt: Rc<Runtime>, n_workers: usize, seed: u64) -> Result<Self> {
+        let spec = rt
+            .manifest()
+            .get("gan_d_step")
+            .ok_or_else(|| Error::msg("missing artifact 'gan_d_step'"))?;
+        let batch = spec.meta_usize("batch").unwrap_or(64);
+        let z_dim = spec.meta_usize("z_dim").unwrap_or(16);
+        let data_dim = spec.meta_usize("data_dim").unwrap_or(64);
+        let data = GanData::new(data_dim, 6, 0.05, seed);
+        let base = Rng::new(seed ^ 0x6A42);
+        let rngs = (0..n_workers).map(|w| base.fork(w as u64)).collect();
+        Ok(GanTrainer { rt, data, rngs, batch, z_dim, data_dim })
+    }
+
+    pub fn data_dim(&self) -> usize {
+        self.data_dim
+    }
+
+    /// One alternating step: D update then G update.
+    pub fn step(
+        &mut self,
+        d_opt: &mut dyn DistOptimizer,
+        g_opt: &mut dyn DistOptimizer,
+        step: usize,
+        d_lr: f32,
+        g_lr: f32,
+    ) -> Result<GanRecord> {
+        let n = d_opt.n_workers();
+        // ---- discriminator pass
+        let mut d_grads = Vec::with_capacity(n);
+        let mut d_loss = 0.0f64;
+        for w in 0..n {
+            let (real, z) = {
+                let rng = &mut self.rngs[w];
+                let real = self.data.sample_batch(rng, self.batch);
+                let z = (0..self.batch * self.z_dim)
+                    .map(|_| rng.normal() as f32)
+                    .collect::<Vec<f32>>();
+                (real, z)
+            };
+            let (loss, grad) = self.rt.gan_d_step(
+                d_opt.local_params(w),
+                g_opt.local_params(w),
+                &real,
+                &z,
+            )?;
+            d_loss += loss as f64;
+            d_grads.push(grad);
+        }
+        let d_stats = d_opt.step(&d_grads, d_lr);
+
+        // ---- generator pass
+        let mut g_grads = Vec::with_capacity(n);
+        let mut g_loss = 0.0f64;
+        for w in 0..n {
+            let z: Vec<f32> = {
+                let rng = &mut self.rngs[w];
+                (0..self.batch * self.z_dim)
+                    .map(|_| rng.normal() as f32)
+                    .collect()
+            };
+            let (loss, grad) = self.rt.gan_g_step(
+                d_opt.local_params(w),
+                g_opt.local_params(w),
+                &z,
+            )?;
+            g_loss += loss as f64;
+            g_grads.push(grad);
+        }
+        let g_stats = g_opt.step(&g_grads, g_lr);
+
+        Ok(GanRecord {
+            step,
+            d_loss: (d_loss / n as f64) as f32,
+            g_loss: (g_loss / n as f64) as f32,
+            comm_bytes: d_stats.comm.total_per_gpu()
+                + g_stats.comm.total_per_gpu(),
+        })
+    }
+}

@@ -1,0 +1,200 @@
+//! Gradient sources: where each worker's `(loss, grad)` comes from.
+//!
+//! * [`LmSource`] / [`CnnSource`] — the real three-layer path: the AOT
+//!   train-step artifact executed per worker via PJRT on that worker's
+//!   microbatch.
+//! * [`OracleSource`] — controlled synthetic oracles for the convergence
+//!   sweeps and theory validation.
+
+use std::rc::Rc;
+
+use crate::data::{BlobImages, TokenCorpus};
+use crate::optim::oracle::{QuadraticOracle, RippleOracle};
+use crate::runtime::Runtime;
+use crate::util::error::Result;
+use crate::util::prng::Rng;
+
+/// Produces worker `i`'s stochastic `(loss, gradient)` at given params.
+pub trait GradSource {
+    fn grad(&mut self, worker: usize, params: &[f32])
+        -> Result<(f32, Vec<f32>)>;
+    /// Parameter count this source's artifact expects.
+    fn dim(&self) -> usize;
+}
+
+/// Causal-LM gradients from the `lm_train_step_<size>` artifact.
+pub struct LmSource {
+    rt: Rc<Runtime>,
+    artifact: String,
+    corpus: TokenCorpus,
+    rngs: Vec<Rng>,
+    batch: usize,
+    seq: usize,
+    dim: usize,
+}
+
+impl LmSource {
+    pub fn new(rt: Rc<Runtime>, size: &str, n_workers: usize, seed: u64)
+        -> Result<Self> {
+        let artifact = format!("lm_train_step_{size}");
+        let spec = rt.manifest().get(&artifact).ok_or_else(|| {
+            crate::util::error::Error::msg(format!(
+                "artifact '{artifact}' not found — re-run `make artifacts` \
+                 (or artifacts-100m for lm-100m)"
+            ))
+        })?;
+        let batch = spec.meta_usize("batch").unwrap_or(spec.inputs[1].shape[0]);
+        let seq = spec.meta_usize("seq").unwrap_or(spec.inputs[1].shape[1]);
+        let vocab = spec.meta_usize("vocab").unwrap_or(256);
+        let dim = spec.inputs[0].elements();
+        let corpus = TokenCorpus::new(vocab, 0.85);
+        let rngs =
+            (0..n_workers).map(|w| corpus.worker_rng(seed, w)).collect();
+        Ok(LmSource { rt, artifact, corpus, rngs, batch, seq, dim })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+}
+
+impl GradSource for LmSource {
+    fn grad(
+        &mut self,
+        worker: usize,
+        params: &[f32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let (tokens, targets) = self.corpus.sample_batch(
+            &mut self.rngs[worker],
+            self.batch,
+            self.seq,
+        );
+        self.rt.train_step(&self.artifact, params, &tokens, &targets)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+/// Classifier gradients from the `cnn_train_step` artifact.
+pub struct CnnSource {
+    rt: Rc<Runtime>,
+    data: BlobImages,
+    rngs: Vec<Rng>,
+    batch: usize,
+    dim: usize,
+}
+
+impl CnnSource {
+    pub fn new(rt: Rc<Runtime>, n_workers: usize, noise: f32, seed: u64)
+        -> Result<Self> {
+        let spec = rt.manifest().get("cnn_train_step").ok_or_else(|| {
+            crate::util::error::Error::msg(
+                "artifact 'cnn_train_step' not found — run `make artifacts`",
+            )
+        })?;
+        let batch = spec.meta_usize("batch").unwrap_or(spec.inputs[1].shape[0]);
+        let in_dim = spec.meta_usize("in_dim").unwrap_or(256);
+        let classes = spec.meta_usize("classes").unwrap_or(10);
+        let dim = spec.inputs[0].elements();
+        let data = BlobImages::new(in_dim, classes, noise, seed);
+        let base = Rng::new(seed ^ 0xC1A55);
+        let rngs = (0..n_workers).map(|w| base.fork(w as u64)).collect();
+        Ok(CnnSource { rt, data, rngs, batch, dim })
+    }
+
+    /// Held-out accuracy via the `cnn_accuracy` artifact.
+    pub fn test_accuracy(&self, params: &[f32], seed: u64) -> Result<f32> {
+        let (x, y) = self.data.test_set(seed, self.batch);
+        let (acc, _) = self.rt.cnn_step("cnn_accuracy", params, &x, &y)?;
+        Ok(acc)
+    }
+}
+
+impl GradSource for CnnSource {
+    fn grad(
+        &mut self,
+        worker: usize,
+        params: &[f32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let (x, y) =
+            self.data.sample_batch(&mut self.rngs[worker], self.batch);
+        self.rt.cnn_step("cnn_train_step", params, &x, &y)
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+/// Synthetic-oracle gradients (no PJRT — used by the big sweeps).
+pub enum OracleSource {
+    Quadratic { oracle: QuadraticOracle },
+    Ripple { oracle: RippleOracle },
+}
+
+impl OracleSource {
+    pub fn quadratic(oracle: QuadraticOracle, _init: Vec<f32>) -> Self {
+        OracleSource::Quadratic { oracle }
+    }
+
+    pub fn ripple(oracle: RippleOracle) -> Self {
+        OracleSource::Ripple { oracle }
+    }
+}
+
+impl GradSource for OracleSource {
+    fn grad(
+        &mut self,
+        worker: usize,
+        params: &[f32],
+    ) -> Result<(f32, Vec<f32>)> {
+        match self {
+            OracleSource::Quadratic { oracle } => {
+                let g = oracle.grad(worker, params);
+                Ok((oracle.value(params) as f32, g))
+            }
+            OracleSource::Ripple { oracle } => {
+                let g = oracle.grad(worker, params);
+                Ok((oracle.value(params) as f32, g))
+            }
+        }
+    }
+
+    fn dim(&self) -> usize {
+        match self {
+            OracleSource::Quadratic { oracle } => oracle.dim(),
+            OracleSource::Ripple { oracle } => oracle.quad.dim(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_source_losses_are_consistent() {
+        let oracle = QuadraticOracle::new(8, 2, 1.0, 1.0, 0.0, 0);
+        let mut src = OracleSource::quadratic(oracle, vec![0.0; 8]);
+        let x = vec![1.0f32; 8];
+        let (loss, g) = src.grad(0, &x).unwrap();
+        assert!((loss - 4.0).abs() < 1e-5); // 0.5 * 8 * 1
+        assert_eq!(g.len(), 8);
+        assert!((g[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ripple_source_dims() {
+        let oracle = RippleOracle::new(6, 3, 0.1, 0.5, 3.0, 1);
+        let mut src = OracleSource::ripple(oracle);
+        assert_eq!(src.dim(), 6);
+        let (_, g) = src.grad(2, &vec![0.5; 6]).unwrap();
+        assert_eq!(g.len(), 6);
+    }
+}

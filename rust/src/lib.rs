@@ -1,0 +1,32 @@
+//! # 1-bit Adam — full-system reproduction
+//!
+//! Rust coordinator (Layer 3) for the three-layer Rust + JAX + Pallas stack
+//! reproducing *"1-bit Adam: Communication Efficient Large-Scale Training
+//! with Adam's Convergence Speed"* (Tang et al., ICML 2021).
+//!
+//! Layers:
+//! - **L1** (`python/compile/kernels/`): Pallas kernels for error-compensated
+//!   1-bit compression, fused Adam step, and preconditioned momentum step.
+//! - **L2** (`python/compile/model.py`): JAX transformer / CNN / GAN
+//!   forward+backward graphs, AOT-lowered to HLO text in `artifacts/`.
+//! - **L3** (this crate): cluster simulation, `compressed_allreduce`
+//!   collective, two-stage 1-bit Adam optimizer state machine, network
+//!   timing model, training coordinator, benchmark harness.
+//!
+//! Start at [`coordinator`] for the training loop, [`comm`] for the paper's
+//! Figure 3 collective, and [`optim::onebit_adam`] for Algorithm 1.
+
+pub mod comm;
+pub mod config;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod netsim;
+pub mod optim;
+pub mod repro;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use util::error::{Error, Result};

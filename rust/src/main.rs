@@ -1,0 +1,193 @@
+//! `obadam` — the 1-bit Adam coordinator CLI.
+//!
+//! Subcommands:
+//!   train    train a workload with a chosen optimizer (the generic driver)
+//!   repro    regenerate a paper table/figure (see `repro list`)
+//!   inspect  list the AOT artifacts in the manifest
+//!   help     this text
+
+use std::rc::Rc;
+
+use onebit_adam::coordinator::{
+    train, CnnSource, GradSource, LmSource, LrSchedule, OracleSource,
+    TimingModel, TrainOptions,
+};
+use onebit_adam::netsim::{ComputeModel, NetworkModel};
+use onebit_adam::optim::oracle::QuadraticOracle;
+use onebit_adam::optim::OptimizerKind;
+use onebit_adam::repro;
+use onebit_adam::runtime::Runtime;
+use onebit_adam::util::cli::Args;
+use onebit_adam::util::error::{Error, Result};
+use onebit_adam::util::prng::Rng;
+
+const USAGE: &str = "\
+obadam — 1-bit Adam (ICML 2021) full-system reproduction
+
+USAGE:
+  obadam train [--workload lm-tiny|lm-small|lm-med|cnn|oracle]
+               [--optimizer adam|1bit-adam|1bit-adam-32|1bit-naive|sgd|
+                momentum|ef-momentum|double-squeeze|local-sgd|local-momentum]
+               [--steps N] [--workers N] [--lr F] [--warmup N]
+               [--net ethernet|infiniband|none] [--gpus N]
+               [--seed N] [--artifacts DIR] [--out results/run.csv]
+               [--log-every N]
+  obadam repro <experiment|all> [--artifacts DIR] [--out DIR] [--fast]
+  obadam repro list
+  obadam inspect [--artifacts DIR]
+
+EXAMPLES:
+  obadam train --workload lm-tiny --optimizer 1bit-adam --steps 300
+  obadam repro fig4a
+  obadam repro table1
+";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(args),
+        Some("repro") => cmd_repro(args),
+        Some("inspect") => cmd_inspect(args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(Error::Config(format!(
+            "unknown command '{other}'\n\n{USAGE}"
+        ))),
+    }
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let exp = args
+        .positional
+        .get(1)
+        .ok_or_else(|| Error::Config("repro needs an experiment id".into()))?;
+    if exp == "list" {
+        for (id, desc) in repro::EXPERIMENTS {
+            println!("  {id:<8} {desc}");
+        }
+        return Ok(());
+    }
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let out = args.get_or("out", "results");
+    repro::run(exp, artifacts, out, args.flag("fast"))
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let rt = Runtime::load(dir)?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts ({}):", rt.manifest().len());
+    for name in rt.manifest().names() {
+        let spec = rt.manifest().get(name).unwrap();
+        let ins: Vec<String> = spec
+            .inputs
+            .iter()
+            .map(|t| format!("{:?}", t.shape))
+            .collect();
+        println!("  {name:<32} inputs {}", ins.join(" "));
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    // --config file provides defaults; CLI flags override.
+    let cfg = match args.get("config") {
+        Some(path) => onebit_adam::config::ConfigFile::load(path)?,
+        None => onebit_adam::config::ConfigFile::default(),
+    };
+    let from_cfg = |key: &str, fallback: &str| -> String {
+        cfg.get(key).unwrap_or(fallback).to_string()
+    };
+    let workload =
+        args.get_or("workload", &from_cfg("workload", "lm-tiny")).to_string();
+    let opt_name = args
+        .get_or("optimizer", &from_cfg("optimizer", "1bit-adam"))
+        .to_string();
+    let kind = OptimizerKind::parse(&opt_name)
+        .ok_or_else(|| Error::Config(format!("unknown optimizer '{opt_name}'")))?;
+    let steps = args.usize_or("steps", cfg.usize_or("steps", 200)?)?;
+    let workers = args.usize_or("workers", cfg.usize_or("workers", 4)?)?;
+    let lr = args.f32_or("lr", cfg.f32_or("lr", 1e-3)?)?;
+    let warmup = args
+        .get("warmup")
+        .or(cfg.get("warmup"))
+        .map(|w| w.parse().unwrap_or(steps / 6));
+    let seed = args.u64_or("seed", 42)?;
+    let gpus = args.usize_or("gpus", cfg.usize_or("gpus", 64)?)?;
+    let log_every = args.usize_or("log-every", 50)?;
+    let artifacts = args.get_or("artifacts", "artifacts").to_string();
+
+    let timing = match args.get_or("net", &from_cfg("net", "none")) {
+        "ethernet" => Some(TimingModel {
+            net: NetworkModel::ethernet(),
+            compute: ComputeModel::bert_large_v100(),
+            n_gpus: gpus,
+            grad_accum: 1,
+            params_override: None,
+        }),
+        "infiniband" => Some(TimingModel {
+            net: NetworkModel::infiniband(),
+            compute: ComputeModel::bert_large_v100(),
+            n_gpus: gpus,
+            grad_accum: 1,
+            params_override: None,
+        }),
+        _ => None,
+    };
+
+    let mut source: Box<dyn GradSource> = match workload.as_str() {
+        "oracle" => {
+            let oracle =
+                QuadraticOracle::new(256, workers, 0.5, 2.0, 0.1, seed);
+            Box::new(OracleSource::quadratic(oracle, vec![]))
+        }
+        "cnn" => {
+            let rt = Rc::new(Runtime::load(&artifacts)?);
+            Box::new(CnnSource::new(rt, workers, 0.35, seed)?)
+        }
+        lm => {
+            let rt = Rc::new(Runtime::load(&artifacts)?);
+            Box::new(LmSource::new(rt, lm, workers, seed)?)
+        }
+    };
+
+    let dim = source.dim();
+    let init = Rng::new(seed).normal_vec(dim, 0.02);
+    let mut opt = kind.build(workers, init, warmup);
+    println!(
+        "training {workload} with {} ({} params, {workers} workers, {steps} steps)",
+        opt.name(),
+        dim
+    );
+    let opts = TrainOptions {
+        steps,
+        schedule: LrSchedule::Constant(lr),
+        timing,
+        log_every,
+    };
+    let log = train(opt.as_mut(), source.as_mut(), &opts)?;
+    println!(
+        "done: final loss {:.4}, comm {:.2} MB/GPU, sim time {:.1}s",
+        log.final_loss().unwrap_or(f32::NAN),
+        log.total_comm_bytes() as f64 / 1e6,
+        log.sim_time()
+    );
+    if let Some(out) = args.get("out") {
+        log.write_csv(out)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}

@@ -1,0 +1,299 @@
+//! Experiment telemetry: loss curves, the communication-volume ledger
+//! (§7.1 volume claim), step-time breakdowns (Table 1 shape), and CSV
+//! emission for the figure harness.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::optim::Phase;
+
+/// One recorded training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub lr: f32,
+    pub phase: Phase,
+    /// Bytes this GPU put on the wire this step.
+    pub comm_bytes: usize,
+    /// Simulated wall-clock at the end of the step (s).
+    pub sim_time: f64,
+    /// Measured host wall-clock spent in this step (s).
+    pub wall_time: f64,
+}
+
+/// Loss-curve + volume ledger for one run.
+#[derive(Debug, Default, Clone)]
+pub struct RunLog {
+    pub name: String,
+    pub records: Vec<StepRecord>,
+}
+
+impl RunLog {
+    pub fn new(name: impl Into<String>) -> Self {
+        RunLog { name: name.into(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn total_comm_bytes(&self) -> usize {
+        self.records.iter().map(|r| r.comm_bytes).sum()
+    }
+
+    pub fn warmup_steps(&self) -> usize {
+        self.records.iter().filter(|r| r.phase == Phase::Warmup).count()
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the last `k` records (noise-robust endpoint).
+    pub fn tail_loss(&self, k: usize) -> Option<f32> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let k = k.min(self.records.len());
+        let s: f64 = self.records[self.records.len() - k..]
+            .iter()
+            .map(|r| r.loss as f64)
+            .sum();
+        Some((s / k as f64) as f32)
+    }
+
+    pub fn sim_time(&self) -> f64 {
+        self.records.last().map(|r| r.sim_time).unwrap_or(0.0)
+    }
+
+    /// End-to-end communication-volume reduction vs an fp32 allreduce
+    /// baseline of the same length (the paper's 1/(w + (1−w)/16)-style
+    /// ratio, measured not assumed).
+    pub fn volume_reduction_vs(&self, baseline: &RunLog) -> f64 {
+        let b = baseline.total_comm_bytes() as f64;
+        let s = self.total_comm_bytes() as f64;
+        if s == 0.0 {
+            f64::INFINITY
+        } else {
+            b / s
+        }
+    }
+
+    /// First step whose loss (tail-smoothed over `smooth`) drops below
+    /// `target` — the sample-wise convergence comparison of Figure 4(a).
+    pub fn steps_to_loss(&self, target: f32, smooth: usize) -> Option<usize> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let smooth = smooth.max(1);
+        let mut window = std::collections::VecDeque::new();
+        let mut sum = 0.0f64;
+        for r in &self.records {
+            window.push_back(r.loss as f64);
+            sum += r.loss as f64;
+            if window.len() > smooth {
+                sum -= window.pop_front().unwrap();
+            }
+            if window.len() == smooth && sum / smooth as f64 <= target as f64
+            {
+                return Some(r.step);
+            }
+        }
+        None
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "step,loss,lr,phase,comm_bytes,sim_time,wall_time\n",
+        );
+        for r in &self.records {
+            let _ = writeln!(
+                s,
+                "{},{},{},{},{},{},{}",
+                r.step,
+                r.loss,
+                r.lr,
+                match r.phase {
+                    Phase::Warmup => "warmup",
+                    Phase::Compression => "compression",
+                },
+                r.comm_bytes,
+                r.sim_time,
+                r.wall_time
+            );
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// Table-1-style per-step latency breakdown under the netsim clock.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StepBreakdown {
+    pub fwd: f64,
+    pub bwd_allreduce: f64,
+    pub bwd_everything_else: f64,
+    pub step: f64,
+}
+
+impl StepBreakdown {
+    pub fn total(&self) -> f64 {
+        self.fwd + self.bwd_allreduce + self.bwd_everything_else + self.step
+    }
+
+    /// The paper's "allreduce%" column.
+    pub fn allreduce_pct(&self) -> f64 {
+        if self.total() == 0.0 {
+            0.0
+        } else {
+            100.0 * self.bwd_allreduce / self.total()
+        }
+    }
+}
+
+/// Minimal aligned-column table printer for the repro harness.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(
+            out,
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f32, phase: Phase, bytes: usize) -> StepRecord {
+        StepRecord {
+            step,
+            loss,
+            lr: 1e-3,
+            phase,
+            comm_bytes: bytes,
+            sim_time: step as f64,
+            wall_time: 0.0,
+        }
+    }
+
+    #[test]
+    fn ledger_totals() {
+        let mut log = RunLog::new("x");
+        log.push(rec(0, 5.0, Phase::Warmup, 100));
+        log.push(rec(1, 4.0, Phase::Compression, 10));
+        assert_eq!(log.total_comm_bytes(), 110);
+        assert_eq!(log.warmup_steps(), 1);
+        assert_eq!(log.final_loss(), Some(4.0));
+    }
+
+    #[test]
+    fn volume_reduction() {
+        let mut a = RunLog::new("adam");
+        let mut b = RunLog::new("1bit");
+        for t in 0..10 {
+            a.push(rec(t, 1.0, Phase::Warmup, 1600));
+            b.push(rec(
+                t,
+                1.0,
+                if t < 2 { Phase::Warmup } else { Phase::Compression },
+                if t < 2 { 1600 } else { 100 },
+            ));
+        }
+        let r = b.volume_reduction_vs(&a);
+        assert!((r - 16000.0 / 4000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn steps_to_loss_smoothing() {
+        let mut log = RunLog::new("x");
+        for t in 0..20 {
+            // noisy descent crossing 1.0 around t=10
+            let loss = 2.0 - 0.1 * t as f32;
+            log.push(rec(t, loss, Phase::Warmup, 0));
+        }
+        let s = log.steps_to_loss(1.0, 3).unwrap();
+        assert!((10..=13).contains(&s), "s={s}");
+        assert_eq!(log.steps_to_loss(-5.0, 3), None);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut log = RunLog::new("x");
+        log.push(rec(0, 5.0, Phase::Warmup, 1));
+        let csv = log.to_csv();
+        assert!(csv.starts_with("step,loss"));
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("warmup"));
+    }
+
+    #[test]
+    fn breakdown_percentages() {
+        let b = StepBreakdown {
+            fwd: 0.03,
+            bwd_allreduce: 0.9,
+            bwd_everything_else: 0.04,
+            step: 0.03,
+        };
+        assert!((b.allreduce_pct() - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("a  bb") || s.contains("a   bb"));
+        assert_eq!(s.lines().count(), 3);
+    }
+}

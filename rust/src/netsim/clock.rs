@@ -1,0 +1,91 @@
+//! Per-worker virtual clocks for the simulated cluster.
+//!
+//! Compute advances a single worker's clock; collectives synchronize: all
+//! participants finish at `max(start times) + collective duration`.  This
+//! is the standard BSP timing model and matches how the paper reports
+//! per-step forward/backward/allreduce/step latencies.
+
+/// Virtual clocks for `n` workers (seconds).
+#[derive(Debug, Clone)]
+pub struct VirtualClock {
+    t: Vec<f64>,
+}
+
+impl VirtualClock {
+    pub fn new(n: usize) -> Self {
+        VirtualClock { t: vec![0.0; n] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.t.len()
+    }
+
+    /// Advance worker `i` by `dt` (local compute).
+    pub fn advance(&mut self, i: usize, dt: f64) {
+        self.t[i] += dt;
+    }
+
+    /// Advance all workers by `dt` (uniform local compute).
+    pub fn advance_all(&mut self, dt: f64) {
+        for t in self.t.iter_mut() {
+            *t += dt;
+        }
+    }
+
+    /// A synchronizing collective of duration `dt`: everyone waits for the
+    /// slowest, then the collective runs.
+    pub fn collective(&mut self, dt: f64) {
+        let start = self.max();
+        for t in self.t.iter_mut() {
+            *t = start + dt;
+        }
+    }
+
+    pub fn time(&self, i: usize) -> f64 {
+        self.t[i]
+    }
+
+    /// Global (slowest-worker) time.
+    pub fn max(&self) -> f64 {
+        self.t.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.t.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_is_local() {
+        let mut c = VirtualClock::new(3);
+        c.advance(0, 1.0);
+        assert_eq!(c.time(0), 1.0);
+        assert_eq!(c.time(1), 0.0);
+    }
+
+    #[test]
+    fn collective_synchronizes_to_slowest() {
+        let mut c = VirtualClock::new(3);
+        c.advance(0, 1.0);
+        c.advance(1, 3.0);
+        c.collective(0.5);
+        for i in 0..3 {
+            assert_eq!(c.time(i), 3.5);
+        }
+    }
+
+    #[test]
+    fn straggler_dominates() {
+        let mut c = VirtualClock::new(4);
+        for i in 0..4 {
+            c.advance(i, i as f64);
+        }
+        c.collective(1.0);
+        assert_eq!(c.max(), 4.0);
+        assert_eq!(c.min(), 4.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Uncompressed distributed Adam — the paper's baseline ("BertAdam": bias
+//! correction disabled, eq. (1)).  Gradients are averaged with a
+//! full-precision allreduce; every worker applies the identical update.
+
+use crate::comm::plain::allreduce_average;
+use crate::optim::backend::{AdamHyper, MathBackend, NativeBackend};
+use crate::optim::{DistOptimizer, Phase, StepStats};
+
+pub struct Adam {
+    n: usize,
+    params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    hyper: AdamHyper,
+    backend: Box<dyn MathBackend>,
+    avg_scratch: Vec<f32>,
+    /// Step counter (exposed for the variance monitor).
+    pub t: usize,
+}
+
+impl Adam {
+    pub fn new(n_workers: usize, init: Vec<f32>) -> Self {
+        Self::with_backend(n_workers, init, Box::new(NativeBackend))
+    }
+
+    pub fn with_backend(
+        n_workers: usize,
+        init: Vec<f32>,
+        backend: Box<dyn MathBackend>,
+    ) -> Self {
+        let d = init.len();
+        Adam {
+            n: n_workers,
+            params: init,
+            m: vec![0.0; d],
+            v: vec![0.0; d],
+            hyper: AdamHyper::default(),
+            backend,
+            avg_scratch: vec![0.0; d],
+            t: 0,
+        }
+    }
+
+    pub fn with_hyper(mut self, hyper: AdamHyper) -> Self {
+        self.hyper = hyper;
+        self
+    }
+
+    /// Second-moment estimate (for the variance monitor / freezing).
+    pub fn variance(&self) -> &[f32] {
+        &self.v
+    }
+
+    pub fn momentum(&self) -> &[f32] {
+        &self.m
+    }
+
+    /// Decompose into (params, m, v) — the warmup→compression handoff.
+    pub fn into_state(self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        (self.params, self.m, self.v)
+    }
+}
+
+impl DistOptimizer for Adam {
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    fn local_params(&self, _worker: usize) -> &[f32] {
+        &self.params
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn step(&mut self, grads: &[Vec<f32>], lr: f32) -> StepStats {
+        assert_eq!(grads.len(), self.n);
+        let comm = allreduce_average(grads, &mut self.avg_scratch);
+        self.backend
+            .adam_step(
+                self.hyper,
+                &mut self.params,
+                &mut self.m,
+                &mut self.v,
+                &self.avg_scratch,
+                lr,
+            )
+            .expect("adam_step backend");
+        self.t += 1;
+        StepStats { comm, phase: Phase::Warmup }
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// f(x) = 0.5 * Σ h_i x_i² — per-worker noisy gradient.
+    fn quad_grads(
+        x: &[f32],
+        h: &[f32],
+        n_workers: usize,
+        rng: &mut Rng,
+        sigma: f32,
+    ) -> Vec<Vec<f32>> {
+        (0..n_workers)
+            .map(|_| {
+                x.iter()
+                    .zip(h)
+                    .map(|(&xi, &hi)| {
+                        hi * xi + rng.normal() as f32 * sigma
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        let d = 32;
+        let mut rng = Rng::new(0);
+        let h: Vec<f32> =
+            (0..d).map(|i| 0.5 + (i % 7) as f32 * 0.3).collect();
+        let mut opt = Adam::new(4, rng.normal_vec(d, 1.0));
+        let f0: f64 = opt
+            .params()
+            .iter()
+            .zip(&h)
+            .map(|(&x, &hi)| 0.5 * (hi * x * x) as f64)
+            .sum();
+        for _ in 0..500 {
+            let grads = quad_grads(opt.params(), &h, 4, &mut rng, 0.01);
+            opt.step(&grads, 0.05);
+        }
+        let f1: f64 = opt
+            .params()
+            .iter()
+            .zip(&h)
+            .map(|(&x, &hi)| 0.5 * (hi * x * x) as f64)
+            .sum();
+        assert!(f1 < f0 * 0.01, "f0={f0} f1={f1}");
+    }
+
+    #[test]
+    fn variance_accumulates_and_is_positive() {
+        let mut rng = Rng::new(1);
+        let mut opt = Adam::new(2, vec![0.0; 8]);
+        for _ in 0..10 {
+            let grads: Vec<Vec<f32>> =
+                (0..2).map(|_| rng.normal_vec(8, 1.0)).collect();
+            opt.step(&grads, 1e-3);
+        }
+        assert!(opt.variance().iter().all(|&v| v > 0.0));
+        assert_eq!(opt.t, 10);
+    }
+
+    #[test]
+    fn workers_see_identical_params() {
+        let mut opt = Adam::new(3, vec![1.0; 4]);
+        let grads = vec![vec![1.0f32; 4], vec![2.0; 4], vec![3.0; 4]];
+        opt.step(&grads, 0.1);
+        for w in 0..3 {
+            assert_eq!(opt.local_params(w), opt.params());
+        }
+    }
+
+    #[test]
+    fn gradient_averaging_matters() {
+        // With asymmetric grads, the update must follow the average (2.0),
+        // not any single worker's gradient.
+        let mut opt = Adam::new(2, vec![0.0; 1]);
+        let grads = vec![vec![1.0f32], vec![3.0f32]];
+        opt.step(&grads, 0.1);
+        // avg g = 2 => m = 0.2, v = 0.004 => p ≈ -0.1*0.2/0.0632 ≈ -0.316
+        assert!(opt.params()[0] < -0.3 && opt.params()[0] > -0.33);
+    }
+}

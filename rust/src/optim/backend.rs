@@ -1,0 +1,245 @@
+//! Elementwise optimizer math, dispatched to either native Rust loops or
+//! the AOT-compiled L1 Pallas kernels via PJRT.
+//!
+//! The two backends are parity-tested against each other
+//! (`rust/tests/parity.rs`) so every experiment can choose: PJRT for the
+//! E2E drivers (the "real" three-layer path), native for the 10⁴–10⁵-step
+//! convergence sweeps where per-dispatch overhead would dominate.
+
+use std::rc::Rc;
+
+use crate::runtime::Runtime;
+use crate::util::error::{Error, Result};
+
+/// Bias-correction-free Adam hyperparameters (paper eq. (1); matches the
+/// static args baked into the AOT kernels).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdamHyper {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamHyper {
+    fn default() -> Self {
+        AdamHyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// Elementwise optimizer math.
+pub trait MathBackend {
+    /// Fused Adam step (updates `p`, `m`, `v` in place).
+    fn adam_step(
+        &self,
+        h: AdamHyper,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+    ) -> Result<()>;
+
+    /// `m = beta * m + (1 - beta) * g`.
+    fn momentum_update(&self, beta: f32, m: &mut [f32], g: &[f32])
+        -> Result<()>;
+
+    /// `p -= lr * m / (sqrt(v_frozen) + eps)`.
+    fn precond_step(
+        &self,
+        eps: f32,
+        p: &mut [f32],
+        m: &[f32],
+        v_frozen: &[f32],
+        lr: f32,
+    ) -> Result<()>;
+}
+
+/// Native Rust loops — identical math to the Pallas kernels, fused into
+/// single passes.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl MathBackend for NativeBackend {
+    fn adam_step(
+        &self,
+        h: AdamHyper,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+    ) -> Result<()> {
+        let n = p.len();
+        assert!(m.len() == n && v.len() == n && g.len() == n);
+        for i in 0..n {
+            let gi = g[i];
+            let mi = h.beta1 * m[i] + (1.0 - h.beta1) * gi;
+            let vi = h.beta2 * v[i] + (1.0 - h.beta2) * gi * gi;
+            m[i] = mi;
+            v[i] = vi;
+            p[i] -= lr * mi / (vi.sqrt() + h.eps);
+        }
+        Ok(())
+    }
+
+    fn momentum_update(
+        &self,
+        beta: f32,
+        m: &mut [f32],
+        g: &[f32],
+    ) -> Result<()> {
+        assert_eq!(m.len(), g.len());
+        for i in 0..m.len() {
+            m[i] = beta * m[i] + (1.0 - beta) * g[i];
+        }
+        Ok(())
+    }
+
+    fn precond_step(
+        &self,
+        eps: f32,
+        p: &mut [f32],
+        m: &[f32],
+        v_frozen: &[f32],
+        lr: f32,
+    ) -> Result<()> {
+        let n = p.len();
+        assert!(m.len() == n && v_frozen.len() == n);
+        for i in 0..n {
+            p[i] -= lr * m[i] / (v_frozen[i].sqrt() + eps);
+        }
+        Ok(())
+    }
+}
+
+/// PJRT backend: executes the AOT Pallas kernels (`adam_step_<n>`,
+/// `momentum_update_<n>`, `precond_step_<n>`).
+///
+/// Hyperparameters are baked into the artifacts at export time
+/// (β₁=0.9, β₂=0.999, ε=1e-8, momentum β=0.9) — mismatching calls error.
+pub struct PjrtBackend {
+    rt: Rc<Runtime>,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: Rc<Runtime>) -> Self {
+        PjrtBackend { rt }
+    }
+}
+
+impl MathBackend for PjrtBackend {
+    fn adam_step(
+        &self,
+        h: AdamHyper,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+    ) -> Result<()> {
+        if h != AdamHyper::default() {
+            return Err(Error::msg(
+                "PJRT adam_step artifacts are baked with β₁=0.9 β₂=0.999 \
+                 ε=1e-8; re-export via aot.py for other hyperparameters",
+            ));
+        }
+        let (pn, mn, vn) = self.rt.adam_step(p.len(), p, m, v, g, lr)?;
+        p.copy_from_slice(&pn);
+        m.copy_from_slice(&mn);
+        v.copy_from_slice(&vn);
+        Ok(())
+    }
+
+    fn momentum_update(
+        &self,
+        beta: f32,
+        m: &mut [f32],
+        g: &[f32],
+    ) -> Result<()> {
+        if (beta - 0.9).abs() > 1e-9 {
+            return Err(Error::msg(
+                "PJRT momentum_update artifacts are baked with β=0.9",
+            ));
+        }
+        let mn = self.rt.momentum_update(m.len(), m, g)?;
+        m.copy_from_slice(&mn);
+        Ok(())
+    }
+
+    fn precond_step(
+        &self,
+        eps: f32,
+        p: &mut [f32],
+        m: &[f32],
+        v_frozen: &[f32],
+        lr: f32,
+    ) -> Result<()> {
+        if (eps - 1e-8).abs() > 1e-12 {
+            return Err(Error::msg(
+                "PJRT precond_step artifacts are baked with ε=1e-8",
+            ));
+        }
+        let pn = self.rt.precond_step(p.len(), p, m, v_frozen, lr)?;
+        p.copy_from_slice(&pn);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn native_adam_matches_hand_computation() {
+        let h = AdamHyper::default();
+        let mut p = vec![1.0f32];
+        let mut m = vec![0.0f32];
+        let mut v = vec![0.0f32];
+        NativeBackend.adam_step(h, &mut p, &mut m, &mut v, &[2.0], 0.1)
+            .unwrap();
+        // m = 0.1*2 = 0.2 ; v = 0.001*4 = 0.004 ; p = 1 - 0.1*0.2/(0.0632+1e-8)
+        assert!((m[0] - 0.2).abs() < 1e-7);
+        assert!((v[0] - 0.004).abs() < 1e-6); // f32 (1-β₂)·g² rounding
+        let expect = 1.0 - 0.1 * 0.2 / (0.004f32.sqrt() + 1e-8);
+        assert!((p[0] - expect).abs() < 1e-5, "{} vs {expect}", p[0]);
+    }
+
+    #[test]
+    fn native_momentum_and_precond() {
+        let mut m = vec![1.0f32, -1.0];
+        NativeBackend.momentum_update(0.5, &mut m, &[0.0, 0.0]).unwrap();
+        assert_eq!(m, vec![0.5, -0.5]);
+        let mut p = vec![0.0f32, 0.0];
+        NativeBackend
+            .precond_step(0.0, &mut p, &[1.0, 2.0], &[4.0, 4.0], 1.0)
+            .unwrap();
+        assert_eq!(p, vec![-0.5, -1.0]);
+    }
+
+    #[test]
+    fn adam_with_beta2_one_keeps_v_frozen() {
+        // The paper's identity: β₂=1 Adam == preconditioned momentum.
+        let h = AdamHyper { beta2: 1.0, ..AdamHyper::default() };
+        let mut rng = Rng::new(0);
+        let n = 64;
+        let g = rng.normal_vec(n, 1.0);
+        let vf: Vec<f32> =
+            rng.normal_vec(n, 1.0).iter().map(|x| x.abs() + 0.1).collect();
+        let mut p1 = rng.normal_vec(n, 1.0);
+        let mut p2 = p1.clone();
+        let mut m1 = vec![0.2f32; n];
+        let mut m2 = m1.clone();
+        let mut v1 = vf.clone();
+        NativeBackend
+            .adam_step(h, &mut p1, &mut m1, &mut v1, &g, 0.01)
+            .unwrap();
+        NativeBackend.momentum_update(0.9, &mut m2, &g).unwrap();
+        NativeBackend.precond_step(1e-8, &mut p2, &m2, &vf, 0.01).unwrap();
+        assert_eq!(v1, vf);
+        for i in 0..n {
+            assert!((p1[i] - p2[i]).abs() < 1e-6);
+            assert!((m1[i] - m2[i]).abs() < 1e-7);
+        }
+    }
+}

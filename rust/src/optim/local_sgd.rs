@@ -1,0 +1,184 @@
+//! Local SGD (Stich 2019), with optional momentum — supplementary
+//! Figures 10/11 baselines.  Each worker runs `tau` purely local steps,
+//! then parameters (and momentum, if any) are averaged across workers.
+//! With `tau = 4` the per-step communication volume matches 1-bit
+//! compression to within ~2× (the paper's comparability argument).
+
+use crate::comm::plain::allreduce_average;
+use crate::comm::CommStats;
+use crate::optim::{DistOptimizer, Phase, StepStats};
+
+pub struct LocalSgd {
+    n: usize,
+    /// Per-worker (diverging) parameter replicas.
+    local: Vec<Vec<f32>>,
+    /// Per-worker momentum (all zeros when beta == 0).
+    m: Vec<Vec<f32>>,
+    beta: f32,
+    tau: usize,
+    t: usize,
+    /// Consensus copy refreshed at every averaging round (for eval).
+    consensus: Vec<f32>,
+}
+
+impl LocalSgd {
+    /// `beta = 0` gives plain Local SGD; `beta > 0` the momentum variant.
+    pub fn new(n_workers: usize, init: Vec<f32>, tau: usize, beta: f32) -> Self {
+        assert!(tau >= 1);
+        let d = init.len();
+        LocalSgd {
+            n: n_workers,
+            local: (0..n_workers).map(|_| init.clone()).collect(),
+            m: (0..n_workers).map(|_| vec![0.0; d]).collect(),
+            beta,
+            tau,
+            t: 0,
+            consensus: init,
+        }
+    }
+
+    pub fn tau(&self) -> usize {
+        self.tau
+    }
+}
+
+impl DistOptimizer for LocalSgd {
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.consensus.len()
+    }
+
+    fn local_params(&self, worker: usize) -> &[f32] {
+        &self.local[worker]
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.consensus
+    }
+
+    fn step(&mut self, grads: &[Vec<f32>], lr: f32) -> StepStats {
+        assert_eq!(grads.len(), self.n);
+        let d = self.consensus.len();
+        for (i, g) in grads.iter().enumerate() {
+            if self.beta > 0.0 {
+                for k in 0..d {
+                    self.m[i][k] =
+                        self.beta * self.m[i][k] + (1.0 - self.beta) * g[k];
+                    self.local[i][k] -= lr * self.m[i][k];
+                }
+            } else {
+                for k in 0..d {
+                    self.local[i][k] -= lr * g[k];
+                }
+            }
+        }
+        self.t += 1;
+        let mut comm = CommStats::default();
+        comm.uncompressed_bytes = d * 4;
+        if self.t % self.tau == 0 {
+            // averaging round: params (+ momentum) allreduce
+            let stats = allreduce_average(&self.local, &mut self.consensus);
+            comm = stats;
+            for l in self.local.iter_mut() {
+                l.copy_from_slice(&self.consensus);
+            }
+            if self.beta > 0.0 {
+                let mut avg_m = vec![0.0f32; d];
+                let stats_m = allreduce_average(&self.m, &mut avg_m);
+                comm.alltoall_bytes_per_gpu += stats_m.alltoall_bytes_per_gpu;
+                comm.allgather_bytes_per_gpu +=
+                    stats_m.allgather_bytes_per_gpu;
+                for m in self.m.iter_mut() {
+                    m.copy_from_slice(&avg_m);
+                }
+            }
+        } else {
+            // keep consensus loosely updated for eval (worker 0's view)
+            self.consensus.copy_from_slice(&self.local[0]);
+        }
+        StepStats { comm, phase: Phase::Compression }
+    }
+
+    fn name(&self) -> &'static str {
+        if self.beta > 0.0 {
+            "local-momentum"
+        } else {
+            "local-sgd"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn workers_diverge_then_sync() {
+        let mut rng = Rng::new(0);
+        let mut opt = LocalSgd::new(2, vec![0.0; 4], 4, 0.0);
+        // distinct gradients diverge the replicas
+        for t in 1..=3 {
+            let grads =
+                vec![rng.normal_vec(4, 1.0), rng.normal_vec(4, 1.0)];
+            opt.step(&grads, 0.1);
+            assert_ne!(opt.local_params(0), opt.local_params(1), "t={t}");
+        }
+        // 4th step triggers averaging
+        let grads = vec![rng.normal_vec(4, 1.0), rng.normal_vec(4, 1.0)];
+        opt.step(&grads, 0.1);
+        assert_eq!(opt.local_params(0), opt.local_params(1));
+    }
+
+    #[test]
+    fn communication_only_every_tau_steps() {
+        let mut opt = LocalSgd::new(2, vec![0.0; 100], 4, 0.0);
+        let grads = vec![vec![1.0f32; 100], vec![1.0f32; 100]];
+        let mut total = 0usize;
+        for _ in 0..8 {
+            total += opt.step(&grads, 0.01).comm.total_per_gpu();
+        }
+        // 2 averaging rounds of a 400-byte tensor: ring 2*(1/2)*400 = 400 B
+        assert_eq!(total, 2 * 400);
+    }
+
+    #[test]
+    fn minimizes_quadratic() {
+        let d = 16;
+        let mut rng = Rng::new(1);
+        let mut opt = LocalSgd::new(4, rng.normal_vec(d, 1.0), 4, 0.9);
+        for _ in 0..800 {
+            let grads: Vec<Vec<f32>> = (0..4)
+                .map(|i| {
+                    opt.local_params(i)
+                        .iter()
+                        .map(|&x| x + rng.normal() as f32 * 0.01)
+                        .collect()
+                })
+                .collect();
+            opt.step(&grads, 0.05);
+        }
+        let norm: f64 =
+            opt.params().iter().map(|&x| (x * x) as f64).sum::<f64>().sqrt();
+        assert!(norm < 0.1, "norm={norm}");
+    }
+
+    #[test]
+    fn tau_one_equals_synchronous_sgd() {
+        let mut rng = Rng::new(2);
+        let mut local = LocalSgd::new(2, vec![1.0; 8], 1, 0.0);
+        let mut sync = crate::optim::momentum::Sgd::new(2, vec![1.0; 8]);
+        for _ in 0..10 {
+            let grads =
+                vec![rng.normal_vec(8, 1.0), rng.normal_vec(8, 1.0)];
+            local.step(&grads, 0.1);
+            sync.step(&grads, 0.1);
+        }
+        for i in 0..8 {
+            assert!((local.params()[i] - sync.params()[i]).abs() < 1e-6);
+        }
+    }
+}

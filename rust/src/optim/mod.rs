@@ -1,0 +1,204 @@
+//! Optimizers: the paper's 1-bit Adam (Algorithm 1) plus every baseline
+//! and ablation its evaluation compares against.
+//!
+//! | type | paper reference |
+//! |---|---|
+//! | [`adam::Adam`] | uncompressed baseline (BertAdam: no bias correction) |
+//! | [`onebit_adam::OneBitAdam`] | Algorithm 1 (also the "32-bits" ablation via `CompressionKind::None`) |
+//! | [`naive::NaiveCompressedAdam`] | Figure 1 / "Adam (1-bit Naive)" |
+//! | [`momentum::Sgd`], [`momentum::MomentumSgd`] | Figure 6 baselines |
+//! | [`ef_momentum::EfMomentumSgd`] | Figure 11 (Zheng et al. 2019) |
+//! | [`double_squeeze::DoubleSqueeze`] | Figure 10 (Tang et al. 2019) |
+//! | [`local_sgd::LocalSgd`] | Figures 10/11 (Stich 2019), ± momentum |
+//! | [`variance_ablation::NBitVarianceAdam`] | Figure 12 |
+//! | [`variance_ablation::LazyVarianceAdam`] | Figure 13 |
+//!
+//! All optimizers implement [`DistOptimizer`] over `n` data-parallel
+//! workers and a fused flat parameter vector; communication goes through
+//! [`crate::comm`] so wire volume is byte-accurate.
+
+pub mod adam;
+pub mod backend;
+pub mod double_squeeze;
+pub mod ef_momentum;
+pub mod local_sgd;
+pub mod momentum;
+pub mod monitor;
+pub mod naive;
+pub mod onebit_adam;
+pub mod oracle;
+pub mod variance_ablation;
+
+pub use adam::Adam;
+pub use backend::{MathBackend, NativeBackend};
+pub use double_squeeze::DoubleSqueeze;
+pub use ef_momentum::EfMomentumSgd;
+pub use local_sgd::LocalSgd;
+pub use momentum::{MomentumSgd, Sgd};
+pub use monitor::VarianceMonitor;
+pub use naive::NaiveCompressedAdam;
+pub use onebit_adam::{OneBitAdam, OneBitAdamConfig};
+pub use variance_ablation::{LazyVarianceAdam, NBitVarianceAdam};
+
+use crate::comm::CommStats;
+
+/// Which stage of the two-stage algorithm a step ran in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Full-precision Adam (or a single-stage optimizer).
+    Warmup,
+    /// Error-compensated 1-bit momentum with frozen variance.
+    Compression,
+}
+
+/// Per-step report: wire traffic + phase.
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub comm: CommStats,
+    pub phase: Phase,
+}
+
+/// A distributed optimizer over `n` data-parallel workers.
+///
+/// The coordinator calls `local_params(i)` to know where worker `i`
+/// evaluates its gradient, then `step(&grads, lr)` with one gradient per
+/// worker.  Most optimizers keep a single shared parameter vector
+/// (data-parallel consistency); `LocalSgd` diverges between averaging
+/// rounds.
+pub trait DistOptimizer {
+    fn n_workers(&self) -> usize;
+    fn dim(&self) -> usize;
+    /// Parameters worker `i` computes its local gradient at.
+    fn local_params(&self, worker: usize) -> &[f32];
+    /// Canonical parameters for evaluation / checkpointing.
+    fn params(&self) -> &[f32];
+    /// Apply one distributed step.  `grads[i]` is worker `i`'s gradient.
+    fn step(&mut self, grads: &[Vec<f32>], lr: f32) -> StepStats;
+    fn name(&self) -> &'static str;
+}
+
+/// Identifier used by configs / CLI to build an optimizer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    MomentumSgd,
+    Adam,
+    /// Algorithm 1 with `warmup` fixed steps (None => auto-switch).
+    OneBitAdam,
+    /// Frozen variance, uncompressed momentum.
+    OneBitAdam32,
+    /// EC-compress the gradient, keep updating variance (Fig 1/6).
+    OneBitNaive,
+    EfMomentumSgd,
+    DoubleSqueeze,
+    LocalSgd,
+    LocalMomentumSgd,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Option<OptimizerKind> {
+        Some(match s {
+            "sgd" => OptimizerKind::Sgd,
+            "momentum" | "momentum-sgd" => OptimizerKind::MomentumSgd,
+            "adam" => OptimizerKind::Adam,
+            "1bit-adam" | "onebit-adam" => OptimizerKind::OneBitAdam,
+            "1bit-adam-32" | "onebit-adam-32" => OptimizerKind::OneBitAdam32,
+            "1bit-naive" | "onebit-naive" => OptimizerKind::OneBitNaive,
+            "ef-momentum" => OptimizerKind::EfMomentumSgd,
+            "double-squeeze" => OptimizerKind::DoubleSqueeze,
+            "local-sgd" => OptimizerKind::LocalSgd,
+            "local-momentum" => OptimizerKind::LocalMomentumSgd,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> &'static [(&'static str, OptimizerKind)] {
+        &[
+            ("sgd", OptimizerKind::Sgd),
+            ("momentum", OptimizerKind::MomentumSgd),
+            ("adam", OptimizerKind::Adam),
+            ("1bit-adam", OptimizerKind::OneBitAdam),
+            ("1bit-adam-32", OptimizerKind::OneBitAdam32),
+            ("1bit-naive", OptimizerKind::OneBitNaive),
+            ("ef-momentum", OptimizerKind::EfMomentumSgd),
+            ("double-squeeze", OptimizerKind::DoubleSqueeze),
+            ("local-sgd", OptimizerKind::LocalSgd),
+            ("local-momentum", OptimizerKind::LocalMomentumSgd),
+        ]
+    }
+
+    /// Build with standard hyperparameters (lr comes per-step).
+    pub fn build(
+        self,
+        n_workers: usize,
+        init_params: Vec<f32>,
+        warmup_steps: Option<usize>,
+    ) -> Box<dyn DistOptimizer> {
+        use crate::compress::CompressionKind;
+        match self {
+            OptimizerKind::Sgd => Box::new(Sgd::new(n_workers, init_params)),
+            OptimizerKind::MomentumSgd => {
+                Box::new(MomentumSgd::new(n_workers, init_params, 0.9))
+            }
+            OptimizerKind::Adam => {
+                Box::new(Adam::new(n_workers, init_params))
+            }
+            OptimizerKind::OneBitAdam => Box::new(OneBitAdam::new(
+                n_workers,
+                init_params,
+                OneBitAdamConfig {
+                    warmup_steps,
+                    compression: CompressionKind::OneBit,
+                    ..OneBitAdamConfig::default()
+                },
+            )),
+            OptimizerKind::OneBitAdam32 => Box::new(OneBitAdam::new(
+                n_workers,
+                init_params,
+                OneBitAdamConfig {
+                    warmup_steps,
+                    compression: CompressionKind::None,
+                    ..OneBitAdamConfig::default()
+                },
+            )),
+            OptimizerKind::OneBitNaive => {
+                Box::new(NaiveCompressedAdam::new(n_workers, init_params))
+            }
+            OptimizerKind::EfMomentumSgd => {
+                Box::new(EfMomentumSgd::new(n_workers, init_params, 0.9))
+            }
+            OptimizerKind::DoubleSqueeze => {
+                Box::new(DoubleSqueeze::new(n_workers, init_params))
+            }
+            OptimizerKind::LocalSgd => {
+                Box::new(LocalSgd::new(n_workers, init_params, 4, 0.0))
+            }
+            OptimizerKind::LocalMomentumSgd => {
+                Box::new(LocalSgd::new(n_workers, init_params, 4, 0.9))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for (name, kind) in OptimizerKind::all() {
+            assert_eq!(OptimizerKind::parse(name), Some(*kind));
+        }
+        assert_eq!(OptimizerKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn build_all_kinds() {
+        for (_, kind) in OptimizerKind::all() {
+            let opt = kind.build(2, vec![0.0; 16], Some(3));
+            assert_eq!(opt.n_workers(), 2);
+            assert_eq!(opt.dim(), 16);
+            assert_eq!(opt.params().len(), 16);
+        }
+    }
+}

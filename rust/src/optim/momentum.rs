@@ -1,0 +1,166 @@
+//! Vanilla SGD and Momentum SGD baselines (Figure 6, supplementary §10).
+//!
+//! Momentum follows the paper's convention `m ← β m + (1−β) g` (the same
+//! form 1-bit Adam uses in its compression stage), so the comparison
+//! isolates compression + preconditioning.
+
+use crate::comm::plain::allreduce_average;
+use crate::optim::{DistOptimizer, Phase, StepStats};
+
+pub struct Sgd {
+    n: usize,
+    params: Vec<f32>,
+    avg: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(n_workers: usize, init: Vec<f32>) -> Self {
+        let d = init.len();
+        Sgd { n: n_workers, params: init, avg: vec![0.0; d] }
+    }
+}
+
+impl DistOptimizer for Sgd {
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    fn local_params(&self, _worker: usize) -> &[f32] {
+        &self.params
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn step(&mut self, grads: &[Vec<f32>], lr: f32) -> StepStats {
+        assert_eq!(grads.len(), self.n);
+        let comm = allreduce_average(grads, &mut self.avg);
+        for i in 0..self.params.len() {
+            self.params[i] -= lr * self.avg[i];
+        }
+        StepStats { comm, phase: Phase::Warmup }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+pub struct MomentumSgd {
+    n: usize,
+    params: Vec<f32>,
+    m: Vec<f32>,
+    beta: f32,
+    avg: Vec<f32>,
+}
+
+impl MomentumSgd {
+    pub fn new(n_workers: usize, init: Vec<f32>, beta: f32) -> Self {
+        let d = init.len();
+        MomentumSgd {
+            n: n_workers,
+            params: init,
+            m: vec![0.0; d],
+            beta,
+            avg: vec![0.0; d],
+        }
+    }
+
+    pub fn momentum(&self) -> &[f32] {
+        &self.m
+    }
+}
+
+impl DistOptimizer for MomentumSgd {
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    fn local_params(&self, _worker: usize) -> &[f32] {
+        &self.params
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn step(&mut self, grads: &[Vec<f32>], lr: f32) -> StepStats {
+        assert_eq!(grads.len(), self.n);
+        let comm = allreduce_average(grads, &mut self.avg);
+        for i in 0..self.params.len() {
+            self.m[i] = self.beta * self.m[i] + (1.0 - self.beta) * self.avg[i];
+            self.params[i] -= lr * self.m[i];
+        }
+        StepStats { comm, phase: Phase::Warmup }
+    }
+
+    fn name(&self) -> &'static str {
+        "momentum-sgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn sgd_descends_quadratic() {
+        let mut p = Sgd::new(2, vec![2.0, -3.0]);
+        for _ in 0..200 {
+            let grads: Vec<Vec<f32>> =
+                (0..2).map(|_| p.params().to_vec()).collect();
+            p.step(&grads, 0.1);
+        }
+        assert!(p.params().iter().all(|x| x.abs() < 1e-3));
+    }
+
+    #[test]
+    fn momentum_accelerates_on_smooth_quadratic() {
+        // With a noiseless quadratic, momentum SGD converges faster than
+        // SGD at equal lr (the classical heavy-ball effect is approximated
+        // by the EMA form for small lr; just verify convergence).
+        let init = vec![1.0f32; 8];
+        let mut msgd = MomentumSgd::new(1, init.clone(), 0.9);
+        for _ in 0..500 {
+            let g = vec![msgd.params().to_vec()];
+            msgd.step(&g, 0.2);
+        }
+        assert!(msgd.params().iter().all(|x| x.abs() < 1e-3));
+    }
+
+    #[test]
+    fn momentum_matches_onebit_stage2_without_compression() {
+        // m ← βm + (1−β)ḡ ; x ← x − γm is exactly the paper's compression
+        // stage with identity compression and v ≡ 1 (modulo eps) — a
+        // structural cross-check.
+        let mut rng = Rng::new(0);
+        let d = 16;
+        let mut msgd = MomentumSgd::new(2, vec![0.0; d], 0.9);
+        let mut m = vec![0.0f32; d];
+        let mut x = vec![0.0f32; d];
+        for _ in 0..20 {
+            let grads: Vec<Vec<f32>> =
+                (0..2).map(|_| rng.normal_vec(d, 1.0)).collect();
+            msgd.step(&grads, 0.01);
+            let mut avg = vec![0.0f32; d];
+            crate::comm::plain::allreduce_average(&grads, &mut avg);
+            for i in 0..d {
+                m[i] = 0.9 * m[i] + 0.1 * avg[i];
+                x[i] -= 0.01 * m[i];
+            }
+        }
+        for i in 0..d {
+            assert!((msgd.params()[i] - x[i]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Synthetic stochastic-gradient oracles with controlled (L, σ, anisotropy)
+//! — the substrate for validating Theorem 1 / Corollary 1 (linear speedup
+//! in n, graceful degradation in compression error ε) independently of any
+//! neural workload.
+
+use crate::util::prng::Rng;
+
+/// `f(x) = 0.5 Σ h_i x_i²` with additive Gaussian gradient noise of
+/// std `sigma` per worker.  L = max h_i; f* = 0.
+#[derive(Debug, Clone)]
+pub struct QuadraticOracle {
+    pub h: Vec<f32>,
+    pub sigma: f32,
+    rngs: Vec<Rng>,
+}
+
+impl QuadraticOracle {
+    /// Anisotropic spectrum in [h_min, h_max], geometrically spaced.
+    pub fn new(
+        dim: usize,
+        n_workers: usize,
+        h_min: f32,
+        h_max: f32,
+        sigma: f32,
+        seed: u64,
+    ) -> Self {
+        assert!(h_min > 0.0 && h_max >= h_min);
+        let h: Vec<f32> = (0..dim)
+            .map(|i| {
+                let t = i as f32 / (dim.max(2) - 1) as f32;
+                h_min * (h_max / h_min).powf(t)
+            })
+            .collect();
+        let base = Rng::new(seed);
+        QuadraticOracle {
+            h,
+            sigma,
+            rngs: (0..n_workers).map(|i| base.fork(i as u64)).collect(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.h.len()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.rngs.len()
+    }
+
+    /// Lipschitz constant of the gradient.
+    pub fn lipschitz(&self) -> f32 {
+        self.h.iter().copied().fold(0.0, f32::max)
+    }
+
+    /// Loss value at `x`.
+    pub fn value(&self, x: &[f32]) -> f64 {
+        x.iter()
+            .zip(&self.h)
+            .map(|(&xi, &hi)| 0.5 * (hi as f64) * (xi as f64) * (xi as f64))
+            .sum()
+    }
+
+    /// Exact gradient norm² at `x`.
+    pub fn grad_norm2(&self, x: &[f32]) -> f64 {
+        x.iter()
+            .zip(&self.h)
+            .map(|(&xi, &hi)| {
+                let g = (hi as f64) * (xi as f64);
+                g * g
+            })
+            .sum()
+    }
+
+    /// Stochastic gradient for worker `i` at `x`.
+    pub fn grad(&mut self, worker: usize, x: &[f32]) -> Vec<f32> {
+        let sigma = self.sigma;
+        let rng = &mut self.rngs[worker];
+        x.iter()
+            .zip(&self.h)
+            .map(|(&xi, &hi)| hi * xi + rng.normal() as f32 * sigma)
+            .collect()
+    }
+
+    /// Stochastic gradients for all workers.
+    pub fn grads(&mut self, x: &[f32]) -> Vec<Vec<f32>> {
+        (0..self.n_workers()).map(|i| self.grad(i, x)).collect()
+    }
+}
+
+/// Non-convex oracle: sum of a quadratic bowl and a coordinate-wise cosine
+/// ripple, `f(x) = Σ 0.5 h_i x_i² + a·(1 − cos(w x_i))` — smooth, bounded
+/// below, with many spurious stationary points; used for the non-convex
+/// convergence checks matching Assumption 1.
+#[derive(Debug, Clone)]
+pub struct RippleOracle {
+    pub quad: QuadraticOracle,
+    pub amp: f32,
+    pub freq: f32,
+}
+
+impl RippleOracle {
+    pub fn new(
+        dim: usize,
+        n_workers: usize,
+        sigma: f32,
+        amp: f32,
+        freq: f32,
+        seed: u64,
+    ) -> Self {
+        RippleOracle {
+            quad: QuadraticOracle::new(dim, n_workers, 0.5, 2.0, sigma, seed),
+            amp,
+            freq,
+        }
+    }
+
+    pub fn value(&self, x: &[f32]) -> f64 {
+        self.quad.value(x)
+            + x.iter()
+                .map(|&xi| {
+                    self.amp as f64
+                        * (1.0 - ((self.freq * xi) as f64).cos())
+                })
+                .sum::<f64>()
+    }
+
+    pub fn grad_norm2(&self, x: &[f32]) -> f64 {
+        x.iter()
+            .zip(&self.quad.h)
+            .map(|(&xi, &hi)| {
+                let g = hi as f64 * xi as f64
+                    + (self.amp * self.freq) as f64
+                        * ((self.freq * xi) as f64).sin();
+                g * g
+            })
+            .sum()
+    }
+
+    /// Stochastic gradient for one worker.
+    pub fn grad(&mut self, worker: usize, x: &[f32]) -> Vec<f32> {
+        let amp = self.amp;
+        let freq = self.freq;
+        let sigma = self.quad.sigma;
+        let h = &self.quad.h;
+        let rng = &mut self.quad.rngs[worker];
+        x.iter()
+            .zip(h)
+            .map(|(&xi, &hi)| {
+                hi * xi
+                    + amp * freq * (freq * xi).sin()
+                    + rng.normal() as f32 * sigma
+            })
+            .collect()
+    }
+
+    pub fn grads(&mut self, x: &[f32]) -> Vec<Vec<f32>> {
+        (0..self.quad.n_workers()).map(|w| self.grad(w, x)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradient_is_unbiased() {
+        let mut o = QuadraticOracle::new(16, 4, 1.0, 1.0, 0.5, 0);
+        let x = vec![1.0f32; 16];
+        let mut acc = vec![0.0f64; 16];
+        let reps = 2000;
+        for _ in 0..reps {
+            for g in o.grads(&x) {
+                for (a, gi) in acc.iter_mut().zip(&g) {
+                    *a += *gi as f64;
+                }
+            }
+        }
+        for a in &acc {
+            let mean = a / (reps * 4) as f64;
+            assert!((mean - 1.0).abs() < 0.05, "mean={mean}");
+        }
+    }
+
+    #[test]
+    fn spectrum_spans_range() {
+        let o = QuadraticOracle::new(10, 1, 0.1, 10.0, 0.0, 0);
+        assert!((o.h[0] - 0.1).abs() < 1e-6);
+        assert!((o.h[9] - 10.0).abs() < 1e-4);
+        assert_eq!(o.lipschitz(), 10.0);
+    }
+
+    #[test]
+    fn value_and_gradnorm_vanish_at_optimum() {
+        let o = QuadraticOracle::new(8, 1, 0.5, 2.0, 0.0, 0);
+        let zero = vec![0.0f32; 8];
+        assert_eq!(o.value(&zero), 0.0);
+        assert_eq!(o.grad_norm2(&zero), 0.0);
+    }
+
+    #[test]
+    fn workers_get_independent_noise() {
+        let mut o = QuadraticOracle::new(4, 2, 1.0, 1.0, 1.0, 7);
+        let x = vec![0.0f32; 4];
+        let g = o.grads(&x);
+        assert_ne!(g[0], g[1]);
+    }
+
+    #[test]
+    fn ripple_is_nonconvex_but_bounded_below() {
+        let o = RippleOracle::new(8, 1, 0.0, 0.5, 3.0, 0);
+        let x = vec![2.0f32; 8];
+        assert!(o.value(&x) > 0.0);
+        // gradient at a ripple trough differs from pure quadratic
+        let g2 = o.grad_norm2(&x);
+        let q2 = o.quad.grad_norm2(&x);
+        assert!((g2 - q2).abs() > 1e-6);
+    }
+}

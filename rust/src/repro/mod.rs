@@ -1,0 +1,76 @@
+//! The paper-reproduction harness: one entry point per table/figure.
+//!
+//! `obadam repro <exp>` dispatches here; each experiment prints the same
+//! rows/series the paper reports and writes CSV into `results/`.  See
+//! DESIGN.md §4 for the experiment index and EXPERIMENTS.md for recorded
+//! outcomes.
+
+pub mod convergence;
+pub mod timing;
+pub mod theory;
+
+use crate::util::error::{Error, Result};
+
+/// All experiment ids, with a one-line description.
+pub const EXPERIMENTS: &[(&str, &str)] = &[
+    ("table1", "step-time breakdown / allreduce%% across cluster configs"),
+    ("fig1", "naive EC-compressed Adam vs Adam (LM loss curves)"),
+    ("fig2", "Adam variance-norm stabilization + auto-switch indicator"),
+    ("fig4a", "sample-wise convergence: Adam vs 1-bit Adam (LM)"),
+    ("fig4b", "time-wise convergence on the 64-GPU Ethernet cluster"),
+    ("fig5a", "throughput scalability, batch = 16 x nGPU"),
+    ("fig5b", "throughput scalability, total batch 4K"),
+    ("fig5c", "SQuAD fine-tune throughput, batch = 3 x nGPU"),
+    ("fig6", "CNN classifier: SGD/Adam/1-bit/32-bit/naive"),
+    ("fig7", "ResNet-152-scale speedup on 10G/1G TCP"),
+    ("fig8", "GAN: Adam vs 1-bit Adam loss trajectories"),
+    ("fig9", "compression-stage speedup vs bandwidth (50 Mb - 3 Gb)"),
+    ("fig10", "1-bit Adam vs DoubleSqueeze / Local SGD"),
+    ("fig11", "1-bit Adam vs EF-momentum / local momentum"),
+    ("fig12", "Adam with n-bit compressed variance (fails for low n)"),
+    ("fig13", "Adam with lazily-updated variance (fails)"),
+    ("table3", "fine-tune quality parity: compressed vs uncompressed"),
+    ("volume", "end-to-end communication volume vs the paper's formula"),
+    ("theory", "Corollary 1: linear speedup in n, epsilon sensitivity"),
+];
+
+/// Dispatch an experiment by id.  `fast` shrinks workloads ~4x for CI.
+pub fn run(exp: &str, artifacts_dir: &str, out_dir: &str, fast: bool)
+    -> Result<()> {
+    match exp {
+        "table1" => timing::table1(),
+        "fig4b" => timing::fig4b(),
+        "fig5a" => timing::fig5(timing::Fig5Variant::A),
+        "fig5b" => timing::fig5(timing::Fig5Variant::B),
+        "fig5c" => timing::fig5(timing::Fig5Variant::C),
+        "fig7" => timing::fig7(),
+        "fig9" => timing::fig9(),
+        "volume" => timing::volume(),
+        "fig1" => convergence::fig1(artifacts_dir, out_dir, fast),
+        "fig2" => convergence::fig2(artifacts_dir, out_dir, fast),
+        "fig4a" => convergence::fig4a(artifacts_dir, out_dir, fast),
+        "fig6" => convergence::fig6(artifacts_dir, out_dir, fast),
+        "fig8" => convergence::fig8(artifacts_dir, out_dir, fast),
+        "fig10" => convergence::fig10(artifacts_dir, out_dir, fast),
+        "fig11" => convergence::fig11(artifacts_dir, out_dir, fast),
+        "fig12" => convergence::fig12(artifacts_dir, out_dir, fast),
+        "fig13" => convergence::fig13(artifacts_dir, out_dir, fast),
+        "table3" => convergence::table3(artifacts_dir, out_dir, fast),
+        "theory" => theory::corollary1(out_dir, fast),
+        "all" => {
+            for (id, _) in EXPERIMENTS {
+                println!("\n================ {id} ================");
+                run(id, artifacts_dir, out_dir, fast)?;
+            }
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown experiment '{other}'; known: {}",
+            EXPERIMENTS
+                .iter()
+                .map(|(k, _)| *k)
+                .collect::<Vec<_>>()
+                .join(", ")
+        ))),
+    }
+}

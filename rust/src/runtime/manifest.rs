@@ -1,0 +1,229 @@
+//! `artifacts/manifest.json` — the L2→L3 interchange contract.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Element type of a tensor in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(Error::Config(format!("unknown dtype '{other}'"))),
+        }
+    }
+}
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .arr_of("shape")?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .ok_or_else(|| Error::Config("bad shape dim".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(j.str_of("dtype")?)?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-exported computation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata from the exporter (model hyperparams etc.).
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize())
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str())
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    by_name: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::Config(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.as_ref().display()
+            ))
+        })?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j.usize_of("version")?;
+        if version != 1 {
+            return Err(Error::Config(format!(
+                "unsupported manifest version {version}"
+            )));
+        }
+        let mut by_name = BTreeMap::new();
+        for art in j.arr_of("artifacts")? {
+            let name = art.str_of("name")?.to_string();
+            let file = art.str_of("file")?.to_string();
+            let inputs = art
+                .arr_of("inputs")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = art
+                .arr_of("outputs")?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let meta = match art.get("meta") {
+                Some(Json::Obj(m)) => m.clone(),
+                _ => BTreeMap::new(),
+            };
+            by_name.insert(
+                name.clone(),
+                ArtifactSpec { name, file, inputs, outputs, meta },
+            );
+        }
+        Ok(Manifest { by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.by_name.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    /// All LM train-step artifacts: `(size-name, spec)`.
+    pub fn lm_steps(&self) -> Vec<(&str, &ArtifactSpec)> {
+        self.by_name
+            .values()
+            .filter(|a| a.meta_str("kind") == Some("lm_train_step"))
+            .map(|a| (a.meta_str("size").unwrap_or(""), a))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"version": 1, "artifacts": [
+      {"name": "adam_step_64", "file": "adam_step_64.hlo.txt",
+       "inputs": [{"shape": [64], "dtype": "f32"},
+                  {"shape": [64], "dtype": "f32"},
+                  {"shape": [64], "dtype": "f32"},
+                  {"shape": [64], "dtype": "f32"},
+                  {"shape": [1], "dtype": "f32"}],
+       "outputs": [{"shape": [64], "dtype": "f32"},
+                   {"shape": [64], "dtype": "f32"},
+                   {"shape": [64], "dtype": "f32"}],
+       "meta": {"kind": "adam_step", "n": 64}},
+      {"name": "lm_train_step_lm-tiny", "file": "lm.hlo.txt",
+       "inputs": [{"shape": [34688], "dtype": "f32"},
+                  {"shape": [8, 32], "dtype": "i32"},
+                  {"shape": [8, 32], "dtype": "i32"}],
+       "outputs": [{"shape": [], "dtype": "f32"},
+                   {"shape": [34688], "dtype": "f32"}],
+       "meta": {"kind": "lm_train_step", "size": "lm-tiny",
+                "params": 34688, "batch": 8, "seq": 32}}
+    ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let a = m.get("adam_step_64").unwrap();
+        assert_eq!(a.inputs.len(), 5);
+        assert_eq!(a.inputs[0].elements(), 64);
+        assert_eq!(a.inputs[1].dtype, Dtype::F32);
+        assert_eq!(a.meta_usize("n"), Some(64));
+    }
+
+    #[test]
+    fn lm_steps_filter() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let steps = m.lm_steps();
+        assert_eq!(steps.len(), 1);
+        assert_eq!(steps[0].0, "lm-tiny");
+        assert_eq!(steps[0].1.meta_usize("batch"), Some(8));
+        assert_eq!(steps[0].1.inputs[1].shape, vec![8, 32]);
+    }
+
+    #[test]
+    fn scalar_output_has_one_element() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let lm = m.get("lm_train_step_lm-tiny").unwrap();
+        assert_eq!(lm.outputs[0].elements(), 1); // [] product == 1
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(r#"{"version": 2, "artifacts": []}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = r#"{"version": 1, "artifacts": [
+          {"name": "x", "file": "x.hlo.txt",
+           "inputs": [{"shape": [1], "dtype": "f16"}],
+           "outputs": [], "meta": {}}]}"#;
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn parses_generated_manifest_if_present() {
+        // Integration-lite: parse the real artifacts/manifest.json when the
+        // build has produced one.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert!(m.len() > 10);
+            assert!(m.get("cnn_train_step").is_some());
+        }
+    }
+}

@@ -1,0 +1,307 @@
+//! PJRT runtime: load the AOT artifacts and execute them on the hot path.
+//!
+//! Python never runs here — `artifacts/manifest.json` plus the
+//! `*.hlo.txt` files (written once by `python/compile/aot.py`) are the
+//! entire interface.  HLO *text* is the interchange format (jax ≥ 0.5
+//! protos carry 64-bit ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids).
+//!
+//! Artifacts are compiled lazily on first use and cached; a compiled
+//! executable is reused for every subsequent step.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Error, Result};
+pub use manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+
+/// Lazily-compiled artifact store over a PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<BTreeMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads + validates the manifest).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Does the manifest contain this artifact?
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.get(name).is_some()
+    }
+
+    fn executable(
+        &self,
+        name: &str,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| Error::msg(format!("unknown artifact '{name}'")))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name`.  Inputs are validated against the manifest;
+    /// outputs are returned as one [`xla::Literal`] per manifest output
+    /// (the AOT pipeline lowers with `return_tuple=True`).
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| Error::msg(format!("unknown artifact '{name}'")))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::msg(format!(
+                "artifact '{name}': {} inputs given, manifest wants {}",
+                inputs.len(),
+                spec.inputs.len()
+            )));
+        }
+        for (k, (lit, ts)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let got = lit.element_count();
+            let want: usize = ts.shape.iter().product();
+            if got != want {
+                return Err(Error::msg(format!(
+                    "artifact '{name}' input {k}: {got} elements, manifest \
+                     wants {want} {:?}",
+                    ts.shape
+                )));
+            }
+        }
+        let exe = self.executable(name)?;
+        // NB: `execute::<Literal>` in xla 0.1.6 leaks its input device
+        // buffers (the C shim `execute` releases BufferFromHostLiteral
+        // results without freeing them — ~one params-sized buffer per
+        // call).  `execute_b` leaves input ownership with the caller, so
+        // we stage the buffers ourselves and let their Drop free them.
+        let buffers = inputs
+            .iter()
+            .map(|lit| self.client.buffer_from_host_literal(None, lit))
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != spec.outputs.len() {
+            return Err(Error::msg(format!(
+                "artifact '{name}': {} outputs, manifest wants {}",
+                outs.len(),
+                spec.outputs.len()
+            )));
+        }
+        Ok(outs)
+    }
+
+    /// Convenience for the LM train steps:
+    /// `(params, tokens[i32], targets[i32]) → (loss, grads)`.
+    pub fn train_step(
+        &self,
+        name: &str,
+        params: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| Error::msg(format!("unknown artifact '{name}'")))?;
+        let tok_shape: Vec<i64> =
+            spec.inputs[1].shape.iter().map(|&d| d as i64).collect();
+        let p = xla::Literal::vec1(params);
+        let t = xla::Literal::vec1(tokens).reshape(&tok_shape)?;
+        let y = xla::Literal::vec1(targets).reshape(&tok_shape)?;
+        let outs = self.execute(name, &[p, t, y])?;
+        let loss = outs[0].to_vec::<f32>()?[0];
+        let grads = outs[1].to_vec::<f32>()?;
+        Ok((loss, grads))
+    }
+
+    /// `(params, x[f32], y[i32]) → (loss, grads)` — the CNN train step.
+    /// Also serves `cnn_accuracy` (single output, empty grads).
+    pub fn cnn_step(
+        &self,
+        name: &str,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| Error::msg(format!("unknown artifact '{name}'")))?;
+        let x_shape: Vec<i64> =
+            spec.inputs[1].shape.iter().map(|&d| d as i64).collect();
+        let p = xla::Literal::vec1(params);
+        let xb = xla::Literal::vec1(x).reshape(&x_shape)?;
+        let yb = xla::Literal::vec1(y);
+        let outs = self.execute(name, &[p, xb, yb])?;
+        let loss = outs[0].to_vec::<f32>()?[0];
+        if outs.len() == 1 {
+            return Ok((loss, Vec::new()));
+        }
+        let grads = outs[1].to_vec::<f32>()?;
+        Ok((loss, grads))
+    }
+
+    /// Fused Adam step via the L1 Pallas artifact `adam_step_<n>`.
+    pub fn adam_step(
+        &self,
+        n: usize,
+        p: &[f32],
+        m: &[f32],
+        v: &[f32],
+        g: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let name = format!("adam_step_{n}");
+        let outs = self.execute(
+            &name,
+            &[
+                xla::Literal::vec1(p),
+                xla::Literal::vec1(m),
+                xla::Literal::vec1(v),
+                xla::Literal::vec1(g),
+                xla::Literal::vec1(&[lr]),
+            ],
+        )?;
+        Ok((
+            outs[0].to_vec::<f32>()?,
+            outs[1].to_vec::<f32>()?,
+            outs[2].to_vec::<f32>()?,
+        ))
+    }
+
+    /// Error-compensated 1-bit compression via `onebit_compress_<n>`.
+    pub fn onebit_compress(
+        &self,
+        n: usize,
+        val: &[f32],
+        err: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let name = format!("onebit_compress_{n}");
+        let outs = self.execute(
+            &name,
+            &[xla::Literal::vec1(val), xla::Literal::vec1(err)],
+        )?;
+        Ok((
+            outs[0].to_vec::<f32>()?,
+            outs[1].to_vec::<f32>()?,
+            outs[2].to_vec::<f32>()?[0],
+        ))
+    }
+
+    /// Local momentum refresh via `momentum_update_<n>`.
+    pub fn momentum_update(
+        &self,
+        n: usize,
+        m: &[f32],
+        g: &[f32],
+    ) -> Result<Vec<f32>> {
+        let name = format!("momentum_update_{n}");
+        let outs = self
+            .execute(&name, &[xla::Literal::vec1(m), xla::Literal::vec1(g)])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// Preconditioned parameter update via `precond_step_<n>`.
+    pub fn precond_step(
+        &self,
+        n: usize,
+        p: &[f32],
+        m_agg: &[f32],
+        v_frozen: &[f32],
+        lr: f32,
+    ) -> Result<Vec<f32>> {
+        let name = format!("precond_step_{n}");
+        let outs = self.execute(
+            &name,
+            &[
+                xla::Literal::vec1(p),
+                xla::Literal::vec1(m_agg),
+                xla::Literal::vec1(v_frozen),
+                xla::Literal::vec1(&[lr]),
+            ],
+        )?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// GAN steps: `gan_d_step(d, g, real, z)` / `gan_g_step(d, g, z)`.
+    pub fn gan_d_step(
+        &self,
+        d: &[f32],
+        g: &[f32],
+        real: &[f32],
+        z: &[f32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let spec = self
+            .manifest
+            .get("gan_d_step")
+            .ok_or_else(|| Error::msg("missing artifact 'gan_d_step'"))?;
+        let real_shape: Vec<i64> =
+            spec.inputs[2].shape.iter().map(|&d| d as i64).collect();
+        let z_shape: Vec<i64> =
+            spec.inputs[3].shape.iter().map(|&d| d as i64).collect();
+        let outs = self.execute(
+            "gan_d_step",
+            &[
+                xla::Literal::vec1(d),
+                xla::Literal::vec1(g),
+                xla::Literal::vec1(real).reshape(&real_shape)?,
+                xla::Literal::vec1(z).reshape(&z_shape)?,
+            ],
+        )?;
+        Ok((outs[0].to_vec::<f32>()?[0], outs[1].to_vec::<f32>()?))
+    }
+
+    pub fn gan_g_step(
+        &self,
+        d: &[f32],
+        g: &[f32],
+        z: &[f32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let spec = self
+            .manifest
+            .get("gan_g_step")
+            .ok_or_else(|| Error::msg("missing artifact 'gan_g_step'"))?;
+        let z_shape: Vec<i64> =
+            spec.inputs[2].shape.iter().map(|&d| d as i64).collect();
+        let outs = self.execute(
+            "gan_g_step",
+            &[
+                xla::Literal::vec1(d),
+                xla::Literal::vec1(g),
+                xla::Literal::vec1(z).reshape(&z_shape)?,
+            ],
+        )?;
+        Ok((outs[0].to_vec::<f32>()?[0], outs[1].to_vec::<f32>()?))
+    }
+}

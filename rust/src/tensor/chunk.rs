@@ -1,0 +1,149 @@
+//! Chunking of a flat tensor across `n` workers.
+//!
+//! The compressed_allreduce (paper Figure 3) scatters the fused momentum
+//! into `n` chunks — worker `i` owns chunk `i` and acts as the "server" for
+//! it.  When the length is not divisible by `n`, the first `len % n` chunks
+//! get one extra element (MPI_Alltoallv-style), so chunk sizes differ by at
+//! most one and their concatenation is exactly the input.
+
+/// Chunk layout of a length-`len` tensor over `n` parts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkLayout {
+    pub len: usize,
+    pub n: usize,
+}
+
+impl ChunkLayout {
+    pub fn new(len: usize, n: usize) -> Self {
+        assert!(n > 0, "need at least one chunk");
+        ChunkLayout { len, n }
+    }
+
+    /// Half-open range [start, end) of chunk `i`.
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        assert!(i < self.n);
+        let base = self.len / self.n;
+        let extra = self.len % self.n;
+        let start = i * base + i.min(extra);
+        let size = base + usize::from(i < extra);
+        start..start + size
+    }
+
+    pub fn size(&self, i: usize) -> usize {
+        self.range(i).len()
+    }
+
+    pub fn max_size(&self) -> usize {
+        self.size(0)
+    }
+
+    /// Iterate all ranges.
+    pub fn ranges(&self) -> impl Iterator<Item = std::ops::Range<usize>> + '_ {
+        (0..self.n).map(move |i| self.range(i))
+    }
+
+    /// Split a slice into per-chunk subslices.
+    pub fn split<'a>(&self, x: &'a [f32]) -> Vec<&'a [f32]> {
+        assert_eq!(x.len(), self.len);
+        self.ranges().map(|r| &x[r]).collect()
+    }
+
+    /// Copy chunks back into a contiguous tensor.
+    pub fn gather(&self, chunks: &[Vec<f32>]) -> Vec<f32> {
+        assert_eq!(chunks.len(), self.n);
+        let mut out = vec![0.0f32; self.len];
+        for (i, c) in chunks.iter().enumerate() {
+            let r = self.range(i);
+            assert_eq!(c.len(), r.len(), "chunk {i} size mismatch");
+            out[r].copy_from_slice(c);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{forall, gen_vec};
+
+    #[test]
+    fn even_split() {
+        let l = ChunkLayout::new(12, 4);
+        assert_eq!(
+            l.ranges().collect::<Vec<_>>(),
+            vec![0..3, 3..6, 6..9, 9..12]
+        );
+    }
+
+    #[test]
+    fn uneven_split_first_chunks_bigger() {
+        let l = ChunkLayout::new(10, 4);
+        let sizes: Vec<usize> = (0..4).map(|i| l.size(i)).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn more_chunks_than_elements() {
+        let l = ChunkLayout::new(2, 5);
+        let sizes: Vec<usize> = (0..5).map(|i| l.size(i)).collect();
+        assert_eq!(sizes, vec![1, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn ranges_are_contiguous_partition() {
+        for len in [0usize, 1, 7, 100, 1001] {
+            for n in [1usize, 2, 3, 8, 17] {
+                let l = ChunkLayout::new(len, n);
+                let mut cur = 0;
+                for r in l.ranges() {
+                    assert_eq!(r.start, cur);
+                    cur = r.end;
+                }
+                assert_eq!(cur, len);
+            }
+        }
+    }
+
+    #[test]
+    fn split_gather_roundtrip_property() {
+        forall(
+            100,
+            |r| {
+                let v = gen_vec(r, 0, 200, 1.0);
+                let n = r.range(1, 9);
+                (v, n)
+            },
+            |(v, n): &(Vec<f32>, usize)| {
+                let l = ChunkLayout::new(v.len(), *n);
+                let chunks: Vec<Vec<f32>> =
+                    l.split(v).into_iter().map(|s| s.to_vec()).collect();
+                let back = l.gather(&chunks);
+                if back == *v {
+                    Ok(())
+                } else {
+                    Err("gather(split(x)) != x".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn sizes_differ_by_at_most_one() {
+        forall(
+            100,
+            |r| (r.range(0, 10_000), r.range(1, 65)),
+            |(len, n): &(usize, usize)| {
+                let l = ChunkLayout::new(*len, *n);
+                let sizes: Vec<usize> = (0..*n).map(|i| l.size(i)).collect();
+                let mx = *sizes.iter().max().unwrap();
+                let mn = *sizes.iter().min().unwrap();
+                if mx - mn <= 1 {
+                    Ok(())
+                } else {
+                    Err(format!("sizes spread {mx}-{mn}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,149 @@
+//! Flat f32 vector math for the coordinator hot path.
+//!
+//! Everything in the paper's optimizer/communication layer operates on fused
+//! flat tensors ("we fuse the variance of all parameters", Section 3.3), so
+//! a thin set of cache-friendly slice kernels is all L3 needs.  Inner loops
+//! are written to autovectorize (no bounds checks in the hot path, simple
+//! FMA-shaped expressions).
+
+pub mod chunk;
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// y = alpha * x + beta * y   (the momentum refresh shape)
+pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = alpha * *xi + beta * *yi;
+    }
+}
+
+/// Element-wise `out = a + b`.
+pub fn add(a: &[f32], b: &[f32], out: &mut [f32]) {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] + b[i];
+    }
+}
+
+/// In-place scale.
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// L1 norm.
+pub fn norm1(x: &[f32]) -> f64 {
+    x.iter().map(|&v| v.abs() as f64).sum()
+}
+
+/// L2 norm.
+pub fn norm2(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// Dot product (f64 accumulator).
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Mean of a slice.
+pub fn mean(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().map(|&v| v as f64).sum::<f64>() / x.len() as f64
+}
+
+/// Minimum value.
+pub fn min(x: &[f32]) -> f32 {
+    x.iter().copied().fold(f32::INFINITY, f32::min)
+}
+
+/// Maximum absolute difference between two slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+/// Average `n` equally-sized slices into `out` (the server-side reduce).
+pub fn average_into(parts: &[&[f32]], out: &mut [f32]) {
+    assert!(!parts.is_empty());
+    let n = parts.len() as f32;
+    let len = out.len();
+    for p in parts {
+        assert_eq!(p.len(), len);
+    }
+    out.copy_from_slice(parts[0]);
+    for p in &parts[1..] {
+        for i in 0..len {
+            out[i] += p[i];
+        }
+    }
+    scale(out, 1.0 / n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn axpby_is_momentum_shape() {
+        let g = vec![1.0f32, -1.0];
+        let mut m = vec![0.5f32, 0.5];
+        // m = 0.9 m + 0.1 g
+        axpby(0.1, &g, 0.9, &mut m);
+        assert!((m[0] - 0.55).abs() < 1e-7);
+        assert!((m[1] - 0.35).abs() < 1e-7);
+    }
+
+    #[test]
+    fn norms() {
+        let x = vec![3.0f32, -4.0];
+        assert!((norm1(&x) - 7.0).abs() < 1e-12);
+        assert!((norm2(&x) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn average_into_averages() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 6.0];
+        let mut out = vec![0.0f32; 2];
+        average_into(&[&a, &b], &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn min_and_diff() {
+        assert_eq!(min(&[3.0, -1.0, 2.0]), -1.0);
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn axpy_length_mismatch_panics() {
+        let x = vec![1.0f32];
+        let mut y = vec![1.0f32, 2.0];
+        axpy(1.0, &x, &mut y);
+    }
+}

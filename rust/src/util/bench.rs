@@ -1,0 +1,171 @@
+//! First-party micro-benchmark harness (no-network environment: no
+//! criterion).  Warmup + repeated timed runs, reporting median / mean /
+//! p10 / p90 with automatic iteration scaling to a target time.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 50.0)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn p10_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 10.0)
+    }
+
+    pub fn p90_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 90.0)
+    }
+
+    /// Throughput in items/s given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns() * 1e-9)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} median {:>12} mean   (p10 {:>10}, p90 {:>10}, {} samples x {} iters)",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p10_ns()),
+            fmt_ns(self.p90_ns()),
+            self.samples_ns.len(),
+            self.iters_per_sample
+        )
+    }
+}
+
+fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with warmup and auto-scaled iteration counts.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target_sample: Duration,
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            target_sample: Duration::from_millis(50),
+            samples: 20,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            target_sample: Duration::from_millis(20),
+            samples: 10,
+        }
+    }
+
+    /// Run `f` repeatedly; `f` must do one unit of work per call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + estimate single-iteration cost.
+        let wstart = Instant::now();
+        let mut wcount = 0u64;
+        while wstart.elapsed() < self.warmup || wcount < 3 {
+            f();
+            wcount += 1;
+            if wcount > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = wstart.elapsed().as_nanos() as f64 / wcount as f64;
+        let iters = ((self.target_sample.as_nanos() as f64 / per_iter)
+            .ceil() as u64)
+            .max(1);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters_per_sample: iters,
+            samples_ns: samples,
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep_roughly() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            target_sample: Duration::from_millis(5),
+            samples: 5,
+        };
+        let r = b.run("sleep_1ms", || {
+            std::thread::sleep(Duration::from_millis(1))
+        });
+        let med = r.median_ns();
+        assert!(med > 0.8e6 && med < 20e6, "median {med} ns");
+    }
+
+    #[test]
+    fn percentile_ordering() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters_per_sample: 1,
+            samples_ns: vec![1.0, 2.0, 3.0, 4.0, 100.0],
+        };
+        assert!(r.p10_ns() <= r.median_ns());
+        assert!(r.median_ns() <= r.p90_ns());
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("µs"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

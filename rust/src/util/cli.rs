@@ -1,0 +1,136 @@
+//! Tiny argument parser (no-network environment: no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{Error, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    /// Option keys that were read at least once (for unknown-arg checking).
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.known.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.known.borrow_mut().push(name.to_string());
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| {
+                Error::Config(format!("--{name}={v} not a usize: {e}"))
+            }),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| {
+                Error::Config(format!("--{name}={v} not a u64: {e}"))
+            }),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| {
+                Error::Config(format!("--{name}={v} not a f64: {e}"))
+            }),
+        }
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        Ok(self.f64_or(name, default as f64)? as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        // NB: a bare `--name` followed by a non-option token consumes it as
+        // the value; boolean flags therefore go last or use `--name=value`.
+        let a = parse("train extra --workers 8 --lr=0.001 --verbose");
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get("workers"), Some("8"));
+        assert_eq!(a.get("lr"), Some("0.001"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_at_end() {
+        let a = parse("cmd --dry-run");
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("--n 42 --lr 1e-3");
+        assert_eq!(a.usize_or("n", 0).unwrap(), 42);
+        assert!((a.f64_or("lr", 0.0).unwrap() - 1e-3).abs() < 1e-12);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+        assert!(parse("--n x").usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--key value" where value starts with '-' but not '--'
+        let a = parse("--offset -5");
+        assert_eq!(a.get("offset"), Some("-5"));
+    }
+}

@@ -1,0 +1,23 @@
+//! Crate-wide error type.
+use thiserror::Error;
+
+/// Unified error type for the 1-bit Adam runtime and coordinator.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("xla/pjrt error: {0}")]
+    Xla(#[from] xla::Error),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("{0}")]
+    Msg(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error::Msg(m.into())
+    }
+}

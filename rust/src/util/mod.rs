@@ -1,0 +1,8 @@
+//! First-party utilities (no-network environment: no serde/clap/criterion/
+//! proptest/rand — each is replaced by a small, tested module here).
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod error;
+pub mod json;
+pub mod prng;

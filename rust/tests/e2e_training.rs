@@ -1,0 +1,191 @@
+//! Integration: short end-to-end training runs through the full
+//! three-layer stack (PJRT artifacts → Rust coordinator), asserting the
+//! paper's qualitative claims on the real (synthetic-data) workloads.
+//!
+//! Skips cleanly when `artifacts/` is missing.
+
+use std::rc::Rc;
+
+use onebit_adam::coordinator::{
+    train, CnnSource, GradSource, LmSource, LrSchedule, TrainOptions,
+};
+use onebit_adam::optim::backend::AdamHyper;
+use onebit_adam::optim::onebit_adam::{OneBitAdam, OneBitAdamConfig};
+use onebit_adam::optim::{Adam, DistOptimizer};
+use onebit_adam::runtime::Runtime;
+use onebit_adam::util::prng::Rng;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Rc::new(Runtime::load(dir).expect("load runtime")))
+}
+
+fn hyper() -> AdamHyper {
+    AdamHyper { beta2: 0.97, ..AdamHyper::default() }
+}
+
+#[test]
+fn lm_onebit_adam_reduces_loss_through_both_phases() {
+    let Some(rt) = runtime() else { return };
+    let workers = 2;
+    let steps = 300;
+    let mut src = LmSource::new(rt, "lm-tiny", workers, 1).unwrap();
+    let dim = src.dim();
+    let mut opt = OneBitAdam::new(
+        workers,
+        Rng::new(2).normal_vec(dim, 0.02),
+        OneBitAdamConfig {
+            warmup_steps: Some(100),
+            hyper: hyper(),
+            ..Default::default()
+        },
+    );
+    let opts = TrainOptions {
+        steps,
+        schedule: LrSchedule::Constant(1e-3),
+        timing: None,
+        log_every: 0,
+    };
+    let log = train(&mut opt, &mut src, &opts).unwrap();
+    let start = log.records[..10]
+        .iter()
+        .map(|r| r.loss as f64)
+        .sum::<f64>()
+        / 10.0;
+    let end = log.tail_loss(10).unwrap() as f64;
+    assert!(end < start - 0.5, "loss {start:.3} -> {end:.3}");
+    assert_eq!(log.warmup_steps(), 100);
+    // compression steps must be present and cheap on the wire
+    let comp_rec = log
+        .records
+        .iter()
+        .rev()
+        .find(|r| r.phase == onebit_adam::optim::Phase::Compression)
+        .unwrap();
+    let warm_rec = &log.records[0];
+    assert!(warm_rec.comm_bytes as f64 / comp_rec.comm_bytes as f64 > 20.0);
+}
+
+#[test]
+fn lm_deterministic_across_runs() {
+    let Some(rt) = runtime() else { return };
+    let mut finals = Vec::new();
+    for _ in 0..2 {
+        let workers = 2;
+        let mut src = LmSource::new(rt.clone(), "lm-tiny", workers, 7).unwrap();
+        let dim = src.dim();
+        let mut opt = OneBitAdam::new(
+            workers,
+            Rng::new(3).normal_vec(dim, 0.02),
+            OneBitAdamConfig {
+                warmup_steps: Some(20),
+                hyper: hyper(),
+                ..Default::default()
+            },
+        );
+        let opts = TrainOptions {
+            steps: 50,
+            schedule: LrSchedule::Constant(1e-3),
+            timing: None,
+            log_every: 0,
+        };
+        let log = train(&mut opt, &mut src, &opts).unwrap();
+        finals.push((log.final_loss().unwrap(), opt.params()[0]));
+    }
+    assert_eq!(finals[0], finals[1], "bit-reproducibility broken");
+}
+
+#[test]
+fn cnn_adam_vs_onebit_parity_short() {
+    let Some(rt) = runtime() else { return };
+    let workers = 4;
+    let steps = 160;
+    let dim = rt
+        .manifest()
+        .get("cnn_train_step")
+        .unwrap()
+        .inputs[0]
+        .elements();
+    let init = Rng::new(4).normal_vec(dim, 0.02);
+
+    let mut results = Vec::new();
+    for compressed in [false, true] {
+        let mut src = CnnSource::new(rt.clone(), workers, 4.0, 21).unwrap();
+        let mut opt: Box<dyn DistOptimizer> = if compressed {
+            Box::new(OneBitAdam::new(
+                workers,
+                init.clone(),
+                OneBitAdamConfig {
+                    warmup_steps: Some(70),
+                    hyper: hyper(),
+                    ..Default::default()
+                },
+            ))
+        } else {
+            Box::new(Adam::new(workers, init.clone()).with_hyper(hyper()))
+        };
+        let opts = TrainOptions {
+            steps,
+            schedule: LrSchedule::Constant(1e-3),
+            timing: None,
+            log_every: 0,
+        };
+        let log = train(opt.as_mut(), &mut src, &opts).unwrap();
+        let acc = src.test_accuracy(opt.params(), 999).unwrap();
+        results.push((log.tail_loss(15).unwrap(), acc));
+    }
+    let (adam_loss, adam_acc) = results[0];
+    let (ob_loss, ob_acc) = results[1];
+    assert!(
+        (ob_loss - adam_loss).abs() < 0.4,
+        "loss gap too large: adam {adam_loss} vs 1bit {ob_loss}"
+    );
+    assert!(
+        ob_acc > adam_acc - 0.12,
+        "accuracy gap: adam {adam_acc} vs 1bit {ob_acc}"
+    );
+}
+
+#[test]
+fn gan_both_optimizers_stay_finite() {
+    let Some(rt) = runtime() else { return };
+    use onebit_adam::coordinator::gan::GanTrainer;
+    let spec = rt.manifest().get("gan_d_step").unwrap().clone();
+    let dp = spec.inputs[0].elements();
+    let gp = spec.inputs[1].elements();
+    let workers = 2;
+    let h = AdamHyper { beta2: 0.9, ..AdamHyper::default() };
+    for compressed in [false, true] {
+        let mk = |init: Vec<f32>| -> Box<dyn DistOptimizer> {
+            if compressed {
+                Box::new(OneBitAdam::new(
+                    workers,
+                    init,
+                    OneBitAdamConfig {
+                        warmup_steps: Some(40),
+                        hyper: h,
+                        ..Default::default()
+                    },
+                ))
+            } else {
+                Box::new(Adam::new(workers, init).with_hyper(h))
+            }
+        };
+        let mut d = mk(Rng::new(5).normal_vec(dp, 0.02));
+        let mut g = mk(Rng::new(6).normal_vec(gp, 0.02));
+        let mut tr = GanTrainer::new(rt.clone(), workers, 31).unwrap();
+        let mut last = (0.0f32, 0.0f32);
+        for t in 0..100 {
+            let r = tr.step(d.as_mut(), g.as_mut(), t, 5e-5, 5e-5).unwrap();
+            last = (r.d_loss, r.g_loss);
+        }
+        assert!(
+            last.0.is_finite() && last.1.is_finite(),
+            "GAN losses must stay finite (compressed={compressed}): {last:?}"
+        );
+    }
+}

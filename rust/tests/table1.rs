@@ -1,0 +1,99 @@
+//! Integration: row-by-row validation of the netsim against the paper's
+//! own Table 1 measurements (the calibration contract of DESIGN.md §2).
+
+use onebit_adam::netsim::collectives::fp16_allreduce_time;
+use onebit_adam::netsim::{ComputeModel, NetworkModel};
+
+const BERT_LARGE: usize = 340_000_000;
+
+struct Row {
+    ethernet: bool,
+    gpus: usize,
+    batch1: bool,
+    accum: usize,
+    paper_allreduce_ms: f64,
+    paper_pct: f64,
+}
+
+const ROWS: &[Row] = &[
+    Row { ethernet: true, gpus: 64, batch1: true, accum: 1, paper_allreduce_ms: 2205.86, paper_pct: 94.0 },
+    Row { ethernet: true, gpus: 64, batch1: false, accum: 1, paper_allreduce_ms: 2275.43, paper_pct: 93.0 },
+    Row { ethernet: true, gpus: 64, batch1: false, accum: 4, paper_allreduce_ms: 2259.36, paper_pct: 83.0 },
+    Row { ethernet: true, gpus: 32, batch1: false, accum: 1, paper_allreduce_ms: 2173.35, paper_pct: 93.0 },
+    Row { ethernet: true, gpus: 16, batch1: false, accum: 1, paper_allreduce_ms: 2133.24, paper_pct: 92.0 },
+    Row { ethernet: true, gpus: 8, batch1: false, accum: 1, paper_allreduce_ms: 1897.21, paper_pct: 92.0 },
+    Row { ethernet: true, gpus: 4, batch1: false, accum: 1, paper_allreduce_ms: 239.76, paper_pct: 58.0 },
+    Row { ethernet: false, gpus: 64, batch1: true, accum: 1, paper_allreduce_ms: 316.18, paper_pct: 75.0 },
+    Row { ethernet: false, gpus: 64, batch1: false, accum: 1, paper_allreduce_ms: 336.40, paper_pct: 69.0 },
+    Row { ethernet: false, gpus: 64, batch1: false, accum: 4, paper_allreduce_ms: 339.52, paper_pct: 44.0 },
+    Row { ethernet: false, gpus: 32, batch1: false, accum: 1, paper_allreduce_ms: 297.28, paper_pct: 67.0 },
+    Row { ethernet: false, gpus: 16, batch1: false, accum: 1, paper_allreduce_ms: 183.74, paper_pct: 55.0 },
+    Row { ethernet: false, gpus: 8, batch1: false, accum: 1, paper_allreduce_ms: 28.18, paper_pct: 16.0 },
+];
+
+fn model_row(r: &Row) -> (f64, f64) {
+    let net = if r.ethernet {
+        NetworkModel::ethernet()
+    } else {
+        NetworkModel::infiniband()
+    };
+    let compute = if r.batch1 {
+        ComputeModel::bert_large_v100_b1()
+    } else {
+        ComputeModel::bert_large_v100()
+    };
+    let ar = fp16_allreduce_time(&net, r.gpus, BERT_LARGE);
+    let pct = 100.0 * ar / (compute.step_compute(r.accum) + ar);
+    (ar * 1e3, pct)
+}
+
+/// Every multi-node allreduce time within 45% of the paper's measurement
+/// (the 2-node Ethernet row is the loosest; most rows land within 15%).
+#[test]
+fn allreduce_times_within_tolerance() {
+    for (i, r) in ROWS.iter().enumerate() {
+        let (ms, _) = model_row(r);
+        let rel = (ms - r.paper_allreduce_ms).abs() / r.paper_allreduce_ms;
+        assert!(
+            rel < 0.45,
+            "row {i}: model {ms:.0} ms vs paper {} ms ({:.0}% off)",
+            r.paper_allreduce_ms,
+            rel * 100.0
+        );
+    }
+}
+
+/// allreduce%% within 12 percentage points on every row.
+#[test]
+fn allreduce_percentages_within_tolerance() {
+    for (i, r) in ROWS.iter().enumerate() {
+        let (_, pct) = model_row(r);
+        assert!(
+            (pct - r.paper_pct).abs() < 12.0,
+            "row {i}: model {pct:.0}%% vs paper {}%%",
+            r.paper_pct
+        );
+    }
+}
+
+/// The two qualitative Table 1 takeaways the paper draws:
+/// comm%% grows with node count and shrinks with gradient accumulation.
+#[test]
+fn qualitative_trends() {
+    let pct = |gpus: usize, accum: usize| {
+        let net = NetworkModel::ethernet();
+        let compute = ComputeModel::bert_large_v100();
+        let ar = fp16_allreduce_time(&net, gpus, BERT_LARGE);
+        100.0 * ar / (compute.step_compute(accum) + ar)
+    };
+    assert!(pct(64, 1) > pct(8, 1));
+    assert!(pct(64, 4) < pct(64, 1));
+    // Ethernet communicates proportionally more than InfiniBand
+    let ib = {
+        let net = NetworkModel::infiniband();
+        let compute = ComputeModel::bert_large_v100();
+        let ar = fp16_allreduce_time(&net, 64, BERT_LARGE);
+        100.0 * ar / (compute.step_compute(1) + ar)
+    };
+    assert!(pct(64, 1) > ib + 20.0);
+}
