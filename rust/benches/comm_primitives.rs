@@ -1,19 +1,28 @@
 //! End-to-end bench of the collectives' *data-plane* cost: the full
 //! compressed_allreduce (compress → chunk → pack → average → recompress →
-//! gather) vs the plain fp32 average, on realistic tensor sizes.
+//! gather) vs the plain fp32 average, on realistic tensor sizes.  The
+//! compressed collective is timed on three configurations — fused
+//! bit-domain (threaded, the default), bit-domain pinned to one thread,
+//! and the pre-change decode-average reference — so both the fusion and
+//! the thread-scaling win land in `BENCH_step.json`.
 //!
 //!     cargo bench --bench comm_primitives
 
 use onebit_adam::comm::plain::allreduce_average;
-use onebit_adam::comm::CompressedAllreduce;
+use onebit_adam::comm::{AllreducePath, CompressedAllreduce};
 use onebit_adam::compress::CompressionKind;
-use onebit_adam::util::bench::{black_box, Bencher};
+use onebit_adam::util::bench::{black_box, smoke_mode, BenchJson, Bencher};
 use onebit_adam::util::prng::Rng;
 
 fn main() {
-    let b = Bencher::default();
-    for workers in [4usize, 8, 16] {
-        for n in [1 << 18, 1 << 21] {
+    let b = Bencher::from_env();
+    let mut json = BenchJson::new("comm_primitives");
+    let worker_counts: &[usize] =
+        if smoke_mode() { &[4] } else { &[4, 8, 16] };
+    let sizes: &[usize] =
+        if smoke_mode() { &[1 << 18] } else { &[1 << 18, 1 << 21] };
+    for &workers in worker_counts {
+        for &n in sizes {
             let base = Rng::new(7);
             let inputs: Vec<Vec<f32>> = (0..workers)
                 .map(|i| base.fork(i as u64).normal_vec(n, 1.0))
@@ -27,20 +36,75 @@ fn main() {
                 },
             );
             println!("{}", r.report());
+            json.push(&r);
 
             let mut car =
                 CompressedAllreduce::new(workers, n, CompressionKind::OneBit);
-            let r = b.run(
-                &format!("compressed_allreduce w={workers} n={n}"),
+            let r_bit = b.run(
+                &format!(
+                    "compressed_allreduce (bit-domain) w={workers} n={n}"
+                ),
                 || {
                     black_box(car.allreduce(&inputs, &mut out));
                 },
             );
             println!(
                 "{}  => {:.2} GB/s of input tensors",
-                r.report(),
-                r.throughput((n * workers) as f64 * 4.0) / 1e9
+                r_bit.report(),
+                r_bit.throughput((n * workers) as f64 * 4.0) / 1e9
+            );
+
+            let mut car1 = CompressedAllreduce::with_options(
+                workers,
+                n,
+                CompressionKind::OneBit,
+                AllreducePath::BitDomain,
+                1,
+            );
+            let r_bit1 = b.run(
+                &format!(
+                    "compressed_allreduce (bit-domain, 1 thread) \
+                     w={workers} n={n}"
+                ),
+                || {
+                    black_box(car1.allreduce(&inputs, &mut out));
+                },
+            );
+            println!("{}", r_bit1.report());
+
+            let mut car_ref = CompressedAllreduce::with_options(
+                workers,
+                n,
+                CompressionKind::OneBit,
+                AllreducePath::DecodeAverage,
+                1,
+            );
+            let r_ref = b.run(
+                &format!(
+                    "compressed_allreduce (decode-average) w={workers} n={n}"
+                ),
+                || {
+                    black_box(car_ref.allreduce(&inputs, &mut out));
+                },
+            );
+            println!("{}", r_ref.report());
+            json.push(&r_ref);
+
+            let speedup_1t = r_ref.median_ns() / r_bit1.median_ns();
+            let speedup = r_ref.median_ns() / r_bit.median_ns();
+            println!(
+                "  bit-domain speedup vs decode-average: {speedup_1t:.2}x \
+                 single-thread, {speedup:.2}x threaded"
+            );
+            json.push_with(
+                &r_bit1,
+                &[("speedup_vs_decode_average", speedup_1t)],
+            );
+            json.push_with(
+                &r_bit,
+                &[("speedup_vs_decode_average", speedup)],
             );
         }
     }
+    json.flush();
 }

@@ -1,35 +1,71 @@
 //! Micro-bench: the L3 hot path — error-compensated 1-bit compression and
 //! sign packing — across tensor sizes.  This is the per-step CPU cost the
-//! compressed_allreduce adds on top of the wire transfer.
+//! compressed_allreduce adds on top of the wire transfer.  Benches both
+//! the two-pass compress (dequantized f32 output) and the fused
+//! compress-to-wire path (`onebit_compress_ec_packed`), plus the
+//! bit-domain vote-average kernel.
 //!
 //!     cargo bench --bench compression
 
-use onebit_adam::compress::onebit::onebit_compress_ec;
-use onebit_adam::compress::pack::{pack_signs, unpack_signs_scaled, wire_size};
-use onebit_adam::util::bench::{black_box, Bencher};
+use onebit_adam::compress::onebit::{
+    onebit_compress_ec, onebit_compress_ec_packed,
+};
+use onebit_adam::compress::pack::{
+    pack_signs, pack_signs_into, unpack_signs_scaled, vote_average_strided,
+    wire_size,
+};
+use onebit_adam::util::bench::{black_box, smoke_mode, BenchJson, Bencher};
 use onebit_adam::util::prng::Rng;
 
 fn main() {
-    let b = Bencher::default();
-    println!("== error-compensated 1-bit compression (fused quantize) ==");
-    for n in [65_536usize, 1 << 20, 1 << 23] {
+    let b = Bencher::from_env();
+    let mut json = BenchJson::new("compression");
+    println!("== error-compensated 1-bit compression ==");
+    let sizes: &[usize] = if smoke_mode() {
+        &[65_536]
+    } else {
+        &[65_536, 1 << 20, 1 << 23]
+    };
+    for &n in sizes {
         let mut rng = Rng::new(1);
         let val = rng.normal_vec(n, 1.0);
         let mut err = vec![0.0f32; n];
         let mut scratch = vec![0.0f32; n];
         let mut out = vec![0.0f32; n];
         let r = b.run(&format!("onebit_compress_ec n={n}"), || {
-            black_box(onebit_compress_ec(&val, &mut err, &mut scratch, &mut out));
+            black_box(onebit_compress_ec(
+                &val,
+                &mut err,
+                &mut scratch,
+                &mut out,
+            ));
         });
         println!(
             "{}  => {:.2} GB/s effective",
             r.report(),
             r.throughput(n as f64 * 4.0) / 1e9
         );
+        json.push(&r);
+
+        // Fused straight-to-wire variant: no dequantized tensor, no
+        // scratch — compensate + quantize+pack in two passes over err.
+        let mut err2 = vec![0.0f32; n];
+        let mut words = vec![0u32; n.div_ceil(32)];
+        let r = b.run(&format!("onebit_compress_ec_packed n={n}"), || {
+            black_box(onebit_compress_ec_packed(&val, &mut err2, &mut words));
+        });
+        println!(
+            "{}  => {:.2} GB/s effective",
+            r.report(),
+            r.throughput(n as f64 * 4.0) / 1e9
+        );
+        json.push(&r);
     }
 
     println!("\n== sign packing / unpacking (the wire format) ==");
-    for n in [1 << 20, 1 << 23] {
+    let sizes: &[usize] =
+        if smoke_mode() { &[1 << 20] } else { &[1 << 20, 1 << 23] };
+    for &n in sizes {
         let mut rng = Rng::new(2);
         let q = rng.normal_vec(n, 1.0);
         let r = b.run(&format!("pack_signs n={n}"), || {
@@ -40,6 +76,7 @@ fn main() {
             r.report(),
             r.throughput(n as f64) / 1e9
         );
+        json.push(&r);
         let words = pack_signs(&q);
         let mut out = vec![0.0f32; n];
         let r = b.run(&format!("unpack_signs n={n}"), || {
@@ -51,6 +88,30 @@ fn main() {
             r.report(),
             r.throughput(n as f64) / 1e9
         );
+        json.push(&r);
+
+        // Bit-domain average kernel: 4 workers' sign words -> mean f32.
+        let workers = 4usize;
+        let wlen = n.div_ceil(32);
+        let mut arena = vec![0u32; workers * wlen];
+        for i in 0..workers {
+            let vi: Vec<f32> =
+                q.iter().map(|&x| x - i as f32 * 0.25).collect();
+            pack_signs_into(&vi, &mut arena[i * wlen..(i + 1) * wlen]);
+        }
+        let scales = [0.9f32, 1.1, 1.0, 0.95];
+        let mut acc = vec![0.0f32; n];
+        let r = b.run(&format!("vote_average_strided w=4 n={n}"), || {
+            vote_average_strided(&arena, wlen, 0, &scales, 0.25, &mut acc);
+            black_box(&acc);
+        });
+        println!(
+            "{}  => {:.2} Gelem/s aggregated",
+            r.report(),
+            r.throughput((n * workers) as f64) / 1e9
+        );
+        json.push(&r);
+
         println!(
             "  wire: {} B for {} elements ({:.1}x smaller than fp32)",
             wire_size(n),
@@ -58,4 +119,6 @@ fn main() {
             (n * 4) as f64 / wire_size(n) as f64
         );
     }
+
+    json.flush();
 }

@@ -1,20 +1,27 @@
 //! Bench: full optimizer steps (native math backend) — Adam warmup step vs
-//! 1-bit compression step — the L3 per-step CPU budget.  Also times the
-//! PJRT (L1 Pallas artifact) path when `artifacts/` is present, giving the
-//! native-vs-PJRT dispatch overhead the ExecMode choice is based on.
+//! 1-bit compression step — the L3 per-step CPU budget.  The 1-bit step is
+//! timed on both allreduce engines (fused bit-domain vs the pre-change
+//! decode-average reference) so the tentpole speedup is tracked in
+//! `BENCH_step.json`.  Also times the PJRT (L1 Pallas artifact) path when
+//! `artifacts/` is present, giving the native-vs-PJRT dispatch overhead
+//! the ExecMode choice is based on.
 //!
 //!     cargo bench --bench optimizer_step
 
+use onebit_adam::comm::AllreducePath;
 use onebit_adam::optim::onebit_adam::{OneBitAdam, OneBitAdamConfig};
 use onebit_adam::optim::{Adam, DistOptimizer};
 use onebit_adam::runtime::Runtime;
-use onebit_adam::util::bench::{black_box, Bencher};
+use onebit_adam::util::bench::{black_box, smoke_mode, BenchJson, Bencher};
 use onebit_adam::util::prng::Rng;
 
 fn main() {
-    let b = Bencher::default();
+    let b = Bencher::from_env();
+    let mut json = BenchJson::new("optimizer_step");
     let workers = 4;
-    for n in [65_536usize, 1 << 20] {
+    let sizes: &[usize] =
+        if smoke_mode() { &[65_536] } else { &[65_536, 1 << 20] };
+    for &n in sizes {
         let base = Rng::new(3);
         let grads: Vec<Vec<f32>> = (0..workers)
             .map(|i| base.fork(i as u64).normal_vec(n, 1.0))
@@ -25,21 +32,42 @@ fn main() {
             black_box(adam.step(&grads, 1e-4));
         });
         println!("{}", r.report());
+        json.push(&r);
 
+        // 1-bit step on the fused bit-domain engine (the default).
         let mut onebit = OneBitAdam::new(
             workers,
             vec![0.1; n],
             OneBitAdamConfig { warmup_steps: Some(0), ..Default::default() },
         );
         onebit.step(&grads, 1e-4); // enter compression phase
-        let r = b.run(&format!("onebit_step (native) n={n}"), || {
+        let r_bit = b.run(&format!("onebit_step (native) n={n}"), || {
             black_box(onebit.step(&grads, 1e-4));
         });
         println!(
             "{}  => {:.2} GB/s over {workers} momenta",
-            r.report(),
-            r.throughput((n * workers) as f64 * 4.0) / 1e9
+            r_bit.report(),
+            r_bit.throughput((n * workers) as f64 * 4.0) / 1e9
         );
+
+        // Same step on the pre-change decode-average reference engine.
+        let mut onebit_ref = OneBitAdam::new(
+            workers,
+            vec![0.1; n],
+            OneBitAdamConfig { warmup_steps: Some(0), ..Default::default() },
+        );
+        onebit_ref.set_allreduce_path(AllreducePath::DecodeAverage);
+        onebit_ref.step(&grads, 1e-4); // enter compression phase
+        let r_ref =
+            b.run(&format!("onebit_step (decode-average) n={n}"), || {
+                black_box(onebit_ref.step(&grads, 1e-4));
+            });
+        println!("{}", r_ref.report());
+        json.push(&r_ref);
+
+        let speedup = r_ref.median_ns() / r_bit.median_ns();
+        println!("  bit-domain speedup vs decode-average: {speedup:.2}x");
+        json.push_with(&r_bit, &[("speedup_vs_decode_average", speedup)]);
     }
 
     // PJRT path (L1 Pallas artifacts) if available
@@ -55,13 +83,17 @@ fn main() {
                 black_box(rt.adam_step(n, &p, &m, &v, &g, 1e-4).unwrap());
             });
             println!("{}", r.report());
+            json.push(&r);
             let err = vec![0.0f32; n];
             let r = b.run(&format!("onebit_compress (pjrt) n={n}"), || {
                 black_box(rt.onebit_compress(n, &g, &err).unwrap());
             });
             println!("{}", r.report());
+            json.push(&r);
         }
     } else {
         println!("(artifacts/ missing — PJRT path skipped)");
     }
+
+    json.flush();
 }

@@ -6,26 +6,58 @@
 //! 1. **All-to-all** — worker `i` error-compensates and 1-bit-compresses
 //!    its whole local tensor (local error `δ^(i)`), then sends the packed
 //!    chunk `j` (signs + its scale) to worker `j`.
-//! 2. **Average** — worker `j` decodes the `n` received chunks, averages
-//!    them, and re-compresses the average with its *server* error `δ̄_j`
-//!    (Algorithm 1, line 10 — the double compression that makes the final
-//!    momentum identical on all workers while still 1-bit on the wire).
+//! 2. **Average** — worker `j` aggregates the `n` received chunks,
+//!    averages them, and re-compresses the average with its *server* error
+//!    `δ̄_j` (Algorithm 1, line 10 — the double compression that makes the
+//!    final momentum identical on all workers while still 1-bit on the
+//!    wire).
 //! 3. **All-gather** — the compressed averaged chunks are gathered so every
 //!    worker reconstructs the same full-length tensor.
+//!
+//! Two engines implement the collective, selected by [`AllreducePath`]:
+//!
+//! * **`BitDomain`** (default, the hot path): the 1-bit payloads live as
+//!   packed `u32` sign words in a persistent scratch arena end-to-end.
+//!   The EC compress quantizes + packs in one pass
+//!   ([`pack::quantize_pack_ec`]) without materializing the dequantized
+//!   ±scale tensor, the average phase is a scale-weighted vote
+//!   accumulation straight over sign words
+//!   ([`pack::vote_average_strided`]), and a step performs **zero heap
+//!   allocations** after construction (asserted by a tracking-allocator
+//!   test).  The per-worker compress and per-chunk server stages fan out
+//!   over [`std::thread::scope`] threads for large tensors.
+//! * **`DecodeAverage`**: the pre-change engine — every chunk is decoded
+//!   back to f32, averaged, re-encoded, with per-step buffers.  Kept as
+//!   the executable specification: the bit-domain engine is property-
+//!   tested bit-for-bit against it, and the benches report the speedup.
 //!
 //! With `CompressionKind::None` the result equals the exact average (unit
 //! tests assert this), which is also the paper's "1-bit Adam (32-bits)"
 //! ablation path.
 
+use std::ops::Range;
+
+use crate::compress::nbit::nbit_compress_ec;
+use crate::compress::onebit::{onebit_compensate, onebit_compress_ec};
 use crate::compress::pack;
 use crate::compress::CompressionKind;
-use crate::compress::onebit::onebit_compress_ec;
-use crate::compress::nbit::nbit_compress_ec;
 use crate::tensor::chunk::ChunkLayout;
+use crate::util::par::{default_threads, par_tasks, PAR_MIN_LEN};
 
 use super::CommStats;
 
-/// One worker's compressed chunk on the wire.
+/// Which engine runs the collective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AllreducePath {
+    /// Fused bit-domain pipeline over the persistent arena (default).
+    #[default]
+    BitDomain,
+    /// Pre-change decode-to-f32-then-average engine (reference/spec).
+    DecodeAverage,
+}
+
+/// One worker's compressed chunk on the wire (reference engine only — the
+/// bit-domain engine keeps payloads in the arena instead).
 #[derive(Debug, Clone)]
 enum WirePayload {
     /// Packed 1-bit: sign words + scale.
@@ -57,37 +89,379 @@ impl WirePayload {
     }
 }
 
+/// Persistent per-instance scratch: wire buffers, accumulators, and cached
+/// wire accounting.  Sized once at construction so a step never allocates.
+struct Arena {
+    /// Per-chunk prefix offsets in packed u32 words
+    /// (`ChunkLayout::word_offsets`); `word_off[n]` = words per worker.
+    word_off: Vec<usize>,
+    /// Packed sign words, worker-major: worker `i`'s chunk `j` lives at
+    /// `i * word_off[n] + word_off[j] ..` (OneBit kind only).
+    wire_words: Vec<u32>,
+    /// Per-worker 1-bit scales (phase-1 output).
+    worker_scales: Vec<f32>,
+    /// Server-side packed words of the recompressed average chunks.
+    gathered_words: Vec<u32>,
+    /// Per-chunk server scales.
+    gathered_scales: Vec<f32>,
+    /// f32 average accumulator; chunk `j` owns `layout.range(j)`.
+    avg: Vec<f32>,
+    /// Dequantized per-worker tensors, worker-major `n*len` (NBit kind —
+    /// the n-bit sim carries dequantized values with true wire cost).
+    quant: Vec<f32>,
+    /// Reference-engine scratch (the pre-change decode-average path).
+    comp_scratch: Vec<f32>,
+    quant_scratch: Vec<f32>,
+    /// Wire accounting is a pure function of (layout, kind): cached.
+    alltoall_bytes: usize,
+    allgather_bytes: usize,
+}
+
+impl Arena {
+    fn new(layout: &ChunkLayout, kind: CompressionKind, path: AllreducePath) -> Self {
+        let n = layout.n;
+        let len = layout.len;
+        let word_off = layout.word_offsets();
+        let words_per_worker = word_off[n];
+        let onebit = matches!(kind, CompressionKind::OneBit);
+        let nbit = matches!(kind, CompressionKind::NBit(_));
+        let ref_len =
+            if path == AllreducePath::DecodeAverage { len } else { 0 };
+        // Per-GPU wire volume: all-to-all sends every chunk but one's own
+        // (the max over workers is attained by the owner of the smallest
+        // chunk), all-gather broadcasts the largest owned chunk.
+        let mut total = 0usize;
+        let mut min = usize::MAX;
+        let mut max = 0usize;
+        for j in 0..n {
+            let wb = kind.wire_bytes(layout.size(j));
+            total += wb;
+            min = min.min(wb);
+            max = max.max(wb);
+        }
+        Arena {
+            word_off,
+            wire_words: if onebit {
+                vec![0; n * words_per_worker]
+            } else {
+                Vec::new()
+            },
+            worker_scales: vec![0.0; n],
+            gathered_words: if onebit {
+                vec![0; words_per_worker]
+            } else {
+                Vec::new()
+            },
+            gathered_scales: vec![0.0; n],
+            avg: if onebit || nbit { vec![0.0; len] } else { Vec::new() },
+            quant: if nbit { vec![0.0; n * len] } else { Vec::new() },
+            comp_scratch: vec![0.0; ref_len],
+            quant_scratch: vec![0.0; ref_len],
+            alltoall_bytes: total - min,
+            allgather_bytes: max,
+        }
+    }
+
+    /// Size the reference engine's scratch on demand — the default
+    /// bit-domain path never pays for it, and after the first reference
+    /// step this is a no-op (the zero-alloc-after-warmup property holds
+    /// for both engines).
+    fn ensure_reference_scratch(&mut self, len: usize) {
+        if self.comp_scratch.len() != len {
+            self.comp_scratch = vec![0.0; len];
+            self.quant_scratch = vec![0.0; len];
+        }
+    }
+}
+
 /// Stateful compressed-allreduce: carries the per-worker local errors and
 /// the per-chunk server errors across steps (Algorithm 1 state).
 pub struct CompressedAllreduce {
     n: usize,
     len: usize,
     kind: CompressionKind,
+    path: AllreducePath,
+    /// Upper bound on scoped threads per phase (1 = always sequential).
+    threads: usize,
     layout: ChunkLayout,
     /// `δ^(i)`: local compression error per worker (full length).
     worker_err: Vec<Vec<f32>>,
     /// `δ̄_j`: server compression error for chunk `j` (chunk length).
     server_err: Vec<Vec<f32>>,
-    // scratch buffers
-    comp_scratch: Vec<f32>,
-    quant_scratch: Vec<f32>,
+    arena: Arena,
+}
+
+/// Per-worker phase-1 work item of the bit-domain 1-bit engine: each task
+/// owns disjoint `&mut` state, so the set can run in any order or in
+/// parallel with bit-identical results.
+struct CompressTask<'a> {
+    input: &'a [f32],
+    err: &'a mut [f32],
+    words: &'a mut [u32],
+    scale: &'a mut f32,
+}
+
+/// Per-chunk phase-2 work item of the bit-domain 1-bit engine.
+struct ServerTask<'a> {
+    /// Word offset of this chunk inside each worker's wire segment.
+    first: usize,
+    avg: &'a mut [f32],
+    err: &'a mut [f32],
+    gw: &'a mut [u32],
+    sscale: &'a mut f32,
+    out: &'a mut [f32],
+}
+
+/// Per-worker phase-1 work item of the NBit engine.
+struct QuantTask<'a> {
+    input: &'a [f32],
+    err: &'a mut [f32],
+    q: &'a mut [f32],
+}
+
+/// Per-chunk phase-2 work item of the NBit engine.
+struct NServerTask<'a> {
+    r: Range<usize>,
+    avg: &'a mut [f32],
+    err: &'a mut [f32],
+    out: &'a mut [f32],
+}
+
+/// Enumerate the per-worker phase-1 slices of the 1-bit engine, one sink
+/// call per worker.  The sequential driver runs the kernel straight from
+/// the sink (no allocation); the threaded driver collects tasks first —
+/// either way the split logic exists exactly once.
+fn split_workers_onebit<'a>(
+    w: usize,
+    inputs: &'a [Vec<f32>],
+    worker_err: &'a mut [Vec<f32>],
+    wire_words: &'a mut [u32],
+    worker_scales: &'a mut [f32],
+    mut sink: impl FnMut(CompressTask<'a>),
+) {
+    for ((input, err), (words, scale)) in inputs
+        .iter()
+        .zip(worker_err.iter_mut())
+        .zip(wire_words.chunks_mut(w).zip(worker_scales.iter_mut()))
+    {
+        sink(CompressTask {
+            input: input.as_slice(),
+            err: err.as_mut_slice(),
+            words,
+            scale,
+        });
+    }
+}
+
+/// Enumerate the per-chunk phase-2 slices of the 1-bit engine.
+fn split_servers_onebit<'a>(
+    layout: &ChunkLayout,
+    word_off: &[usize],
+    avg: &'a mut [f32],
+    output: &'a mut [f32],
+    gathered_words: &'a mut [u32],
+    server_err: &'a mut [Vec<f32>],
+    gathered_scales: &'a mut [f32],
+    mut sink: impl FnMut(ServerTask<'a>),
+) {
+    let mut avg_rest = avg;
+    let mut out_rest = output;
+    let mut gw_rest = gathered_words;
+    for (j, (err, sscale)) in
+        server_err.iter_mut().zip(gathered_scales.iter_mut()).enumerate()
+    {
+        let clen = layout.size(j);
+        let wlen = word_off[j + 1] - word_off[j];
+        // mem::take moves the `&'a mut` out so the split keeps the full
+        // lifetime (plain `.split_at_mut` would reborrow the local).
+        let (avg_j, ar) = std::mem::take(&mut avg_rest).split_at_mut(clen);
+        avg_rest = ar;
+        let (out_j, or) = std::mem::take(&mut out_rest).split_at_mut(clen);
+        out_rest = or;
+        let (gw_j, gr) = std::mem::take(&mut gw_rest).split_at_mut(wlen);
+        gw_rest = gr;
+        sink(ServerTask {
+            first: word_off[j],
+            avg: avg_j,
+            err: err.as_mut_slice(),
+            gw: gw_j,
+            sscale,
+            out: out_j,
+        });
+    }
+}
+
+/// Enumerate the per-worker phase-1 slices of the NBit engine.
+fn split_workers_nbit<'a>(
+    len: usize,
+    inputs: &'a [Vec<f32>],
+    worker_err: &'a mut [Vec<f32>],
+    quant: &'a mut [f32],
+    mut sink: impl FnMut(QuantTask<'a>),
+) {
+    for ((input, err), q) in
+        inputs.iter().zip(worker_err.iter_mut()).zip(quant.chunks_mut(len))
+    {
+        sink(QuantTask {
+            input: input.as_slice(),
+            err: err.as_mut_slice(),
+            q,
+        });
+    }
+}
+
+/// Enumerate the per-chunk phase-2 slices of the NBit engine.
+fn split_servers_nbit<'a>(
+    layout: &ChunkLayout,
+    avg: &'a mut [f32],
+    output: &'a mut [f32],
+    server_err: &'a mut [Vec<f32>],
+    mut sink: impl FnMut(NServerTask<'a>),
+) {
+    let mut avg_rest = avg;
+    let mut out_rest = output;
+    for (j, err) in server_err.iter_mut().enumerate() {
+        let r = layout.range(j);
+        let (avg_j, ar) =
+            std::mem::take(&mut avg_rest).split_at_mut(r.len());
+        avg_rest = ar;
+        let (out_j, or) =
+            std::mem::take(&mut out_rest).split_at_mut(r.len());
+        out_rest = or;
+        sink(NServerTask {
+            r,
+            avg: avg_j,
+            err: err.as_mut_slice(),
+            out: out_j,
+        });
+    }
+}
+
+/// Phase 1 of the bit-domain 1-bit engine, one worker: fused EC compress
+/// straight into the wire arena.  Pass 1 stashes the compensated tensor in
+/// `err`; pass 2 quantizes + packs each chunk at its chunk-local bit
+/// offset (exactly the per-chunk wire format) while writing the new error.
+fn compress_worker_onebit(
+    layout: &ChunkLayout,
+    word_off: &[usize],
+    input: &[f32],
+    err: &mut [f32],
+    words: &mut [u32],
+    scale_slot: &mut f32,
+) {
+    let scale = onebit_compensate(input, err);
+    for j in 0..layout.n {
+        let r = layout.range(j);
+        pack::quantize_pack_ec(
+            &mut err[r],
+            scale,
+            &mut words[word_off[j]..word_off[j + 1]],
+        );
+    }
+    *scale_slot = scale;
+}
+
+/// Phase 2 of the bit-domain 1-bit engine, one chunk: vote-average the `n`
+/// workers' sign words, EC-recompress the average with the server error
+/// (again fused: no dequantized tensor), and decode the gathered chunk
+/// into every worker's output view.
+#[allow(clippy::too_many_arguments)]
+fn server_chunk_onebit(
+    wire_words: &[u32],
+    stride: usize,
+    first: usize,
+    scales: &[f32],
+    inv: f32,
+    avg: &mut [f32],
+    server_err: &mut [f32],
+    gathered: &mut [u32],
+    sscale_slot: &mut f32,
+    out: &mut [f32],
+) {
+    pack::vote_average_strided(wire_words, stride, first, scales, inv, avg);
+    let sscale = onebit_compensate(avg, server_err);
+    pack::quantize_pack_ec(server_err, sscale, gathered);
+    *sscale_slot = sscale;
+    pack::unpack_signs_scaled(gathered, sscale, out);
+}
+
+/// Identity-kind chunk: the exact mean of the workers' chunk views,
+/// accumulated in worker order (bit-identical to the reference engine).
+fn average_chunk_f32(
+    inputs: &[Vec<f32>],
+    r: Range<usize>,
+    inv: f32,
+    out: &mut [f32],
+) {
+    out.iter_mut().for_each(|o| *o = 0.0);
+    for inp in inputs {
+        for (o, &x) in out.iter_mut().zip(inp[r.clone()].iter()) {
+            *o += x;
+        }
+    }
+    out.iter_mut().for_each(|o| *o *= inv);
+}
+
+/// NBit-kind server chunk: average the dequantized worker tensors and
+/// EC-requantize straight into the output view.
+#[allow(clippy::too_many_arguments)]
+fn server_chunk_nbit(
+    bits: u32,
+    quant: &[f32],
+    len: usize,
+    r: Range<usize>,
+    inv: f32,
+    avg: &mut [f32],
+    server_err: &mut [f32],
+    out: &mut [f32],
+) {
+    avg.iter_mut().for_each(|a| *a = 0.0);
+    let workers = quant.len() / len;
+    for i in 0..workers {
+        let base = i * len + r.start;
+        for (k, a) in avg.iter_mut().enumerate() {
+            *a += quant[base + k];
+        }
+    }
+    avg.iter_mut().for_each(|a| *a *= inv);
+    nbit_compress_ec(bits, avg, server_err, out);
 }
 
 impl CompressedAllreduce {
+    /// Default engine: bit-domain, threads auto-sized to the machine.
     pub fn new(n_workers: usize, len: usize, kind: CompressionKind) -> Self {
+        Self::with_options(
+            n_workers,
+            len,
+            kind,
+            AllreducePath::BitDomain,
+            default_threads(),
+        )
+    }
+
+    /// Full control over engine and thread budget (bench/test use).
+    pub fn with_options(
+        n_workers: usize,
+        len: usize,
+        kind: CompressionKind,
+        path: AllreducePath,
+        threads: usize,
+    ) -> Self {
         assert!(n_workers > 0);
         let layout = ChunkLayout::new(len, n_workers);
+        let arena = Arena::new(&layout, kind, path);
         CompressedAllreduce {
             n: n_workers,
             len,
             kind,
+            path,
+            threads: threads.max(1),
             worker_err: (0..n_workers).map(|_| vec![0.0; len]).collect(),
             server_err: (0..n_workers)
                 .map(|i| vec![0.0; layout.size(i)])
                 .collect(),
-            comp_scratch: vec![0.0; len],
-            quant_scratch: vec![0.0; len],
             layout,
+            arena,
         }
     }
 
@@ -101,6 +475,27 @@ impl CompressedAllreduce {
 
     pub fn is_empty(&self) -> bool {
         self.len == 0
+    }
+
+    pub fn path(&self) -> AllreducePath {
+        self.path
+    }
+
+    /// Switch engines in place (the carried error state is shared, so a
+    /// mid-run switch continues the same Algorithm-1 trajectory).
+    pub fn set_path(&mut self, path: AllreducePath) {
+        if path == AllreducePath::DecodeAverage {
+            self.arena.ensure_reference_scratch(self.len);
+        }
+        self.path = path;
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     /// Reset all carried errors (warmup→compression boundary).
@@ -127,6 +522,284 @@ impl CompressedAllreduce {
     pub fn layout(&self) -> &ChunkLayout {
         &self.layout
     }
+
+    /// Server scale of gathered chunk `j` from the last bit-domain step
+    /// (diagnostics; meaningful for the OneBit kind — every element of the
+    /// reconstructed chunk is `±` this value).
+    pub fn gathered_scale(&self, j: usize) -> f32 {
+        self.arena.gathered_scales[j]
+    }
+
+    /// Run the collective: `inputs[i]` is worker `i`'s local tensor (the
+    /// freshly-updated momentum); on return `output` holds the identical
+    /// aggregated tensor every worker ends with.
+    pub fn allreduce(
+        &mut self,
+        inputs: &[Vec<f32>],
+        output: &mut [f32],
+    ) -> CommStats {
+        assert_eq!(inputs.len(), self.n);
+        assert_eq!(output.len(), self.len);
+        for inp in inputs {
+            assert_eq!(inp.len(), self.len);
+        }
+        match self.path {
+            AllreducePath::DecodeAverage => {
+                self.allreduce_reference(inputs, output)
+            }
+            AllreducePath::BitDomain => {
+                if self.len > 0 {
+                    match self.kind {
+                        CompressionKind::OneBit => {
+                            self.fused_onebit(inputs, output)
+                        }
+                        CompressionKind::None => {
+                            self.fused_identity(inputs, output)
+                        }
+                        CompressionKind::NBit(bits) => {
+                            self.fused_nbit(bits, inputs, output)
+                        }
+                    }
+                }
+                CommStats {
+                    alltoall_bytes_per_gpu: self.arena.alltoall_bytes,
+                    allgather_bytes_per_gpu: self.arena.allgather_bytes,
+                    uncompressed_bytes: self.len * 4,
+                }
+            }
+        }
+    }
+
+    /// Threads for this step: small tensors stay sequential.
+    fn step_threads(&self) -> usize {
+        if self.len >= PAR_MIN_LEN {
+            self.threads
+        } else {
+            1
+        }
+    }
+
+    // ---- bit-domain engine -------------------------------------------------
+
+    /// 1-bit kind: sign words end-to-end, zero allocations, both phases
+    /// embarrassingly parallel (per worker, then per chunk).
+    fn fused_onebit(&mut self, inputs: &[Vec<f32>], output: &mut [f32]) {
+        let n = self.n;
+        let threads = self.step_threads();
+        let layout = &self.layout;
+        let worker_err = &mut self.worker_err;
+        let server_err = &mut self.server_err;
+        let Arena {
+            word_off,
+            wire_words,
+            worker_scales,
+            gathered_words,
+            gathered_scales,
+            avg,
+            ..
+        } = &mut self.arena;
+        let word_off: &[usize] = word_off;
+        let w = word_off[n]; // words per worker (>= 1 since len > 0)
+
+        // ---- Phase 1: per-worker fused compress into the wire arena.
+        if threads <= 1 || n == 1 {
+            split_workers_onebit(
+                w,
+                inputs,
+                worker_err.as_mut_slice(),
+                wire_words.as_mut_slice(),
+                worker_scales.as_mut_slice(),
+                |t| {
+                    compress_worker_onebit(
+                        layout, word_off, t.input, t.err, t.words, t.scale,
+                    )
+                },
+            );
+        } else {
+            let mut tasks: Vec<CompressTask> = Vec::with_capacity(n);
+            split_workers_onebit(
+                w,
+                inputs,
+                worker_err.as_mut_slice(),
+                wire_words.as_mut_slice(),
+                worker_scales.as_mut_slice(),
+                |t| tasks.push(t),
+            );
+            par_tasks(threads, &mut tasks, |t| {
+                compress_worker_onebit(
+                    layout, word_off, t.input, t.err, t.words, t.scale,
+                )
+            });
+        }
+
+        // ---- Phase 2+3: per-chunk vote-average, EC-recompress, decode.
+        let wire_words: &[u32] = wire_words;
+        let worker_scales: &[f32] = worker_scales;
+        let inv = 1.0 / n as f32;
+        if threads <= 1 || n == 1 {
+            split_servers_onebit(
+                layout,
+                word_off,
+                avg.as_mut_slice(),
+                output,
+                gathered_words.as_mut_slice(),
+                server_err.as_mut_slice(),
+                gathered_scales.as_mut_slice(),
+                |t| {
+                    server_chunk_onebit(
+                        wire_words,
+                        w,
+                        t.first,
+                        worker_scales,
+                        inv,
+                        t.avg,
+                        t.err,
+                        t.gw,
+                        t.sscale,
+                        t.out,
+                    )
+                },
+            );
+        } else {
+            let mut tasks: Vec<ServerTask> = Vec::with_capacity(n);
+            split_servers_onebit(
+                layout,
+                word_off,
+                avg.as_mut_slice(),
+                output,
+                gathered_words.as_mut_slice(),
+                server_err.as_mut_slice(),
+                gathered_scales.as_mut_slice(),
+                |t| tasks.push(t),
+            );
+            par_tasks(threads, &mut tasks, |t| {
+                server_chunk_onebit(
+                    wire_words,
+                    w,
+                    t.first,
+                    worker_scales,
+                    inv,
+                    t.avg,
+                    t.err,
+                    t.gw,
+                    t.sscale,
+                    t.out,
+                )
+            });
+        }
+    }
+
+    /// Identity kind: double identity compression is the exact chunk mean —
+    /// computed straight into the output, no intermediate buffers at all.
+    fn fused_identity(&mut self, inputs: &[Vec<f32>], output: &mut [f32]) {
+        let n = self.n;
+        let threads = self.step_threads();
+        let layout = &self.layout;
+        let inv = 1.0 / n as f32;
+        if threads <= 1 || n == 1 {
+            for j in 0..n {
+                let r = layout.range(j);
+                average_chunk_f32(inputs, r.clone(), inv, &mut output[r]);
+            }
+        } else {
+            struct AvgTask<'a> {
+                r: Range<usize>,
+                out: &'a mut [f32],
+            }
+            let mut tasks: Vec<AvgTask> = Vec::with_capacity(n);
+            let mut out_rest: &mut [f32] = output;
+            for j in 0..n {
+                let r = layout.range(j);
+                let (out_j, rest) =
+                    std::mem::take(&mut out_rest).split_at_mut(r.len());
+                out_rest = rest;
+                tasks.push(AvgTask { r, out: out_j });
+            }
+            par_tasks(threads, &mut tasks, |t| {
+                average_chunk_f32(inputs, t.r.clone(), inv, t.out)
+            });
+        }
+    }
+
+    /// NBit kind: dequantized values travel (with true wire cost), but the
+    /// step reuses the persistent arena and fans out like the 1-bit path.
+    fn fused_nbit(
+        &mut self,
+        bits: u32,
+        inputs: &[Vec<f32>],
+        output: &mut [f32],
+    ) {
+        let n = self.n;
+        let len = self.len;
+        let threads = self.step_threads();
+        let layout = &self.layout;
+        let worker_err = &mut self.worker_err;
+        let server_err = &mut self.server_err;
+        let Arena { avg, quant, .. } = &mut self.arena;
+
+        // ---- Phase 1: per-worker EC quantize into the arena.
+        if threads <= 1 || n == 1 {
+            split_workers_nbit(
+                len,
+                inputs,
+                worker_err.as_mut_slice(),
+                quant.as_mut_slice(),
+                |t| nbit_compress_ec(bits, t.input, t.err, t.q),
+            );
+        } else {
+            let mut tasks: Vec<QuantTask> = Vec::with_capacity(n);
+            split_workers_nbit(
+                len,
+                inputs,
+                worker_err.as_mut_slice(),
+                quant.as_mut_slice(),
+                |t| tasks.push(t),
+            );
+            par_tasks(threads, &mut tasks, |t| {
+                nbit_compress_ec(bits, t.input, t.err, t.q);
+            });
+        }
+
+        // ---- Phase 2+3: per-chunk average + EC requantize into output.
+        let quant: &[f32] = quant;
+        let inv = 1.0 / n as f32;
+        if threads <= 1 || n == 1 {
+            split_servers_nbit(
+                layout,
+                avg.as_mut_slice(),
+                output,
+                server_err.as_mut_slice(),
+                |t| {
+                    server_chunk_nbit(
+                        bits, quant, len, t.r, inv, t.avg, t.err, t.out,
+                    )
+                },
+            );
+        } else {
+            let mut tasks: Vec<NServerTask> = Vec::with_capacity(n);
+            split_servers_nbit(
+                layout,
+                avg.as_mut_slice(),
+                output,
+                server_err.as_mut_slice(),
+                |t| tasks.push(t),
+            );
+            par_tasks(threads, &mut tasks, |t| {
+                server_chunk_nbit(
+                    bits,
+                    quant,
+                    len,
+                    t.r.clone(),
+                    inv,
+                    t.avg,
+                    t.err,
+                    t.out,
+                )
+            });
+        }
+    }
+
+    // ---- reference engine (pre-change decode-average path) -----------------
 
     /// Compress+quantize `value + err` per `kind` into `quant_out`,
     /// updating `err`.  Returns the 1-bit scale factor (0 for other kinds).
@@ -156,7 +829,11 @@ impl CompressedAllreduce {
     }
 
     /// Build the wire payload for one chunk of an already-quantized tensor.
-    fn chunk_payload(kind: CompressionKind, chunk: &[f32], scale: f32) -> WirePayload {
+    fn chunk_payload(
+        kind: CompressionKind,
+        chunk: &[f32],
+        scale: f32,
+    ) -> WirePayload {
         match kind {
             CompressionKind::None => WirePayload::Full(chunk.to_vec()),
             CompressionKind::OneBit => WirePayload::OneBit {
@@ -171,20 +848,17 @@ impl CompressedAllreduce {
         }
     }
 
-    /// Run the collective: `inputs[i]` is worker `i`'s local tensor (the
-    /// freshly-updated momentum); on return `output` holds the identical
-    /// aggregated tensor every worker ends with.
-    pub fn allreduce(
+    /// The pre-change engine: decode every chunk to f32, average,
+    /// re-encode.  Kept verbatim as the executable specification the
+    /// bit-domain engine is property-tested against (and benched against).
+    fn allreduce_reference(
         &mut self,
         inputs: &[Vec<f32>],
         output: &mut [f32],
     ) -> CommStats {
-        assert_eq!(inputs.len(), self.n);
-        assert_eq!(output.len(), self.len);
-        for inp in inputs {
-            assert_eq!(inp.len(), self.len);
-        }
-
+        // Scratch is sized lazily so the default bit-domain path never
+        // carries it; a no-op after the first reference step.
+        self.arena.ensure_reference_scratch(self.len);
         // ---- Phase 1: per-worker compression of the full tensor, then
         // all-to-all of the packed chunks.  mailbox[j][i] = chunk j from
         // worker i.
@@ -196,8 +870,8 @@ impl CompressedAllreduce {
                 self.kind,
                 &inputs[i],
                 &mut self.worker_err[i],
-                &mut self.comp_scratch,
-                &mut self.quant_scratch,
+                &mut self.arena.comp_scratch,
+                &mut self.arena.quant_scratch,
             );
             // Split the worker's compressed tensor into n wire chunks.
             // (For the packed 1-bit format the chunk is re-packed from the
@@ -206,7 +880,7 @@ impl CompressedAllreduce {
             let mut sent = 0usize;
             for j in 0..self.n {
                 let r = self.layout.range(j);
-                let chunk = &self.quant_scratch[r];
+                let chunk = &self.arena.quant_scratch[r];
                 let payload = Self::chunk_payload(self.kind, chunk, scale);
                 // chunk i stays local — no wire cost.
                 if j != i {
@@ -246,7 +920,7 @@ impl CompressedAllreduce {
                 self.kind,
                 avg,
                 &mut self.server_err[j],
-                &mut self.comp_scratch,
+                &mut self.arena.comp_scratch,
                 quant,
             );
             let payload = Self::chunk_payload(self.kind, quant, scale);
@@ -276,6 +950,7 @@ mod tests {
     use super::*;
     use crate::comm::plain::allreduce_average;
     use crate::tensor;
+    use crate::util::check::forall;
     use crate::util::prng::Rng;
 
     fn random_inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -406,6 +1081,8 @@ mod tests {
         let uniq: std::collections::BTreeSet<u32> =
             out.iter().map(|f| f.abs().to_bits()).collect();
         assert!(uniq.len() <= 2);
+        // and that scale is exactly the gathered server scale
+        assert!(out.iter().all(|&x| x.abs() == car.gathered_scale(0)));
     }
 
     #[test]
@@ -435,5 +1112,193 @@ mod tests {
             .sqrt()
             / (2048f64).sqrt();
         assert!(rms < 0.05, "rms={rms}");
+    }
+
+    // ---- bit-domain vs decode-average equivalence --------------------------
+
+    fn kind_of(idx: usize) -> CompressionKind {
+        match idx % 3 {
+            0 => CompressionKind::OneBit,
+            1 => CompressionKind::None,
+            _ => CompressionKind::NBit(4),
+        }
+    }
+
+    #[test]
+    fn bit_domain_equals_decode_average_reference_property() {
+        // The tentpole contract: for arbitrary lengths, worker counts 1–8,
+        // and all three kinds, the fused bit-domain engine reproduces the
+        // pre-change decode-average engine bit for bit — outputs, wire
+        // stats, and both carried error states, across multiple steps so
+        // the error-feedback trajectories are exercised.
+        forall(
+            60,
+            |r| (r.range(0, 300), r.range(1, 9), r.range(0, 3)),
+            |&(len, workers, kind_idx): &(usize, usize, usize)| {
+                let workers = workers.clamp(1, 8);
+                let kind = kind_of(kind_idx);
+                let mut bit = CompressedAllreduce::with_options(
+                    workers,
+                    len,
+                    kind,
+                    AllreducePath::BitDomain,
+                    2,
+                );
+                let mut reference = CompressedAllreduce::with_options(
+                    workers,
+                    len,
+                    kind,
+                    AllreducePath::DecodeAverage,
+                    1,
+                );
+                let mut out_bit = vec![0.0f32; len];
+                let mut out_ref = vec![0.0f32; len];
+                for step in 0..3u64 {
+                    let inputs =
+                        random_inputs(workers, len, 1000 + step);
+                    let s_bit = bit.allreduce(&inputs, &mut out_bit);
+                    let s_ref = reference.allreduce(&inputs, &mut out_ref);
+                    if out_bit != out_ref {
+                        return Err(format!(
+                            "output diverged: len={len} w={workers} \
+                             {kind:?} step={step}"
+                        ));
+                    }
+                    if s_bit != s_ref {
+                        return Err(format!(
+                            "wire stats diverged: {s_bit:?} vs {s_ref:?} \
+                             (len={len} w={workers} {kind:?})"
+                        ));
+                    }
+                    for i in 0..workers {
+                        if bit.worker_error(i) != reference.worker_error(i) {
+                            return Err(format!(
+                                "worker error {i} diverged: len={len} \
+                                 w={workers} {kind:?} step={step}"
+                            ));
+                        }
+                        if bit.server_error(i) != reference.server_error(i) {
+                            return Err(format!(
+                                "server error {i} diverged: len={len} \
+                                 w={workers} {kind:?} step={step}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn threaded_bit_domain_matches_sequential() {
+        // Above PAR_MIN_LEN the default engine fans out over scoped
+        // threads; every task owns disjoint state, so the result must be
+        // bit-identical to the single-threaded run — for every kind.
+        let n = 4;
+        let len = PAR_MIN_LEN + 37;
+        for kind_idx in 0..3 {
+            let kind = kind_of(kind_idx);
+            let mut seq = CompressedAllreduce::with_options(
+                n,
+                len,
+                kind,
+                AllreducePath::BitDomain,
+                1,
+            );
+            let mut par = CompressedAllreduce::with_options(
+                n,
+                len,
+                kind,
+                AllreducePath::BitDomain,
+                4,
+            );
+            let mut out_seq = vec![0.0f32; len];
+            let mut out_par = vec![0.0f32; len];
+            for step in 0..3u64 {
+                let inputs = random_inputs(n, len, 50 + step);
+                seq.allreduce(&inputs, &mut out_seq);
+                par.allreduce(&inputs, &mut out_par);
+                assert_eq!(out_seq, out_par, "{kind:?} step={step}");
+                for i in 0..n {
+                    assert_eq!(
+                        seq.worker_error(i),
+                        par.worker_error(i),
+                        "{kind:?} worker {i} step={step}"
+                    );
+                    assert_eq!(
+                        seq.server_error(i),
+                        par.server_error(i),
+                        "{kind:?} server {i} step={step}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mid_run_path_switch_continues_trajectory() {
+        // Both engines share the carried error state, so interleaving them
+        // must produce the same trajectory as either engine alone.
+        let n = 3;
+        let len = 513;
+        let mut mixed =
+            CompressedAllreduce::new(n, len, CompressionKind::OneBit);
+        let mut pure = CompressedAllreduce::with_options(
+            n,
+            len,
+            CompressionKind::OneBit,
+            AllreducePath::DecodeAverage,
+            1,
+        );
+        let mut out_mixed = vec![0.0f32; len];
+        let mut out_pure = vec![0.0f32; len];
+        for step in 0..6u64 {
+            mixed.set_path(if step % 2 == 0 {
+                AllreducePath::BitDomain
+            } else {
+                AllreducePath::DecodeAverage
+            });
+            let inputs = random_inputs(n, len, 300 + step);
+            mixed.allreduce(&inputs, &mut out_mixed);
+            pure.allreduce(&inputs, &mut out_pure);
+            assert_eq!(out_mixed, out_pure, "step={step}");
+        }
+    }
+
+    #[test]
+    fn bit_domain_step_is_allocation_free_after_warmup() {
+        // The tentpole's zero-copy claim, pinned down with the tracking
+        // allocator: after construction, a sequential bit-domain step
+        // performs no heap allocation for any compression kind.  (The
+        // threaded mode necessarily allocates per-spawn bookkeeping, so it
+        // is exercised by `threaded_bit_domain_matches_sequential`
+        // instead.)
+        use crate::util::alloc_track::current_thread_allocs;
+        for kind_idx in 0..3 {
+            let kind = kind_of(kind_idx);
+            let n = 4;
+            let len = 4096;
+            let inputs = random_inputs(n, len, 11);
+            let mut car = CompressedAllreduce::with_options(
+                n,
+                len,
+                kind,
+                AllreducePath::BitDomain,
+                1,
+            );
+            let mut out = vec![0.0f32; len];
+            car.allreduce(&inputs, &mut out); // warm-up
+            let before = current_thread_allocs();
+            for _ in 0..5 {
+                car.allreduce(&inputs, &mut out);
+            }
+            let after = current_thread_allocs();
+            assert_eq!(
+                after - before,
+                0,
+                "{kind:?}: bit-domain step allocated on the heap"
+            );
+        }
     }
 }

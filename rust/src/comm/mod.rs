@@ -6,12 +6,18 @@
 //! on an MPI cluster.  Only the elapsed time is modeled (see
 //! [`crate::netsim`]).  The SPMD lock-step driver owns all workers'
 //! buffers, which makes every run bit-deterministic.
+//!
+//! The hot engine ([`compressed::AllreducePath::BitDomain`]) keeps 1-bit
+//! payloads in the packed sign-word domain end-to-end inside a persistent
+//! arena — zero heap allocations per step — and fans the per-worker /
+//! per-chunk stages out over scoped threads; the pre-change decode-average
+//! engine is retained as the property-tested reference.
 
 pub mod compressed;
 pub mod fabric;
 pub mod plain;
 
-pub use compressed::CompressedAllreduce;
+pub use compressed::{AllreducePath, CompressedAllreduce};
 pub use fabric::ThreadedFabric;
 pub use plain::allreduce_average;
 

@@ -10,8 +10,14 @@ pub mod onebit;
 pub mod nbit;
 pub mod pack;
 
-pub use onebit::{onebit_compress, OneBitPayload};
-pub use pack::{pack_signs, unpack_signs};
+pub use onebit::{
+    onebit_compensate, onebit_compress, onebit_compress_ec_packed,
+    OneBitPayload,
+};
+pub use pack::{
+    accumulate_votes_scaled, pack_signs, quantize_pack_ec, unpack_signs,
+    vote_average_strided,
+};
 
 /// A compression operator `C_ω[·]` with its own carried error state.
 ///

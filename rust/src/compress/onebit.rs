@@ -99,6 +99,59 @@ pub fn onebit_compress_ec(
     scale
 }
 
+/// Pass 1 of the EC compress, standalone: overwrite `err` with the
+/// compensated tensor `value + err` and return the 1-bit scale
+/// `‖value + err‖₁ / n`.
+///
+/// Same blocked f32-inside / f64-across accumulation as
+/// [`onebit_compress_ec`], so the returned scale is bit-identical; the
+/// compensated values are stashed in `err` so pass 2
+/// ([`pack::quantize_pack_ec`]) needs no separate scratch tensor.
+pub fn onebit_compensate(value: &[f32], err: &mut [f32]) -> f32 {
+    let n = value.len();
+    assert_eq!(err.len(), n);
+    if n == 0 {
+        return 0.0;
+    }
+    let mut l1 = 0.0f64;
+    const BLK: usize = 4096;
+    let mut i = 0;
+    while i < n {
+        let end = (i + BLK).min(n);
+        let mut part = 0.0f32;
+        for k in i..end {
+            let c = value[k] + err[k];
+            err[k] = c;
+            part += c.abs();
+        }
+        l1 += part as f64;
+        i = end;
+    }
+    (l1 / n as f64) as f32
+}
+
+/// Fully fused EC 1-bit compress straight into the wire format: packed sign
+/// words + scale.  `err` carries the compression error in and out (and
+/// doubles as the compensated-value scratch in between) — the dequantized
+/// ±scale f32 tensor of [`onebit_compress_ec`] is never materialized and no
+/// scratch buffer is needed.
+///
+/// Equivalent to `onebit_compress_ec` + `pack_signs(out)`: the scale, the
+/// updated error, and the decoded payload are all identical.  (Sole
+/// bit-level divergence: when the scale is exactly 0 — an all-zero
+/// compensated tensor — the two-pass path packs every sign as positive
+/// while this packs the sign of the compensated value; both decode to ±0.0
+/// and carry the same error, so every downstream f32 value agrees.)
+pub fn onebit_compress_ec_packed(
+    value: &[f32],
+    err: &mut [f32],
+    words: &mut [u32],
+) -> f32 {
+    let scale = onebit_compensate(value, err);
+    pack::quantize_pack_ec(err, scale, words);
+    scale
+}
+
 /// Convenience wrapper returning owned buffers (test/diagnostic use).
 pub fn onebit_compress(value: &[f32], err: &[f32]) -> (Vec<f32>, Vec<f32>, f32) {
     let mut e = err.to_vec();
@@ -198,6 +251,63 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn packed_compress_equals_two_pass_compress() {
+        // The fused bit-domain path must agree with the reference two-pass
+        // path on scale, carried error, and the decoded payload — across
+        // several steps so the error feedback trajectories are exercised.
+        forall(
+            100,
+            |r| gen_vec(r, 1, 400, 1.0),
+            |v: &Vec<f32>| {
+                let n = v.len();
+                let mut err_a = vec![0.0f32; n];
+                let mut scratch = vec![0.0f32; n];
+                let mut out = vec![0.0f32; n];
+                let mut err_b = vec![0.0f32; n];
+                let mut words = vec![0u32; n.div_ceil(32)];
+                for step in 0..4 {
+                    // vary the input a little per step
+                    let vs: Vec<f32> =
+                        v.iter().map(|&x| x + step as f32 * 0.125).collect();
+                    let sa = onebit_compress_ec(
+                        &vs,
+                        &mut err_a,
+                        &mut scratch,
+                        &mut out,
+                    );
+                    let ref_words = pack::pack_signs(&out);
+                    let sb =
+                        onebit_compress_ec_packed(&vs, &mut err_b, &mut words);
+                    if sa != sb {
+                        return Err(format!("scale {sa} != {sb} step {step}"));
+                    }
+                    if err_a != err_b {
+                        return Err(format!("error state diverged step {step}"));
+                    }
+                    if words != ref_words {
+                        return Err(format!("sign words diverged step {step}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn compensate_matches_compress_scale() {
+        let mut rng = Rng::new(9);
+        let v = rng.normal_vec(10_000, 1.0);
+        let mut err = rng.normal_vec(10_000, 0.2);
+        let err0 = err.clone();
+        let (_, _, s_ref) = onebit_compress(&v, &err);
+        let s = onebit_compensate(&v, &mut err);
+        assert_eq!(s, s_ref);
+        for i in 0..v.len() {
+            assert_eq!(err[i], v[i] + err0[i]);
+        }
     }
 
     #[test]

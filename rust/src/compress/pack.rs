@@ -60,11 +60,103 @@ pub fn unpack_signs_scaled(words: &[u32], scale: f32, out: &mut [f32]) {
 
 /// Majority-vote accumulate: add ±1 per sign bit into an i32 accumulator
 /// (used by sign-aggregation experiments / diagnostics).
+///
+/// Hot path: word-at-a-time like its siblings — `2*bit - 1` is branchless.
 pub fn accumulate_votes(words: &[u32], votes: &mut [i32]) {
     assert!(words.len() * 32 >= votes.len());
-    for (i, v) in votes.iter_mut().enumerate() {
-        let bit = (words[i / 32] >> (i % 32)) & 1;
-        *v += if bit == 1 { 1 } else { -1 };
+    for (chunk, &word) in votes.chunks_mut(32).zip(words.iter()) {
+        for (b, v) in chunk.iter_mut().enumerate() {
+            *v += 2 * ((word >> b) & 1) as i32 - 1;
+        }
+    }
+}
+
+/// Scale-weighted vote accumulate: `acc[i] += ±scale` per sign bit — the
+/// inner kernel of the bit-domain compressed-allreduce average.  Each
+/// worker's decoded chunk is `±scaleᵢ`, so summing `n` workers' payloads
+/// word-at-a-time here is exactly the decode-then-add reference (the sign
+/// bit is OR-ed straight into the IEEE-754 representation of `scale`, the
+/// same op [`unpack_signs_scaled`] performs) without ever materializing the
+/// dequantized f32 tensor.
+pub fn accumulate_votes_scaled(words: &[u32], scale: f32, acc: &mut [f32]) {
+    assert!(words.len() * 32 >= acc.len(), "not enough sign words");
+    let pos = scale.to_bits() & 0x7FFF_FFFF;
+    for (chunk, &word) in acc.chunks_mut(32).zip(words.iter()) {
+        add_scaled_word(word, pos, chunk);
+    }
+}
+
+/// The one copy of the sign-OR trick: add `±|scale|` (whose magnitude bits
+/// are `pos`) into up to 32 accumulator lanes, sign chosen per bit of
+/// `word` (bit set ⇒ `+`).  Shared by [`accumulate_votes_scaled`] and
+/// [`vote_average_strided`].
+#[inline]
+fn add_scaled_word(word: u32, pos: u32, lanes: &mut [f32]) {
+    for (b, a) in lanes.iter_mut().enumerate() {
+        let bit = (word >> b) & 1;
+        *a += f32::from_bits(pos | ((bit ^ 1) << 31));
+    }
+}
+
+/// Fused n-worker scale-weighted vote **average** over strided sign words —
+/// the bit-domain replacement for the decode-to-f32-then-average phase of
+/// the compressed allreduce.
+///
+/// Worker `i`'s sign words for the chunk live at `words[first + i*stride
+/// ..]` (one contiguous arena holding every worker's packed payload,
+/// `stride` words apart).  For each element the workers' `±scaleᵢ`
+/// contributions are added in worker order and the sum is scaled by `inv`
+/// — the identical sequence of f32 operations the decode-then-add
+/// reference performs, so the result is bit-for-bit equal — but the sign
+/// words are consumed word-at-a-time with the 32 accumulator lanes kept
+/// hot, and the dequantized per-worker f32 tensors are never materialized.
+pub fn vote_average_strided(
+    words: &[u32],
+    stride: usize,
+    first: usize,
+    scales: &[f32],
+    inv: f32,
+    acc: &mut [f32],
+) {
+    if acc.is_empty() || scales.is_empty() {
+        acc.iter_mut().for_each(|a| *a = 0.0);
+        return;
+    }
+    let wlen = acc.len().div_ceil(32);
+    assert!(
+        first + (scales.len() - 1) * stride + wlen <= words.len(),
+        "sign word arena too small"
+    );
+    for (wi, lanes) in acc.chunks_mut(32).enumerate() {
+        for a in lanes.iter_mut() {
+            *a = 0.0;
+        }
+        for (i, &scale) in scales.iter().enumerate() {
+            let word = words[first + i * stride + wi];
+            add_scaled_word(word, scale.to_bits() & 0x7FFF_FFFF, lanes);
+        }
+        for a in lanes.iter_mut() {
+            *a *= inv;
+        }
+    }
+}
+
+/// Fused quantize + pack + error feedback: pass 2 of the EC compress in the
+/// bit domain.  On entry `comp_err` holds the compensated tensor
+/// `value + err`; on exit it holds the new carried error `c − (±scale)`,
+/// and `words` holds the packed wire signs (bit set ⇔ `c >= 0`).  The
+/// dequantized ±scale f32 tensor is never materialized.
+pub fn quantize_pack_ec(comp_err: &mut [f32], scale: f32, words: &mut [u32]) {
+    assert!(words.len() * 32 >= comp_err.len(), "sign word buffer too small");
+    let pos = scale.to_bits() & 0x7FFF_FFFF;
+    for (lanes, word) in comp_err.chunks_mut(32).zip(words.iter_mut()) {
+        let mut w = 0u32;
+        for (b, c) in lanes.iter_mut().enumerate() {
+            let bit = (*c >= 0.0) as u32;
+            w |= bit << b;
+            *c -= f32::from_bits(pos | ((bit ^ 1) << 31));
+        }
+        *word = w;
     }
 }
 
@@ -130,6 +222,118 @@ mod tests {
         accumulate_votes(&a, &mut votes);
         accumulate_votes(&b, &mut votes);
         assert_eq!(votes, vec![2, 0, 0]);
+    }
+
+    #[test]
+    fn votes_scaled_equals_decode_then_add() {
+        forall(
+            200,
+            |r| (gen_vec(r, 0, 400, 1.0), r.range(1, 40) as f32 * 0.1),
+            |(v, scale): &(Vec<f32>, f32)| {
+                let words = pack_signs(v);
+                // reference: decode to ±scale then add
+                let mut expect = vec![0.25f32; v.len()];
+                let mut dec = vec![0.0f32; v.len()];
+                unpack_signs_scaled(&words, *scale, &mut dec);
+                for (e, d) in expect.iter_mut().zip(dec.iter()) {
+                    *e += d;
+                }
+                // bit-domain: accumulate straight from the words
+                let mut acc = vec![0.25f32; v.len()];
+                accumulate_votes_scaled(&words, *scale, &mut acc);
+                if acc == expect {
+                    Ok(())
+                } else {
+                    Err("vote accumulate != decode+add".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn vote_average_strided_equals_decode_average() {
+        forall(
+            150,
+            |r| (gen_vec(r, 0, 300, 1.0), r.range(1, 7)),
+            |(v, workers): &(Vec<f32>, usize)| {
+                let workers = (*workers).max(1);
+                let n = v.len();
+                let wlen = n.div_ceil(32);
+                let stride = wlen + 3; // padding proves the stride is honored
+                let first = 2;
+                // each worker gets a shifted copy of v and its own scale
+                let mut arena = vec![0u32; first + workers * stride];
+                let mut scales = Vec::with_capacity(workers);
+                for i in 0..workers {
+                    let vi: Vec<f32> =
+                        v.iter().map(|&x| x - i as f32 * 0.35).collect();
+                    pack_signs_into(
+                        &vi,
+                        &mut arena[first + i * stride..first + i * stride + wlen],
+                    );
+                    scales.push(0.3 * (i + 1) as f32);
+                }
+                let inv = 1.0 / workers as f32;
+                // reference: decode each worker to ±scale, add, then scale
+                let mut expect = vec![0.0f32; n];
+                let mut dec = vec![0.0f32; n];
+                for i in 0..workers {
+                    unpack_signs_scaled(
+                        &arena[first + i * stride..first + i * stride + wlen],
+                        scales[i],
+                        &mut dec,
+                    );
+                    for (e, d) in expect.iter_mut().zip(dec.iter()) {
+                        *e += d;
+                    }
+                }
+                for e in expect.iter_mut() {
+                    *e *= inv;
+                }
+                // bit-domain fused kernel
+                let mut acc = vec![7.0f32; n]; // garbage: must be overwritten
+                vote_average_strided(
+                    &arena, stride, first, &scales, inv, &mut acc,
+                );
+                if acc == expect {
+                    Ok(())
+                } else {
+                    Err(format!("strided vote average != reference (w={workers})"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn quantize_pack_matches_two_pass() {
+        forall(
+            200,
+            |r| gen_vec(r, 0, 400, 1.0),
+            |comp: &Vec<f32>| {
+                let scale = 0.75f32;
+                // reference: quantize to ±scale, then pack, then err = c - q
+                let mut ref_err = comp.clone();
+                let quant: Vec<f32> = comp
+                    .iter()
+                    .map(|&c| if c >= 0.0 { scale } else { -scale })
+                    .collect();
+                let ref_words = pack_signs(&quant);
+                for (e, &q) in ref_err.iter_mut().zip(quant.iter()) {
+                    *e -= q;
+                }
+                // fused bit-domain pass
+                let mut err = comp.clone();
+                let mut words = vec![0u32; comp.len().div_ceil(32)];
+                quantize_pack_ec(&mut err, scale, &mut words);
+                if words != ref_words {
+                    return Err("packed words differ".into());
+                }
+                if err != ref_err {
+                    return Err("error feedback differs".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

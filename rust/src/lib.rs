@@ -30,3 +30,10 @@ pub mod tensor;
 pub mod util;
 
 pub use util::error::{Error, Result};
+
+/// Unit-test builds run under a counting allocator so the hot-path tests
+/// can assert zero heap allocations per step (see `util::alloc_track`).
+#[cfg(test)]
+#[global_allocator]
+static ALLOC_TRACKER: util::alloc_track::CountingAllocator =
+    util::alloc_track::CountingAllocator;

@@ -52,6 +52,15 @@ pub trait MathBackend {
         v_frozen: &[f32],
         lr: f32,
     ) -> Result<()>;
+
+    /// True when this backend's math is pure elementwise native code that
+    /// may run concurrently from scoped worker threads on disjoint
+    /// sub-slices with bit-identical results.  The PJRT backend is not
+    /// (single-threaded dispatch through the runtime), so callers fall
+    /// back to sequential whole-tensor calls.
+    fn elementwise_native(&self) -> bool {
+        false
+    }
 }
 
 /// Native Rust loops — identical math to the Pallas kernels, fused into
@@ -109,6 +118,10 @@ impl MathBackend for NativeBackend {
             p[i] -= lr * m[i] / (v_frozen[i].sqrt() + eps);
         }
         Ok(())
+    }
+
+    fn elementwise_native(&self) -> bool {
+        true
     }
 }
 

@@ -21,6 +21,7 @@ use crate::compress::CompressionKind;
 use crate::optim::backend::{AdamHyper, MathBackend, NativeBackend};
 use crate::optim::monitor::VarianceMonitor;
 use crate::optim::{DistOptimizer, Phase, StepStats};
+use crate::util::par::{default_threads, par_tasks, PAR_MIN_LEN};
 
 /// Configuration for [`OneBitAdam`].
 #[derive(Debug, Clone)]
@@ -71,6 +72,9 @@ pub struct OneBitAdam {
     /// Step index; `switch_step` records T_w once frozen.
     pub t: usize,
     pub switch_step: Option<usize>,
+    /// Fan-out for the elementwise stages (resolved once — the step loop
+    /// runs 10⁴–10⁵ times per sweep, so no per-step syscalls).
+    threads: usize,
     // scratch
     avg: Vec<f32>,
     local_m: Vec<Vec<f32>>,
@@ -105,6 +109,7 @@ impl OneBitAdam {
             phase: Phase::Warmup,
             t: 0,
             switch_step: None,
+            threads: default_threads(),
             avg: vec![0.0; d],
             local_m: (0..n_workers).map(|_| vec![0.0; d]).collect(),
         }
@@ -126,6 +131,13 @@ impl OneBitAdam {
     /// Current value of the stability indicator ‖v_{t−Δ}‖₁/‖v_t‖₁.
     pub fn variance_ratio(&self) -> Option<f64> {
         self.monitor.ratio()
+    }
+
+    /// Select the compressed-allreduce engine (fused bit-domain vs the
+    /// pre-change decode-average reference) — bench/diagnostic use; the
+    /// two are bit-identical, so this never changes a trajectory.
+    pub fn set_allreduce_path(&mut self, path: crate::comm::AllreducePath) {
+        self.car.set_path(path);
     }
 
     /// Force the warmup→compression switch now (used by coordinators that
@@ -204,27 +216,84 @@ impl OneBitAdam {
     }
 
     fn compression_step(&mut self, grads: &[Vec<f32>], lr: f32) -> CommStats {
+        let d = self.params.len();
+        let par = self.backend.elementwise_native() && d >= PAR_MIN_LEN;
         // Line 6: every worker refreshes the shared momentum with its own
-        // gradient.
-        for (i, g) in grads.iter().enumerate() {
-            self.local_m[i].copy_from_slice(&self.m);
-            self.backend
-                .momentum_update(self.cfg.hyper.beta1, &mut self.local_m[i], g)
-                .expect("momentum backend");
+        // gradient — embarrassingly parallel across workers when the math
+        // is native elementwise (bit-identical to the sequential order).
+        let beta1 = self.cfg.hyper.beta1;
+        if par && self.n > 1 {
+            let m: &[f32] = &self.m;
+            struct MomTask<'a> {
+                local: &'a mut [f32],
+                g: &'a [f32],
+            }
+            let mut tasks: Vec<MomTask> = self
+                .local_m
+                .iter_mut()
+                .zip(grads.iter())
+                .map(|(local, g)| MomTask {
+                    local: local.as_mut_slice(),
+                    g: g.as_slice(),
+                })
+                .collect();
+            par_tasks(self.threads, &mut tasks, |t| {
+                t.local.copy_from_slice(m);
+                NativeBackend
+                    .momentum_update(beta1, t.local, t.g)
+                    .expect("momentum backend");
+            });
+        } else {
+            for (i, g) in grads.iter().enumerate() {
+                self.local_m[i].copy_from_slice(&self.m);
+                self.backend
+                    .momentum_update(beta1, &mut self.local_m[i], g)
+                    .expect("momentum backend");
+            }
         }
         // Lines 7–11: compressed allreduce of the fused momenta.
         let comm = self.car.allreduce(&self.local_m, &mut self.avg);
         self.m.copy_from_slice(&self.avg);
-        // Line 13: preconditioned update against the frozen variance.
-        self.backend
-            .precond_step(
-                self.cfg.hyper.eps,
-                &mut self.params,
-                &self.m,
-                &self.v,
-                lr,
-            )
-            .expect("precond backend");
+        // Line 13: preconditioned update against the frozen variance —
+        // elementwise, so block-parallel over contiguous sub-slices.
+        let eps = self.cfg.hyper.eps;
+        if par {
+            let threads = self.threads;
+            struct PreTask<'a> {
+                p: &'a mut [f32],
+                m: &'a [f32],
+                v: &'a [f32],
+            }
+            let blk = d.div_ceil(threads.max(1));
+            let mut tasks: Vec<PreTask> = Vec::with_capacity(threads);
+            {
+                let mut p_rest: &mut [f32] = &mut self.params;
+                let mut m_rest: &[f32] = &self.m;
+                let mut v_rest: &[f32] = &self.v;
+                while !p_rest.is_empty() {
+                    let take = blk.min(p_rest.len());
+                    // mem::take keeps the full borrow lifetime through the
+                    // split (a plain method call would reborrow the local).
+                    let (p_b, pr) =
+                        std::mem::take(&mut p_rest).split_at_mut(take);
+                    p_rest = pr;
+                    let (m_b, mr) = m_rest.split_at(take);
+                    m_rest = mr;
+                    let (v_b, vr) = v_rest.split_at(take);
+                    v_rest = vr;
+                    tasks.push(PreTask { p: p_b, m: m_b, v: v_b });
+                }
+            }
+            par_tasks(threads, &mut tasks, |t| {
+                NativeBackend
+                    .precond_step(eps, t.p, t.m, t.v, lr)
+                    .expect("precond backend");
+            });
+        } else {
+            self.backend
+                .precond_step(eps, &mut self.params, &self.m, &self.v, lr)
+                .expect("precond backend");
+        }
         comm
     }
 }
@@ -280,7 +349,6 @@ impl DistOptimizer for OneBitAdam {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optim::adam::Adam;
     use crate::util::prng::Rng;
 
     fn quad_grads(
@@ -408,8 +476,8 @@ mod tests {
     #[test]
     fn thirtytwo_bit_variant_equals_frozen_adam_exactly() {
         // With identity compression the compression stage IS momentum SGD
-        // preconditioned by v_{T_w}; cross-check against Adam with β₂=1
-        // started from the frozen state.
+        // preconditioned by v_{T_w} (equivalently: Adam with β₂=1 from the
+        // frozen state) — cross-check against a manual replay.
         let d = 64;
         let mut rng = Rng::new(3);
         let cfg = OneBitAdamConfig {
@@ -430,21 +498,16 @@ mod tests {
         // 10 warmup steps completed; the switch is applied at the start of
         // the 11th step, so snapshot the state now.
         assert_eq!(opt.t, 10);
-        // Snapshot and continue with a frozen-v Adam twin.
-        let p0 = opt.params().to_vec();
+        // Snapshot the frozen state and replay the compression stage by
+        // hand as momentum SGD preconditioned by v_{T_w} (β₂=1 Adam).
         let m0 = opt.momentum().to_vec();
         let v0 = opt.variance().to_vec();
-        let hyper = AdamHyper { beta2: 1.0, ..AdamHyper::default() };
-        let mut twin = Adam::new(2, p0).with_hyper(hyper);
-        // hack: seed twin's m/v through raw steps is not possible — instead
-        // replay manually:
         let mut m = m0;
         let mut p = opt.params().to_vec();
         for _ in 0..5 {
             let grads: Vec<Vec<f32>> =
                 (0..2).map(|_| grad_rng.normal_vec(d, 1.0)).collect();
             opt.step(&grads, 1e-2);
-            // manual momentum-SGD-with-precondition replay
             let mut avg = vec![0.0f32; d];
             crate::comm::plain::allreduce_average(&grads, &mut avg);
             for i in 0..d {
@@ -452,7 +515,6 @@ mod tests {
                 p[i] -= 1e-2 * m[i] / (v0[i].sqrt() + 1e-8);
             }
         }
-        let _ = &mut twin; // twin used only to document the equivalence
         for i in 0..d {
             assert!(
                 (opt.params()[i] - p[i]).abs() < 1e-5,

@@ -42,6 +42,22 @@ impl ChunkLayout {
         (0..self.n).map(move |i| self.range(i))
     }
 
+    /// Prefix offsets, in packed u32 sign words, of each chunk's 1-bit wire
+    /// payload: chunk `i`'s words live at `off[i]..off[i+1]` when every
+    /// chunk is packed separately (chunk-local bit offset 0, exactly the
+    /// per-chunk wire format).  Length `n + 1`; `off[n]` is the total word
+    /// count one worker's full set of chunk payloads occupies.
+    pub fn word_offsets(&self) -> Vec<usize> {
+        let mut off = Vec::with_capacity(self.n + 1);
+        let mut acc = 0usize;
+        off.push(0);
+        for i in 0..self.n {
+            acc += self.size(i).div_ceil(32);
+            off.push(acc);
+        }
+        off
+    }
+
     /// Split a slice into per-chunk subslices.
     pub fn split<'a>(&self, x: &'a [f32]) -> Vec<&'a [f32]> {
         assert_eq!(x.len(), self.len);
@@ -126,6 +142,25 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn word_offsets_cover_all_chunks() {
+        for len in [0usize, 1, 31, 32, 33, 100, 1001] {
+            for n in [1usize, 2, 3, 8, 17] {
+                let l = ChunkLayout::new(len, n);
+                let off = l.word_offsets();
+                assert_eq!(off.len(), n + 1);
+                assert_eq!(off[0], 0);
+                for i in 0..n {
+                    assert_eq!(
+                        off[i + 1] - off[i],
+                        l.size(i).div_ceil(32),
+                        "len={len} n={n} i={i}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,86 @@
+//! Thread-local heap-allocation counter for the zero-allocation tests.
+//!
+//! Installed as the test binary's `#[global_allocator]` (see `lib.rs`), it
+//! counts `alloc` / `alloc_zeroed` / `realloc` calls **per thread**, so a
+//! test can assert that a hot-path region performs no heap allocation
+//! without being perturbed by other tests running concurrently on sibling
+//! threads of the test harness.
+//!
+//! The counter is a `const`-initialized `thread_local!` `Cell`, which
+//! itself never allocates (no lazy init, no destructor), so the allocator
+//! cannot recurse.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+/// Counting wrapper around the system allocator.
+pub struct CountingAllocator;
+
+thread_local! {
+    static ALLOC_COUNT: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of heap allocations the *current thread* has made so far.
+/// Diff two readings around a region to count its allocations.
+pub fn current_thread_allocs() -> u64 {
+    ALLOC_COUNT.try_with(Cell::get).unwrap_or(0)
+}
+
+#[inline]
+fn bump() {
+    // try_with: never panic inside the allocator (TLS teardown).
+    let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_allocations_on_this_thread() {
+        let before = current_thread_allocs();
+        // black_box: unobserved allocations may legally be elided in
+        // optimized builds even under a custom global allocator.
+        let v = std::hint::black_box(Vec::<u64>::with_capacity(1024));
+        let after = current_thread_allocs();
+        drop(v);
+        assert!(after > before, "Vec::with_capacity not counted");
+    }
+
+    #[test]
+    fn pure_arithmetic_does_not_count() {
+        let mut acc = 0u64;
+        let before = current_thread_allocs();
+        for i in 0..1000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        let after = current_thread_allocs();
+        assert_eq!(after, before, "arithmetic allocated?! acc={acc}");
+    }
+}

@@ -1,8 +1,18 @@
 //! First-party micro-benchmark harness (no-network environment: no
 //! criterion).  Warmup + repeated timed runs, reporting median / mean /
 //! p10 / p90 with automatic iteration scaling to a target time.
+//!
+//! [`BenchJson`] additionally merges each bench binary's results into the
+//! repo-root `BENCH_step.json` so the perf trajectory is machine-readable
+//! across PRs; `OBADAM_BENCH_SMOKE=1` switches every bench to a
+//! single-sample smoke pass (CI keeps the binaries from rotting without
+//! paying for statistics).
 
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
@@ -32,6 +42,25 @@ impl BenchResult {
     /// Throughput in items/s given items processed per iteration.
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.median_ns() * 1e-9)
+    }
+
+    /// Machine-readable form for `BENCH_step.json`.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("median_ns".to_string(), Json::Num(self.median_ns()));
+        m.insert("mean_ns".to_string(), Json::Num(self.mean_ns()));
+        m.insert("p10_ns".to_string(), Json::Num(self.p10_ns()));
+        m.insert("p90_ns".to_string(), Json::Num(self.p90_ns()));
+        m.insert(
+            "iters_per_sample".to_string(),
+            Json::Num(self.iters_per_sample as f64),
+        );
+        m.insert(
+            "samples".to_string(),
+            Json::Num(self.samples_ns.len() as f64),
+        );
+        Json::Obj(m)
     }
 
     pub fn report(&self) -> String {
@@ -93,6 +122,26 @@ impl Bencher {
         }
     }
 
+    /// CI smoke pass: one sample, minimal warmup — proves the bench still
+    /// builds and runs, without paying for statistics.
+    pub fn smoke() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(1),
+            target_sample: Duration::from_millis(1),
+            samples: 1,
+        }
+    }
+
+    /// Default configuration, or [`Bencher::smoke`] when
+    /// `OBADAM_BENCH_SMOKE=1` is set in the environment.
+    pub fn from_env() -> Self {
+        if smoke_mode() {
+            Self::smoke()
+        } else {
+            Self::default()
+        }
+    }
+
     /// Run `f` repeatedly; `f` must do one unit of work per call.
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
         // Warmup + estimate single-iteration cost.
@@ -132,6 +181,84 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// `OBADAM_BENCH_SMOKE=1` → benches run one cheap iteration (CI mode).
+pub fn smoke_mode() -> bool {
+    std::env::var_os("OBADAM_BENCH_SMOKE")
+        .is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+/// Collects one bench binary's results and merges them into the repo-root
+/// `BENCH_step.json` under a per-binary section: each run replaces only
+/// its own section, so `compression`, `comm_primitives`, and
+/// `optimizer_step` accumulate into one machine-readable file tracking
+/// the perf trajectory across PRs.
+pub struct BenchJson {
+    section: String,
+    entries: Vec<Json>,
+}
+
+impl BenchJson {
+    pub fn new(section: &str) -> Self {
+        BenchJson { section: section.to_string(), entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: &BenchResult) {
+        self.entries.push(r.to_json());
+    }
+
+    /// Push a result with extra numeric fields (e.g. a speedup ratio).
+    pub fn push_with(&mut self, r: &BenchResult, extras: &[(&str, f64)]) {
+        let mut j = r.to_json();
+        if let Json::Obj(m) = &mut j {
+            for (k, v) in extras {
+                m.insert((*k).to_string(), Json::Num(*v));
+            }
+        }
+        self.entries.push(j);
+    }
+
+    /// Repo-root `BENCH_step.json` (one level above the crate).
+    pub fn default_path() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_step.json")
+    }
+
+    /// Merge this section into the repo-root file.
+    pub fn flush(&self) {
+        self.flush_to(&Self::default_path());
+    }
+
+    /// Merge this section into `path`, preserving other sections.  Write
+    /// failures warn instead of panicking (benches must not fail on a
+    /// read-only checkout).
+    pub fn flush_to(&self, path: &Path) {
+        let existing = std::fs::read_to_string(path).ok();
+        let mut root = match existing.as_deref().map(Json::parse) {
+            None => BTreeMap::new(),
+            Some(Ok(Json::Obj(m))) => m,
+            Some(_) => {
+                // Unparseable or non-object: don't silently erase the
+                // accumulated history — keep a backup and start fresh.
+                let bak = path.with_extension("json.bak");
+                eprintln!(
+                    "warning: {} is not a JSON object; backing it up to {}",
+                    path.display(),
+                    bak.display()
+                );
+                let _ = std::fs::copy(path, &bak);
+                BTreeMap::new()
+            }
+        };
+        root.insert(self.section.clone(), Json::Arr(self.entries.clone()));
+        let text = Json::Obj(root).to_string_pretty() + "\n";
+        match std::fs::write(path, text) {
+            Ok(()) => println!("(bench results -> {})", path.display()),
+            Err(e) => {
+                eprintln!("warning: could not write {}: {e}", path.display())
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -167,5 +294,34 @@ mod tests {
         assert!(fmt_ns(5e3).contains("µs"));
         assert!(fmt_ns(5e6).contains("ms"));
         assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn bench_json_merges_sections() {
+        let path = std::env::temp_dir().join(format!(
+            "obadam_bench_json_test_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let r = BenchResult {
+            name: "kernel_x".into(),
+            iters_per_sample: 3,
+            samples_ns: vec![10.0, 20.0, 30.0],
+        };
+        let mut a = BenchJson::new("section_a");
+        a.push(&r);
+        a.flush_to(&path);
+        let mut b = BenchJson::new("section_b");
+        b.push_with(&r, &[("speedup", 2.5)]);
+        b.flush_to(&path);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(&text).unwrap();
+        // both sections survive the second flush
+        let sa = j.arr_of("section_a").unwrap();
+        assert_eq!(sa[0].str_of("name").unwrap(), "kernel_x");
+        assert_eq!(sa[0].f64_of("median_ns").unwrap(), 20.0);
+        let sb = j.arr_of("section_b").unwrap();
+        assert_eq!(sb[0].f64_of("speedup").unwrap(), 2.5);
+        let _ = std::fs::remove_file(&path);
     }
 }

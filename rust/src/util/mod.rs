@@ -1,8 +1,11 @@
 //! First-party utilities (no-network environment: no serde/clap/criterion/
 //! proptest/rand — each is replaced by a small, tested module here).
+#[cfg(test)]
+pub mod alloc_track;
 pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod par;
 pub mod prng;

@@ -1,0 +1,83 @@
+//! Minimal scoped fork-join helper (no rayon in the no-network image).
+//!
+//! The compressed-allreduce simulation is embarrassingly parallel per
+//! worker (compress phase) and per chunk (server phase): every task owns
+//! disjoint `&mut` state, so plain [`std::thread::scope`] with a static
+//! block partition is all the machinery needed — results are bit-identical
+//! to the sequential order because no task reads another task's output.
+
+/// Tensors shorter than this stay on the calling thread: the scoped-thread
+/// fork-join costs ~tens of µs, which only pays off once the per-phase work
+/// is a few hundred µs.
+pub const PAR_MIN_LEN: usize = 1 << 15;
+
+/// Default fan-out for the data-parallel phases (capped: they are
+/// memory-bound, so threads beyond the memory channels stop helping).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(16)
+}
+
+/// Run `f` once per task, splitting the task slice across up to `threads`
+/// scoped OS threads (contiguous blocks, ≤ one thread per task).
+///
+/// With `threads <= 1` (or a single task) everything runs inline on the
+/// caller's thread — no spawn, no allocation — which is the mode the
+/// zero-allocation hot-path tests pin down.
+pub fn par_tasks<T, F>(threads: usize, tasks: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(&mut T) + Sync,
+{
+    let nt = threads.min(tasks.len()).max(1);
+    if nt == 1 {
+        for t in tasks.iter_mut() {
+            f(t);
+        }
+        return;
+    }
+    let per = tasks.len().div_ceil(nt);
+    std::thread::scope(|s| {
+        for group in tasks.chunks_mut(per) {
+            let f = &f;
+            s.spawn(move || {
+                for t in group.iter_mut() {
+                    f(t);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let mut xs: Vec<u64> = (0..37).collect();
+            par_tasks(threads, &mut xs, |x| *x = *x * *x + 1);
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(x, (i * i + 1) as u64, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_task() {
+        let mut none: Vec<u32> = vec![];
+        par_tasks(4, &mut none, |_| panic!("no tasks to run"));
+        let mut one = vec![5u32];
+        par_tasks(4, &mut one, |x| *x += 1);
+        assert_eq!(one, vec![6]);
+    }
+
+    #[test]
+    fn threaded_matches_sequential() {
+        let mut a: Vec<f64> = (0..1000).map(|i| i as f64 * 0.5).collect();
+        let mut b = a.clone();
+        par_tasks(1, &mut a, |x| *x = x.sqrt() + 1.0);
+        par_tasks(7, &mut b, |x| *x = x.sqrt() + 1.0);
+        assert_eq!(a, b);
+    }
+}
