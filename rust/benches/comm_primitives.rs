@@ -4,11 +4,16 @@
 //! compressed collective is timed on three configurations — fused
 //! bit-domain (threaded, the default), bit-domain pinned to one thread,
 //! and the pre-change decode-average reference — so both the fusion and
-//! the thread-scaling win land in `BENCH_step.json`.
+//! the thread-scaling win land in `BENCH_step.json`.  The plain fp32
+//! average is timed on both `PlainPath` engines (tree-reduce vs the
+//! scalar reference); those warmup-phase numbers go to
+//! `BENCH_warmup.json`.
 //!
 //!     cargo bench --bench comm_primitives
 
-use onebit_adam::comm::plain::allreduce_average;
+use onebit_adam::comm::plain::{
+    allreduce_average, allreduce_average_path, PlainPath,
+};
 use onebit_adam::comm::{AllreducePath, CompressedAllreduce};
 use onebit_adam::compress::CompressionKind;
 use onebit_adam::util::bench::{black_box, smoke_mode, BenchJson, Bencher};
@@ -17,6 +22,8 @@ use onebit_adam::util::prng::Rng;
 fn main() {
     let b = Bencher::from_env();
     let mut json = BenchJson::new("comm_primitives");
+    let mut warm_json =
+        BenchJson::new_in("comm_plain_average", "BENCH_warmup.json");
     let worker_counts: &[usize] =
         if smoke_mode() { &[4] } else { &[4, 8, 16] };
     let sizes: &[usize] =
@@ -37,6 +44,30 @@ fn main() {
             );
             println!("{}", r.report());
             json.push(&r);
+
+            // Warmup-phase engines: scalar reference vs tree-reduce.
+            let r_plain_ref = b.run(
+                &format!("plain_average (reference) w={workers} n={n}"),
+                || {
+                    black_box(allreduce_average_path(
+                        PlainPath::Reference,
+                        &inputs,
+                        &mut out,
+                        1,
+                    ));
+                },
+            );
+            println!("{}", r_plain_ref.report());
+            let plain_speedup = r_plain_ref.median_ns() / r.median_ns();
+            println!(
+                "  tree-reduce speedup vs scalar reference: \
+                 {plain_speedup:.2}x"
+            );
+            warm_json.push(&r_plain_ref);
+            warm_json.push_with(
+                &r,
+                &[("speedup_vs_scalar_reference", plain_speedup)],
+            );
 
             let mut car =
                 CompressedAllreduce::new(workers, n, CompressionKind::OneBit);
@@ -107,4 +138,5 @@ fn main() {
         }
     }
     json.flush();
+    warm_json.flush();
 }

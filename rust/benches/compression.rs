@@ -11,8 +11,8 @@ use onebit_adam::compress::onebit::{
     onebit_compress_ec, onebit_compress_ec_packed,
 };
 use onebit_adam::compress::pack::{
-    pack_signs, pack_signs_into, unpack_signs_scaled, vote_average_strided,
-    wire_size,
+    pack_signs, pack_signs_into, quantize_pack_ec, unpack_signs_scaled,
+    vote_average_strided, wire_size,
 };
 use onebit_adam::util::bench::{black_box, smoke_mode, BenchJson, Bencher};
 use onebit_adam::util::prng::Rng;
@@ -77,6 +77,23 @@ fn main() {
             r.throughput(n as f64) / 1e9
         );
         json.push(&r);
+        // Fused quantize + pack + error feedback (pass 2 of the
+        // straight-to-wire compress).  The compensated values stay
+        // bounded (±scale oscillation), so every call does identical
+        // work.
+        let mut comp = rng.normal_vec(n, 1.0);
+        let mut qwords = vec![0u32; n.div_ceil(32)];
+        let r = b.run(&format!("quantize_pack_ec n={n}"), || {
+            quantize_pack_ec(&mut comp, 0.8, &mut qwords);
+            black_box(&qwords);
+        });
+        println!(
+            "{}  => {:.2} Gelem/s",
+            r.report(),
+            r.throughput(n as f64) / 1e9
+        );
+        json.push(&r);
+
         let words = pack_signs(&q);
         let mut out = vec![0.0f32; n];
         let r = b.run(&format!("unpack_signs n={n}"), || {

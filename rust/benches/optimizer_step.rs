@@ -1,22 +1,81 @@
 //! Bench: full optimizer steps (native math backend) — Adam warmup step vs
 //! 1-bit compression step — the L3 per-step CPU budget.  The 1-bit step is
 //! timed on both allreduce engines (fused bit-domain vs the pre-change
-//! decode-average reference) so the tentpole speedup is tracked in
-//! `BENCH_step.json`.  Also times the PJRT (L1 Pallas artifact) path when
-//! `artifacts/` is present, giving the native-vs-PJRT dispatch overhead
-//! the ExecMode choice is based on.
+//! decode-average reference); the warmup-phase step is timed on both the
+//! fused tree-reduce path and the pre-change scalar path
+//! (`ScalarBackend` + `PlainPath::Reference`), with the per-phase numbers
+//! split across `BENCH_step.json` (compression) and `BENCH_warmup.json`
+//! (warmup) so the perf trajectory distinguishes the two throughputs.
+//! Also times the PJRT (L1 Pallas artifact) path when `artifacts/` is
+//! present, giving the native-vs-PJRT dispatch overhead the ExecMode
+//! choice is based on.
 //!
 //!     cargo bench --bench optimizer_step
 
-use onebit_adam::comm::AllreducePath;
+use onebit_adam::comm::{AllreducePath, PlainPath};
+use onebit_adam::optim::backend::ScalarBackend;
 use onebit_adam::optim::onebit_adam::{OneBitAdam, OneBitAdamConfig};
 use onebit_adam::optim::{Adam, DistOptimizer};
 use onebit_adam::runtime::Runtime;
 use onebit_adam::util::bench::{black_box, smoke_mode, BenchJson, Bencher};
 use onebit_adam::util::prng::Rng;
 
+/// Warmup-phase steps: fused tree-reduce path vs the pre-change scalar
+/// path, 8 workers on a 1M-element tensor (smoke mode shrinks the
+/// tensor).
+fn warmup_phase(b: &Bencher) {
+    let mut json =
+        BenchJson::new_in("optimizer_step_warmup", "BENCH_warmup.json");
+    let workers = 8usize;
+    let n: usize = if smoke_mode() { 1 << 16 } else { 1 << 20 };
+    let base = Rng::new(13);
+    let grads: Vec<Vec<f32>> = (0..workers)
+        .map(|i| base.fork(i as u64).normal_vec(n, 1.0))
+        .collect();
+    // warmup_steps = usize::MAX pins the optimizer in the warmup phase.
+    let cfg = OneBitAdamConfig {
+        warmup_steps: Some(usize::MAX),
+        ..Default::default()
+    };
+
+    let mut fast = OneBitAdam::new(workers, vec![0.1; n], cfg.clone());
+    let r_fast = b.run(
+        &format!("warmup_step (tree-reduce + fused) w={workers} n={n}"),
+        || {
+            black_box(fast.step(&grads, 1e-4));
+        },
+    );
+    println!(
+        "{}  => {:.2} GB/s over {workers} grads",
+        r_fast.report(),
+        r_fast.throughput((n * workers) as f64 * 4.0) / 1e9
+    );
+
+    let mut slow = OneBitAdam::with_backend(
+        workers,
+        vec![0.1; n],
+        cfg,
+        Box::new(ScalarBackend),
+    );
+    slow.set_plain_path(PlainPath::Reference);
+    let r_slow = b.run(
+        &format!("warmup_step (scalar reference) w={workers} n={n}"),
+        || {
+            black_box(slow.step(&grads, 1e-4));
+        },
+    );
+    println!("{}", r_slow.report());
+
+    let speedup = r_slow.median_ns() / r_fast.median_ns();
+    println!("  warmup-phase speedup vs scalar reference: {speedup:.2}x");
+    json.push(&r_slow);
+    json.push_with(&r_fast, &[("speedup_vs_scalar_reference", speedup)]);
+    json.flush();
+}
+
 fn main() {
     let b = Bencher::from_env();
+    warmup_phase(&b);
     let mut json = BenchJson::new("optimizer_step");
     let workers = 4;
     let sizes: &[usize] =

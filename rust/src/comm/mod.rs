@@ -11,7 +11,10 @@
 //! payloads in the packed sign-word domain end-to-end inside a persistent
 //! arena — zero heap allocations per step — and fans the per-worker /
 //! per-chunk stages out over scoped threads; the pre-change decode-average
-//! engine is retained as the property-tested reference.
+//! engine is retained as the property-tested reference.  The warmup-phase
+//! full-precision average has the same two-engine structure
+//! ([`plain::PlainPath`]): a multithreaded pairwise tree reduction as the
+//! hot path, the scalar f64 loop as the reference.
 
 pub mod compressed;
 pub mod fabric;
@@ -19,7 +22,7 @@ pub mod plain;
 
 pub use compressed::{AllreducePath, CompressedAllreduce};
 pub use fabric::ThreadedFabric;
-pub use plain::allreduce_average;
+pub use plain::{allreduce_average, allreduce_average_path, PlainPath};
 
 /// Bytes that crossed the (simulated) wire during one collective, split by
 /// phase — feeds both the volume ledger (§7.1 claim) and the netsim clock.

@@ -3,26 +3,98 @@
 //! Numerically this is what a ring allreduce computes; the ring's *time* is
 //! modeled in [`crate::netsim::collectives`], and its per-GPU wire volume
 //! (2·(n−1)/n·bytes) is reported in the returned [`CommStats`].
+//!
+//! Two data-plane engines, selectable via [`PlainPath`]:
+//!
+//! * [`PlainPath::TreeReduce`] (default) — worker-outer, cache-blocked,
+//!   chunk-parallel over scoped threads, pairwise (tree) f64 accumulation
+//!   per element ([`crate::kernels::reduce`]).  This is the warmup-phase
+//!   hot path: the paper runs ~15% of steps at full fp32 volume, so this
+//!   average bounds warmup throughput.
+//! * [`PlainPath::Reference`] — the pre-change scalar element-outer /
+//!   worker-inner sequential-f64 loop, kept verbatim as the executable
+//!   specification.  Property-tested equal to the tree path within 1 ULP.
 
 use super::CommStats;
+use crate::kernels::reduce::tree_average_into;
+use crate::util::par::{default_threads, par_tasks, PAR_MIN_LEN};
+
+/// Engine of the full-precision average.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlainPath {
+    /// Multithreaded cache-blocked pairwise tree reduction (default).
+    #[default]
+    TreeReduce,
+    /// Pre-change scalar loop: element-outer, worker-inner, sequential
+    /// f64 accumulation.  The executable specification.
+    Reference,
+}
 
 /// Average `inputs` (one tensor per worker) into `out`; returns wire stats
-/// for an fp32 ring allreduce of the same tensor.
+/// for an fp32 ring allreduce of the same tensor.  Uses the default
+/// tree-reduce engine with the process-default thread fan-out.
 pub fn allreduce_average(inputs: &[Vec<f32>], out: &mut [f32]) -> CommStats {
+    allreduce_average_path(
+        PlainPath::TreeReduce,
+        inputs,
+        out,
+        default_threads(),
+    )
+}
+
+/// [`allreduce_average`] with an explicit engine and thread fan-out.
+///
+/// Thread count and internal block boundaries are numerically irrelevant:
+/// each output element is a pure function of that element across workers,
+/// so any split of the element range yields bit-identical results.
+pub fn allreduce_average_path(
+    path: PlainPath,
+    inputs: &[Vec<f32>],
+    out: &mut [f32],
+    threads: usize,
+) -> CommStats {
     let n = inputs.len();
     assert!(n > 0);
     let len = out.len();
     for inp in inputs {
         assert_eq!(inp.len(), len);
     }
-    // f64 accumulation: the reference average the compressed path is
-    // compared against in tests must not drift.
-    for i in 0..len {
-        let mut acc = 0.0f64;
-        for inp in inputs {
-            acc += inp[i] as f64;
+    match path {
+        PlainPath::Reference => {
+            // f64 accumulation: the reference average the compressed path
+            // is compared against in tests must not drift.
+            for i in 0..len {
+                let mut acc = 0.0f64;
+                for inp in inputs {
+                    acc += inp[i] as f64;
+                }
+                out[i] = (acc / n as f64) as f32;
+            }
         }
-        out[i] = (acc / n as f64) as f32;
+        PlainPath::TreeReduce => {
+            // Two small per-call allocations (the view list and, when
+            // threaded, the task list) — deliberate: worker count is
+            // unbounded so the views can't live on the stack, and the
+            // cost is noise next to the O(len·n) streaming work.  (The
+            // zero-allocation contract covers the compression-phase
+            // arena, not this full-volume warmup path.)
+            let views: Vec<&[f32]> =
+                inputs.iter().map(|v| v.as_slice()).collect();
+            let threads = threads.max(1);
+            if threads == 1 || len < PAR_MIN_LEN {
+                tree_average_into(&views, 0, out);
+            } else {
+                let blk = len.div_ceil(threads);
+                let mut tasks: Vec<(usize, &mut [f32])> = out
+                    .chunks_mut(blk)
+                    .enumerate()
+                    .map(|(i, chunk)| (i * blk, chunk))
+                    .collect();
+                par_tasks(threads, &mut tasks, |t| {
+                    tree_average_into(&views, t.0, t.1)
+                });
+            }
+        }
     }
     let bytes = len * 4;
     let ring_per_gpu = if n > 1 {
@@ -40,6 +112,8 @@ pub fn allreduce_average(inputs: &[Vec<f32>], out: &mut [f32]) -> CommStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::check::{forall, ulp_diff};
+    use crate::util::prng::Rng;
 
     #[test]
     fn averages_exactly() {
@@ -67,5 +141,136 @@ mod tests {
         let stats = allreduce_average(&inputs, &mut out);
         // 2 * 400 B * 3/4 = 600 B per GPU
         assert_eq!(stats.total_per_gpu(), 600);
+    }
+
+    fn random_inputs(workers: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let base = Rng::new(seed);
+        (0..workers)
+            .map(|i| base.fork(i as u64).normal_vec(len, 1.0))
+            .collect()
+    }
+
+    #[test]
+    fn tree_reduce_matches_reference_within_one_ulp_property() {
+        // The PlainPath contract: arbitrary lengths (0..4096) × worker
+        // counts 1–8, tree vs reference within 1 ULP (two f64
+        // accumulation orders of ≤ 8 f32 terms; the absolute escape
+        // covers cancellation down at the f64-noise floor).  These
+        // lengths sit below PAR_MIN_LEN, so the threaded split is
+        // covered separately by
+        // `threaded_split_is_bit_identical_above_par_threshold`.
+        forall(
+            80,
+            |r| (r.range(0, 4097), r.range(1, 9)),
+            |&(len, workers): &(usize, usize)| {
+                let workers = workers.max(1);
+                let inputs =
+                    random_inputs(workers, len, (len * 31 + workers) as u64);
+                let mut reference = vec![0.0f32; len];
+                allreduce_average_path(
+                    PlainPath::Reference,
+                    &inputs,
+                    &mut reference,
+                    1,
+                );
+                let mut tree = vec![0.0f32; len];
+                allreduce_average_path(
+                    PlainPath::TreeReduce,
+                    &inputs,
+                    &mut tree,
+                    1,
+                );
+                for i in 0..len {
+                    let ok = ulp_diff(tree[i], reference[i]) <= 1
+                        || (tree[i] - reference[i]).abs() < 1e-10;
+                    if !ok {
+                        return Err(format!(
+                            "tree[{i}]={} vs ref {} (len={len} w={workers})",
+                            tree[i], reference[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn threaded_split_is_bit_identical_above_par_threshold() {
+        // Above PAR_MIN_LEN the multithreaded chunking actually engages:
+        // sweep chunk/block boundary offsets × worker counts × thread
+        // counts and require bitwise equality with the single-thread
+        // result (plus the 1-ULP reference bound at one configuration
+        // per length).
+        use crate::kernels::REDUCE_BLK;
+        for &len in
+            &[PAR_MIN_LEN, PAR_MIN_LEN + 1, PAR_MIN_LEN + REDUCE_BLK + 3]
+        {
+            for workers in 1..=8usize {
+                let inputs =
+                    random_inputs(workers, len, (len + workers) as u64);
+                let mut one = vec![0.0f32; len];
+                let stats_one = allreduce_average_path(
+                    PlainPath::TreeReduce,
+                    &inputs,
+                    &mut one,
+                    1,
+                );
+                for threads in [2usize, 3, 7] {
+                    let mut many = vec![0.0f32; len];
+                    let stats_many = allreduce_average_path(
+                        PlainPath::TreeReduce,
+                        &inputs,
+                        &mut many,
+                        threads,
+                    );
+                    assert_eq!(stats_one, stats_many);
+                    assert_eq!(
+                        one, many,
+                        "len={len} workers={workers} threads={threads}"
+                    );
+                }
+                let mut reference = vec![0.0f32; len];
+                allreduce_average_path(
+                    PlainPath::Reference,
+                    &inputs,
+                    &mut reference,
+                    1,
+                );
+                for i in 0..len {
+                    assert!(
+                        ulp_diff(one[i], reference[i]) <= 1
+                            || (one[i] - reference[i]).abs() < 1e-10,
+                        "len={len} workers={workers} i={i}: {} vs {}",
+                        one[i],
+                        reference[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn both_paths_report_identical_wire_stats() {
+        let inputs = random_inputs(4, 100, 7);
+        let mut out = vec![0.0f32; 100];
+        let a =
+            allreduce_average_path(PlainPath::Reference, &inputs, &mut out, 1);
+        let b = allreduce_average_path(
+            PlainPath::TreeReduce,
+            &inputs,
+            &mut out,
+            4,
+        );
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zero_length_tensor_is_a_noop() {
+        let inputs: Vec<Vec<f32>> = vec![vec![], vec![]];
+        let mut out = vec![0.0f32; 0];
+        let stats = allreduce_average(&inputs, &mut out);
+        assert_eq!(stats.uncompressed_bytes, 0);
+        assert_eq!(stats.total_per_gpu(), 0);
     }
 }

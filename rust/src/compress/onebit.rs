@@ -70,24 +70,9 @@ pub fn onebit_compress_ec(
         return 0.0;
     }
 
-    // Pass 1: compensated tensor + L1 norm.  Blocked accumulation: f32
-    // partial sums inside a 4096-lane block (autovectorizes), f64 across
-    // blocks (no catastrophic accumulation for n up to 10⁹).
-    let mut l1 = 0.0f64;
-    const BLK: usize = 4096;
-    let mut i = 0;
-    while i < n {
-        let end = (i + BLK).min(n);
-        let mut part = 0.0f32;
-        for k in i..end {
-            let c = value[k] + err[k];
-            comp_scratch[k] = c;
-            part += c.abs();
-        }
-        l1 += part as f64;
-        i = end;
-    }
-    let scale = (l1 / n as f64) as f32;
+    // Pass 1: compensated tensor + L1 norm — the fused lane-accumulator
+    // kernel (f32 partial sums inside 4096-element blocks, f64 across).
+    let scale = crate::kernels::compensate_l1(value, err, comp_scratch);
 
     // Pass 2: quantize + error feedback.
     for i in 0..n {
@@ -103,31 +88,12 @@ pub fn onebit_compress_ec(
 /// compensated tensor `value + err` and return the 1-bit scale
 /// `‖value + err‖₁ / n`.
 ///
-/// Same blocked f32-inside / f64-across accumulation as
-/// [`onebit_compress_ec`], so the returned scale is bit-identical; the
-/// compensated values are stashed in `err` so pass 2
+/// Same blocked lane-accumulator kernel as [`onebit_compress_ec`]
+/// ([`crate::kernels::elementwise`]), so the returned scale is
+/// bit-identical; the compensated values are stashed in `err` so pass 2
 /// ([`pack::quantize_pack_ec`]) needs no separate scratch tensor.
 pub fn onebit_compensate(value: &[f32], err: &mut [f32]) -> f32 {
-    let n = value.len();
-    assert_eq!(err.len(), n);
-    if n == 0 {
-        return 0.0;
-    }
-    let mut l1 = 0.0f64;
-    const BLK: usize = 4096;
-    let mut i = 0;
-    while i < n {
-        let end = (i + BLK).min(n);
-        let mut part = 0.0f32;
-        for k in i..end {
-            let c = value[k] + err[k];
-            err[k] = c;
-            part += c.abs();
-        }
-        l1 += part as f64;
-        i = end;
-    }
-    (l1 / n as f64) as f32
+    crate::kernels::compensate_l1_in_place(value, err)
 }
 
 /// Fully fused EC 1-bit compress straight into the wire format: packed sign

@@ -24,14 +24,30 @@ pub fn pack_signs(x: &[f32]) -> Vec<u32> {
 }
 
 /// Allocation-free variant of [`pack_signs`].
+///
+/// Full 32-lane words go through `chunks_exact` (constant trip count —
+/// LLVM turns the 32 compare+shift lanes into straight-line SIMD sign
+/// extraction); only the final partial word takes the variable-length
+/// loop.
 pub fn pack_signs_into(x: &[f32], words: &mut [u32]) {
     assert!(words.len() * 32 >= x.len(), "sign word buffer too small");
-    for (lanes, word) in x.chunks(32).zip(words.iter_mut()) {
+    let full = x.len() / 32;
+    for (lanes, word) in
+        x.chunks_exact(32).zip(words[..full].iter_mut())
+    {
         let mut w = 0u32;
         for (b, &v) in lanes.iter().enumerate() {
             w |= ((v >= 0.0) as u32) << b;
         }
         *word = w;
+    }
+    let rem = &x[full * 32..];
+    if !rem.is_empty() {
+        let mut w = 0u32;
+        for (b, &v) in rem.iter().enumerate() {
+            w |= ((v >= 0.0) as u32) << b;
+        }
+        words[full] = w;
     }
 }
 
@@ -49,9 +65,18 @@ pub fn unpack_signs(words: &[u32], n: usize) -> Vec<f32> {
 pub fn unpack_signs_scaled(words: &[u32], scale: f32, out: &mut [f32]) {
     assert!(words.len() * 32 >= out.len(), "not enough sign words");
     let pos = scale.to_bits() & 0x7FFF_FFFF;
-    for (chunk, &word) in out.chunks_mut(32).zip(words.iter()) {
+    let full = out.len() / 32;
+    let (head, tail) = out.split_at_mut(full * 32);
+    for (chunk, &word) in head.chunks_exact_mut(32).zip(words.iter()) {
         for (b, o) in chunk.iter_mut().enumerate() {
             // bit==1 ⇒ +scale ; bit==0 ⇒ −scale (flip the sign bit)
+            let bit = (word >> b) & 1;
+            *o = f32::from_bits(pos | ((bit ^ 1) << 31));
+        }
+    }
+    if !tail.is_empty() {
+        let word = words[full];
+        for (b, o) in tail.iter_mut().enumerate() {
             let bit = (word >> b) & 1;
             *o = f32::from_bits(pos | ((bit ^ 1) << 31));
         }
@@ -149,7 +174,11 @@ pub fn vote_average_strided(
 pub fn quantize_pack_ec(comp_err: &mut [f32], scale: f32, words: &mut [u32]) {
     assert!(words.len() * 32 >= comp_err.len(), "sign word buffer too small");
     let pos = scale.to_bits() & 0x7FFF_FFFF;
-    for (lanes, word) in comp_err.chunks_mut(32).zip(words.iter_mut()) {
+    let full = comp_err.len() / 32;
+    let (head, tail) = comp_err.split_at_mut(full * 32);
+    for (lanes, word) in
+        head.chunks_exact_mut(32).zip(words[..full].iter_mut())
+    {
         let mut w = 0u32;
         for (b, c) in lanes.iter_mut().enumerate() {
             let bit = (*c >= 0.0) as u32;
@@ -157,6 +186,15 @@ pub fn quantize_pack_ec(comp_err: &mut [f32], scale: f32, words: &mut [u32]) {
             *c -= f32::from_bits(pos | ((bit ^ 1) << 31));
         }
         *word = w;
+    }
+    if !tail.is_empty() {
+        let mut w = 0u32;
+        for (b, c) in tail.iter_mut().enumerate() {
+            let bit = (*c >= 0.0) as u32;
+            w |= bit << b;
+            *c -= f32::from_bits(pos | ((bit ^ 1) << 31));
+        }
+        words[full] = w;
     }
 }
 

@@ -1,0 +1,566 @@
+//! Fused elementwise kernels for the optimizer hot loops.
+//!
+//! Every elementwise pass the step loop performs — the full Adam moment +
+//! parameter update, the per-worker momentum refresh of the compression
+//! stage, and the frozen-variance preconditioned step — funnels through
+//! the functions here.  Three ingredients, all std-only:
+//!
+//! 1. **Fusion** — one pass over the state tensors instead of one per
+//!    sub-expression (the Adam step reads `p/m/v/g` once and writes
+//!    `p/m/v` once; the momentum refresh produces `β·m̄ + (1−β)·g` straight
+//!    into the per-worker buffer, eliminating the `copy_from_slice` +
+//!    update double pass).
+//! 2. **Fixed-width lanes** — bodies run on [`LANES`]-wide blocks via
+//!    `chunks_exact`, so LLVM sees a constant trip count and emits
+//!    straight-line SIMD; the sub-lane tail reuses the identical block
+//!    body, so tail elements get bit-identical math.
+//! 3. **`f32::mul_add`** — the multiply-add chains contract to a single
+//!    rounding (hardware FMA where the target has it).
+//!
+//! The pre-existing scalar loops are preserved verbatim as
+//! [`crate::optim::backend::ScalarBackend`]; property tests
+//! (here and in `optim::backend`) pin the fused kernels to that executable
+//! specification within a few ULP across lengths 0..4096, including every
+//! non-multiple-of-`LANES` tail.
+//!
+//! Multithreaded variants (`*_par`) fan contiguous sub-slices out over
+//! [`crate::util::par::par_tasks`]; the kernels are pure elementwise, so
+//! the parallel split is bit-identical to the sequential order.
+
+use crate::util::par::{par_tasks, PAR_MIN_LEN};
+
+/// Lane width of the fixed-size inner blocks (8 × f32 = one AVX2 register;
+/// wider targets simply unroll two blocks per vector op).
+pub const LANES: usize = 8;
+
+/// Bias-correction-free Adam hyperparameters (paper eq. (1); matches the
+/// static args baked into the AOT Pallas kernel artifacts).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdamHyper {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamHyper {
+    fn default() -> Self {
+        AdamHyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// Per-call constants of the fused Adam step, resolved once outside the
+/// lane loop.
+#[derive(Clone, Copy)]
+struct AdamConsts {
+    beta1: f32,
+    omb1: f32,
+    beta2: f32,
+    omb2: f32,
+    eps: f32,
+    lr: f32,
+}
+
+impl AdamConsts {
+    fn new(h: AdamHyper, lr: f32) -> Self {
+        AdamConsts {
+            beta1: h.beta1,
+            omb1: 1.0 - h.beta1,
+            beta2: h.beta2,
+            omb2: 1.0 - h.beta2,
+            eps: h.eps,
+            lr,
+        }
+    }
+}
+
+#[inline(always)]
+fn adam_block(
+    c: AdamConsts,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+) {
+    for i in 0..g.len() {
+        let gi = g[i];
+        let mi = c.beta1.mul_add(m[i], c.omb1 * gi);
+        let vi = c.beta2.mul_add(v[i], (c.omb2 * gi) * gi);
+        m[i] = mi;
+        v[i] = vi;
+        p[i] -= c.lr * mi / (vi.sqrt() + c.eps);
+    }
+}
+
+/// Fused Adam step: one pass updates `p`, `m`, `v` in place from `g`.
+///
+/// `m ← β₁·m + (1−β₁)·g`, `v ← β₂·v + (1−β₂)·g²`,
+/// `p ← p − lr·m/(√v + ε)` — with β₂ = 1 the `mul_add` form keeps `v`
+/// bitwise frozen (`1·v + 0·g² = v`), preserving the paper's
+/// β₂=1 ≡ preconditioned-momentum identity exactly.
+pub fn adam_step_fused(
+    h: AdamHyper,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+) {
+    let n = p.len();
+    assert!(m.len() == n && v.len() == n && g.len() == n);
+    let c = AdamConsts::new(h, lr);
+    let split = n - n % LANES;
+    let (ph, pt) = p.split_at_mut(split);
+    let (mh, mt) = m.split_at_mut(split);
+    let (vh, vt) = v.split_at_mut(split);
+    let (gh, gt) = g.split_at(split);
+    for (((pl, ml), vl), gl) in ph
+        .chunks_exact_mut(LANES)
+        .zip(mh.chunks_exact_mut(LANES))
+        .zip(vh.chunks_exact_mut(LANES))
+        .zip(gh.chunks_exact(LANES))
+    {
+        adam_block(c, pl, ml, vl, gl);
+    }
+    adam_block(c, pt, mt, vt, gt);
+}
+
+/// [`adam_step_fused`] over contiguous sub-slices on up to `threads`
+/// scoped threads (bit-identical: the kernel is pure elementwise).
+/// Falls back to the sequential kernel below [`PAR_MIN_LEN`].
+pub fn adam_step_par(
+    threads: usize,
+    h: AdamHyper,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+) {
+    let n = p.len();
+    if threads <= 1 || n < PAR_MIN_LEN {
+        adam_step_fused(h, p, m, v, g, lr);
+        return;
+    }
+    assert!(m.len() == n && v.len() == n && g.len() == n);
+    let blk = n.div_ceil(threads);
+    let mut tasks: Vec<(&mut [f32], &mut [f32], &mut [f32], &[f32])> = p
+        .chunks_mut(blk)
+        .zip(m.chunks_mut(blk))
+        .zip(v.chunks_mut(blk))
+        .zip(g.chunks(blk))
+        .map(|(((pb, mb), vb), gb)| (pb, mb, vb, gb))
+        .collect();
+    par_tasks(threads, &mut tasks, |t| {
+        adam_step_fused(h, t.0, t.1, t.2, t.3, lr)
+    });
+}
+
+#[inline(always)]
+fn momentum_block(beta: f32, omb: f32, m: &mut [f32], g: &[f32]) {
+    for i in 0..g.len() {
+        m[i] = beta.mul_add(m[i], omb * g[i]);
+    }
+}
+
+/// In-place momentum update `m ← β·m + (1−β)·g`.
+pub fn momentum_update_fused(beta: f32, m: &mut [f32], g: &[f32]) {
+    let n = m.len();
+    assert_eq!(g.len(), n);
+    let omb = 1.0 - beta;
+    let split = n - n % LANES;
+    let (mh, mt) = m.split_at_mut(split);
+    let (gh, gt) = g.split_at(split);
+    for (ml, gl) in mh.chunks_exact_mut(LANES).zip(gh.chunks_exact(LANES)) {
+        momentum_block(beta, omb, ml, gl);
+    }
+    momentum_block(beta, omb, mt, gt);
+}
+
+#[inline(always)]
+fn refresh_block(
+    beta: f32,
+    omb: f32,
+    shared: &[f32],
+    g: &[f32],
+    out: &mut [f32],
+) {
+    for i in 0..g.len() {
+        out[i] = beta.mul_add(shared[i], omb * g[i]);
+    }
+}
+
+/// Fused momentum **refresh**: `out ← β·shared + (1−β)·g` in a single
+/// pass — replaces the `copy_from_slice(shared)` + in-place update double
+/// pass of the compression stage (Algorithm 1, line 6).  Bit-identical to
+/// that two-pass sequence, since [`momentum_update_fused`] applies the
+/// same `mul_add` to the copied values.
+pub fn momentum_refresh_fused(
+    beta: f32,
+    shared: &[f32],
+    g: &[f32],
+    out: &mut [f32],
+) {
+    let n = out.len();
+    assert!(shared.len() == n && g.len() == n);
+    let omb = 1.0 - beta;
+    let split = n - n % LANES;
+    let (oh, ot) = out.split_at_mut(split);
+    let (sh, st) = shared.split_at(split);
+    let (gh, gt) = g.split_at(split);
+    for ((ol, sl), gl) in oh
+        .chunks_exact_mut(LANES)
+        .zip(sh.chunks_exact(LANES))
+        .zip(gh.chunks_exact(LANES))
+    {
+        refresh_block(beta, omb, sl, gl, ol);
+    }
+    refresh_block(beta, omb, st, gt, ot);
+}
+
+#[inline(always)]
+fn precond_block(
+    eps: f32,
+    lr: f32,
+    p: &mut [f32],
+    m: &[f32],
+    v_frozen: &[f32],
+) {
+    for i in 0..p.len() {
+        p[i] -= lr * m[i] / (v_frozen[i].sqrt() + eps);
+    }
+}
+
+/// Preconditioned momentum step `p ← p − lr·m/(√v_frozen + ε)`
+/// (Algorithm 1, line 13).
+pub fn precond_step_fused(
+    eps: f32,
+    p: &mut [f32],
+    m: &[f32],
+    v_frozen: &[f32],
+    lr: f32,
+) {
+    let n = p.len();
+    assert!(m.len() == n && v_frozen.len() == n);
+    let split = n - n % LANES;
+    let (ph, pt) = p.split_at_mut(split);
+    let (mh, mt) = m.split_at(split);
+    let (vh, vt) = v_frozen.split_at(split);
+    for ((pl, ml), vl) in ph
+        .chunks_exact_mut(LANES)
+        .zip(mh.chunks_exact(LANES))
+        .zip(vh.chunks_exact(LANES))
+    {
+        precond_block(eps, lr, pl, ml, vl);
+    }
+    precond_block(eps, lr, pt, mt, vt);
+}
+
+/// [`precond_step_fused`] over contiguous sub-slices on up to `threads`
+/// scoped threads; sequential below [`PAR_MIN_LEN`].
+pub fn precond_step_par(
+    threads: usize,
+    eps: f32,
+    p: &mut [f32],
+    m: &[f32],
+    v_frozen: &[f32],
+    lr: f32,
+) {
+    let n = p.len();
+    if threads <= 1 || n < PAR_MIN_LEN {
+        precond_step_fused(eps, p, m, v_frozen, lr);
+        return;
+    }
+    assert!(m.len() == n && v_frozen.len() == n);
+    let blk = n.div_ceil(threads);
+    let mut tasks: Vec<(&mut [f32], &[f32], &[f32])> = p
+        .chunks_mut(blk)
+        .zip(m.chunks(blk))
+        .zip(v_frozen.chunks(blk))
+        .map(|((pb, mb), vb)| (pb, mb, vb))
+        .collect();
+    par_tasks(threads, &mut tasks, |t| {
+        precond_step_fused(eps, t.0, t.1, t.2, lr)
+    });
+}
+
+/// Block size of the L1-norm accumulation: f32 partial sums inside a
+/// block (lane-parallel), f64 across blocks — no catastrophic
+/// accumulation for n up to 10⁹.
+const L1_BLK: usize = 4096;
+
+#[inline(always)]
+fn compensate_block(value: &[f32], err: &[f32], comp: &mut [f32]) -> f32 {
+    // NOTE: the lane-accumulator order here and in
+    // `compensate_block_in_place` must stay identical — the two entry
+    // points below are required to return bit-identical scales (the
+    // packed and two-pass compress paths are property-tested equal).
+    let n = value.len();
+    let split = n - n % LANES;
+    let mut acc = [0.0f32; LANES];
+    let mut i = 0;
+    while i < split {
+        for l in 0..LANES {
+            let c = value[i + l] + err[i + l];
+            comp[i + l] = c;
+            acc[l] += c.abs();
+        }
+        i += LANES;
+    }
+    let mut part: f32 = acc.iter().sum();
+    for k in split..n {
+        let c = value[k] + err[k];
+        comp[k] = c;
+        part += c.abs();
+    }
+    part
+}
+
+#[inline(always)]
+fn compensate_block_in_place(value: &[f32], err: &mut [f32]) -> f32 {
+    let n = value.len();
+    let split = n - n % LANES;
+    let mut acc = [0.0f32; LANES];
+    let mut i = 0;
+    while i < split {
+        for l in 0..LANES {
+            let c = value[i + l] + err[i + l];
+            err[i + l] = c;
+            acc[l] += c.abs();
+        }
+        i += LANES;
+    }
+    let mut part: f32 = acc.iter().sum();
+    for k in split..n {
+        let c = value[k] + err[k];
+        err[k] = c;
+        part += c.abs();
+    }
+    part
+}
+
+/// Pass 1 of the EC 1-bit compress: write the compensated tensor
+/// `value + err` into `comp` and return the quantizer scale
+/// `‖value + err‖₁ / n`.  Lane-parallel partial sums inside
+/// [`L1_BLK`]-element blocks (breaking the serial f32 dependency chain),
+/// f64 across blocks.
+pub fn compensate_l1(value: &[f32], err: &[f32], comp: &mut [f32]) -> f32 {
+    let n = value.len();
+    assert!(err.len() == n && comp.len() == n);
+    if n == 0 {
+        return 0.0;
+    }
+    let mut l1 = 0.0f64;
+    let mut i = 0;
+    while i < n {
+        let end = (i + L1_BLK).min(n);
+        l1 += compensate_block(&value[i..end], &err[i..end], &mut comp[i..end])
+            as f64;
+        i = end;
+    }
+    (l1 / n as f64) as f32
+}
+
+/// In-place variant of [`compensate_l1`]: `err` carries the error in and
+/// the compensated tensor out.  Bit-identical scale (same block and lane
+/// accumulation order).
+pub fn compensate_l1_in_place(value: &[f32], err: &mut [f32]) -> f32 {
+    let n = value.len();
+    assert_eq!(err.len(), n);
+    if n == 0 {
+        return 0.0;
+    }
+    let mut l1 = 0.0f64;
+    let mut i = 0;
+    while i < n {
+        let end = (i + L1_BLK).min(n);
+        l1 += compensate_block_in_place(&value[i..end], &mut err[i..end])
+            as f64;
+        i = end;
+    }
+    (l1 / n as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::backend::{MathBackend, ScalarBackend};
+    use crate::util::check::{forall, ulp_diff};
+    use crate::util::prng::Rng;
+
+    /// ULP-bounded closeness with an absolute escape hatch for
+    /// catastrophic-cancellation outputs near zero (where a 1-ULP input
+    /// difference legitimately explodes in relative terms).
+    fn close(a: f32, b: f32, max_ulp: u64) -> bool {
+        ulp_diff(a, b) <= max_ulp || (a - b).abs() <= 1e-6
+    }
+
+    fn state(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let p = rng.normal_vec(n, 1.0);
+        let m = rng.normal_vec(n, 0.1);
+        let v: Vec<f32> =
+            rng.normal_vec(n, 0.01).iter().map(|x| x.abs() + 1e-6).collect();
+        let g = rng.normal_vec(n, 1.0);
+        (p, m, v, g)
+    }
+
+    fn check_adam_vs_scalar(n: usize) -> Result<(), String> {
+        let h = AdamHyper::default();
+        let (p0, m0, v0, g) = state(n, n as u64 + 1);
+        let (mut pf, mut mf, mut vf) = (p0.clone(), m0.clone(), v0.clone());
+        adam_step_fused(h, &mut pf, &mut mf, &mut vf, &g, 1e-3);
+        let (mut ps, mut ms, mut vs) = (p0, m0, v0);
+        ScalarBackend
+            .adam_step(h, &mut ps, &mut ms, &mut vs, &g, 1e-3)
+            .unwrap();
+        for i in 0..n {
+            if !close(mf[i], ms[i], 4) {
+                return Err(format!(
+                    "m[{i}] {} vs {} (n={n})",
+                    mf[i], ms[i]
+                ));
+            }
+            if !close(vf[i], vs[i], 4) {
+                return Err(format!(
+                    "v[{i}] {} vs {} (n={n})",
+                    vf[i], vs[i]
+                ));
+            }
+            if !close(pf[i], ps[i], 8) {
+                return Err(format!(
+                    "p[{i}] {} vs {} (n={n})",
+                    pf[i], ps[i]
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn fused_adam_matches_scalar_within_ulps_property() {
+        // Random lengths over the full 0..4096 range — non-multiple-of-
+        // LANES tails included by construction.
+        forall(60, |r| r.range(0, 4097), |&n: &usize| check_adam_vs_scalar(n));
+    }
+
+    #[test]
+    fn fused_adam_every_tail_length() {
+        // Exhaustive sweep of every tail residue around the lane width.
+        for n in 0..=(3 * LANES + 1) {
+            check_adam_vs_scalar(n).unwrap();
+        }
+        for n in [4095, 4096] {
+            check_adam_vs_scalar(n).unwrap();
+        }
+    }
+
+    #[test]
+    fn fused_momentum_and_precond_match_scalar_property() {
+        forall(
+            60,
+            |r| r.range(0, 4097),
+            |&n: &usize| {
+                let (p0, m0, v0, g) = state(n, n as u64 + 7);
+                // momentum
+                let mut mf = m0.clone();
+                momentum_update_fused(0.9, &mut mf, &g);
+                let mut ms = m0.clone();
+                ScalarBackend.momentum_update(0.9, &mut ms, &g).unwrap();
+                for i in 0..n {
+                    if !close(mf[i], ms[i], 4) {
+                        return Err(format!("momentum[{i}] n={n}"));
+                    }
+                }
+                // precond
+                let mut pf = p0.clone();
+                precond_step_fused(1e-8, &mut pf, &m0, &v0, 1e-3);
+                let mut ps = p0.clone();
+                ScalarBackend
+                    .precond_step(1e-8, &mut ps, &m0, &v0, 1e-3)
+                    .unwrap();
+                for i in 0..n {
+                    if !close(pf[i], ps[i], 8) {
+                        return Err(format!("precond[{i}] n={n}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn refresh_is_bitwise_copy_plus_update() {
+        // The fused single-pass refresh must equal the two-pass
+        // copy_from_slice + in-place update it replaces, bit for bit.
+        forall(
+            60,
+            |r| r.range(0, 4097),
+            |&n: &usize| {
+                let mut rng = Rng::new(n as u64 + 13);
+                let shared = rng.normal_vec(n, 0.5);
+                let g = rng.normal_vec(n, 1.0);
+                let mut fused = vec![0.0f32; n];
+                momentum_refresh_fused(0.9, &shared, &g, &mut fused);
+                let mut two_pass = shared.clone();
+                momentum_update_fused(0.9, &mut two_pass, &g);
+                if fused != two_pass {
+                    return Err(format!("refresh diverged at n={n}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn par_variants_are_bit_identical_to_sequential() {
+        let n = PAR_MIN_LEN + 137; // above the parallel threshold, odd tail
+        let h = AdamHyper::default();
+        let (p0, m0, v0, g) = state(n, 99);
+        let (mut p1, mut m1, mut v1) = (p0.clone(), m0.clone(), v0.clone());
+        adam_step_fused(h, &mut p1, &mut m1, &mut v1, &g, 1e-3);
+        let (mut p2, mut m2, mut v2) = (p0.clone(), m0.clone(), v0.clone());
+        adam_step_par(4, h, &mut p2, &mut m2, &mut v2, &g, 1e-3);
+        assert_eq!(p1, p2);
+        assert_eq!(m1, m2);
+        assert_eq!(v1, v2);
+
+        let mut q1 = p0.clone();
+        precond_step_fused(1e-8, &mut q1, &m0, &v0, 1e-3);
+        let mut q2 = p0.clone();
+        precond_step_par(4, 1e-8, &mut q2, &m0, &v0, 1e-3);
+        assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn beta2_one_keeps_v_bitwise_frozen() {
+        let h = AdamHyper { beta2: 1.0, ..AdamHyper::default() };
+        let mut rng = Rng::new(3);
+        let n = 100;
+        let mut p = rng.normal_vec(n, 1.0);
+        let mut m = rng.normal_vec(n, 0.1);
+        let v0: Vec<f32> =
+            rng.normal_vec(n, 1.0).iter().map(|x| x.abs() + 0.1).collect();
+        let mut v = v0.clone();
+        let g = rng.normal_vec(n, 1.0);
+        adam_step_fused(h, &mut p, &mut m, &mut v, &g, 1e-2);
+        assert_eq!(v, v0, "β₂=1 must freeze v exactly");
+    }
+
+    #[test]
+    fn compensate_variants_bitwise_agree() {
+        // The two pass-1 entry points (scratch-destination vs in-place)
+        // must return the same scale and compensated values bit for bit,
+        // across block and lane boundaries.
+        for n in [0usize, 1, 7, 8, 9, 31, 4095, 4096, 4097, 10_000] {
+            let mut rng = Rng::new(n as u64 + 21);
+            let value = rng.normal_vec(n, 1.0);
+            let err0 = rng.normal_vec(n, 0.3);
+            let mut comp = vec![0.0f32; n];
+            let s_a = compensate_l1(&value, &err0, &mut comp);
+            let mut err = err0.clone();
+            let s_b = compensate_l1_in_place(&value, &mut err);
+            assert_eq!(s_a, s_b, "scale diverged at n={n}");
+            assert_eq!(comp, err, "compensated tensor diverged at n={n}");
+        }
+    }
+}

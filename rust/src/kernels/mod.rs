@@ -1,0 +1,29 @@
+//! Fused, vectorization-friendly CPU kernels — the crate's single home
+//! for every elementwise hot loop.
+//!
+//! Layers above pick an engine, not a loop:
+//!
+//! * [`elementwise`] — fused Adam step, momentum refresh/update,
+//!   preconditioned step, and the EC-compress L1/compensate pass, all on
+//!   fixed [`elementwise::LANES`]-wide `chunks_exact` blocks with
+//!   `f32::mul_add` chains, plus `*_par` fan-outs over
+//!   [`crate::util::par`].
+//! * [`reduce`] — the pairwise (tree) f64 summation behind the
+//!   warmup-phase full-precision allreduce
+//!   ([`crate::comm::plain::PlainPath::TreeReduce`]).
+//!
+//! Everything here is runtime-checked against a retained scalar
+//! reference: the fused elementwise kernels against
+//! [`crate::optim::backend::ScalarBackend`] (ULP-bounded property tests),
+//! the tree reduction against
+//! [`crate::comm::plain::PlainPath::Reference`] (≤ 1 ULP).
+
+pub mod elementwise;
+pub mod reduce;
+
+pub use elementwise::{
+    adam_step_fused, adam_step_par, compensate_l1, compensate_l1_in_place,
+    momentum_refresh_fused, momentum_update_fused, precond_step_fused,
+    precond_step_par, AdamHyper, LANES,
+};
+pub use reduce::{tree_average_into, REDUCE_BLK};

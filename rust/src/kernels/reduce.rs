@@ -1,0 +1,151 @@
+//! Pairwise (tree) summation for the warmup-phase full-precision average.
+//!
+//! The reference `PlainPath::Reference` loop in [`crate::comm::plain`] is
+//! element-outer / worker-inner: per element it walks all `n` workers
+//! through one serial f64 accumulator — an n-deep dependency chain per
+//! element and no vectorization.  The kernel here inverts that:
+//!
+//! * **cache-blocked** — elements are processed in [`REDUCE_BLK`]-wide
+//!   blocks whose f64 accumulator strip stays resident in L1 while every
+//!   worker's slice streams through once;
+//! * **pairwise (tree) accumulation** — workers are combined as a binary
+//!   tree `((w₀‥w_{k/2}) + (w_{k/2}‥w_k))`, the classic pairwise-summation
+//!   order, in f64, so the accumulation error is O(log n) — at least as
+//!   accurate as the reference's sequential f64 sum;
+//! * **lane-parallel** — inside a block every element is independent, so
+//!   the add loops vectorize.
+//!
+//! Because each output element is a pure function of that element across
+//! workers, splitting the element range over threads (see
+//! `comm::plain::allreduce_average_path`) cannot change any result:
+//! thread counts and block boundaries are numerically irrelevant.
+//! Against the reference path the result is property-tested equal within
+//! 1 ULP (two f64 accumulation orders of ≤ a few dozen f32 terms round to
+//! the same f32 except at rounding-boundary ties).
+
+/// Element-block width: 8 KiB of f64 accumulator — resident in L1 along
+/// with the f32 input streams.
+pub const REDUCE_BLK: usize = 1024;
+
+/// Pairwise-tree sum of `inputs[w][offset + i]` over `w` into `acc[i]`.
+/// `acc.len()` must be ≤ [`REDUCE_BLK`] (enforced by the temp buffers).
+fn tree_sum_block(inputs: &[&[f32]], offset: usize, acc: &mut [f64]) {
+    let len = acc.len();
+    debug_assert!(len <= REDUCE_BLK);
+    match inputs.len() {
+        0 => unreachable!("tree_sum_block requires >= 1 worker"),
+        1 => {
+            let a = &inputs[0][offset..offset + len];
+            for i in 0..len {
+                acc[i] = a[i] as f64;
+            }
+        }
+        2 => {
+            let a = &inputs[0][offset..offset + len];
+            let b = &inputs[1][offset..offset + len];
+            for i in 0..len {
+                acc[i] = a[i] as f64 + b[i] as f64;
+            }
+        }
+        k => {
+            let mid = k / 2;
+            tree_sum_block(&inputs[..mid], offset, acc);
+            let mut tmp = [0.0f64; REDUCE_BLK];
+            let t = &mut tmp[..len];
+            tree_sum_block(&inputs[mid..], offset, t);
+            for i in 0..len {
+                acc[i] += t[i];
+            }
+        }
+    }
+}
+
+/// Average `inputs[w][offset..offset + out.len()]` over workers into
+/// `out`, block by block: pairwise f64 tree sum, then the reference's
+/// `sum / n` (in f64) rounded once to f32.
+pub fn tree_average_into(inputs: &[&[f32]], offset: usize, out: &mut [f32]) {
+    let n = inputs.len();
+    assert!(n > 0);
+    let div = n as f64;
+    let mut acc = [0.0f64; REDUCE_BLK];
+    let mut i = 0;
+    while i < out.len() {
+        let blk = REDUCE_BLK.min(out.len() - i);
+        let a = &mut acc[..blk];
+        tree_sum_block(inputs, offset + i, a);
+        for k in 0..blk {
+            out[i + k] = (a[k] / div) as f32;
+        }
+        i += blk;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn exact_small_average() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![3.0f32, 2.0, 1.0];
+        let views: Vec<&[f32]> = vec![&a, &b];
+        let mut out = vec![0.0f32; 3];
+        tree_average_into(&views, 0, &mut out);
+        assert_eq!(out, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn single_worker_is_identity() {
+        let a: Vec<f32> = (0..100).map(|i| i as f32 * 0.37 - 5.0).collect();
+        let views: Vec<&[f32]> = vec![&a];
+        let mut out = vec![0.0f32; 100];
+        tree_average_into(&views, 0, &mut out);
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn offset_slices_the_right_window() {
+        let inputs: Vec<Vec<f32>> =
+            (0..3).map(|w| (0..50).map(|i| (w * 100 + i) as f32).collect())
+                .collect();
+        let views: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut out = vec![0.0f32; 10];
+        tree_average_into(&views, 20, &mut out);
+        for (k, &o) in out.iter().enumerate() {
+            // mean over w of (w*100 + 20 + k) = 100 + 20 + k
+            assert_eq!(o, (120 + k) as f32);
+        }
+    }
+
+    #[test]
+    fn block_boundaries_and_worker_counts() {
+        // Straddle REDUCE_BLK and exercise every tree shape 1..=9.
+        for &len in &[REDUCE_BLK - 1, REDUCE_BLK, REDUCE_BLK + 1, 2500] {
+            for workers in 1..=9usize {
+                let base = Rng::new((len + workers) as u64);
+                let inputs: Vec<Vec<f32>> = (0..workers)
+                    .map(|w| base.fork(w as u64).normal_vec(len, 1.0))
+                    .collect();
+                let views: Vec<&[f32]> =
+                    inputs.iter().map(|v| v.as_slice()).collect();
+                let mut out = vec![0.0f32; len];
+                tree_average_into(&views, 0, &mut out);
+                // f64 sequential reference
+                for i in (0..len).step_by(171) {
+                    let mut acc = 0.0f64;
+                    for inp in &inputs {
+                        acc += inp[i] as f64;
+                    }
+                    let expect = (acc / workers as f64) as f32;
+                    let diff = (out[i] - expect).abs() as f64;
+                    assert!(
+                        diff <= (f32::EPSILON * expect.abs()) as f64 + 1e-12,
+                        "len={len} workers={workers} i={i}: {} vs {expect}",
+                        out[i]
+                    );
+                }
+            }
+        }
+    }
+}

@@ -14,13 +14,16 @@
 //!   timing model, training coordinator, benchmark harness.
 //!
 //! Start at [`coordinator`] for the training loop, [`comm`] for the paper's
-//! Figure 3 collective, and [`optim::onebit_adam`] for Algorithm 1.
+//! Figure 3 collective, [`optim::onebit_adam`] for Algorithm 1, and
+//! [`kernels`] for the fused elementwise/reduction hot loops everything
+//! dispatches to.
 
 pub mod comm;
 pub mod config;
 pub mod compress;
 pub mod coordinator;
 pub mod data;
+pub mod kernels;
 pub mod metrics;
 pub mod netsim;
 pub mod optim;

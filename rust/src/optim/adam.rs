@@ -2,9 +2,10 @@
 //! correction disabled, eq. (1)).  Gradients are averaged with a
 //! full-precision allreduce; every worker applies the identical update.
 
-use crate::comm::plain::allreduce_average;
-use crate::optim::backend::{AdamHyper, MathBackend, NativeBackend};
+use crate::comm::plain::{allreduce_average_path, PlainPath};
+use crate::optim::backend::{self, AdamHyper, MathBackend, NativeBackend};
 use crate::optim::{DistOptimizer, Phase, StepStats};
+use crate::util::par::default_threads;
 
 pub struct Adam {
     n: usize,
@@ -14,6 +15,8 @@ pub struct Adam {
     hyper: AdamHyper,
     backend: Box<dyn MathBackend>,
     avg_scratch: Vec<f32>,
+    /// Fan-out for the allreduce + elementwise stages (resolved once).
+    threads: usize,
     /// Step counter (exposed for the variance monitor).
     pub t: usize,
 }
@@ -37,6 +40,7 @@ impl Adam {
             hyper: AdamHyper::default(),
             backend,
             avg_scratch: vec![0.0; d],
+            threads: default_threads(),
             t: 0,
         }
     }
@@ -80,17 +84,22 @@ impl DistOptimizer for Adam {
 
     fn step(&mut self, grads: &[Vec<f32>], lr: f32) -> StepStats {
         assert_eq!(grads.len(), self.n);
-        let comm = allreduce_average(grads, &mut self.avg_scratch);
-        self.backend
-            .adam_step(
-                self.hyper,
-                &mut self.params,
-                &mut self.m,
-                &mut self.v,
-                &self.avg_scratch,
-                lr,
-            )
-            .expect("adam_step backend");
+        let comm = allreduce_average_path(
+            PlainPath::TreeReduce,
+            grads,
+            &mut self.avg_scratch,
+            self.threads,
+        );
+        backend::adam_step_auto(
+            self.backend.as_ref(),
+            self.threads,
+            self.hyper,
+            &mut self.params,
+            &mut self.m,
+            &mut self.v,
+            &self.avg_scratch,
+            lr,
+        );
         self.t += 1;
         StepStats { comm, phase: Phase::Warmup }
     }

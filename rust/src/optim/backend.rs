@@ -1,30 +1,22 @@
-//! Elementwise optimizer math, dispatched to either native Rust loops or
-//! the AOT-compiled L1 Pallas kernels via PJRT.
+//! Elementwise optimizer math, dispatched to the fused native kernels
+//! ([`crate::kernels`]), the retained scalar reference loops, or the
+//! AOT-compiled L1 Pallas kernels via PJRT.
 //!
-//! The two backends are parity-tested against each other
-//! (`rust/tests/parity.rs`) so every experiment can choose: PJRT for the
-//! E2E drivers (the "real" three-layer path), native for the 10⁴–10⁵-step
-//! convergence sweeps where per-dispatch overhead would dominate.
+//! The backends are parity-tested against each other
+//! (`rust/tests/parity.rs` for PJRT, the ULP-bounded property tests in
+//! `kernels::elementwise` for scalar-vs-fused), so every experiment can
+//! choose: PJRT for the E2E drivers (the "real" three-layer path), native
+//! for the 10⁴–10⁵-step convergence sweeps where per-dispatch overhead
+//! would dominate, scalar for executable-specification comparisons and
+//! the pre-kernel perf baseline in the benches.
 
 use std::rc::Rc;
 
+use crate::kernels;
 use crate::runtime::Runtime;
 use crate::util::error::{Error, Result};
 
-/// Bias-correction-free Adam hyperparameters (paper eq. (1); matches the
-/// static args baked into the AOT kernels).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct AdamHyper {
-    pub beta1: f32,
-    pub beta2: f32,
-    pub eps: f32,
-}
-
-impl Default for AdamHyper {
-    fn default() -> Self {
-        AdamHyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
-    }
-}
+pub use crate::kernels::AdamHyper;
 
 /// Elementwise optimizer math.
 pub trait MathBackend {
@@ -56,19 +48,72 @@ pub trait MathBackend {
     /// True when this backend's math is pure elementwise native code that
     /// may run concurrently from scoped worker threads on disjoint
     /// sub-slices with bit-identical results.  The PJRT backend is not
-    /// (single-threaded dispatch through the runtime), so callers fall
-    /// back to sequential whole-tensor calls.
+    /// (single-threaded dispatch through the runtime); the scalar
+    /// reference deliberately opts out so it always executes exactly like
+    /// the pre-kernel sequential code it preserves.
     fn elementwise_native(&self) -> bool {
         false
     }
 }
 
-/// Native Rust loops — identical math to the Pallas kernels, fused into
-/// single passes.
+/// Fused native kernels ([`crate::kernels::elementwise`]): single-pass
+/// `chunks_exact`-laned loops with `mul_add` contraction — the default
+/// engine for every native optimizer.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct NativeBackend;
 
 impl MathBackend for NativeBackend {
+    fn adam_step(
+        &self,
+        h: AdamHyper,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+    ) -> Result<()> {
+        kernels::adam_step_fused(h, p, m, v, g, lr);
+        Ok(())
+    }
+
+    fn momentum_update(
+        &self,
+        beta: f32,
+        m: &mut [f32],
+        g: &[f32],
+    ) -> Result<()> {
+        kernels::momentum_update_fused(beta, m, g);
+        Ok(())
+    }
+
+    fn precond_step(
+        &self,
+        eps: f32,
+        p: &mut [f32],
+        m: &[f32],
+        v_frozen: &[f32],
+        lr: f32,
+    ) -> Result<()> {
+        kernels::precond_step_fused(eps, p, m, v_frozen, lr);
+        Ok(())
+    }
+
+    fn elementwise_native(&self) -> bool {
+        true
+    }
+}
+
+/// The pre-kernel scalar loops, preserved verbatim: the executable
+/// specification the fused kernels are property-tested against, and the
+/// "pre-change scalar path" baseline the warmup-phase benches compare to.
+///
+/// Reports `elementwise_native() == false` on purpose — callers must
+/// never fan it out, so it always runs whole-tensor sequential exactly
+/// like the code it preserves.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ScalarBackend;
+
+impl MathBackend for ScalarBackend {
     fn adam_step(
         &self,
         h: AdamHyper,
@@ -119,9 +164,29 @@ impl MathBackend for NativeBackend {
         }
         Ok(())
     }
+}
 
-    fn elementwise_native(&self) -> bool {
-        true
+/// Warmup-phase Adam dispatch shared by every optimizer that owns a
+/// `Box<dyn MathBackend>`: block-parallel fused kernels when the backend
+/// is native elementwise (bit-identical split), the backend's own
+/// sequential whole-tensor call otherwise (PJRT dispatch, scalar
+/// reference).  One home for the policy so `Adam` and
+/// `OneBitAdam::warmup_step` can't drift apart.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_step_auto(
+    backend: &dyn MathBackend,
+    threads: usize,
+    h: AdamHyper,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+) {
+    if backend.elementwise_native() {
+        kernels::adam_step_par(threads, h, p, m, v, g, lr);
+    } else {
+        backend.adam_step(h, p, m, v, g, lr).expect("adam_step backend");
     }
 }
 
@@ -201,6 +266,7 @@ impl MathBackend for PjrtBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::check::ulp_diff;
     use crate::util::prng::Rng;
 
     #[test]
@@ -253,6 +319,47 @@ mod tests {
         for i in 0..n {
             assert!((p1[i] - p2[i]).abs() < 1e-6);
             assert!((m1[i] - m2[i]).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn scalar_backend_stays_within_ulps_of_native() {
+        // The executable-specification contract, sampled at the backend
+        // level (the exhaustive property tests live in
+        // kernels::elementwise).
+        let h = AdamHyper::default();
+        let mut rng = Rng::new(11);
+        let n = 777; // non-multiple-of-lane tail
+        let p0 = rng.normal_vec(n, 1.0);
+        let m0 = rng.normal_vec(n, 0.1);
+        let v0: Vec<f32> =
+            rng.normal_vec(n, 0.01).iter().map(|x| x.abs() + 1e-6).collect();
+        let g = rng.normal_vec(n, 1.0);
+        let (mut pn, mut mn, mut vn) = (p0.clone(), m0.clone(), v0.clone());
+        NativeBackend.adam_step(h, &mut pn, &mut mn, &mut vn, &g, 1e-3)
+            .unwrap();
+        let (mut ps, mut ms, mut vs) = (p0, m0, v0);
+        ScalarBackend.adam_step(h, &mut ps, &mut ms, &mut vs, &g, 1e-3)
+            .unwrap();
+        for i in 0..n {
+            assert!(
+                ulp_diff(mn[i], ms[i]) <= 4 || (mn[i] - ms[i]).abs() <= 1e-6,
+                "m[{i}]: {} vs {}",
+                mn[i],
+                ms[i]
+            );
+            assert!(
+                ulp_diff(vn[i], vs[i]) <= 4 || (vn[i] - vs[i]).abs() <= 1e-6,
+                "v[{i}]: {} vs {}",
+                vn[i],
+                vs[i]
+            );
+            assert!(
+                ulp_diff(pn[i], ps[i]) <= 8 || (pn[i] - ps[i]).abs() <= 1e-6,
+                "p[{i}]: {} vs {}",
+                pn[i],
+                ps[i]
+            );
         }
     }
 }

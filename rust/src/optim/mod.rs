@@ -30,7 +30,7 @@ pub mod oracle;
 pub mod variance_ablation;
 
 pub use adam::Adam;
-pub use backend::{MathBackend, NativeBackend};
+pub use backend::{MathBackend, NativeBackend, ScalarBackend};
 pub use double_squeeze::DoubleSqueeze;
 pub use ef_momentum::EfMomentumSgd;
 pub use local_sgd::LocalSgd;

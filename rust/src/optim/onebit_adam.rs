@@ -16,8 +16,10 @@
 //! 3. every worker applies
 //!    `x_{t+1} = x_t − γ · m̄_t / (√v_{T_w} + ε)` (line 13).
 
+use crate::comm::plain::{allreduce_average_path, PlainPath};
 use crate::comm::{CommStats, CompressedAllreduce};
 use crate::compress::CompressionKind;
+use crate::kernels;
 use crate::optim::backend::{AdamHyper, MathBackend, NativeBackend};
 use crate::optim::monitor::VarianceMonitor;
 use crate::optim::{DistOptimizer, Phase, StepStats};
@@ -75,6 +77,9 @@ pub struct OneBitAdam {
     /// Fan-out for the elementwise stages (resolved once — the step loop
     /// runs 10⁴–10⁵ times per sweep, so no per-step syscalls).
     threads: usize,
+    /// Engine of the warmup-phase full-precision allreduce (tree-reduce
+    /// fast path vs the scalar reference — see [`PlainPath`]).
+    plain_path: PlainPath,
     // scratch
     avg: Vec<f32>,
     local_m: Vec<Vec<f32>>,
@@ -110,6 +115,7 @@ impl OneBitAdam {
             t: 0,
             switch_step: None,
             threads: default_threads(),
+            plain_path: PlainPath::default(),
             avg: vec![0.0; d],
             local_m: (0..n_workers).map(|_| vec![0.0; d]).collect(),
         }
@@ -138,6 +144,14 @@ impl OneBitAdam {
     /// two are bit-identical, so this never changes a trajectory.
     pub fn set_allreduce_path(&mut self, path: crate::comm::AllreducePath) {
         self.car.set_path(path);
+    }
+
+    /// Select the warmup-phase full-precision allreduce engine
+    /// (multithreaded pairwise tree reduction vs the scalar f64
+    /// reference) — bench/diagnostic use; the two agree within 1 ULP
+    /// (property-tested in `comm::plain`).
+    pub fn set_plain_path(&mut self, path: PlainPath) {
+        self.plain_path = path;
     }
 
     /// Force the warmup→compression switch now (used by coordinators that
@@ -200,18 +214,27 @@ impl OneBitAdam {
     }
 
     fn warmup_step(&mut self, grads: &[Vec<f32>], lr: f32) -> CommStats {
-        let comm =
-            crate::comm::plain::allreduce_average(grads, &mut self.avg);
-        self.backend
-            .adam_step(
-                self.cfg.hyper,
-                &mut self.params,
-                &mut self.m,
-                &mut self.v,
-                &self.avg,
-                lr,
-            )
-            .expect("adam_step backend");
+        // Full-volume fp32 allreduce — the warmup throughput ceiling.
+        // Tree-reduce path: chunk-parallel over threads, pairwise f64
+        // accumulation per element (≤ 1 ULP from the scalar reference).
+        let comm = allreduce_average_path(
+            self.plain_path,
+            grads,
+            &mut self.avg,
+            self.threads,
+        );
+        // Fused Adam update, block-parallel over contiguous sub-slices
+        // when the math is native elementwise (bit-identical split).
+        crate::optim::backend::adam_step_auto(
+            self.backend.as_ref(),
+            self.threads,
+            self.cfg.hyper,
+            &mut self.params,
+            &mut self.m,
+            &mut self.v,
+            &self.avg,
+            lr,
+        );
         comm
     }
 
@@ -219,30 +242,47 @@ impl OneBitAdam {
         let d = self.params.len();
         let par = self.backend.elementwise_native() && d >= PAR_MIN_LEN;
         // Line 6: every worker refreshes the shared momentum with its own
-        // gradient — embarrassingly parallel across workers when the math
-        // is native elementwise (bit-identical to the sequential order).
+        // gradient.  The fused kernel writes `β₁·m̄ + (1−β₁)·g` straight
+        // into the per-worker buffer — no copy_from_slice double pass —
+        // and is embarrassingly parallel across workers (bit-identical to
+        // the sequential order).
         let beta1 = self.cfg.hyper.beta1;
-        if par && self.n > 1 {
-            let m: &[f32] = &self.m;
-            struct MomTask<'a> {
-                local: &'a mut [f32],
-                g: &'a [f32],
+        if self.backend.elementwise_native() {
+            if self.n == 1 {
+                // Single worker: the "fan-out" is one fused pass — skip
+                // task setup and threading entirely.
+                kernels::momentum_refresh_fused(
+                    beta1,
+                    &self.m,
+                    &grads[0],
+                    &mut self.local_m[0],
+                );
+            } else if par {
+                let m: &[f32] = &self.m;
+                struct MomTask<'a> {
+                    local: &'a mut [f32],
+                    g: &'a [f32],
+                }
+                let mut tasks: Vec<MomTask> = self
+                    .local_m
+                    .iter_mut()
+                    .zip(grads.iter())
+                    .map(|(local, g)| MomTask {
+                        local: local.as_mut_slice(),
+                        g: g.as_slice(),
+                    })
+                    .collect();
+                par_tasks(self.threads, &mut tasks, |t| {
+                    kernels::momentum_refresh_fused(beta1, m, t.g, t.local)
+                });
+            } else {
+                // Below the parallel threshold: direct fused loop — no
+                // per-step task allocation on the convergence-sweep hot
+                // path.
+                for (local, g) in self.local_m.iter_mut().zip(grads.iter()) {
+                    kernels::momentum_refresh_fused(beta1, &self.m, g, local);
+                }
             }
-            let mut tasks: Vec<MomTask> = self
-                .local_m
-                .iter_mut()
-                .zip(grads.iter())
-                .map(|(local, g)| MomTask {
-                    local: local.as_mut_slice(),
-                    g: g.as_slice(),
-                })
-                .collect();
-            par_tasks(self.threads, &mut tasks, |t| {
-                t.local.copy_from_slice(m);
-                NativeBackend
-                    .momentum_update(beta1, t.local, t.g)
-                    .expect("momentum backend");
-            });
         } else {
             for (i, g) in grads.iter().enumerate() {
                 self.local_m[i].copy_from_slice(&self.m);
@@ -255,40 +295,19 @@ impl OneBitAdam {
         let comm = self.car.allreduce(&self.local_m, &mut self.avg);
         self.m.copy_from_slice(&self.avg);
         // Line 13: preconditioned update against the frozen variance —
-        // elementwise, so block-parallel over contiguous sub-slices.
+        // elementwise, so block-parallel over contiguous sub-slices (the
+        // kernel falls back to one fused sequential pass below the
+        // parallel threshold).
         let eps = self.cfg.hyper.eps;
-        if par {
-            let threads = self.threads;
-            struct PreTask<'a> {
-                p: &'a mut [f32],
-                m: &'a [f32],
-                v: &'a [f32],
-            }
-            let blk = d.div_ceil(threads.max(1));
-            let mut tasks: Vec<PreTask> = Vec::with_capacity(threads);
-            {
-                let mut p_rest: &mut [f32] = &mut self.params;
-                let mut m_rest: &[f32] = &self.m;
-                let mut v_rest: &[f32] = &self.v;
-                while !p_rest.is_empty() {
-                    let take = blk.min(p_rest.len());
-                    // mem::take keeps the full borrow lifetime through the
-                    // split (a plain method call would reborrow the local).
-                    let (p_b, pr) =
-                        std::mem::take(&mut p_rest).split_at_mut(take);
-                    p_rest = pr;
-                    let (m_b, mr) = m_rest.split_at(take);
-                    m_rest = mr;
-                    let (v_b, vr) = v_rest.split_at(take);
-                    v_rest = vr;
-                    tasks.push(PreTask { p: p_b, m: m_b, v: v_b });
-                }
-            }
-            par_tasks(threads, &mut tasks, |t| {
-                NativeBackend
-                    .precond_step(eps, t.p, t.m, t.v, lr)
-                    .expect("precond backend");
-            });
+        if self.backend.elementwise_native() {
+            kernels::precond_step_par(
+                self.threads,
+                eps,
+                &mut self.params,
+                &self.m,
+                &self.v,
+                lr,
+            );
         } else {
             self.backend
                 .precond_step(eps, &mut self.params, &self.m, &self.v, lr)

@@ -187,19 +187,35 @@ pub fn smoke_mode() -> bool {
         .is_some_and(|v| !v.is_empty() && v != "0")
 }
 
-/// Collects one bench binary's results and merges them into the repo-root
-/// `BENCH_step.json` under a per-binary section: each run replaces only
-/// its own section, so `compression`, `comm_primitives`, and
-/// `optimizer_step` accumulate into one machine-readable file tracking
-/// the perf trajectory across PRs.
+/// Collects one bench binary's results and merges them into a repo-root
+/// JSON file under a per-binary section: each run replaces only its own
+/// section, so `compression`, `comm_primitives`, and `optimizer_step`
+/// accumulate into one machine-readable file tracking the perf
+/// trajectory across PRs.
+///
+/// [`BenchJson::new`] targets the default `BENCH_step.json`;
+/// [`BenchJson::new_in`] routes a section to a sibling file — the
+/// per-phase split (`BENCH_warmup.json` for warmup-phase numbers next to
+/// `BENCH_step.json` for compression-phase throughput) uses this.
 pub struct BenchJson {
     section: String,
+    file: String,
     entries: Vec<Json>,
 }
 
 impl BenchJson {
     pub fn new(section: &str) -> Self {
-        BenchJson { section: section.to_string(), entries: Vec::new() }
+        Self::new_in(section, "BENCH_step.json")
+    }
+
+    /// A section that lands in the repo-root file `file_name` instead of
+    /// the default `BENCH_step.json`.
+    pub fn new_in(section: &str, file_name: &str) -> Self {
+        BenchJson {
+            section: section.to_string(),
+            file: file_name.to_string(),
+            entries: Vec::new(),
+        }
     }
 
     pub fn push(&mut self, r: &BenchResult) {
@@ -217,14 +233,20 @@ impl BenchJson {
         self.entries.push(j);
     }
 
-    /// Repo-root `BENCH_step.json` (one level above the crate).
-    pub fn default_path() -> PathBuf {
-        Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_step.json")
+    /// Repo-root path for a bench artifact file (one level above the
+    /// crate).
+    pub fn root_path(file_name: &str) -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(file_name)
     }
 
-    /// Merge this section into the repo-root file.
+    /// Repo-root `BENCH_step.json` (one level above the crate).
+    pub fn default_path() -> PathBuf {
+        Self::root_path("BENCH_step.json")
+    }
+
+    /// Merge this section into its repo-root file.
     pub fn flush(&self) {
-        self.flush_to(&Self::default_path());
+        self.flush_to(&Self::root_path(&self.file));
     }
 
     /// Merge this section into `path`, preserving other sections.  Write
@@ -294,6 +316,17 @@ mod tests {
         assert!(fmt_ns(5e3).contains("µs"));
         assert!(fmt_ns(5e6).contains("ms"));
         assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn bench_json_new_in_targets_named_file() {
+        let j = BenchJson::new_in("warmup", "BENCH_warmup.json");
+        assert_eq!(j.file, "BENCH_warmup.json");
+        assert!(
+            BenchJson::root_path(&j.file).ends_with("BENCH_warmup.json")
+        );
+        // default constructor keeps the historical file
+        assert_eq!(BenchJson::new("x").file, "BENCH_step.json");
     }
 
     #[test]

@@ -138,6 +138,22 @@ pub fn gen_vec(rng: &mut Rng, lo: usize, hi: usize, std: f32) -> Vec<f32> {
     rng.normal_vec(n, std)
 }
 
+/// Distance between two f32 values in representable steps (ULPs), via the
+/// standard monotonic bits-to-integer transform.  Equal values — including
+/// `+0.0` vs `-0.0` — give 0; adjacent representables give 1.  Intended
+/// for finite inputs (the kernel equality properties).
+pub fn ulp_diff(a: f32, b: f32) -> u64 {
+    fn key(x: f32) -> i64 {
+        let u = x.to_bits();
+        if u & 0x8000_0000 == 0 {
+            u as i64
+        } else {
+            -((u & 0x7FFF_FFFF) as i64)
+        }
+    }
+    key(a).abs_diff(key(b))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,5 +194,17 @@ mod tests {
         let s = 100usize.shrink();
         assert!(s.contains(&0));
         assert!(s.iter().all(|&v| v < 100));
+    }
+
+    #[test]
+    fn ulp_diff_basics() {
+        assert_eq!(ulp_diff(1.0, 1.0), 0);
+        assert_eq!(ulp_diff(0.0, -0.0), 0);
+        assert_eq!(ulp_diff(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulp_diff(-1.0, f32::from_bits((-1.0f32).to_bits() + 1)), 1);
+        // straddling zero: one step each side of ±0
+        let tiny = f32::from_bits(1); // smallest positive subnormal
+        assert_eq!(ulp_diff(tiny, -tiny), 2);
+        assert!(ulp_diff(1.0, 2.0) > 1_000_000);
     }
 }

@@ -13,8 +13,16 @@ pub const PAR_MIN_LEN: usize = 1 << 15;
 
 /// Default fan-out for the data-parallel phases (capped: they are
 /// memory-bound, so threads beyond the memory channels stop helping).
+/// Resolved once per process — callers on the step hot path (10⁴–10⁵
+/// steps per sweep) must not pay a syscall per query.
 pub fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(16)
+    static CACHE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CACHE.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(16)
+    })
 }
 
 /// Run `f` once per task, splitting the task slice across up to `threads`
