@@ -14,9 +14,12 @@
 use onebit_adam::comm::plain::{
     allreduce_average, allreduce_average_path, PlainPath,
 };
-use onebit_adam::comm::{AllreducePath, CompressedAllreduce};
+use onebit_adam::comm::{
+    AllreducePath, CompressedAllreduce, HierarchicalAllreduce,
+};
 use onebit_adam::compress::CompressionKind;
 use onebit_adam::util::bench::{black_box, smoke_mode, BenchJson, Bencher};
+use onebit_adam::util::par::default_threads;
 use onebit_adam::util::prng::Rng;
 
 fn main() {
@@ -139,4 +142,92 @@ fn main() {
     }
     json.flush();
     warm_json.flush();
+
+    // ---- Hierarchical topology: the BENCH_hierarchy.json acceptance
+    // point is fixed at 8 workers × 1M elements (also in smoke mode — a
+    // single sample there is cheap), flat vs group sizes {2, 4} vs the
+    // chunk-streamed leader engine, each with `speedup_vs_flat`.
+    let mut hier_json = BenchJson::new_in("comm_hierarchy", "BENCH_hierarchy.json");
+    let workers = 8usize;
+    let n = 1 << 20;
+    let base = Rng::new(11);
+    let inputs: Vec<Vec<f32>> = (0..workers)
+        .map(|i| base.fork(i as u64).normal_vec(n, 1.0))
+        .collect();
+    let mut out = vec![0.0f32; n];
+
+    let mut flat =
+        CompressedAllreduce::new(workers, n, CompressionKind::OneBit);
+    let r_flat = b.run(
+        &format!("compressed_allreduce (flat) w={workers} n={n}"),
+        || {
+            black_box(flat.allreduce(&inputs, &mut out));
+        },
+    );
+    println!("{}", r_flat.report());
+    hier_json.push(&r_flat);
+
+    for group in [2usize, 4] {
+        let mut hier = HierarchicalAllreduce::new(
+            workers,
+            n,
+            CompressionKind::OneBit,
+            group,
+        );
+        let r_h = b.run(
+            &format!(
+                "hierarchical_allreduce g={group} w={workers} n={n}"
+            ),
+            || {
+                black_box(hier.allreduce(&inputs, &mut out));
+            },
+        );
+        let sp = r_h.speedup_over(&r_flat);
+        println!("{}  => {sp:.2}x vs flat", r_h.report());
+        hier_json.push_with(
+            &r_h,
+            &[("group_size", group as f64), ("speedup_vs_flat", sp)],
+        );
+    }
+
+    let mut piped = HierarchicalAllreduce::with_options(
+        workers,
+        n,
+        CompressionKind::OneBit,
+        4,
+        AllreducePath::Pipelined,
+        default_threads(),
+    );
+    let r_p = b.run(
+        &format!(
+            "hierarchical_allreduce (pipelined) g=4 w={workers} n={n}"
+        ),
+        || {
+            black_box(piped.allreduce(&inputs, &mut out));
+        },
+    );
+    let sp_p = r_p.speedup_over(&r_flat);
+    println!("{}  => {sp_p:.2}x vs flat", r_p.report());
+    hier_json.push_with(
+        &r_p,
+        &[("group_size", 4.0), ("speedup_vs_flat", sp_p)],
+    );
+
+    let mut flat_piped = CompressedAllreduce::with_options(
+        workers,
+        n,
+        CompressionKind::OneBit,
+        AllreducePath::Pipelined,
+        default_threads(),
+    );
+    let r_fp = b.run(
+        &format!("compressed_allreduce (pipelined) w={workers} n={n}"),
+        || {
+            black_box(flat_piped.allreduce(&inputs, &mut out));
+        },
+    );
+    let sp_fp = r_fp.speedup_over(&r_flat);
+    println!("{}  => {sp_fp:.2}x vs flat barrier", r_fp.report());
+    hier_json.push_with(&r_fp, &[("speedup_vs_flat", sp_fp)]);
+    hier_json.flush();
 }

@@ -54,6 +54,16 @@ pub enum AllreducePath {
     BitDomain,
     /// Pre-change decode-to-f32-then-average engine (reference/spec).
     DecodeAverage,
+    /// Chunk-streamed bit-domain engine: after the per-worker compensate
+    /// pass fixes each scale, every [`ChunkLayout`] chunk flows
+    /// pack (compress-to-wire) → exchange → vote-average/server-recompress
+    /// → decode-broadcast as ONE fused task on the scoped-thread pool, so
+    /// the packing of chunk `k+1` overlaps the exchange/serving of chunk
+    /// `k` instead of waiting at a phase barrier.  Bit-identical to
+    /// `BitDomain` (property-tested); with one worker or one thread the
+    /// stream degenerates and the barrier engine runs directly.  Applies
+    /// to the 1-bit kind; other kinds fall back to the barrier engines.
+    Pipelined,
 }
 
 /// One worker's compressed chunk on the wire (reference engine only — the
@@ -211,6 +221,10 @@ struct ServerTask<'a> {
     sscale: &'a mut f32,
     out: &'a mut [f32],
 }
+
+/// One worker's share of a chunk-stream task: its compensated chunk slice
+/// and the matching wire-word segment (see `fused_onebit_pipelined`).
+type ChunkPart<'a> = (&'a mut [f32], &'a mut [u32]);
 
 /// Per-worker phase-1 work item of the NBit engine.
 struct QuantTask<'a> {
@@ -547,11 +561,15 @@ impl CompressedAllreduce {
             AllreducePath::DecodeAverage => {
                 self.allreduce_reference(inputs, output)
             }
-            AllreducePath::BitDomain => {
+            path => {
                 if self.len > 0 {
                     match self.kind {
                         CompressionKind::OneBit => {
-                            self.fused_onebit(inputs, output)
+                            if path == AllreducePath::Pipelined {
+                                self.fused_onebit_pipelined(inputs, output)
+                            } else {
+                                self.fused_onebit(inputs, output)
+                            }
                         }
                         CompressionKind::None => {
                             self.fused_identity(inputs, output)
@@ -561,13 +579,29 @@ impl CompressedAllreduce {
                         }
                     }
                 }
-                CommStats {
-                    alltoall_bytes_per_gpu: self.arena.alltoall_bytes,
-                    allgather_bytes_per_gpu: self.arena.allgather_bytes,
-                    uncompressed_bytes: self.len * 4,
-                }
+                self.step_stats()
             }
         }
+    }
+
+    /// Wire accounting of one step — a pure function of (layout, kind),
+    /// cached at construction.  Identical to what [`Self::allreduce`]
+    /// returns on the arena engines (the reference engine recomputes it
+    /// and is property-tested equal).
+    pub fn step_stats(&self) -> CommStats {
+        CommStats {
+            alltoall_bytes_per_gpu: self.arena.alltoall_bytes,
+            allgather_bytes_per_gpu: self.arena.allgather_bytes,
+            uncompressed_bytes: self.len * 4,
+        }
+    }
+
+    /// Bytes of packed 1-bit sign words the all-to-all phase stages across
+    /// *all* workers (`n ×` the per-worker wire segment; 0 for non-1-bit
+    /// kinds, which don't use the packed arena).  The hierarchy's "g× less
+    /// inter-node payload" claim is asserted against this buffer size.
+    pub fn wire_buffer_bytes(&self) -> usize {
+        self.arena.wire_words.len() * 4
     }
 
     /// Threads for this step: small tensors stay sequential.
@@ -687,6 +721,164 @@ impl CompressedAllreduce {
                 )
             });
         }
+    }
+
+    /// 1-bit kind, chunk-streamed: stage A fixes every worker's scale with
+    /// the full-tensor compensate pass (the scale is a whole-tensor L1
+    /// norm, so it cannot be chunk-local); stage B then runs one fused
+    /// task per chunk — pack each worker's chunk straight into the wire
+    /// arena, vote-average the freshly packed words, EC-recompress, and
+    /// decode into the output view.  Tasks overlap across the thread pool:
+    /// chunk `k+1` is still being packed (compressed to the wire) while
+    /// chunk `k` is already being exchanged and served.  Every f32
+    /// operation and its order match the barrier engine, so the result is
+    /// bit-identical (property-tested).
+    ///
+    /// Like the barrier engine's *threaded* mode, building the stream's
+    /// task list allocates per step (the per-chunk regrouping); the
+    /// zero-allocation contract covers the sequential `BitDomain` engine,
+    /// which this engine delegates to whenever the stream cannot overlap
+    /// anyway (one worker or one thread).
+    fn fused_onebit_pipelined(
+        &mut self,
+        inputs: &[Vec<f32>],
+        output: &mut [f32],
+    ) {
+        let threads = self.step_threads();
+        if threads <= 1 || self.n == 1 {
+            // Degenerate pipeline (single worker, or no thread fan-out):
+            // the chunk stream collapses to the barrier engine, which is
+            // bit-identical — run it directly, skipping all task setup,
+            // exactly like the flat path's single-worker shortcut.
+            self.fused_onebit(inputs, output);
+            return;
+        }
+        let n = self.n;
+        let layout = &self.layout;
+        let worker_err = &mut self.worker_err;
+        let server_err = &mut self.server_err;
+        let Arena {
+            word_off,
+            wire_words,
+            worker_scales,
+            gathered_words,
+            gathered_scales,
+            avg,
+            ..
+        } = &mut self.arena;
+        let word_off: &[usize] = word_off;
+        let w = word_off[n]; // words per worker (>= 1 since len > 0)
+
+        // ---- Stage A: per-worker compensate — writes `err = value + err`
+        // and the whole-tensor scale (phase 1 of the barrier engine minus
+        // the packing, which moves into the chunk stream).
+        {
+            struct CompensateTask<'a> {
+                input: &'a [f32],
+                err: &'a mut [f32],
+                scale: &'a mut f32,
+            }
+            let mut tasks: Vec<CompensateTask> = inputs
+                .iter()
+                .zip(worker_err.iter_mut())
+                .zip(worker_scales.iter_mut())
+                .map(|((input, err), scale)| CompensateTask {
+                    input: input.as_slice(),
+                    err: err.as_mut_slice(),
+                    scale,
+                })
+                .collect();
+            par_tasks(threads, &mut tasks, |t| {
+                *t.scale = onebit_compensate(t.input, t.err);
+            });
+        }
+
+        // ---- Stage B: the chunk stream.  Regroup the per-worker mutable
+        // state by chunk: task `j` owns every worker's compensated chunk
+        // `j` and its wire-word segment, plus the chunk's server state —
+        // all disjoint, so tasks run in any order or in parallel.
+        let mut per_chunk: Vec<Vec<ChunkPart>> =
+            (0..n).map(|_| Vec::with_capacity(n)).collect();
+        for (err, words) in
+            worker_err.iter_mut().zip(wire_words.chunks_mut(w))
+        {
+            let mut err_rest: &mut [f32] = err.as_mut_slice();
+            let mut words_rest: &mut [u32] = words;
+            for (j, parts) in per_chunk.iter_mut().enumerate() {
+                let clen = layout.size(j);
+                let wlen = word_off[j + 1] - word_off[j];
+                let (e, er) =
+                    std::mem::take(&mut err_rest).split_at_mut(clen);
+                err_rest = er;
+                let (wd, wr) =
+                    std::mem::take(&mut words_rest).split_at_mut(wlen);
+                words_rest = wr;
+                parts.push((e, wd));
+            }
+        }
+        struct StreamTask<'a> {
+            /// Per-worker (compensated chunk, wire words) for this chunk.
+            parts: Vec<ChunkPart<'a>>,
+            avg: &'a mut [f32],
+            err: &'a mut [f32],
+            gw: &'a mut [u32],
+            sscale: &'a mut f32,
+            out: &'a mut [f32],
+        }
+        let mut tasks: Vec<StreamTask> = Vec::with_capacity(n);
+        let mut avg_rest: &mut [f32] = avg.as_mut_slice();
+        let mut out_rest: &mut [f32] = output;
+        let mut gw_rest: &mut [u32] = gathered_words.as_mut_slice();
+        for ((j, parts), (err, sscale)) in
+            per_chunk.into_iter().enumerate().zip(
+                server_err.iter_mut().zip(gathered_scales.iter_mut()),
+            )
+        {
+            let clen = layout.size(j);
+            let wlen = word_off[j + 1] - word_off[j];
+            let (avg_j, ar) =
+                std::mem::take(&mut avg_rest).split_at_mut(clen);
+            avg_rest = ar;
+            let (out_j, or) =
+                std::mem::take(&mut out_rest).split_at_mut(clen);
+            out_rest = or;
+            let (gw_j, gr) =
+                std::mem::take(&mut gw_rest).split_at_mut(wlen);
+            gw_rest = gr;
+            tasks.push(StreamTask {
+                parts,
+                avg: avg_j,
+                err: err.as_mut_slice(),
+                gw: gw_j,
+                sscale,
+                out: out_j,
+            });
+        }
+        let worker_scales: &[f32] = worker_scales;
+        let inv = 1.0 / n as f32;
+        par_tasks(threads, &mut tasks, |t| {
+            // pack: compress this chunk to the wire for every worker
+            for (i, part) in t.parts.iter_mut().enumerate() {
+                pack::quantize_pack_ec(part.0, worker_scales[i], part.1);
+            }
+            // exchange + server: scale-weighted vote average straight over
+            // the packed words (same per-element op order as the barrier
+            // engine's strided kernel — bit-identical).
+            t.avg.iter_mut().for_each(|a| *a = 0.0);
+            for (i, part) in t.parts.iter().enumerate() {
+                pack::accumulate_votes_scaled(
+                    &*part.1,
+                    worker_scales[i],
+                    t.avg,
+                );
+            }
+            t.avg.iter_mut().for_each(|a| *a *= inv);
+            let sscale = onebit_compensate(t.avg, t.err);
+            pack::quantize_pack_ec(t.err, sscale, t.gw);
+            *t.sscale = sscale;
+            // broadcast: decode the gathered chunk into the output view
+            pack::unpack_signs_scaled(t.gw, sscale, t.out);
+        });
     }
 
     /// Identity kind: double identity compression is the exact chunk mean —
@@ -1237,6 +1429,138 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_equals_bit_domain_property() {
+        // The chunk-streamed engine's contract: bit-for-bit equal to the
+        // barrier engine — outputs, wire stats, and both carried error
+        // states — across arbitrary lengths, worker counts 1–8, and
+        // multiple steps.  (Below PAR_MIN_LEN the stream degenerates to
+        // the barrier engine by design; the threaded stream itself is
+        // pinned by `pipelined_stream_matches_barrier_above_par_threshold`
+        // below.)
+        forall(
+            40,
+            |r| (r.range(0, 4097), r.range(1, 9)),
+            |&(len, workers): &(usize, usize)| {
+                let workers = workers.clamp(1, 8);
+                let mut pipe = CompressedAllreduce::with_options(
+                    workers,
+                    len,
+                    CompressionKind::OneBit,
+                    AllreducePath::Pipelined,
+                    2,
+                );
+                let mut barrier = CompressedAllreduce::with_options(
+                    workers,
+                    len,
+                    CompressionKind::OneBit,
+                    AllreducePath::BitDomain,
+                    1,
+                );
+                let mut out_p = vec![0.0f32; len];
+                let mut out_b = vec![0.0f32; len];
+                for step in 0..3u64 {
+                    let inputs = random_inputs(workers, len, 4000 + step);
+                    let s_p = pipe.allreduce(&inputs, &mut out_p);
+                    let s_b = barrier.allreduce(&inputs, &mut out_b);
+                    if out_p != out_b {
+                        return Err(format!(
+                            "output diverged: len={len} w={workers} \
+                             step={step}"
+                        ));
+                    }
+                    if s_p != s_b {
+                        return Err(format!(
+                            "wire stats diverged: {s_p:?} vs {s_b:?}"
+                        ));
+                    }
+                    for i in 0..workers {
+                        if pipe.worker_error(i) != barrier.worker_error(i)
+                            || pipe.server_error(i)
+                                != barrier.server_error(i)
+                        {
+                            return Err(format!(
+                                "error state diverged: len={len} \
+                                 w={workers} i={i} step={step}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn pipelined_stream_matches_barrier_above_par_threshold() {
+        // Above PAR_MIN_LEN with ≥ 2 threads the chunk stream actually
+        // engages (pack of chunk k+1 overlapping the serving of chunk k):
+        // it must still be bit-identical to the single-threaded barrier
+        // engine — for uneven chunk sizes too.
+        for extra in [0usize, 37] {
+            let n = 4;
+            let len = PAR_MIN_LEN + extra;
+            let mut pipe = CompressedAllreduce::with_options(
+                n,
+                len,
+                CompressionKind::OneBit,
+                AllreducePath::Pipelined,
+                4,
+            );
+            let mut barrier = CompressedAllreduce::with_options(
+                n,
+                len,
+                CompressionKind::OneBit,
+                AllreducePath::BitDomain,
+                1,
+            );
+            let mut out_p = vec![0.0f32; len];
+            let mut out_b = vec![0.0f32; len];
+            for step in 0..3u64 {
+                let inputs = random_inputs(n, len, 900 + step);
+                pipe.allreduce(&inputs, &mut out_p);
+                barrier.allreduce(&inputs, &mut out_b);
+                assert_eq!(out_p, out_b, "extra={extra} step={step}");
+                for i in 0..n {
+                    assert_eq!(
+                        pipe.worker_error(i),
+                        barrier.worker_error(i),
+                        "worker {i} extra={extra} step={step}"
+                    );
+                    assert_eq!(
+                        pipe.server_error(i),
+                        barrier.server_error(i),
+                        "server {i} extra={extra} step={step}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_single_worker_skips_the_fanout() {
+        // Degenerate pipeline: one worker means no exchange at all — the
+        // stream must collapse to the same EC-quantize the flat path runs
+        // (and report zero all-to-all traffic).
+        let len = PAR_MIN_LEN + 5;
+        let inputs = random_inputs(1, len, 41);
+        let mut pipe = CompressedAllreduce::with_options(
+            1,
+            len,
+            CompressionKind::OneBit,
+            AllreducePath::Pipelined,
+            4,
+        );
+        let mut flat =
+            CompressedAllreduce::new(1, len, CompressionKind::OneBit);
+        let mut out_p = vec![0.0f32; len];
+        let mut out_f = vec![0.0f32; len];
+        let s = pipe.allreduce(&inputs, &mut out_p);
+        flat.allreduce(&inputs, &mut out_f);
+        assert_eq!(out_p, out_f);
+        assert_eq!(s.alltoall_bytes_per_gpu, 0);
+    }
+
+    #[test]
     fn mid_run_path_switch_continues_trajectory() {
         // Both engines share the carried error state, so interleaving them
         // must produce the same trajectory as either engine alone.
@@ -1254,10 +1578,10 @@ mod tests {
         let mut out_mixed = vec![0.0f32; len];
         let mut out_pure = vec![0.0f32; len];
         for step in 0..6u64 {
-            mixed.set_path(if step % 2 == 0 {
-                AllreducePath::BitDomain
-            } else {
-                AllreducePath::DecodeAverage
+            mixed.set_path(match step % 3 {
+                0 => AllreducePath::BitDomain,
+                1 => AllreducePath::DecodeAverage,
+                _ => AllreducePath::Pipelined,
             });
             let inputs = random_inputs(n, len, 300 + step);
             mixed.allreduce(&inputs, &mut out_mixed);

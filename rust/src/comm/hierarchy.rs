@@ -1,0 +1,870 @@
+//! Hierarchical two-level compressed allreduce — the paper's multi-node
+//! deployment shape (and the topology-aware collective of the follow-ups:
+//! 1-bit LAMB, arXiv 2104.06069; 0/1 Adam, arXiv 2202.06009).
+//!
+//! Workers are grouped into "nodes" of `group_size` consecutive ranks.
+//! One collective step runs three stages:
+//!
+//! 1. **Intra-node reduce** (full precision, NVLink/PCIe tier): each node
+//!    reduces its members' tensors with the pairwise f64 tree summation of
+//!    [`crate::kernels::reduce`], producing one *scaled node mean*
+//!    `(Σ_{i∈node} x_i) · L/n` per node (`L` nodes, `n` workers total —
+//!    the `L/n` weighting makes the leader-level unweighted average
+//!    exactly the global mean even when `n % group_size != 0`).
+//! 2. **Leader exchange** (1-bit, NIC tier): the node leaders run the
+//!    existing EC gather/allgather ([`CompressedAllreduce`]) over the `L`
+//!    node tensors.  Error-feedback state lives **per leader** (`L` worker
+//!    errors + `L` server-chunk errors), not per worker — the carried
+//!    Algorithm-1 state shrinks by the group factor along with the wire
+//!    volume.
+//! 3. **Intra-node broadcast**: every node member adopts the gathered
+//!    tensor (in this SPMD simulation the shared output buffer *is* the
+//!    broadcast, exactly as in the flat path).
+//!
+//! Inter-node 1-bit payload drops by ~`group_size`× versus the flat
+//! single-level exchange (asserted via the wire-buffer sizes in the tests
+//! below); the intra-node stages move full-precision bytes only over the
+//! fast tier, which `netsim::collectives` prices separately.
+//!
+//! `group_size = 1` degenerates to the flat path bit-for-bit (every
+//! worker is its own leader and stages 1/3 are identities — the property
+//! tests pin this).  With `CompressionKind::None` the two-level reduce is
+//! computed entirely in f64 (per-node pairwise tree sums combined
+//! pairwise across nodes, one rounding at the end), which agrees with the
+//! plain [`crate::comm::plain::allreduce_average`] within 1 ULP.
+//!
+//! The leader exchange can run any [`AllreducePath`], including the
+//! chunk-streamed [`AllreducePath::Pipelined`] engine — that combination
+//! is [`CommTopology::HierarchicalPipelined`].
+
+use std::ops::Range;
+
+use crate::comm::compressed::{AllreducePath, CompressedAllreduce};
+use crate::compress::CompressionKind;
+use crate::kernels::reduce::{
+    tree_scaled_average_into, tree_sum_into, REDUCE_BLK,
+};
+use crate::util::par::{default_threads, par_tasks, PAR_MIN_LEN};
+
+use super::CommStats;
+
+/// Communication topology of the compressed allreduce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CommTopology {
+    /// Single-level: every worker talks 1-bit to every server chunk (the
+    /// paper's Figure 3 as implemented by [`CompressedAllreduce`]).
+    #[default]
+    Flat,
+    /// Two-level: full-precision intra-node reduce over groups of
+    /// `group_size` workers, 1-bit EC exchange between node leaders only,
+    /// intra-node broadcast.
+    Hierarchical { group_size: usize },
+    /// [`CommTopology::Hierarchical`] with the leader exchange running the
+    /// chunk-streamed [`AllreducePath::Pipelined`] engine.
+    HierarchicalPipelined { group_size: usize },
+}
+
+/// Stateful two-level compressed allreduce (see the module docs).
+pub struct HierarchicalAllreduce {
+    n: usize,
+    len: usize,
+    /// Workers per node (clamped to `1..=n`).
+    group: usize,
+    kind: CompressionKind,
+    /// Upper bound on scoped threads per stage (1 = always sequential).
+    threads: usize,
+    /// Node `k` owns worker ranks `groups[k]` (contiguous; the trailing
+    /// group may be short when `n % group != 0`).
+    groups: Vec<Range<usize>>,
+    /// Stage-2 collective over one rank per node — owns the per-leader
+    /// error-feedback state.
+    leaders: CompressedAllreduce,
+    /// Stage-1 outputs: one scaled node-mean tensor per node (unused for
+    /// the identity kind, whose reduce never leaves f64).
+    node_means: Vec<Vec<f32>>,
+}
+
+/// One block of the exact identity-kind reduce: per-node pairwise f64
+/// sums, pairwise combination across nodes (iterative halving), one
+/// rounding at the end — so the result differs from the plain
+/// single-level tree average only in f64 summation order (≤ 1 ULP).
+fn identity_exact_range(
+    groups: &[Range<usize>],
+    views: &[&[f32]],
+    n_workers: usize,
+    offset: usize,
+    out: &mut [f32],
+) {
+    let l = groups.len();
+    let div = n_workers as f64;
+    let mut node_acc = vec![0.0f64; l * REDUCE_BLK];
+    let mut i = 0;
+    while i < out.len() {
+        let blk = REDUCE_BLK.min(out.len() - i);
+        for (k, g) in groups.iter().enumerate() {
+            let strip =
+                &mut node_acc[k * REDUCE_BLK..k * REDUCE_BLK + blk];
+            tree_sum_into(&views[g.clone()], offset + i, strip);
+        }
+        // Pairwise (tree) combination of the node strips in f64.
+        let mut step = 1;
+        while step < l {
+            let mut k = 0;
+            while k + step < l {
+                let (head, tail) =
+                    node_acc.split_at_mut((k + step) * REDUCE_BLK);
+                let dst = &mut head[k * REDUCE_BLK..k * REDUCE_BLK + blk];
+                let src = &tail[..blk];
+                for (d, s) in dst.iter_mut().zip(src.iter()) {
+                    *d += *s;
+                }
+                k += 2 * step;
+            }
+            step *= 2;
+        }
+        for (o, &a) in
+            out[i..i + blk].iter_mut().zip(node_acc[..blk].iter())
+        {
+            *o = (a / div) as f32;
+        }
+        i += blk;
+    }
+}
+
+impl HierarchicalAllreduce {
+    /// Default engine for the leader exchange (bit-domain), threads
+    /// auto-sized to the machine.
+    pub fn new(
+        n_workers: usize,
+        len: usize,
+        kind: CompressionKind,
+        group_size: usize,
+    ) -> Self {
+        Self::with_options(
+            n_workers,
+            len,
+            kind,
+            group_size,
+            AllreducePath::BitDomain,
+            default_threads(),
+        )
+    }
+
+    /// Full control over the leader-exchange engine and thread budget.
+    pub fn with_options(
+        n_workers: usize,
+        len: usize,
+        kind: CompressionKind,
+        group_size: usize,
+        path: AllreducePath,
+        threads: usize,
+    ) -> Self {
+        assert!(n_workers > 0);
+        let group = group_size.clamp(1, n_workers);
+        let l = n_workers.div_ceil(group);
+        let groups: Vec<Range<usize>> = (0..l)
+            .map(|k| k * group..((k + 1) * group).min(n_workers))
+            .collect();
+        let leaders =
+            CompressedAllreduce::with_options(l, len, kind, path, threads);
+        let needs_means =
+            group > 1 && !matches!(kind, CompressionKind::None);
+        HierarchicalAllreduce {
+            n: n_workers,
+            len,
+            group,
+            kind,
+            threads: threads.max(1),
+            groups,
+            leaders,
+            node_means: if needs_means {
+                (0..l).map(|_| vec![0.0; len]).collect()
+            } else {
+                Vec::new()
+            },
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Workers per node (after clamping to `1..=n`).
+    pub fn group_size(&self) -> usize {
+        self.group
+    }
+
+    /// Number of nodes / leaders.
+    pub fn n_nodes(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn kind(&self) -> CompressionKind {
+        self.kind
+    }
+
+    /// Engine of the leader exchange.
+    pub fn path(&self) -> AllreducePath {
+        self.leaders.path()
+    }
+
+    /// Switch the leader-exchange engine in place (the per-leader error
+    /// state is shared across engines, exactly like the flat path).
+    pub fn set_path(&mut self, path: AllreducePath) {
+        self.leaders.set_path(path);
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+        self.leaders.set_threads(threads);
+    }
+
+    /// Reset the per-leader carried errors (warmup→compression boundary).
+    pub fn reset_errors(&mut self) {
+        self.leaders.reset_errors();
+    }
+
+    /// Leader `k`'s carried compression error (invariant checks) — the
+    /// per-leader EC state: there are `n_nodes()` of these, not
+    /// `n_workers()`.
+    pub fn leader_error(&self, k: usize) -> &[f32] {
+        self.leaders.worker_error(k)
+    }
+
+    /// Server error of leader chunk `j` (invariant checks).
+    pub fn server_error(&self, j: usize) -> &[f32] {
+        self.leaders.server_error(j)
+    }
+
+    /// The stage-2 leader collective (diagnostics / tests).
+    pub fn leaders(&self) -> &CompressedAllreduce {
+        &self.leaders
+    }
+
+    /// Bytes of packed 1-bit sign words staged for the inter-node
+    /// all-to-all across all leaders — `~1/group_size` of the flat path's
+    /// [`CompressedAllreduce::wire_buffer_bytes`] (the tentpole's g×
+    /// payload claim, asserted in the tests below).
+    pub fn inter_node_wire_buffer_bytes(&self) -> usize {
+        self.leaders.wire_buffer_bytes()
+    }
+
+    /// Run the collective: `inputs[i]` is worker `i`'s local tensor; on
+    /// return `output` holds the identical aggregated tensor every worker
+    /// ends with.  The returned [`CommStats`] cover the **inter-node**
+    /// phases (the 1-bit leader exchange); intra-node full-precision
+    /// traffic rides the fast tier and is priced by
+    /// [`crate::netsim::collectives::hierarchical_compressed_allreduce_time`].
+    pub fn allreduce(
+        &mut self,
+        inputs: &[Vec<f32>],
+        output: &mut [f32],
+    ) -> CommStats {
+        assert_eq!(inputs.len(), self.n);
+        assert_eq!(output.len(), self.len);
+        for inp in inputs {
+            assert_eq!(inp.len(), self.len);
+        }
+        if self.group == 1 {
+            // Every worker is its own node: stages 1 and 3 are identities
+            // and the leader exchange IS the flat collective —
+            // bit-for-bit (property-tested).
+            return self.leaders.allreduce(inputs, output);
+        }
+        let views: Vec<&[f32]> =
+            inputs.iter().map(|v| v.as_slice()).collect();
+        match self.kind {
+            CompressionKind::None => {
+                // Full-precision hierarchy: the two-level reduce stays in
+                // f64 end to end, one rounding at the end — within 1 ULP
+                // of the plain single-level average.
+                self.identity_exact(&views, output);
+                self.leaders.step_stats()
+            }
+            _ => {
+                self.reduce_nodes(&views);
+                self.leaders.allreduce(&self.node_means, output)
+            }
+        }
+    }
+
+    /// Threads for this step: small tensors stay sequential.
+    fn step_threads(&self) -> usize {
+        if self.len >= PAR_MIN_LEN {
+            self.threads
+        } else {
+            1
+        }
+    }
+
+    /// Stage 1: per-node full-precision reduce into the scaled node
+    /// means, fanned out one scoped thread per node for large tensors
+    /// (bit-identical split: each node's reduction is independent).
+    fn reduce_nodes(&mut self, views: &[&[f32]]) {
+        let div = self.n as f64 / self.groups.len() as f64;
+        let threads = self.step_threads();
+        let groups = &self.groups;
+        if threads <= 1 || groups.len() == 1 {
+            for (g, out) in groups.iter().zip(self.node_means.iter_mut()) {
+                tree_scaled_average_into(&views[g.clone()], 0, div, out);
+            }
+        } else {
+            struct NodeTask<'a> {
+                g: Range<usize>,
+                out: &'a mut [f32],
+            }
+            let mut tasks: Vec<NodeTask> = groups
+                .iter()
+                .cloned()
+                .zip(self.node_means.iter_mut())
+                .map(|(g, out)| NodeTask { g, out: out.as_mut_slice() })
+                .collect();
+            par_tasks(threads, &mut tasks, |t| {
+                tree_scaled_average_into(&views[t.g.clone()], 0, div, t.out)
+            });
+        }
+    }
+
+    /// Identity-kind exact path, block-parallel over contiguous output
+    /// sub-slices (each element is a pure function of that element across
+    /// workers, so the split is bit-identical for any thread count).
+    fn identity_exact(&self, views: &[&[f32]], output: &mut [f32]) {
+        let threads = self.step_threads();
+        let groups = self.groups.as_slice();
+        let n = self.n;
+        if threads <= 1 || output.is_empty() {
+            identity_exact_range(groups, views, n, 0, output);
+        } else {
+            let blk = output.len().div_ceil(threads);
+            let mut tasks: Vec<(usize, &mut [f32])> = output
+                .chunks_mut(blk)
+                .enumerate()
+                .map(|(i, chunk)| (i * blk, chunk))
+                .collect();
+            par_tasks(threads, &mut tasks, |t| {
+                identity_exact_range(groups, views, n, t.0, t.1)
+            });
+        }
+    }
+}
+
+/// Topology-dispatched collective: the flat single-level engine or the
+/// two-level hierarchy behind one `allreduce` surface — what
+/// [`crate::optim::onebit_adam::OneBitAdam`] constructs from its
+/// [`CommTopology`] config.
+pub enum Collective {
+    Flat(CompressedAllreduce),
+    Hierarchical(HierarchicalAllreduce),
+}
+
+impl Collective {
+    pub fn build(
+        topology: CommTopology,
+        n_workers: usize,
+        len: usize,
+        kind: CompressionKind,
+    ) -> Self {
+        match topology {
+            CommTopology::Flat => {
+                Collective::Flat(CompressedAllreduce::new(
+                    n_workers, len, kind,
+                ))
+            }
+            CommTopology::Hierarchical { group_size } => {
+                Collective::Hierarchical(HierarchicalAllreduce::new(
+                    n_workers, len, kind, group_size,
+                ))
+            }
+            CommTopology::HierarchicalPipelined { group_size } => {
+                Collective::Hierarchical(
+                    HierarchicalAllreduce::with_options(
+                        n_workers,
+                        len,
+                        kind,
+                        group_size,
+                        AllreducePath::Pipelined,
+                        default_threads(),
+                    ),
+                )
+            }
+        }
+    }
+
+    pub fn allreduce(
+        &mut self,
+        inputs: &[Vec<f32>],
+        output: &mut [f32],
+    ) -> CommStats {
+        match self {
+            Collective::Flat(c) => c.allreduce(inputs, output),
+            Collective::Hierarchical(h) => h.allreduce(inputs, output),
+        }
+    }
+
+    pub fn reset_errors(&mut self) {
+        match self {
+            Collective::Flat(c) => c.reset_errors(),
+            Collective::Hierarchical(h) => h.reset_errors(),
+        }
+    }
+
+    pub fn set_path(&mut self, path: AllreducePath) {
+        match self {
+            Collective::Flat(c) => c.set_path(path),
+            Collective::Hierarchical(h) => h.set_path(path),
+        }
+    }
+
+    pub fn as_flat(&self) -> Option<&CompressedAllreduce> {
+        match self {
+            Collective::Flat(c) => Some(c),
+            Collective::Hierarchical(_) => None,
+        }
+    }
+
+    pub fn as_hierarchical(&self) -> Option<&HierarchicalAllreduce> {
+        match self {
+            Collective::Flat(_) => None,
+            Collective::Hierarchical(h) => Some(h),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::plain::allreduce_average;
+    use crate::util::check::{forall, ulp_diff};
+    use crate::util::prng::Rng;
+
+    fn random_inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let base = Rng::new(seed);
+        (0..n)
+            .map(|i| base.fork(i as u64).normal_vec(len, 1.0))
+            .collect()
+    }
+
+    fn kind_of(idx: usize) -> CompressionKind {
+        match idx % 3 {
+            0 => CompressionKind::OneBit,
+            1 => CompressionKind::None,
+            _ => CompressionKind::NBit(4),
+        }
+    }
+
+    #[test]
+    fn group_size_one_is_bitwise_the_flat_path_property() {
+        // Satellite contract: with group_size = 1 the hierarchy must
+        // reproduce the flat AllreducePath bit for bit — outputs, wire
+        // stats, and the carried error states — for every kind, across
+        // lengths, worker counts 1–8, and multiple EC steps.
+        forall(
+            40,
+            |r| (r.range(0, 4097), r.range(1, 9), r.range(0, 3)),
+            |&(len, workers, kind_idx): &(usize, usize, usize)| {
+                let workers = workers.clamp(1, 8);
+                let kind = kind_of(kind_idx);
+                let mut hier = HierarchicalAllreduce::with_options(
+                    workers,
+                    len,
+                    kind,
+                    1,
+                    AllreducePath::BitDomain,
+                    2,
+                );
+                let mut flat = CompressedAllreduce::with_options(
+                    workers,
+                    len,
+                    kind,
+                    AllreducePath::BitDomain,
+                    2,
+                );
+                let mut out_h = vec![0.0f32; len];
+                let mut out_f = vec![0.0f32; len];
+                for step in 0..3u64 {
+                    let inputs = random_inputs(workers, len, 7000 + step);
+                    let s_h = hier.allreduce(&inputs, &mut out_h);
+                    let s_f = flat.allreduce(&inputs, &mut out_f);
+                    if out_h != out_f {
+                        return Err(format!(
+                            "output diverged: len={len} w={workers} \
+                             {kind:?} step={step}"
+                        ));
+                    }
+                    if s_h != s_f {
+                        return Err(format!(
+                            "stats diverged: {s_h:?} vs {s_f:?}"
+                        ));
+                    }
+                    for i in 0..workers {
+                        if hier.leader_error(i) != flat.worker_error(i)
+                            || hier.server_error(i) != flat.server_error(i)
+                        {
+                            return Err(format!(
+                                "error state diverged: len={len} \
+                                 w={workers} {kind:?} i={i}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn identity_kind_matches_plain_allreduce_property() {
+        // Satellite contract: with full-precision "compression" the
+        // hierarchical result is the plain allreduce average — within
+        // 1 ULP for group_size > 1 (the two-level f64 reduce differs from
+        // the single-level tree only in summation order), and within the
+        // flat identity engine's f32-accumulation tolerance at
+        // group_size = 1 (where the hierarchy IS the flat path, pinned
+        // bitwise by `group_size_one_is_bitwise_the_flat_path_property`).
+        forall(
+            60,
+            |r| (r.range(0, 4097), r.range(1, 9), r.range(0, 3)),
+            |&(len, workers, g_idx): &(usize, usize, usize)| {
+                let workers = workers.clamp(1, 8);
+                let g = [1usize, 2, 4][g_idx % 3];
+                let inputs =
+                    random_inputs(workers, len, (len * 13 + workers) as u64);
+                let mut exact = vec![0.0f32; len];
+                allreduce_average(&inputs, &mut exact);
+                let mut hier = HierarchicalAllreduce::new(
+                    workers,
+                    len,
+                    CompressionKind::None,
+                    g,
+                );
+                let mut out = vec![0.0f32; len];
+                hier.allreduce(&inputs, &mut out);
+                for i in 0..len {
+                    let (h, p) = (out[i], exact[i]);
+                    let ok = if hier.group_size() == 1 {
+                        // flat identity engine: worker-order f32
+                        // accumulation (same bound as the flat path's own
+                        // exact-average test, scaled for 8 workers)
+                        (h - p).abs() < 1e-4
+                    } else {
+                        ulp_diff(h, p) <= 1 || (h - p).abs() < 1e-10
+                    };
+                    if !ok {
+                        return Err(format!(
+                            "out[{i}]={h} vs plain {p} (len={len} \
+                             w={workers} g={g})"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn identity_kind_exact_on_non_divisible_groups() {
+        // The L/n weighting in stage 1 exists exactly for this case: a
+        // short trailing group must not be over-weighted.  workers = 5,
+        // group = 2 → nodes of sizes {2, 2, 1}.
+        let (workers, len, g) = (5usize, 777usize, 2usize);
+        let inputs = random_inputs(workers, len, 99);
+        let mut exact = vec![0.0f32; len];
+        allreduce_average(&inputs, &mut exact);
+        let mut hier = HierarchicalAllreduce::new(
+            workers,
+            len,
+            CompressionKind::None,
+            g,
+        );
+        assert_eq!(hier.n_nodes(), 3);
+        let mut out = vec![0.0f32; len];
+        hier.allreduce(&inputs, &mut out);
+        for i in 0..len {
+            assert!(
+                ulp_diff(out[i], exact[i]) <= 1
+                    || (out[i] - exact[i]).abs() < 1e-10,
+                "i={i}: {} vs {}",
+                out[i],
+                exact[i]
+            );
+        }
+    }
+
+    #[test]
+    fn onebit_non_divisible_topologies_are_finite_and_deterministic() {
+        // Worker counts not divisible by the group size, lengths smaller
+        // than the leader chunk count, and empty tensors all stay
+        // well-defined; fresh instances reproduce bit-identically.
+        for &(workers, g) in &[(3usize, 2usize), (5, 4), (7, 4), (8, 3)] {
+            for &len in &[0usize, 1, 2, 5, 63, 1001] {
+                let inputs = random_inputs(workers, len, 1234);
+                let mut a = HierarchicalAllreduce::new(
+                    workers,
+                    len,
+                    CompressionKind::OneBit,
+                    g,
+                );
+                let mut b = HierarchicalAllreduce::new(
+                    workers,
+                    len,
+                    CompressionKind::OneBit,
+                    g,
+                );
+                let mut out_a = vec![0.0f32; len];
+                let mut out_b = vec![0.0f32; len];
+                a.allreduce(&inputs, &mut out_a);
+                b.allreduce(&inputs, &mut out_b);
+                assert!(
+                    out_a.iter().all(|x| x.is_finite()),
+                    "w={workers} g={g} len={len}"
+                );
+                assert_eq!(out_a, out_b, "w={workers} g={g} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn onebit_hierarchy_tracks_the_exact_mean() {
+        // Sanity on the semantics (not just structure): the double-EC
+        // leader exchange of scaled node means still approximates the
+        // global mean, including on a non-divisible topology.
+        for &(workers, g) in &[(8usize, 4usize), (6, 4)] {
+            let len = 4096;
+            let inputs = random_inputs(workers, len, 5);
+            let mut exact = vec![0.0f32; len];
+            allreduce_average(&inputs, &mut exact);
+            let mut hier = HierarchicalAllreduce::new(
+                workers,
+                len,
+                CompressionKind::OneBit,
+                g,
+            );
+            let mut out = vec![0.0f32; len];
+            hier.allreduce(&inputs, &mut out);
+            // 1-bit double compression: the output is ± the server scale;
+            // check the scale magnitude is in the right ballpark and the
+            // signs mostly agree with the exact mean.
+            let agree = out
+                .iter()
+                .zip(exact.iter())
+                .filter(|(o, e)| (**o >= 0.0) == (**e >= 0.0))
+                .count();
+            assert!(
+                agree as f64 / len as f64 > 0.65,
+                "w={workers} g={g}: sign agreement {agree}/{len}"
+            );
+        }
+    }
+
+    #[test]
+    fn hierarchy_cuts_inter_node_payload_by_group_factor() {
+        // Acceptance criterion: group size g cuts the inter-node 1-bit
+        // payload by ~g×, asserted via the staged wire-buffer sizes AND
+        // the aggregate CommStats ledger.
+        let (n, len) = (8usize, 100_000usize);
+        for g in [2usize, 4] {
+            let mut flat =
+                CompressedAllreduce::new(n, len, CompressionKind::OneBit);
+            let mut hier = HierarchicalAllreduce::new(
+                n,
+                len,
+                CompressionKind::OneBit,
+                g,
+            );
+            let buf_ratio = flat.wire_buffer_bytes() as f64
+                / hier.inter_node_wire_buffer_bytes() as f64;
+            assert!(
+                buf_ratio > 0.9 * g as f64 && buf_ratio < 1.15 * g as f64,
+                "g={g}: wire-buffer ratio {buf_ratio}"
+            );
+            // Aggregate bytes actually sent in one step: n senders flat
+            // vs n/g leaders hierarchical.
+            let inputs = random_inputs(n, len, 3);
+            let mut out = vec![0.0f32; len];
+            let s_flat = flat.allreduce(&inputs, &mut out);
+            let s_hier = hier.allreduce(&inputs, &mut out);
+            let total_flat = n * s_flat.total_per_gpu();
+            let total_hier = hier.n_nodes() * s_hier.total_per_gpu();
+            let ratio = total_flat as f64 / total_hier as f64;
+            assert!(
+                ratio > 0.85 * g as f64 && ratio < 1.2 * g as f64,
+                "g={g}: ledger ratio {ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_node_has_no_inter_node_traffic() {
+        // group >= n → one leader → the inter-node exchange degenerates
+        // (same shortcut the flat path takes for a single worker).
+        let mut hier = HierarchicalAllreduce::new(
+            4,
+            512,
+            CompressionKind::OneBit,
+            8,
+        );
+        assert_eq!(hier.n_nodes(), 1);
+        assert_eq!(hier.group_size(), 4);
+        let inputs = random_inputs(4, 512, 8);
+        let mut out = vec![0.0f32; 512];
+        let stats = hier.allreduce(&inputs, &mut out);
+        assert_eq!(stats.alltoall_bytes_per_gpu, 0);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn single_worker_degenerates_to_flat() {
+        let inputs = random_inputs(1, 300, 21);
+        let mut hier = HierarchicalAllreduce::new(
+            1,
+            300,
+            CompressionKind::OneBit,
+            4,
+        );
+        let mut flat =
+            CompressedAllreduce::new(1, 300, CompressionKind::OneBit);
+        let mut out_h = vec![0.0f32; 300];
+        let mut out_f = vec![0.0f32; 300];
+        let s = hier.allreduce(&inputs, &mut out_h);
+        flat.allreduce(&inputs, &mut out_f);
+        assert_eq!(out_h, out_f);
+        assert_eq!(s.alltoall_bytes_per_gpu, 0);
+    }
+
+    #[test]
+    fn pipelined_leader_exchange_matches_barrier_exchange() {
+        // The chunk-streamed leader engine under the hierarchy must stay
+        // bit-identical to the barrier engine, with the stream actually
+        // engaged (len ≥ PAR_MIN_LEN, ≥ 2 threads, ≥ 2 leaders).
+        let (workers, g) = (8usize, 2usize);
+        let len = PAR_MIN_LEN + 11;
+        let mut pipe = HierarchicalAllreduce::with_options(
+            workers,
+            len,
+            CompressionKind::OneBit,
+            g,
+            AllreducePath::Pipelined,
+            4,
+        );
+        let mut barrier = HierarchicalAllreduce::with_options(
+            workers,
+            len,
+            CompressionKind::OneBit,
+            g,
+            AllreducePath::BitDomain,
+            1,
+        );
+        let mut out_p = vec![0.0f32; len];
+        let mut out_b = vec![0.0f32; len];
+        for step in 0..3u64 {
+            let inputs = random_inputs(workers, len, 600 + step);
+            pipe.allreduce(&inputs, &mut out_p);
+            barrier.allreduce(&inputs, &mut out_b);
+            assert_eq!(out_p, out_b, "step={step}");
+            for k in 0..pipe.n_nodes() {
+                assert_eq!(
+                    pipe.leader_error(k),
+                    barrier.leader_error(k),
+                    "leader {k} step={step}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn thread_counts_do_not_change_results() {
+        // Stage 1's per-node fan-out and the identity path's block split
+        // are bit-identical for any thread count (the ≤1-ULP/thread
+        // invariant the CI thread matrix guards).
+        for kind_idx in 0..3 {
+            let kind = kind_of(kind_idx);
+            let (workers, g) = (8usize, 4usize);
+            let len = PAR_MIN_LEN + 29;
+            let mut one = HierarchicalAllreduce::with_options(
+                workers,
+                len,
+                kind,
+                g,
+                AllreducePath::BitDomain,
+                1,
+            );
+            let mut many = HierarchicalAllreduce::with_options(
+                workers,
+                len,
+                kind,
+                g,
+                AllreducePath::BitDomain,
+                7,
+            );
+            let mut out_1 = vec![0.0f32; len];
+            let mut out_n = vec![0.0f32; len];
+            for step in 0..2u64 {
+                let inputs = random_inputs(workers, len, 80 + step);
+                one.allreduce(&inputs, &mut out_1);
+                many.allreduce(&inputs, &mut out_n);
+                assert_eq!(out_1, out_n, "{kind:?} step={step}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_leader_error_state_matches_node_count() {
+        // The per-leader EC invariant: carried state is per node leader,
+        // not per worker.
+        let mut hier = HierarchicalAllreduce::new(
+            8,
+            256,
+            CompressionKind::OneBit,
+            4,
+        );
+        assert_eq!(hier.n_nodes(), 2);
+        let inputs = random_inputs(8, 256, 55);
+        let mut out = vec![0.0f32; 256];
+        hier.allreduce(&inputs, &mut out);
+        assert!(hier.leader_error(0).iter().any(|&e| e != 0.0));
+        assert!(hier.leader_error(1).iter().any(|&e| e != 0.0));
+        hier.reset_errors();
+        assert!(hier.leader_error(0).iter().all(|&e| e == 0.0));
+        assert!(hier.leader_error(1).iter().all(|&e| e == 0.0));
+    }
+
+    #[test]
+    fn collective_builder_dispatches_topologies() {
+        let flat = Collective::build(
+            CommTopology::Flat,
+            4,
+            64,
+            CompressionKind::OneBit,
+        );
+        assert!(flat.as_flat().is_some());
+        let hier = Collective::build(
+            CommTopology::Hierarchical { group_size: 2 },
+            4,
+            64,
+            CompressionKind::OneBit,
+        );
+        let h = hier.as_hierarchical().expect("hierarchical");
+        assert_eq!(h.n_nodes(), 2);
+        assert_eq!(h.path(), AllreducePath::BitDomain);
+        let piped = Collective::build(
+            CommTopology::HierarchicalPipelined { group_size: 2 },
+            4,
+            64,
+            CompressionKind::OneBit,
+        );
+        let p = piped.as_hierarchical().expect("hierarchical");
+        assert_eq!(p.path(), AllreducePath::Pipelined);
+    }
+}

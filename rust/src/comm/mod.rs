@@ -11,17 +11,28 @@
 //! payloads in the packed sign-word domain end-to-end inside a persistent
 //! arena — zero heap allocations per step — and fans the per-worker /
 //! per-chunk stages out over scoped threads; the pre-change decode-average
-//! engine is retained as the property-tested reference.  The warmup-phase
+//! engine is retained as the property-tested reference, and a
+//! chunk-streamed engine ([`compressed::AllreducePath::Pipelined`])
+//! overlaps per-chunk compression with the exchange.  The warmup-phase
 //! full-precision average has the same two-engine structure
 //! ([`plain::PlainPath`]): a multithreaded pairwise tree reduction as the
 //! hot path, the scalar f64 loop as the reference.
+//!
+//! Topology is a second, orthogonal axis ([`hierarchy::CommTopology`]):
+//! the flat single-level exchange, or the two-level hierarchy
+//! ([`hierarchy::HierarchicalAllreduce`]) — full-precision intra-node
+//! reduce, 1-bit exchange between node leaders only (per-leader EC
+//! state), intra-node broadcast — which cuts inter-node 1-bit payload by
+//! the group factor.
 
 pub mod compressed;
 pub mod fabric;
+pub mod hierarchy;
 pub mod plain;
 
 pub use compressed::{AllreducePath, CompressedAllreduce};
 pub use fabric::ThreadedFabric;
+pub use hierarchy::{Collective, CommTopology, HierarchicalAllreduce};
 pub use plain::{allreduce_average, allreduce_average_path, PlainPath};
 
 /// Bytes that crossed the (simulated) wire during one collective, split by

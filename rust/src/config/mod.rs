@@ -9,7 +9,9 @@ use std::path::Path;
 
 use crate::util::error::{Error, Result};
 
-pub use presets::{SchedulePreset, TABLE2_PRESETS};
+pub use presets::{
+    SchedulePreset, TopologyPreset, TABLE2_PRESETS, TOPOLOGY_PRESETS,
+};
 
 /// A parsed `key = value` config file (`#` comments, blank lines ok).
 #[derive(Debug, Default, Clone)]

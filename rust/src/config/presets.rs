@@ -1,6 +1,13 @@
 //! The paper's published training schedules (Table 2 + §7.1), shipped as
 //! typed presets.  These are the full-scale numbers — the repro harness
 //! scales them down per DESIGN.md §4 but reports against these.
+//!
+//! [`TopologyPreset`] additionally maps the paper's two clusters to
+//! collective topologies: the hierarchical two-level allreduce groups
+//! workers by GPUs-per-node (one 1-bit leader per node), falling back to
+//! the flat exchange for single-node jobs.
+
+use crate::comm::CommTopology;
 
 /// One row of the paper's Table 2 (+ the SQuAD fine-tune schedule).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -106,9 +113,73 @@ impl SchedulePreset {
     }
 }
 
+/// A cluster's node shape, for topology-aware collective construction
+/// (paper §3.1: 4-GPU Ethernet nodes, 8-GPU InfiniBand nodes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TopologyPreset {
+    pub name: &'static str,
+    /// GPUs sharing one node (and one NIC).
+    pub gpus_per_node: usize,
+}
+
+/// The paper's two deployments (§3.1 / Table 1).
+pub const TOPOLOGY_PRESETS: &[TopologyPreset] = &[
+    TopologyPreset { name: "ethernet-4gpu", gpus_per_node: 4 },
+    TopologyPreset { name: "infiniband-8gpu", gpus_per_node: 8 },
+];
+
+impl TopologyPreset {
+    pub fn by_name(name: &str) -> Option<&'static TopologyPreset> {
+        TOPOLOGY_PRESETS.iter().find(|p| p.name == name)
+    }
+
+    /// Collective topology for an `n_workers` job on this cluster:
+    /// hierarchical with one leader per node when the job spans multiple
+    /// nodes (with the chunk-streamed leader engine when `pipelined`),
+    /// flat otherwise (a single node has no inter-node tier to save).
+    pub fn comm_topology(
+        &self,
+        n_workers: usize,
+        pipelined: bool,
+    ) -> CommTopology {
+        if n_workers <= self.gpus_per_node {
+            CommTopology::Flat
+        } else if pipelined {
+            CommTopology::HierarchicalPipelined {
+                group_size: self.gpus_per_node,
+            }
+        } else {
+            CommTopology::Hierarchical { group_size: self.gpus_per_node }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn topology_presets_map_to_collectives() {
+        let eth = TopologyPreset::by_name("ethernet-4gpu").unwrap();
+        assert_eq!(eth.gpus_per_node, 4);
+        // single node → flat
+        assert_eq!(eth.comm_topology(4, false), CommTopology::Flat);
+        // multi-node → one leader per 4-GPU node
+        assert_eq!(
+            eth.comm_topology(16, false),
+            CommTopology::Hierarchical { group_size: 4 }
+        );
+        assert_eq!(
+            eth.comm_topology(16, true),
+            CommTopology::HierarchicalPipelined { group_size: 4 }
+        );
+        let ib = TopologyPreset::by_name("infiniband-8gpu").unwrap();
+        assert_eq!(
+            ib.comm_topology(64, false),
+            CommTopology::Hierarchical { group_size: 8 }
+        );
+        assert!(TopologyPreset::by_name("nope").is_none());
+    }
 
     #[test]
     fn presets_match_paper_table2() {

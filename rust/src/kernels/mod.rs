@@ -26,4 +26,6 @@ pub use elementwise::{
     momentum_refresh_fused, momentum_update_fused, precond_step_fused,
     precond_step_par, AdamHyper, LANES,
 };
-pub use reduce::{tree_average_into, REDUCE_BLK};
+pub use reduce::{
+    tree_average_into, tree_scaled_average_into, tree_sum_into, REDUCE_BLK,
+};

@@ -64,9 +64,26 @@ fn tree_sum_block(inputs: &[&[f32]], offset: usize, acc: &mut [f64]) {
 /// `out`, block by block: pairwise f64 tree sum, then the reference's
 /// `sum / n` (in f64) rounded once to f32.
 pub fn tree_average_into(inputs: &[&[f32]], offset: usize, out: &mut [f32]) {
+    tree_scaled_average_into(inputs, offset, inputs.len() as f64, out);
+}
+
+/// [`tree_average_into`] with an arbitrary positive divisor: `out[k] =
+/// (pairwise-f64 Σ_w inputs[w][offset + k]) / div`, rounded once to f32.
+///
+/// The hierarchical allreduce's stage-1 intra-node reduce divides each
+/// node's sum by `n / L` (total workers over leader count) instead of the
+/// group size, so that the leader-level *unweighted* average of the node
+/// tensors is exactly the global mean even when the trailing group is
+/// short (non-divisible topologies).
+pub fn tree_scaled_average_into(
+    inputs: &[&[f32]],
+    offset: usize,
+    div: f64,
+    out: &mut [f32],
+) {
     let n = inputs.len();
     assert!(n > 0);
-    let div = n as f64;
+    assert!(div > 0.0);
     let mut acc = [0.0f64; REDUCE_BLK];
     let mut i = 0;
     while i < out.len() {
@@ -78,6 +95,17 @@ pub fn tree_average_into(inputs: &[&[f32]], offset: usize, out: &mut [f32]) {
         }
         i += blk;
     }
+}
+
+/// Pairwise-tree f64 sum of `inputs[w][offset + i]` over workers into
+/// `acc[i]` (overwriting), for one block of at most [`REDUCE_BLK`]
+/// elements.  Public building block for reductions that need the raw f64
+/// partial sums — the hierarchical identity-compression path combines
+/// per-node block sums in f64 and rounds exactly once.
+pub fn tree_sum_into(inputs: &[&[f32]], offset: usize, acc: &mut [f64]) {
+    assert!(!inputs.is_empty());
+    assert!(acc.len() <= REDUCE_BLK);
+    tree_sum_block(inputs, offset, acc);
 }
 
 #[cfg(test)]
@@ -115,6 +143,50 @@ mod tests {
         for (k, &o) in out.iter().enumerate() {
             // mean over w of (w*100 + 20 + k) = 100 + 20 + k
             assert_eq!(o, (120 + k) as f32);
+        }
+    }
+
+    #[test]
+    fn scaled_average_with_worker_count_divisor_is_the_plain_average() {
+        // div = n must reproduce tree_average_into bit for bit (the
+        // refactor contract: tree_average_into is the div = n special
+        // case).
+        let base = Rng::new(31);
+        let inputs: Vec<Vec<f32>> =
+            (0..5).map(|w| base.fork(w as u64).normal_vec(700, 1.0)).collect();
+        let views: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut plain = vec![0.0f32; 700];
+        tree_average_into(&views, 0, &mut plain);
+        let mut scaled = vec![0.0f32; 700];
+        tree_scaled_average_into(&views, 0, 5.0, &mut scaled);
+        assert_eq!(plain, scaled);
+    }
+
+    #[test]
+    fn scaled_average_divides_by_the_given_factor() {
+        let a = vec![2.0f32, 4.0, 6.0];
+        let b = vec![4.0f32, 2.0, 0.0];
+        let views: Vec<&[f32]> = vec![&a, &b];
+        let mut out = vec![0.0f32; 3];
+        // sum = (6, 6, 6); div 3 => (2, 2, 2)
+        tree_scaled_average_into(&views, 0, 3.0, &mut out);
+        assert_eq!(out, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn tree_sum_into_matches_sequential_f64() {
+        let base = Rng::new(77);
+        let inputs: Vec<Vec<f32>> =
+            (0..4).map(|w| base.fork(w as u64).normal_vec(100, 1.0)).collect();
+        let views: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut acc = vec![0.0f64; 40];
+        tree_sum_into(&views, 10, &mut acc);
+        for (k, &a) in acc.iter().enumerate() {
+            let mut expect = 0.0f64;
+            for inp in &inputs {
+                expect += inp[10 + k] as f64;
+            }
+            assert!((a - expect).abs() < 1e-9, "k={k}: {a} vs {expect}");
         }
     }
 

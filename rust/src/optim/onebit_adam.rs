@@ -10,14 +10,17 @@
 //! 1. worker `i` refreshes its local momentum
 //!    `m_t^(i) = β₁ m_{t−1} + (1−β₁) g_t^(i)` (line 6; `m_{t−1}` is the
 //!    *globally agreed* momentum of the previous step),
-//! 2. the fused momenta go through [`CompressedAllreduce`] (lines 7–11:
-//!    worker-side EC 1-bit compression, server-side average + second EC
-//!    compression, all-gather),
+//! 2. the fused momenta go through the compressed collective
+//!    ([`crate::comm::CompressedAllreduce`], or the two-level
+//!    [`crate::comm::HierarchicalAllreduce`] when the config selects a
+//!    hierarchical [`CommTopology`]) — lines 7–11: worker-side EC 1-bit
+//!    compression, server-side average + second EC compression,
+//!    all-gather,
 //! 3. every worker applies
 //!    `x_{t+1} = x_t − γ · m̄_t / (√v_{T_w} + ε)` (line 13).
 
 use crate::comm::plain::{allreduce_average_path, PlainPath};
-use crate::comm::{CommStats, CompressedAllreduce};
+use crate::comm::{Collective, CommStats, CommTopology};
 use crate::compress::CompressionKind;
 use crate::kernels;
 use crate::optim::backend::{AdamHyper, MathBackend, NativeBackend};
@@ -44,6 +47,13 @@ pub struct OneBitAdamConfig {
     /// (rare-token embeddings) would otherwise amplify the ±scale
     /// quantized momentum by 1/√v ≈ 10⁸ and blow up.  0 disables.
     pub v_floor_rel: f32,
+    /// Topology of the compression-stage collective: flat single-level
+    /// exchange (default), or the two-level hierarchy — full-precision
+    /// intra-node reduce, 1-bit exchange between node leaders only —
+    /// optionally with the chunk-streamed leader engine.  Pick via
+    /// [`crate::config::presets::TopologyPreset::comm_topology`] to match
+    /// a cluster's GPUs-per-node.
+    pub topology: CommTopology,
 }
 
 impl Default for OneBitAdamConfig {
@@ -55,6 +65,7 @@ impl Default for OneBitAdamConfig {
             stability_threshold: 0.96,
             min_warmup_steps: 100,
             v_floor_rel: 1e-4,
+            topology: CommTopology::Flat,
         }
     }
 }
@@ -69,7 +80,9 @@ pub struct OneBitAdam {
     cfg: OneBitAdamConfig,
     backend: Box<dyn MathBackend>,
     monitor: VarianceMonitor,
-    car: CompressedAllreduce,
+    /// Compression-stage collective, topology-dispatched (flat or
+    /// hierarchical per `cfg.topology`).
+    car: Collective,
     phase: Phase,
     /// Step index; `switch_step` records T_w once frozen.
     pub t: usize,
@@ -107,7 +120,12 @@ impl OneBitAdam {
             params: init,
             m: vec![0.0; d],
             v: vec![0.0; d],
-            car: CompressedAllreduce::new(n_workers, d, cfg.compression),
+            car: Collective::build(
+                cfg.topology,
+                n_workers,
+                d,
+                cfg.compression,
+            ),
             cfg,
             backend,
             monitor,
@@ -139,11 +157,23 @@ impl OneBitAdam {
         self.monitor.ratio()
     }
 
-    /// Select the compressed-allreduce engine (fused bit-domain vs the
-    /// pre-change decode-average reference) — bench/diagnostic use; the
-    /// two are bit-identical, so this never changes a trajectory.
+    /// Select the compressed-allreduce engine (fused bit-domain,
+    /// chunk-streamed pipelined, or the pre-change decode-average
+    /// reference) — bench/diagnostic use; the engines are bit-identical,
+    /// so this never changes a trajectory.  With a hierarchical topology
+    /// this selects the leader-exchange engine.
     pub fn set_allreduce_path(&mut self, path: crate::comm::AllreducePath) {
         self.car.set_path(path);
+    }
+
+    /// Topology the compression-stage collective was built with.
+    pub fn topology(&self) -> CommTopology {
+        self.cfg.topology
+    }
+
+    /// The collective itself (diagnostics / tests).
+    pub fn collective(&self) -> &Collective {
+        &self.car
     }
 
     /// Select the warmup-phase full-precision allreduce engine
@@ -624,5 +654,69 @@ mod tests {
         }
         // Internal m is a single shared vector — structurally consensual.
         assert_eq!(opt.momentum().len(), 32);
+    }
+
+    #[test]
+    fn hierarchical_topology_minimizes_quadratic() {
+        // The two-level collective must preserve Algorithm 1's
+        // convergence: same setup as
+        // `minimizes_quadratic_through_both_phases`, 8 workers in 2 nodes
+        // of 4 (leader-level EC only), slightly looser contraction bound
+        // to absorb the different compression-noise pattern.
+        let d = 32;
+        let mut rng = Rng::new(2);
+        let h: Vec<f32> = (0..d).map(|i| 0.5 + (i % 5) as f32 * 0.4).collect();
+        let init = rng.normal_vec(d, 1.0);
+        let f0 = quad_value(&init, &h);
+        let cfg = OneBitAdamConfig {
+            warmup_steps: Some(100),
+            topology: CommTopology::Hierarchical { group_size: 4 },
+            ..Default::default()
+        };
+        let mut opt = OneBitAdam::new(8, init, cfg);
+        assert_eq!(
+            opt.topology(),
+            CommTopology::Hierarchical { group_size: 4 }
+        );
+        assert_eq!(
+            opt.collective().as_hierarchical().unwrap().n_nodes(),
+            2
+        );
+        for t in 0..800 {
+            let lr = if t < 100 { 0.05 } else { 2e-4 };
+            let grads = quad_grads(opt.params(), &h, 8, &mut rng, 0.05);
+            opt.step(&grads, lr);
+        }
+        let f1 = quad_value(opt.params(), &h);
+        assert!(f1 < f0 * 0.05, "f0={f0} f1={f1}");
+        assert_eq!(opt.phase(), Phase::Compression);
+    }
+
+    #[test]
+    fn hierarchical_pipelined_topology_matches_hierarchical_exactly() {
+        // The chunk-streamed leader engine is bit-identical, so the whole
+        // optimizer trajectory must be too.
+        let d = 512;
+        let cfg_barrier = OneBitAdamConfig {
+            warmup_steps: Some(5),
+            topology: CommTopology::Hierarchical { group_size: 2 },
+            ..Default::default()
+        };
+        let cfg_pipe = OneBitAdamConfig {
+            warmup_steps: Some(5),
+            topology: CommTopology::HierarchicalPipelined { group_size: 2 },
+            ..Default::default()
+        };
+        let mut a = OneBitAdam::new(4, vec![0.3; d], cfg_barrier);
+        let mut b = OneBitAdam::new(4, vec![0.3; d], cfg_pipe);
+        let mut rng = Rng::new(12);
+        for _ in 0..20 {
+            let grads: Vec<Vec<f32>> =
+                (0..4).map(|_| rng.normal_vec(d, 1.0)).collect();
+            a.step(&grads, 1e-3);
+            b.step(&grads, 1e-3);
+        }
+        assert_eq!(a.params(), b.params());
+        assert_eq!(a.momentum(), b.momentum());
     }
 }

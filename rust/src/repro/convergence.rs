@@ -681,3 +681,218 @@ pub fn table3(art: &str, out: &str, fast: bool) -> Result<()> {
     )?;
     Ok(())
 }
+
+#[cfg(test)]
+mod tests {
+    //! Convergence-regression tier: the claims this whole module exists to
+    //! reproduce — "1-bit Adam matches uncompressed Adam's convergence" —
+    //! pinned as assertions on the built-in synthetic problems (no PJRT
+    //! artifacts needed), at smoke-sized iteration counts so
+    //! `cargo test -q` stays fast.  The stored tolerances below are the
+    //! regression contract: a change that pushes 1-bit Adam (flat or
+    //! hierarchical topology, 1-bit or 32-bit ablation) outside them
+    //! breaks the reproduction even if every structural test still
+    //! passes.
+
+    use crate::comm::CommTopology;
+    use crate::optim::backend::AdamHyper;
+    use crate::optim::onebit_adam::{OneBitAdam, OneBitAdamConfig};
+    use crate::optim::oracle::{QuadraticOracle, RippleOracle};
+    use crate::optim::{Adam, DistOptimizer};
+    use crate::util::prng::Rng;
+
+    /// Stored tolerance: 1-bit Adam's final loss may exceed Adam's by at
+    /// most this factor on the smoke-sized quadratic runs (both are at
+    /// their stochastic noise floors, which differ by the EC quantization
+    /// noise — the paper's claim is same *convergence*, not same floor).
+    const LOSS_TOL_FACTOR: f64 = 10.0;
+    /// Absolute slack added to the factor bound (noise-floor jitter).
+    const LOSS_TOL_ABS: f64 = 0.05;
+    /// Both optimizers must contract the initial loss by at least this
+    /// factor — "within tolerance of Adam" is vacuous if nothing
+    /// converged.
+    const CONTRACTION: f64 = 0.05;
+    /// Stored tolerance for the non-convex (ripple) run, on the final
+    /// squared gradient norm (Assumption 1's metric: losses are
+    /// basin-dependent on a multi-minimum landscape, gradient norms are
+    /// not).
+    const GRAD_TOL_FACTOR: f64 = 20.0;
+    const GRAD_TOL_ABS: f64 = 1.0;
+
+    const DIM: usize = 128;
+    const WORKERS: usize = 8;
+    const STEPS: usize = 900;
+
+    fn hyper() -> AdamHyper {
+        // Short-run-scaled beta2 (see the fig4a scaling note above).
+        AdamHyper { beta2: 0.97, ..AdamHyper::default() }
+    }
+
+    fn oracle(seed: u64) -> QuadraticOracle {
+        QuadraticOracle::new(DIM, WORKERS, 0.2, 2.0, 0.3, seed)
+    }
+
+    fn init(seed: u64) -> Vec<f32> {
+        Rng::new(seed).normal_vec(DIM, 1.0)
+    }
+
+    /// The shared schedule of the integration convergence suite,
+    /// smoke-sized: 10% linear lr warmup, constant, quarter at 60%.
+    fn lr_at(t: usize, steps: usize, lr0: f32) -> f32 {
+        if t < steps / 10 {
+            lr0 * (t + 1) as f32 / (steps / 10) as f32
+        } else if t < steps * 6 / 10 {
+            lr0
+        } else {
+            lr0 * 0.25
+        }
+    }
+
+    fn run_quad(
+        opt: &mut dyn DistOptimizer,
+        oracle: &mut QuadraticOracle,
+        steps: usize,
+        lr0: f32,
+    ) -> f64 {
+        for t in 0..steps {
+            let grads = oracle.grads(opt.params());
+            opt.step(&grads, lr_at(t, steps, lr0));
+        }
+        oracle.value(opt.params())
+    }
+
+    fn onebit_cfg(topology: CommTopology) -> OneBitAdamConfig {
+        OneBitAdamConfig {
+            warmup_steps: Some(STEPS / 5),
+            hyper: hyper(),
+            topology,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn onebit_final_loss_within_tolerance_of_adam_smoke() {
+        let mut adam = Adam::new(WORKERS, init(1)).with_hyper(hyper());
+        let f0 = oracle(9).value(&init(1));
+        let f_adam = run_quad(&mut adam, &mut oracle(9), STEPS, 2e-2);
+        let mut onebit = OneBitAdam::new(
+            WORKERS,
+            init(1),
+            onebit_cfg(CommTopology::Flat),
+        );
+        let f_onebit = run_quad(&mut onebit, &mut oracle(9), STEPS, 2e-2);
+        assert!(
+            f_adam < f0 * CONTRACTION,
+            "Adam failed to converge: f0={f0} f_adam={f_adam}"
+        );
+        assert!(
+            f_onebit < f0 * CONTRACTION,
+            "1-bit Adam failed to converge: f0={f0} f_onebit={f_onebit}"
+        );
+        assert!(
+            f_onebit < f_adam * LOSS_TOL_FACTOR + LOSS_TOL_ABS,
+            "1-bit Adam outside stored tolerance: adam={f_adam} \
+             onebit={f_onebit}"
+        );
+    }
+
+    #[test]
+    fn thirtytwo_bit_final_loss_within_tolerance_of_adam_smoke() {
+        // The "1-bit Adam (32-bits)" ablation: frozen variance,
+        // uncompressed momentum — must also track Adam.
+        use crate::compress::CompressionKind;
+        let mut adam = Adam::new(WORKERS, init(2)).with_hyper(hyper());
+        let f0 = oracle(11).value(&init(2));
+        let f_adam = run_quad(&mut adam, &mut oracle(11), STEPS, 2e-2);
+        let mut opt = OneBitAdam::new(
+            WORKERS,
+            init(2),
+            OneBitAdamConfig {
+                compression: CompressionKind::None,
+                ..onebit_cfg(CommTopology::Flat)
+            },
+        );
+        let f_32 = run_quad(&mut opt, &mut oracle(11), STEPS, 2e-2);
+        assert!(f_adam < f0 * CONTRACTION, "f0={f0} f_adam={f_adam}");
+        assert!(f_32 < f0 * CONTRACTION, "f0={f0} f_32={f_32}");
+        assert!(
+            f_32 < f_adam * LOSS_TOL_FACTOR + LOSS_TOL_ABS,
+            "32-bit ablation outside stored tolerance: adam={f_adam} \
+             thirtytwo={f_32}"
+        );
+    }
+
+    #[test]
+    fn hierarchical_onebit_final_loss_within_tolerance_smoke() {
+        // The two-level collective (per-leader EC state, pipelined leader
+        // engine) must preserve the convergence claim, not just the bit
+        // identities its property tests pin.
+        let mut adam = Adam::new(WORKERS, init(3)).with_hyper(hyper());
+        let f0 = oracle(13).value(&init(3));
+        let f_adam = run_quad(&mut adam, &mut oracle(13), STEPS, 2e-2);
+        let mut onebit = OneBitAdam::new(
+            WORKERS,
+            init(3),
+            onebit_cfg(CommTopology::HierarchicalPipelined {
+                group_size: 4,
+            }),
+        );
+        let f_hier = run_quad(&mut onebit, &mut oracle(13), STEPS, 2e-2);
+        assert!(f_adam < f0 * CONTRACTION, "f0={f0} f_adam={f_adam}");
+        assert!(
+            f_hier < f0 * CONTRACTION,
+            "hierarchical 1-bit Adam failed to converge: f0={f0} \
+             f_hier={f_hier}"
+        );
+        assert!(
+            f_hier < f_adam * LOSS_TOL_FACTOR + LOSS_TOL_ABS,
+            "hierarchical 1-bit Adam outside stored tolerance: \
+             adam={f_adam} hier={f_hier}"
+        );
+    }
+
+    #[test]
+    fn onebit_nonconvex_gradnorm_within_tolerance_of_adam_smoke() {
+        // Assumption 1 setting: on the multi-minimum ripple landscape the
+        // regression metric is the final squared gradient norm (losses
+        // depend on which basin a run settles in; stationarity does not).
+        let steps = 1000;
+        let workers = 4;
+        let dim = 64;
+        let x0 = Rng::new(6).normal_vec(dim, 2.0);
+        let g0 = RippleOracle::new(dim, workers, 0.1, 0.3, 3.0, 5)
+            .grad_norm2(&x0);
+        let run = |opt: &mut dyn DistOptimizer| {
+            let mut oracle =
+                RippleOracle::new(dim, workers, 0.1, 0.3, 3.0, 5);
+            for t in 0..steps {
+                let lr = if t < steps * 6 / 10 { 5e-3 } else { 5e-4 };
+                let grads = oracle.grads(opt.params());
+                opt.step(&grads, lr);
+            }
+            oracle.grad_norm2(opt.params())
+        };
+        let mut adam = Adam::new(workers, x0.clone()).with_hyper(hyper());
+        let g_adam = run(&mut adam);
+        let mut onebit = OneBitAdam::new(
+            workers,
+            x0,
+            OneBitAdamConfig {
+                warmup_steps: Some(steps / 5),
+                hyper: hyper(),
+                ..Default::default()
+            },
+        );
+        let g_onebit = run(&mut onebit);
+        assert!(g_adam < g0 * 0.2, "Adam: g0={g0} g_adam={g_adam}");
+        assert!(
+            g_onebit < g0 * 0.2,
+            "1-bit Adam: g0={g0} g_onebit={g_onebit}"
+        );
+        assert!(
+            g_onebit < g_adam * GRAD_TOL_FACTOR + GRAD_TOL_ABS,
+            "1-bit Adam outside stored gradient tolerance: \
+             adam={g_adam} onebit={g_onebit}"
+        );
+    }
+}

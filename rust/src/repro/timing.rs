@@ -5,6 +5,7 @@
 use crate::metrics::Table;
 use crate::netsim::collectives::{
     compressed_allreduce_time, fp16_allreduce_time,
+    hierarchical_compressed_allreduce_time,
 };
 use crate::netsim::{ComputeModel, NetworkModel};
 use crate::util::error::Result;
@@ -80,6 +81,19 @@ pub fn table1() -> Result<()> {
     Ok(())
 }
 
+/// Samples/second for one step whose communication costs `comm` seconds
+/// — the single home of the `step_compute + comm` throughput formula.
+fn samples_per_sec(
+    compute: &ComputeModel,
+    gpus: usize,
+    batch_per_gpu: usize,
+    accum: usize,
+    comm: f64,
+) -> f64 {
+    let step = compute.step_compute(accum) + comm;
+    (gpus * batch_per_gpu * accum) as f64 / step
+}
+
 /// Samples/second for one Adam (warmup) or 1-bit (compression) step.
 fn throughput(
     net: &NetworkModel,
@@ -95,8 +109,21 @@ fn throughput(
     } else {
         fp16_allreduce_time(net, gpus, params)
     };
-    let step = compute.step_compute(accum) + comm;
-    (gpus * batch_per_gpu * accum) as f64 / step
+    samples_per_sec(compute, gpus, batch_per_gpu, accum, comm)
+}
+
+/// Samples/second for a 1-bit step over the hierarchical two-level
+/// collective (one 1-bit leader per node, full-precision intra-node).
+fn throughput_hier(
+    net: &NetworkModel,
+    compute: &ComputeModel,
+    gpus: usize,
+    batch_per_gpu: usize,
+    accum: usize,
+    params: usize,
+) -> f64 {
+    let comm = hierarchical_compressed_allreduce_time(net, gpus, params);
+    samples_per_sec(compute, gpus, batch_per_gpu, accum, comm)
 }
 
 pub enum Fig5Variant {
@@ -137,7 +164,8 @@ pub fn fig5(variant: Fig5Variant) -> Result<()> {
         ("InfiniBand", NetworkModel::infiniband()),
     ] {
         let mut t = Table::new(&[
-            "gpus", "adam (samples/s)", "1bit (samples/s)", "speedup",
+            "gpus", "adam (samples/s)", "1bit (samples/s)",
+            "1bit-hier (samples/s)", "speedup", "hier speedup",
         ]);
         for gpus in [4usize, 8, 16, 32, 64, 128, 256] {
             let accum = match total_batch {
@@ -152,6 +180,10 @@ pub fn fig5(variant: Fig5Variant) -> Result<()> {
                 &net, &compute, gpus, batch_per_gpu, accum,
                 BERT_LARGE_PARAMS, true,
             );
+            let hier = throughput_hier(
+                &net, &compute, gpus, batch_per_gpu, accum,
+                BERT_LARGE_PARAMS,
+            );
             let sp = onebit / adam;
             if sp > best_speedup.0 {
                 best_speedup = (sp, gpus, net_name);
@@ -160,7 +192,9 @@ pub fn fig5(variant: Fig5Variant) -> Result<()> {
                 gpus.to_string(),
                 format!("{adam:.0}"),
                 format!("{onebit:.0}"),
+                format!("{hier:.0}"),
                 format!("{sp:.2}x"),
+                format!("{:.2}x", hier / adam),
             ]);
         }
         println!("{title} — {net_name}");
@@ -169,6 +203,11 @@ pub fn fig5(variant: Fig5Variant) -> Result<()> {
     println!(
         "peak compression-stage speedup: {:.2}x at {} GPUs on {}",
         best_speedup.0, best_speedup.1, best_speedup.2
+    );
+    println!(
+        "(1bit-hier: two-level collective, one 1-bit leader per node — \
+         pays full-precision intra-node traffic, wins when the NIC tier \
+         is the bottleneck)"
     );
     Ok(())
 }
@@ -232,22 +271,37 @@ pub fn fig9() -> Result<()> {
     println!(
         "Fig 9 — BERT-Large compression-stage speedup vs bandwidth (256 GPUs)"
     );
-    let mut t = Table::new(&["bandwidth", "adam step(s)", "1bit step(s)", "speedup"]);
+    let mut t = Table::new(&[
+        "bandwidth", "adam step(s)", "1bit step(s)", "1bit-hier step(s)",
+        "speedup", "hier speedup",
+    ]);
     for mbit in [50.0, 100.0, 200.0, 500.0, 1000.0, 2000.0, 3000.0] {
         let net = NetworkModel::shaped_ethernet(mbit * 1e6);
         let adam = compute.step_compute(1)
             + fp16_allreduce_time(&net, gpus, BERT_LARGE_PARAMS);
         let onebit = compute.step_compute(1)
             + compressed_allreduce_time(&net, gpus, BERT_LARGE_PARAMS);
+        let hier = compute.step_compute(1)
+            + hierarchical_compressed_allreduce_time(
+                &net,
+                gpus,
+                BERT_LARGE_PARAMS,
+            );
         t.row(&[
             format!("{mbit:.0} Mbit"),
             format!("{adam:.1}"),
             format!("{onebit:.1}"),
+            format!("{hier:.1}"),
             format!("{:.2}x", adam / onebit),
+            format!("{:.2}x", adam / hier),
         ]);
     }
     println!("{}", t.render());
     println!("(paper: 10.83x @50Mbit, 6.59x @1Gbit, 5.93x @2Gbit)");
+    println!(
+        "(1bit-hier: leader-only inter-node exchange — the g× payload cut \
+         pays off as bandwidth shrinks)"
+    );
     Ok(())
 }
 
@@ -349,6 +403,30 @@ mod tests {
             + compressed_allreduce_time(&net, 256, BERT_LARGE_PARAMS);
         let sp = adam / onebit;
         assert!(sp > 7.0 && sp < 17.0, "speedup {sp}");
+    }
+
+    #[test]
+    fn fig9_hierarchical_beats_flat_at_low_bandwidth() {
+        // At 50 Mbit the NIC tier is the bottleneck, so the leader-only
+        // exchange (g× smaller NIC payload) must beat the flat chunked
+        // all-to-all end to end.
+        let compute = ComputeModel::bert_large_v100();
+        let net = NetworkModel::shaped_ethernet(50e6);
+        let flat = compute.step_compute(1)
+            + compressed_allreduce_time(&net, 256, BERT_LARGE_PARAMS);
+        let hier = compute.step_compute(1)
+            + hierarchical_compressed_allreduce_time(
+                &net,
+                256,
+                BERT_LARGE_PARAMS,
+            );
+        assert!(hier < flat, "hier={hier} flat={flat}");
+        let adam = compute.step_compute(1)
+            + fp16_allreduce_time(&net, 256, BERT_LARGE_PARAMS);
+        assert!(
+            adam / hier > adam / flat,
+            "hier speedup must exceed flat speedup at 50 Mbit"
+        );
     }
 
     #[test]

@@ -4,9 +4,12 @@
 //!
 //! [`BenchJson`] additionally merges each bench binary's results into the
 //! repo-root `BENCH_step.json` so the perf trajectory is machine-readable
-//! across PRs; `OBADAM_BENCH_SMOKE=1` switches every bench to a
-//! single-sample smoke pass (CI keeps the binaries from rotting without
-//! paying for statistics).
+//! across PRs (per-phase siblings: `BENCH_warmup.json` for warmup-phase
+//! numbers, `BENCH_hierarchy.json` for the hierarchical-topology
+//! collective with its `speedup_vs_flat` field);
+//! `OBADAM_BENCH_SMOKE=1` switches every bench to a single-sample smoke
+//! pass (CI keeps the binaries from rotting without paying for
+//! statistics).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -42,6 +45,12 @@ impl BenchResult {
     /// Throughput in items/s given items processed per iteration.
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / (self.median_ns() * 1e-9)
+    }
+
+    /// Median-time speedup of `self` over `baseline` (> 1 means `self` is
+    /// faster) — the `speedup_vs_*` fields of the BENCH_*.json files.
+    pub fn speedup_over(&self, baseline: &BenchResult) -> f64 {
+        baseline.median_ns() / self.median_ns()
     }
 
     /// Machine-readable form for `BENCH_step.json`.
@@ -297,6 +306,22 @@ mod tests {
         });
         let med = r.median_ns();
         assert!(med > 0.8e6 && med < 20e6, "median {med} ns");
+    }
+
+    #[test]
+    fn speedup_over_is_baseline_over_self() {
+        let fast = BenchResult {
+            name: "fast".into(),
+            iters_per_sample: 1,
+            samples_ns: vec![10.0, 10.0, 10.0],
+        };
+        let slow = BenchResult {
+            name: "slow".into(),
+            iters_per_sample: 1,
+            samples_ns: vec![40.0, 40.0, 40.0],
+        };
+        assert!((fast.speedup_over(&slow) - 4.0).abs() < 1e-12);
+        assert!((slow.speedup_over(&fast) - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -15,14 +15,34 @@ pub const PAR_MIN_LEN: usize = 1 << 15;
 /// memory-bound, so threads beyond the memory channels stop helping).
 /// Resolved once per process — callers on the step hot path (10⁴–10⁵
 /// steps per sweep) must not pay a syscall per query.
+///
+/// `OBADAM_THREADS=<n>` overrides the machine default — CI runs the test
+/// suite under a `{1, 4, 8}`-thread matrix with it, which would catch any
+/// thread-count-dependent nondeterminism the ≤1-ULP / bit-invariant
+/// contracts promise against.
 pub fn default_threads() -> usize {
     static CACHE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
     *CACHE.get_or_init(|| {
+        let from_env = std::env::var("OBADAM_THREADS")
+            .ok()
+            .and_then(|v| parse_thread_override(&v));
+        if let Some(n) = from_env {
+            return n;
+        }
         std::thread::available_parallelism()
             .map(|p| p.get())
             .unwrap_or(1)
             .min(16)
     })
+}
+
+/// Parse an `OBADAM_THREADS` value: a positive integer, clamped to 64.
+/// `None` for empty/invalid/zero (fall back to the machine default).
+pub fn parse_thread_override(v: &str) -> Option<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Some(n.min(64)),
+        _ => None,
+    }
 }
 
 /// Run `f` once per task, splitting the task slice across up to `threads`
@@ -78,6 +98,20 @@ mod tests {
         let mut one = vec![5u32];
         par_tasks(4, &mut one, |x| *x += 1);
         assert_eq!(one, vec![6]);
+    }
+
+    #[test]
+    fn thread_override_parses_strictly() {
+        assert_eq!(parse_thread_override("4"), Some(4));
+        assert_eq!(parse_thread_override(" 8 "), Some(8));
+        assert_eq!(parse_thread_override("1"), Some(1));
+        // clamped to the sanity cap
+        assert_eq!(parse_thread_override("1000"), Some(64));
+        // zero/empty/garbage fall back to the machine default
+        assert_eq!(parse_thread_override("0"), None);
+        assert_eq!(parse_thread_override(""), None);
+        assert_eq!(parse_thread_override("four"), None);
+        assert_eq!(parse_thread_override("-2"), None);
     }
 
     #[test]
