@@ -1,0 +1,160 @@
+//! Transport data-plane bench: the compressed allreduce running over
+//! **real wire backends** — framed messages through in-memory queues vs
+//! loopback TCP sockets — at the acceptance point of 8 ranks × 1M
+//! elements, fp32 vs 1-bit payloads.
+//!
+//! Beyond throughput, this bench is the volume ledger the paper's §7.1
+//! claim is checked against in *measured bytes*: each configuration
+//! records its per-GPU payload volume, gross wire bytes (frame headers
+//! included), and the netsim model's prediction
+//! (`netsim::collectives::calibrate` must agree exactly), and the 1-bit
+//! rows carry `volume_reduction_vs_fp32` — asserted ≥ 5× right here so a
+//! regression fails the bench, not just a dashboard.
+//!
+//!     cargo bench --bench comm_transport
+//!
+//! Results land in the repo-root `BENCH_transport.json`
+//! (`OBADAM_BENCH_SMOKE=1` runs single-sample smoke passes in CI).
+
+use onebit_adam::compress::CompressionKind;
+use onebit_adam::netsim::collectives::calibrate;
+use onebit_adam::transport::{
+    TransportBackend, TransportCollective, TransportStats,
+};
+use onebit_adam::util::bench::{black_box, BenchJson, Bencher};
+use onebit_adam::util::prng::Rng;
+
+fn kind_name(kind: CompressionKind) -> &'static str {
+    match kind {
+        CompressionKind::None => "fp32",
+        CompressionKind::OneBit => "1bit",
+        CompressionKind::NBit(_) => "nbit",
+    }
+}
+
+fn backend_name(b: TransportBackend) -> &'static str {
+    match b {
+        TransportBackend::InMemory => "in-memory",
+        TransportBackend::Tcp => "tcp",
+    }
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut json =
+        BenchJson::new_in("comm_transport", "BENCH_transport.json");
+
+    // The acceptance configuration: 8 ranks × 1M elements (kept in smoke
+    // mode — the volume ledger must exist on every CI run).
+    let workers = 8usize;
+    let n = 1usize << 20;
+    let base = Rng::new(23);
+    let inputs: Vec<Vec<f32>> = (0..workers)
+        .map(|i| base.fork(i as u64).normal_vec(n, 1.0))
+        .collect();
+    let mut out = vec![0.0f32; n];
+
+    for backend in [TransportBackend::InMemory, TransportBackend::Tcp] {
+        let mut fp32_stats: Option<TransportStats> = None;
+        for kind in [CompressionKind::None, CompressionKind::OneBit] {
+            let mut car =
+                TransportCollective::new(backend, workers, n, kind)
+                    .expect("transport mesh");
+            let r = b.run(
+                &format!(
+                    "transport_allreduce ({}/{}) w={workers} n={n}",
+                    backend_name(backend),
+                    kind_name(kind)
+                ),
+                || {
+                    black_box(car.allreduce(&inputs, &mut out));
+                },
+            );
+            let ts = car.last_stats();
+            let cal = calibrate(kind, workers, n, &ts);
+            assert!(
+                cal.agrees(),
+                "netsim volume model disagrees with measured bytes: {cal:?}"
+            );
+            println!(
+                "{}  => {:.2} GB/s of input tensors",
+                r.report(),
+                r.throughput((n * workers) as f64 * 4.0) / 1e9
+            );
+            println!(
+                "  measured: {} payload B/gpu, {} gross B total \
+                 ({} frames, {} B header overhead; model agrees exactly)",
+                ts.comm.total_per_gpu(),
+                ts.gross_total(),
+                ts.frames_sent,
+                cal.header_overhead_bytes()
+            );
+            let mut extras = vec![
+                (
+                    "measured_payload_bytes_per_gpu",
+                    ts.comm.total_per_gpu() as f64,
+                ),
+                ("measured_gross_bytes_total", ts.gross_total() as f64),
+                (
+                    "netsim_predicted_payload_bytes_per_gpu",
+                    cal.predicted_payload_per_gpu as f64,
+                ),
+                (
+                    "header_overhead_bytes",
+                    cal.header_overhead_bytes() as f64,
+                ),
+                ("frames_sent", ts.frames_sent as f64),
+            ];
+            if let Some(fp) = &fp32_stats {
+                // the §7.1 acceptance: 1-bit wire volume ≤ 1/5 of fp32
+                let gross_red =
+                    fp.gross_total() as f64 / ts.gross_total() as f64;
+                let payload_red = fp.comm.total_per_gpu() as f64
+                    / ts.comm.total_per_gpu() as f64;
+                assert!(
+                    gross_red >= 5.0 && payload_red >= 5.0,
+                    "1-bit wire volume not ≤ 1/5 of fp32: gross \
+                     {gross_red:.2}x, payload {payload_red:.2}x"
+                );
+                println!(
+                    "  volume reduction vs fp32: {payload_red:.2}x \
+                     payload, {gross_red:.2}x gross"
+                );
+                extras.push(("volume_reduction_vs_fp32", payload_red));
+                extras.push(("gross_volume_reduction_vs_fp32", gross_red));
+            } else {
+                fp32_stats = Some(ts);
+            }
+            json.push_with(&r, &extras);
+        }
+    }
+
+    // Warmup-phase average over the wire (both backends), for the full
+    // two-phase wall-clock picture.
+    for backend in [TransportBackend::InMemory, TransportBackend::Tcp] {
+        let mut car = TransportCollective::new(
+            backend,
+            workers,
+            n,
+            CompressionKind::None,
+        )
+        .expect("transport mesh");
+        let r = b.run(
+            &format!(
+                "transport_plain_average ({}) w={workers} n={n}",
+                backend_name(backend)
+            ),
+            || {
+                black_box(car.plain_average(&inputs, &mut out));
+            },
+        );
+        println!("{}", r.report());
+        let ts = car.last_stats();
+        json.push_with(
+            &r,
+            &[("measured_gross_bytes_total", ts.gross_total() as f64)],
+        );
+    }
+
+    json.flush();
+}

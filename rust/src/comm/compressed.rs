@@ -139,16 +139,9 @@ impl Arena {
             if path == AllreducePath::DecodeAverage { len } else { 0 };
         // Per-GPU wire volume: all-to-all sends every chunk but one's own
         // (the max over workers is attained by the owner of the smallest
-        // chunk), all-gather broadcasts the largest owned chunk.
-        let mut total = 0usize;
-        let mut min = usize::MAX;
-        let mut max = 0usize;
-        for j in 0..n {
-            let wb = kind.wire_bytes(layout.size(j));
-            total += wb;
-            min = min.min(wb);
-            max = max.max(wb);
-        }
+        // chunk), all-gather broadcasts the largest owned chunk — the one
+        // shared scan every engine's accounting derives from.
+        let (total, min, max) = crate::comm::chunk_wire_volume(kind, layout);
         Arena {
             word_off,
             wire_words: if onebit {
@@ -520,6 +513,35 @@ impl CompressedAllreduce {
         for e in self.server_err.iter_mut() {
             e.iter_mut().for_each(|x| *x = 0.0);
         }
+    }
+
+    /// Snapshot the carried Algorithm-1 state for checkpointing: the `n`
+    /// worker errors followed by the `n` server-chunk errors.
+    pub fn export_errors(&self) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(2 * self.n);
+        out.extend(self.worker_err.iter().cloned());
+        out.extend(self.server_err.iter().cloned());
+        out
+    }
+
+    /// Restore a state exported by [`Self::export_errors`].  Returns
+    /// false (leaving the current state untouched) on any shape mismatch.
+    pub fn import_errors(&mut self, bufs: &[Vec<f32>]) -> bool {
+        if bufs.len() != 2 * self.n {
+            return false;
+        }
+        for i in 0..self.n {
+            if bufs[i].len() != self.worker_err[i].len()
+                || bufs[self.n + i].len() != self.server_err[i].len()
+            {
+                return false;
+            }
+        }
+        for i in 0..self.n {
+            self.worker_err[i].copy_from_slice(&bufs[i]);
+            self.server_err[i].copy_from_slice(&bufs[self.n + i]);
+        }
+        true
     }
 
     /// Carried worker error for invariant checks.

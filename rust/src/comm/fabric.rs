@@ -2,90 +2,55 @@
 //!
 //! The sequential lock-step driver ([`CompressedAllreduce`]) is the
 //! deterministic reference; this module runs the *same* collective algebra
-//! with one OS thread per worker and byte-serialized mailboxes, the way an
-//! MPI job actually executes.  `rust/tests/` asserts bit-equality between
-//! the two paths, so the convergence experiments can use either.
+//! with one OS thread per worker, the way an MPI job actually executes.
 //!
-//! Topology: rank `j` owns chunk `j` (Figure 3).  Phase barriers are
-//! realized with [`std::sync::Barrier`]; mailboxes are lock-protected
-//! per-destination slots written before the barrier and read after it —
-//! the same happens-before structure MPI_Alltoall provides.
+//! Since the transport subsystem landed, the fabric is a thin veneer over
+//! [`crate::transport::TransportCollective`] on the in-memory backend: the
+//! ad-hoc `WireChunk` struct and its `Mutex` mailboxes are gone — every
+//! message is a [`crate::transport::frame`]-encoded, checksummed frame
+//! (the 1-bit payload kind) delivered through per-pair FIFO queues, the
+//! same happens-before structure MPI point-to-point messaging provides.
+//! Swapping [`TransportBackend::InMemory`] for [`TransportBackend::Tcp`]
+//! runs the identical exchange over real loopback sockets; `rust/tests`
+//! and the property tests in `transport::runner` assert bit-equality of
+//! both against the sequential reference, so the convergence experiments
+//! can use any of the three.
 
-use std::sync::{Barrier, Mutex};
-
-use crate::compress::pack;
-use crate::compress::onebit::onebit_compress_ec;
-use crate::tensor::chunk::ChunkLayout;
+use crate::compress::CompressionKind;
+use crate::transport::{TransportBackend, TransportCollective};
 
 use super::CommStats;
 
-/// A 1-bit chunk in its serialized wire form.
-#[derive(Debug, Clone, Default)]
-struct WireChunk {
-    n: usize,
-    scale: f32,
-    signs: Vec<u32>,
-}
-
-impl WireChunk {
-    fn encode(values: &[f32], scale: f32) -> Self {
-        WireChunk {
-            n: values.len(),
-            scale,
-            signs: pack::pack_signs(values),
-        }
-    }
-
-    fn decode_into(&self, out: &mut [f32]) {
-        assert_eq!(out.len(), self.n);
-        pack::unpack_signs_scaled(&self.signs, self.scale, out);
-    }
-
-    fn wire_bytes(&self) -> usize {
-        pack::wire_size(self.n)
-    }
-}
-
-/// Per-worker persistent state (error feedback), owned by the fabric.
-struct RankState {
-    /// δ^(i) — worker-side compression error (full length).
-    worker_err: Vec<f32>,
-    /// δ̄_j — server-side error for the chunk this rank owns.
-    server_err: Vec<f32>,
-}
-
-/// Threaded 1-bit compressed allreduce over `n` ranks.
+/// Threaded 1-bit compressed allreduce over `n` ranks (frame-encoded
+/// messages over the in-memory transport; the paper's 1-bit kind — the
+/// ablations use the sequential driver).
 pub struct ThreadedFabric {
-    n: usize,
-    len: usize,
-    layout: ChunkLayout,
-    ranks: Vec<RankState>,
+    inner: TransportCollective,
 }
 
 impl ThreadedFabric {
-    /// Only the paper's 1-bit kind runs threaded (the ablations use the
-    /// sequential driver).
     pub fn new(n_workers: usize, len: usize) -> Self {
-        assert!(n_workers > 0);
-        let layout = ChunkLayout::new(len, n_workers);
-        let ranks = (0..n_workers)
-            .map(|j| RankState {
-                worker_err: vec![0.0; len],
-                server_err: vec![0.0; layout.size(j)],
-            })
-            .collect();
-        ThreadedFabric { n: n_workers, len, layout, ranks }
+        let inner = TransportCollective::new(
+            TransportBackend::InMemory,
+            n_workers,
+            len,
+            CompressionKind::OneBit,
+        )
+        .expect("in-memory transport mesh cannot fail to build");
+        ThreadedFabric { inner }
     }
 
     pub fn n_workers(&self) -> usize {
-        self.n
+        self.inner.n_workers()
     }
 
     pub fn reset_errors(&mut self) {
-        for r in self.ranks.iter_mut() {
-            r.worker_err.iter_mut().for_each(|x| *x = 0.0);
-            r.server_err.iter_mut().for_each(|x| *x = 0.0);
-        }
+        self.inner.reset_errors();
+    }
+
+    /// The transport collective underneath (diagnostics / tests).
+    pub fn transport(&self) -> &TransportCollective {
+        &self.inner
     }
 
     /// Run the collective with one thread per rank.  `inputs[i]` is rank
@@ -95,102 +60,7 @@ impl ThreadedFabric {
         inputs: &[Vec<f32>],
         output: &mut [f32],
     ) -> CommStats {
-        assert_eq!(inputs.len(), self.n);
-        assert_eq!(output.len(), self.len);
-        let n = self.n;
-        let layout = &self.layout;
-
-        // mailbox[j][i]: chunk j from rank i (written in phase 1, read by
-        // rank j in phase 2).  gathered[j]: recompressed average chunk.
-        let mailbox: Vec<Vec<Mutex<WireChunk>>> = (0..n)
-            .map(|_| (0..n).map(|_| Mutex::new(WireChunk::default())).collect())
-            .collect();
-        let gathered: Vec<Mutex<WireChunk>> =
-            (0..n).map(|_| Mutex::new(WireChunk::default())).collect();
-        let barrier = Barrier::new(n);
-        let alltoall_bytes = Mutex::new(0usize);
-        let allgather_bytes = Mutex::new(0usize);
-
-        std::thread::scope(|scope| {
-            for (rank, state) in self.ranks.iter_mut().enumerate() {
-                let mailbox = &mailbox;
-                let gathered = &gathered;
-                let barrier = &barrier;
-                let alltoall_bytes = &alltoall_bytes;
-                let allgather_bytes = &allgather_bytes;
-                let input = &inputs[rank];
-                scope.spawn(move || {
-                    // ---- Phase 1: compress local tensor, post chunks.
-                    let len = input.len();
-                    let mut comp = vec![0.0f32; len];
-                    let mut quant = vec![0.0f32; len];
-                    let scale = onebit_compress_ec(
-                        input,
-                        &mut state.worker_err,
-                        &mut comp,
-                        &mut quant,
-                    );
-                    let mut sent = 0usize;
-                    for j in 0..n {
-                        let r = layout.range(j);
-                        let chunk = WireChunk::encode(&quant[r], scale);
-                        if j != rank {
-                            sent += chunk.wire_bytes();
-                        }
-                        *mailbox[j][rank].lock().unwrap() = chunk;
-                    }
-                    {
-                        let mut b = alltoall_bytes.lock().unwrap();
-                        *b = (*b).max(sent);
-                    }
-                    barrier.wait(); // alltoall complete
-
-                    // ---- Phase 2: average owned chunk, recompress.
-                    let clen = layout.size(rank);
-                    let mut avg = vec![0.0f32; clen];
-                    let mut decode = vec![0.0f32; clen];
-                    for i in 0..n {
-                        mailbox[rank][i]
-                            .lock()
-                            .unwrap()
-                            .decode_into(&mut decode);
-                        for k in 0..clen {
-                            avg[k] += decode[k];
-                        }
-                    }
-                    let inv = 1.0 / n as f32;
-                    avg.iter_mut().for_each(|a| *a *= inv);
-                    let mut squant = vec![0.0f32; clen];
-                    let mut scomp = vec![0.0f32; clen];
-                    let sscale = onebit_compress_ec(
-                        &avg,
-                        &mut state.server_err,
-                        &mut scomp,
-                        &mut squant,
-                    );
-                    let chunk = WireChunk::encode(&squant, sscale);
-                    {
-                        let mut b = allgather_bytes.lock().unwrap();
-                        *b = (*b).max(chunk.wire_bytes());
-                    }
-                    *gathered[rank].lock().unwrap() = chunk;
-                    barrier.wait(); // allgather complete
-                });
-            }
-        });
-
-        // ---- Phase 3 (any rank's view — they are identical): decode.
-        for j in 0..n {
-            let r = self.layout.range(j);
-            gathered[j].lock().unwrap().decode_into(&mut output[r]);
-        }
-        let a2a = *alltoall_bytes.lock().unwrap();
-        let ag = *allgather_bytes.lock().unwrap();
-        CommStats {
-            alltoall_bytes_per_gpu: a2a,
-            allgather_bytes_per_gpu: ag,
-            uncompressed_bytes: self.len * 4,
-        }
+        self.inner.allreduce(inputs, output)
     }
 }
 
@@ -198,7 +68,6 @@ impl ThreadedFabric {
 mod tests {
     use super::*;
     use crate::comm::CompressedAllreduce;
-    use crate::compress::CompressionKind;
     use crate::util::prng::Rng;
 
     fn random_inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -262,5 +131,20 @@ mod tests {
         let stats = thr.allreduce(&inputs, &mut out);
         assert_eq!(stats.alltoall_bytes_per_gpu, 0);
         assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn fabric_messages_are_real_frames() {
+        // The port onto the transport layer: bytes actually cross the
+        // mesh as framed, checksummed messages — visible in the measured
+        // gross traffic (payloads + per-frame overhead).
+        let (n, len) = (3usize, 256usize);
+        let mut thr = ThreadedFabric::new(n, len);
+        let inputs = random_inputs(n, len, 12);
+        let mut out = vec![0.0f32; len];
+        let stats = thr.allreduce(&inputs, &mut out);
+        let ts = thr.transport().last_stats();
+        assert_eq!(ts.frames_sent, 2 * n * (n - 1));
+        assert!(ts.gross_total() > stats.total_per_gpu());
     }
 }

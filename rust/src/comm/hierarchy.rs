@@ -44,6 +44,7 @@ use crate::compress::CompressionKind;
 use crate::kernels::reduce::{
     tree_scaled_average_into, tree_sum_into, REDUCE_BLK,
 };
+use crate::transport::{TransportBackend, TransportCollective};
 use crate::util::par::{default_threads, par_tasks, PAR_MIN_LEN};
 
 use super::CommStats;
@@ -236,6 +237,18 @@ impl HierarchicalAllreduce {
         self.leaders.reset_errors();
     }
 
+    /// Snapshot the per-leader carried EC state (`L` worker errors then
+    /// `L` server-chunk errors) for checkpointing.
+    pub fn export_errors(&self) -> Vec<Vec<f32>> {
+        self.leaders.export_errors()
+    }
+
+    /// Restore a state exported by [`Self::export_errors`]; false on
+    /// shape mismatch.
+    pub fn import_errors(&mut self, bufs: &[Vec<f32>]) -> bool {
+        self.leaders.import_errors(bufs)
+    }
+
     /// Leader `k`'s carried compression error (invariant checks) — the
     /// per-leader EC state: there are `n_nodes()` of these, not
     /// `n_workers()`.
@@ -360,13 +373,20 @@ impl HierarchicalAllreduce {
     }
 }
 
-/// Topology-dispatched collective: the flat single-level engine or the
-/// two-level hierarchy behind one `allreduce` surface — what
+/// Topology-dispatched collective: the flat single-level engine, the
+/// two-level hierarchy, or the wire-backed transport runner behind one
+/// `allreduce` surface — what
 /// [`crate::optim::onebit_adam::OneBitAdam`] constructs from its
-/// [`CommTopology`] config.
+/// [`CommTopology`] (and transport-backend) config.
 pub enum Collective {
     Flat(CompressedAllreduce),
     Hierarchical(HierarchicalAllreduce),
+    /// The same collective executed over a real transport
+    /// ([`crate::transport::TransportCollective`]): framed messages over
+    /// in-memory queues or loopback TCP sockets, one OS thread per rank —
+    /// bit-identical to the in-process engines (property-tested in
+    /// `transport::runner`).
+    Transported(TransportCollective),
 }
 
 impl Collective {
@@ -376,6 +396,39 @@ impl Collective {
         len: usize,
         kind: CompressionKind,
     ) -> Self {
+        Self::build_with_transport(topology, n_workers, len, kind, None)
+    }
+
+    /// [`Collective::build`] with an optional wire backend: `None` keeps
+    /// the in-process SPMD engines; `Some(backend)` routes the collective
+    /// through the transport subsystem (the pipelined topology's leader
+    /// engine does not apply there — the wire runner has one engine).
+    ///
+    /// Panics if the backend's mesh cannot be built (e.g. loopback
+    /// sockets unavailable) — collective construction is infallible by
+    /// contract and a missing loopback is an environment error.
+    pub fn build_with_transport(
+        topology: CommTopology,
+        n_workers: usize,
+        len: usize,
+        kind: CompressionKind,
+        transport: Option<TransportBackend>,
+    ) -> Self {
+        if let Some(backend) = transport {
+            let group_size = match topology {
+                CommTopology::Flat => 1,
+                CommTopology::Hierarchical { group_size }
+                | CommTopology::HierarchicalPipelined { group_size } => {
+                    group_size
+                }
+            };
+            return Collective::Transported(
+                TransportCollective::with_topology(
+                    backend, n_workers, len, kind, group_size,
+                )
+                .expect("building the transport mesh failed"),
+            );
+        }
         match topology {
             CommTopology::Flat => {
                 Collective::Flat(CompressedAllreduce::new(
@@ -410,6 +463,7 @@ impl Collective {
         match self {
             Collective::Flat(c) => c.allreduce(inputs, output),
             Collective::Hierarchical(h) => h.allreduce(inputs, output),
+            Collective::Transported(t) => t.allreduce(inputs, output),
         }
     }
 
@@ -417,27 +471,59 @@ impl Collective {
         match self {
             Collective::Flat(c) => c.reset_errors(),
             Collective::Hierarchical(h) => h.reset_errors(),
+            Collective::Transported(t) => t.reset_errors(),
         }
     }
 
+    /// Snapshot the carried EC state for checkpointing — worker/leader
+    /// errors first, then server-chunk errors (all engines share the
+    /// layout, so checkpoints are interchangeable across them).
+    pub fn export_errors(&self) -> Vec<Vec<f32>> {
+        match self {
+            Collective::Flat(c) => c.export_errors(),
+            Collective::Hierarchical(h) => h.export_errors(),
+            Collective::Transported(t) => t.export_errors(),
+        }
+    }
+
+    /// Restore a state exported by [`Self::export_errors`]; false on
+    /// shape mismatch (state untouched).
+    pub fn import_errors(&mut self, bufs: &[Vec<f32>]) -> bool {
+        match self {
+            Collective::Flat(c) => c.import_errors(bufs),
+            Collective::Hierarchical(h) => h.import_errors(bufs),
+            Collective::Transported(t) => t.import_errors(bufs),
+        }
+    }
+
+    /// Select the in-process engine (no-op for the transported
+    /// collective, which has a single wire engine).
     pub fn set_path(&mut self, path: AllreducePath) {
         match self {
             Collective::Flat(c) => c.set_path(path),
             Collective::Hierarchical(h) => h.set_path(path),
+            Collective::Transported(_) => {}
         }
     }
 
     pub fn as_flat(&self) -> Option<&CompressedAllreduce> {
         match self {
             Collective::Flat(c) => Some(c),
-            Collective::Hierarchical(_) => None,
+            _ => None,
         }
     }
 
     pub fn as_hierarchical(&self) -> Option<&HierarchicalAllreduce> {
         match self {
-            Collective::Flat(_) => None,
             Collective::Hierarchical(h) => Some(h),
+            _ => None,
+        }
+    }
+
+    pub fn as_transported(&self) -> Option<&TransportCollective> {
+        match self {
+            Collective::Transported(t) => Some(t),
+            _ => None,
         }
     }
 }
@@ -866,5 +952,54 @@ mod tests {
         );
         let p = piped.as_hierarchical().expect("hierarchical");
         assert_eq!(p.path(), AllreducePath::Pipelined);
+    }
+
+    #[test]
+    fn collective_builder_dispatches_transports() {
+        // A transport backend reroutes any topology through the wire
+        // runner, carrying the topology's group size along.
+        let wire = Collective::build_with_transport(
+            CommTopology::Hierarchical { group_size: 2 },
+            4,
+            64,
+            CompressionKind::OneBit,
+            Some(TransportBackend::InMemory),
+        );
+        let t = wire.as_transported().expect("transported");
+        assert_eq!(t.group_size(), 2);
+        assert_eq!(t.n_nodes(), 2);
+        assert!(wire.as_flat().is_none());
+        assert!(wire.as_hierarchical().is_none());
+        // and the trajectory matches the in-process engine bit for bit
+        let mut a = Collective::build(
+            CommTopology::Hierarchical { group_size: 2 },
+            4,
+            256,
+            CompressionKind::OneBit,
+        );
+        let mut b = Collective::build_with_transport(
+            CommTopology::Hierarchical { group_size: 2 },
+            4,
+            256,
+            CompressionKind::OneBit,
+            Some(TransportBackend::InMemory),
+        );
+        let mut out_a = vec![0.0f32; 256];
+        let mut out_b = vec![0.0f32; 256];
+        for step in 0..3u64 {
+            let inputs = random_inputs(4, 256, 9100 + step);
+            a.allreduce(&inputs, &mut out_a);
+            b.allreduce(&inputs, &mut out_b);
+            assert_eq!(out_a, out_b, "step={step}");
+        }
+        // exported EC state is interchangeable across engines
+        let snap = a.export_errors();
+        assert!(b.import_errors(&snap));
+        for step in 0..2u64 {
+            let inputs = random_inputs(4, 256, 9500 + step);
+            a.allreduce(&inputs, &mut out_a);
+            b.allreduce(&inputs, &mut out_b);
+            assert_eq!(out_a, out_b, "post-import step={step}");
+        }
     }
 }

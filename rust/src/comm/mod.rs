@@ -24,6 +24,15 @@
 //! reduce, 1-bit exchange between node leaders only (per-leader EC
 //! state), intra-node broadcast — which cuts inter-node 1-bit payload by
 //! the group factor.
+//!
+//! The *wire* is a third axis ([`crate::transport`]): the same
+//! collectives (flat and hierarchical) run as framed, checksummed
+//! messages over pluggable backends — in-memory queues or real loopback
+//! TCP sockets — one OS thread per rank
+//! ([`crate::transport::TransportCollective`], reachable through
+//! [`hierarchy::Collective::build_with_transport`]).  All engines on all
+//! axes are property-tested bit-equal, so convergence results are
+//! engine-, topology-, and transport-invariant.
 
 pub mod compressed;
 pub mod fabric;
@@ -45,6 +54,30 @@ pub struct CommStats {
     pub allgather_bytes_per_gpu: usize,
     /// Equivalent uncompressed (fp32) bytes, for ratio reporting.
     pub uncompressed_bytes: usize,
+}
+
+/// Per-chunk payload-volume scan shared by every engine's wire
+/// accounting: `(total, min, max)` of `kind.wire_bytes(chunk)` over the
+/// layout's chunks.  The per-GPU convention derives from it everywhere —
+/// all-to-all sends every chunk but one's own (`total − min`, attained by
+/// the owner of the smallest chunk), all-gather broadcasts the largest
+/// owned chunk (`max`) — so the in-process arenas, the transport runner,
+/// and `netsim::collectives::calibrate` stay byte-identical by
+/// construction.
+pub fn chunk_wire_volume(
+    kind: crate::compress::CompressionKind,
+    layout: &crate::tensor::chunk::ChunkLayout,
+) -> (usize, usize, usize) {
+    let mut total = 0usize;
+    let mut min = usize::MAX;
+    let mut max = 0usize;
+    for j in 0..layout.n {
+        let wb = kind.wire_bytes(layout.size(j));
+        total += wb;
+        min = min.min(wb);
+        max = max.max(wb);
+    }
+    (total, min, max)
 }
 
 impl CommStats {

@@ -5,21 +5,30 @@
 //! stage can be relaunched from `v_{T_w}` repeatedly — exactly how the
 //! DeepSpeed release is used in practice.
 //!
-//! Format (little-endian):
+//! Format v2 (little-endian):
 //! ```text
 //! magic "OBAD" | version u32 | step u64 | phase u8 | dim u64
 //! | params f32×dim | m f32×dim | v f32×dim
-//! | crc32-like checksum u64 (fletcher)
+//! | ec_count u32 | per buffer: len u64, f32×len
+//! | crc32-like checksum u64 (fletcher, shared with the wire frames)
 //! ```
+//!
+//! The `ec` buffers are the compression-stage error-feedback state in
+//! [`crate::comm::Collective::export_errors`] order (worker/leader errors
+//! then server-chunk errors — per *leader* under the hierarchical
+//! topology), which makes a mid-compression save/restore resume the
+//! Algorithm-1 trajectory **bit-identically** (tested below).  Version-1
+//! files (no `ec` section) still load, with empty EC state.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use crate::optim::Phase;
 use crate::util::error::{Error, Result};
+use crate::util::hash::fletcher64;
 
 const MAGIC: &[u8; 4] = b"OBAD";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Serialized training state.
 #[derive(Debug, Clone, PartialEq)]
@@ -29,18 +38,10 @@ pub struct Checkpoint {
     pub params: Vec<f32>,
     pub m: Vec<f32>,
     pub v: Vec<f32>,
-}
-
-fn fletcher64(data: &[u8]) -> u64 {
-    let mut a: u64 = 0;
-    let mut b: u64 = 0;
-    for chunk in data.chunks(4) {
-        let mut word = [0u8; 4];
-        word[..chunk.len()].copy_from_slice(chunk);
-        a = (a + u32::from_le_bytes(word) as u64) % 0xFFFF_FFFF;
-        b = (b + a) % 0xFFFF_FFFF;
-    }
-    (b << 32) | a
+    /// Compression-stage error-feedback buffers
+    /// ([`crate::comm::Collective::export_errors`] order); empty for
+    /// warmup-phase checkpoints and files written by format v1.
+    pub ec: Vec<Vec<f32>>,
 }
 
 fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
@@ -74,12 +75,14 @@ impl Checkpoint {
         self.params.len()
     }
 
-    /// Serialize to bytes.
+    /// Serialize to bytes (format v2).
     pub fn to_bytes(&self) -> Vec<u8> {
         let dim = self.params.len();
         assert_eq!(self.m.len(), dim);
         assert_eq!(self.v.len(), dim);
-        let mut buf = Vec::with_capacity(21 + dim * 12 + 8);
+        let ec_bytes: usize =
+            self.ec.iter().map(|b| 8 + b.len() * 4).sum::<usize>() + 4;
+        let mut buf = Vec::with_capacity(21 + dim * 12 + ec_bytes + 8);
         buf.extend_from_slice(MAGIC);
         buf.extend_from_slice(&VERSION.to_le_bytes());
         buf.extend_from_slice(&self.step.to_le_bytes());
@@ -91,12 +94,18 @@ impl Checkpoint {
         push_f32s(&mut buf, &self.params);
         push_f32s(&mut buf, &self.m);
         push_f32s(&mut buf, &self.v);
+        buf.extend_from_slice(&(self.ec.len() as u32).to_le_bytes());
+        for b in &self.ec {
+            buf.extend_from_slice(&(b.len() as u64).to_le_bytes());
+            push_f32s(&mut buf, b);
+        }
         let sum = fletcher64(&buf);
         buf.extend_from_slice(&sum.to_le_bytes());
         buf
     }
 
     /// Parse from bytes (validates magic, version, length, checksum).
+    /// Accepts format v1 (no error-feedback section → `ec` empty) and v2.
     pub fn from_bytes(data: &[u8]) -> Result<Checkpoint> {
         if data.len() < 29 {
             return Err(Error::msg("checkpoint too short"));
@@ -110,7 +119,7 @@ impl Checkpoint {
             return Err(Error::msg("bad checkpoint magic"));
         }
         let version = u32::from_le_bytes(body[4..8].try_into().unwrap());
-        if version != VERSION {
+        if version != 1 && version != VERSION {
             return Err(Error::msg(format!(
                 "unsupported checkpoint version {version}"
             )));
@@ -126,10 +135,46 @@ impl Checkpoint {
         let params = read_f32s(body, &mut off, dim)?;
         let m = read_f32s(body, &mut off, dim)?;
         let v = read_f32s(body, &mut off, dim)?;
+        let mut ec = Vec::new();
+        if version >= 2 {
+            if off + 4 > body.len() {
+                return Err(Error::msg("checkpoint truncated (ec count)"));
+            }
+            let count = u32::from_le_bytes(
+                body[off..off + 4].try_into().unwrap(),
+            ) as usize;
+            off += 4;
+            // Every buffer costs ≥ 8 header bytes — a count beyond that
+            // is hostile/corrupt; reject before reserving anything.
+            if count > (body.len() - off) / 8 {
+                return Err(Error::msg(
+                    "checkpoint ec count exceeds file size",
+                ));
+            }
+            ec.reserve(count);
+            for _ in 0..count {
+                if off + 8 > body.len() {
+                    return Err(Error::msg(
+                        "checkpoint truncated (ec buffer length)",
+                    ));
+                }
+                let blen = u64::from_le_bytes(
+                    body[off..off + 8].try_into().unwrap(),
+                ) as usize;
+                off += 8;
+                // guard the multiply in read_f32s against a hostile length
+                if blen > body.len() / 4 {
+                    return Err(Error::msg(
+                        "checkpoint ec buffer length exceeds file size",
+                    ));
+                }
+                ec.push(read_f32s(body, &mut off, blen)?);
+            }
+        }
         if off != body.len() {
             return Err(Error::msg("checkpoint has trailing bytes"));
         }
-        Ok(Checkpoint { step, phase, params, m, v })
+        Ok(Checkpoint { step, phase, params, m, v, ec })
     }
 
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
@@ -161,6 +206,10 @@ mod tests {
             params: rng.normal_vec(dim, 1.0),
             m: rng.normal_vec(dim, 0.1),
             v: rng.normal_vec(dim, 0.01).iter().map(|x| x.abs()).collect(),
+            ec: vec![
+                rng.normal_vec(dim, 0.05),
+                rng.normal_vec(dim / 2, 0.05),
+            ],
         }
     }
 
@@ -216,8 +265,139 @@ mod tests {
             params: vec![],
             m: vec![],
             v: vec![],
+            ec: vec![],
         };
         let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
         assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn version1_files_still_load_with_empty_ec() {
+        // Hand-build a v1 file (no ec section) and parse it.
+        let mut rng = Rng::new(4);
+        let dim = 16usize;
+        let params = rng.normal_vec(dim, 1.0);
+        let m = rng.normal_vec(dim, 0.1);
+        let v = rng.normal_vec(dim, 0.01);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"OBAD");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&77u64.to_le_bytes());
+        buf.push(1u8); // compression phase
+        buf.extend_from_slice(&(dim as u64).to_le_bytes());
+        for xs in [&params, &m, &v] {
+            for &x in xs.iter() {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let sum = fletcher64(&buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+        let ck = Checkpoint::from_bytes(&buf).unwrap();
+        assert_eq!(ck.step, 77);
+        assert_eq!(ck.phase, Phase::Compression);
+        assert_eq!(ck.params, params);
+        assert!(ck.ec.is_empty());
+    }
+
+    #[test]
+    fn ec_buffers_roundtrip_with_uneven_lengths() {
+        let mut ck = sample(100);
+        ck.ec = vec![vec![], vec![1.5, -2.5], vec![0.0; 33]];
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(ck, back);
+        // corrupting a byte inside the ec section is detected
+        let mut bytes = ck.to_bytes();
+        let pos = bytes.len() - 20; // inside the last ec buffer
+        bytes[pos] ^= 0x04;
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    // ---- mid-compression resume (the transport-era contract) --------------
+
+    use crate::comm::CommTopology;
+    use crate::optim::onebit_adam::{OneBitAdam, OneBitAdamConfig};
+    use crate::optim::DistOptimizer;
+
+    fn run_steps(
+        opt: &mut OneBitAdam,
+        workers: usize,
+        dim: usize,
+        seed: u64,
+        steps: usize,
+    ) {
+        let mut rng = Rng::new(seed);
+        for _ in 0..steps {
+            let grads: Vec<Vec<f32>> =
+                (0..workers).map(|_| rng.normal_vec(dim, 1.0)).collect();
+            opt.step(&grads, 1e-3);
+        }
+    }
+
+    #[test]
+    fn mid_compression_save_restore_resumes_bit_identically() {
+        // Save mid-compression (error-feedback buffers hot, variance
+        // frozen), restore through the *byte* format, and continue: the
+        // restored run must track the original bit for bit — flat AND
+        // hierarchical (per-leader error state).
+        for topology in [
+            CommTopology::Flat,
+            CommTopology::Hierarchical { group_size: 2 },
+        ] {
+            let (workers, dim) = (4usize, 96usize);
+            let cfg = OneBitAdamConfig {
+                warmup_steps: Some(5),
+                topology,
+                ..Default::default()
+            };
+            let mut opt =
+                OneBitAdam::new(workers, vec![0.4; dim], cfg.clone());
+            run_steps(&mut opt, workers, dim, 11, 20); // 15 EC steps in
+            let ck = opt.to_checkpoint();
+            assert!(
+                ck.ec.iter().any(|b| b.iter().any(|&e| e != 0.0)),
+                "{topology:?}: mid-compression EC state should be hot"
+            );
+            // through the wire format, checksum and all
+            let restored_ck =
+                Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+            assert_eq!(ck, restored_ck);
+            let mut resumed =
+                OneBitAdam::from_checkpoint(workers, restored_ck, cfg);
+            // the frozen variance came back exactly
+            assert_eq!(opt.variance(), resumed.variance());
+            // identical continuation
+            run_steps(&mut opt, workers, dim, 99, 12);
+            run_steps(&mut resumed, workers, dim, 99, 12);
+            assert_eq!(
+                opt.params(),
+                resumed.params(),
+                "{topology:?}: params diverged after resume"
+            );
+            assert_eq!(opt.momentum(), resumed.momentum());
+            assert_eq!(
+                opt.collective().export_errors(),
+                resumed.collective().export_errors(),
+                "{topology:?}: EC state diverged after resume"
+            );
+        }
+    }
+
+    #[test]
+    fn hierarchical_checkpoint_carries_per_leader_error_state() {
+        // Under the two-level topology the EC state is per *leader*: 2
+        // nodes of 4 → 2 worker-error + 2 server-error buffers, not 8.
+        let (workers, dim) = (8usize, 64usize);
+        let cfg = OneBitAdamConfig {
+            warmup_steps: Some(3),
+            topology: CommTopology::Hierarchical { group_size: 4 },
+            ..Default::default()
+        };
+        let mut opt = OneBitAdam::new(workers, vec![0.2; dim], cfg);
+        run_steps(&mut opt, workers, dim, 5, 10);
+        let ck = opt.to_checkpoint();
+        assert_eq!(ck.ec.len(), 4, "2 leaders × (worker + server) buffers");
+        assert_eq!(ck.ec[0].len(), dim);
+        assert_eq!(ck.ec[1].len(), dim);
+        assert_eq!(ck.ec[2].len() + ck.ec[3].len(), dim);
     }
 }

@@ -14,9 +14,11 @@
 //!   timing model, training coordinator, benchmark harness.
 //!
 //! Start at [`coordinator`] for the training loop, [`comm`] for the paper's
-//! Figure 3 collective, [`optim::onebit_adam`] for Algorithm 1, and
+//! Figure 3 collective, [`optim::onebit_adam`] for Algorithm 1,
 //! [`kernels`] for the fused elementwise/reduction hot loops everything
-//! dispatches to.
+//! dispatches to, and [`transport`] for the framed wire protocol +
+//! TCP/in-memory backends that run the same collectives over real
+//! sockets.
 
 pub mod comm;
 pub mod config;
@@ -30,6 +32,7 @@ pub mod optim;
 pub mod repro;
 pub mod runtime;
 pub mod tensor;
+pub mod transport;
 pub mod util;
 
 pub use util::error::{Error, Result};

@@ -165,6 +165,85 @@ pub fn hierarchical_compressed_allreduce_time(
     intra + exchange + server
 }
 
+// ---- measured-vs-predicted calibration -------------------------------------
+
+/// Volume calibration of the analytic model against a **measured**
+/// transport run ([`crate::transport::TransportCollective`]).
+///
+/// The model's per-GPU payload volume is a pure function of (layout,
+/// kind) — chunk wire bytes summed/min/maxed the way the Arena caches
+/// them; the wire adds two terms the model must own explicitly:
+///
+/// 1. **header overhead** — every frame carries
+///    [`crate::transport::frame::FRAME_OVERHEAD`] bytes of magic/
+///    version/tags/length/checksum on top of its payload;
+/// 2. **mesh duplication** — the runner's all-gather leg sends each
+///    gathered chunk to all `n−1` peers (a ring gather would send it
+///    once), so gross payload totals are `2(n−1)·Σ wire(chunk)`.
+///
+/// Everything is deterministic, so [`calibrate`] asserts *exact*
+/// agreement, not a tolerance band.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VolumeCalibration {
+    /// Analytic per-GPU payload volume (alltoall + allgather).
+    pub predicted_payload_per_gpu: usize,
+    /// Measured per-GPU payload volume (the run's [`CommStats`]).
+    pub measured_payload_per_gpu: usize,
+    /// Analytic gross bytes across all ranks, headers included.
+    pub predicted_gross_total: usize,
+    /// Measured gross bytes across all ranks.
+    pub measured_gross_total: usize,
+    /// Frames the run put on the wire.
+    pub frames: usize,
+}
+
+impl VolumeCalibration {
+    /// Bytes attributable to frame headers/checksums alone — the model's
+    /// header-overhead term.
+    pub fn header_overhead_bytes(&self) -> usize {
+        self.frames * crate::transport::frame::FRAME_OVERHEAD
+    }
+
+    /// Exact agreement between model and measurement.
+    pub fn agrees(&self) -> bool {
+        self.predicted_payload_per_gpu == self.measured_payload_per_gpu
+            && self.predicted_gross_total == self.measured_gross_total
+    }
+}
+
+/// Compare the analytic comm-volume model against the measured bytes of
+/// one **flat** transported collective step (`stats` =
+/// `TransportCollective::last_stats()` after an `allreduce`), and return
+/// the reconciliation.  See [`VolumeCalibration`] for the two overhead
+/// terms the prediction folds in.
+pub fn calibrate(
+    kind: crate::compress::CompressionKind,
+    n_ranks: usize,
+    elements: usize,
+    stats: &crate::transport::TransportStats,
+) -> VolumeCalibration {
+    let layout = crate::tensor::chunk::ChunkLayout::new(elements, n_ranks);
+    let (total, min, max) = crate::comm::chunk_wire_volume(kind, &layout);
+    let predicted_payload_per_gpu = (total - min) + max;
+    // Gross: every rank scatters all chunks but its own, then sends its
+    // gathered chunk to each peer — 2(n−1)·total payload bytes — plus the
+    // per-frame overhead on the 2n(n−1) frames.
+    let frames = if n_ranks > 1 { 2 * n_ranks * (n_ranks - 1) } else { 0 };
+    let predicted_gross_total = if n_ranks > 1 {
+        2 * (n_ranks - 1) * total
+            + frames * crate::transport::frame::FRAME_OVERHEAD
+    } else {
+        0
+    };
+    VolumeCalibration {
+        predicted_payload_per_gpu,
+        measured_payload_per_gpu: stats.comm.total_per_gpu(),
+        predicted_gross_total,
+        measured_gross_total: stats.gross_total(),
+        frames: stats.frames_sent,
+    }
+}
+
 /// Full-precision (fp16) allreduce time for `elements` values — the
 /// baseline Adam communication.
 pub fn fp16_allreduce_time(
@@ -297,5 +376,94 @@ mod tests {
         let n = 340_000_000usize;
         let r = (n * 2) as f64 / onebit_bytes(n) as f64;
         assert!(r > 15.0 && r < 17.0, "fp16/1bit ratio {r}");
+    }
+
+    fn measured_stats(
+        kind: crate::compress::CompressionKind,
+        n: usize,
+        len: usize,
+    ) -> crate::transport::TransportStats {
+        use crate::transport::{TransportBackend, TransportCollective};
+        use crate::util::prng::Rng;
+        let mut wire = TransportCollective::new(
+            TransportBackend::InMemory,
+            n,
+            len,
+            kind,
+        )
+        .expect("in-memory mesh");
+        let base = Rng::new(17);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|i| base.fork(i as u64).normal_vec(len, 1.0))
+            .collect();
+        let mut out = vec![0.0f32; len];
+        wire.allreduce(&inputs, &mut out);
+        wire.last_stats()
+    }
+
+    #[test]
+    fn calibration_agrees_exactly_for_fp32_and_onebit() {
+        // The satellite contract: the analytic volume model matches the
+        // measured wire bytes *exactly* once the header-overhead and
+        // mesh-duplication terms are folded in — fp32 and 1-bit payloads,
+        // even and uneven chunking.
+        use crate::compress::CompressionKind;
+        for kind in [CompressionKind::None, CompressionKind::OneBit] {
+            for (n, len) in [(4usize, 1000usize), (8, 4097), (3, 65)] {
+                let stats = measured_stats(kind, n, len);
+                let cal = calibrate(kind, n, len, &stats);
+                assert!(
+                    cal.agrees(),
+                    "{kind:?} n={n} len={len}: {cal:?}"
+                );
+                assert_eq!(cal.frames, 2 * n * (n - 1));
+                // header overhead is real and accounted
+                assert_eq!(
+                    cal.header_overhead_bytes(),
+                    cal.frames * crate::transport::frame::FRAME_OVERHEAD
+                );
+                assert!(
+                    cal.measured_gross_total
+                        > cal.header_overhead_bytes()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_catches_a_wrong_model() {
+        // Feed the 1-bit measurement to the fp32 prediction: the model
+        // must NOT agree (the comparison has teeth).
+        use crate::compress::CompressionKind;
+        let stats = measured_stats(CompressionKind::OneBit, 4, 1000);
+        let cal = calibrate(CompressionKind::None, 4, 1000, &stats);
+        assert!(!cal.agrees());
+    }
+
+    #[test]
+    fn calibration_shows_the_5x_volume_claim_on_the_wire() {
+        // §7.1 over real bytes: measured 1-bit wire volume ≤ 1/5 of the
+        // measured fp32 volume for the same tensor — gross (headers and
+        // all) and per-GPU payload alike.
+        use crate::compress::CompressionKind;
+        let (n, len) = (8usize, 100_000usize);
+        let fp32 = measured_stats(CompressionKind::None, n, len);
+        let bit = measured_stats(CompressionKind::OneBit, n, len);
+        let gross_ratio =
+            fp32.gross_total() as f64 / bit.gross_total() as f64;
+        let payload_ratio = fp32.comm.total_per_gpu() as f64
+            / bit.comm.total_per_gpu() as f64;
+        assert!(gross_ratio >= 5.0, "gross ratio {gross_ratio}");
+        assert!(payload_ratio >= 5.0, "payload ratio {payload_ratio}");
+    }
+
+    #[test]
+    fn single_rank_calibration_is_all_zeros_on_the_wire() {
+        use crate::compress::CompressionKind;
+        let stats = measured_stats(CompressionKind::OneBit, 1, 256);
+        let cal = calibrate(CompressionKind::OneBit, 1, 256, &stats);
+        assert_eq!(cal.measured_gross_total, 0);
+        assert_eq!(cal.predicted_gross_total, 0);
+        assert_eq!(cal.frames, 0);
     }
 }

@@ -22,6 +22,7 @@
 use crate::comm::plain::{allreduce_average_path, PlainPath};
 use crate::comm::{Collective, CommStats, CommTopology};
 use crate::compress::CompressionKind;
+use crate::transport::TransportBackend;
 use crate::kernels;
 use crate::optim::backend::{AdamHyper, MathBackend, NativeBackend};
 use crate::optim::monitor::VarianceMonitor;
@@ -54,6 +55,15 @@ pub struct OneBitAdamConfig {
     /// [`crate::config::presets::TopologyPreset::comm_topology`] to match
     /// a cluster's GPUs-per-node.
     pub topology: CommTopology,
+    /// Wire backend for the compression-stage collective.  `None`
+    /// (default) keeps the in-process SPMD engines;
+    /// `Some(TransportBackend::InMemory)` /
+    /// `Some(TransportBackend::Tcp)` route every compressed allreduce
+    /// through [`crate::transport`] as framed messages — over channel
+    /// queues or real loopback sockets — one OS thread per rank.  All
+    /// backends are bit-identical to the in-process engines, so the
+    /// training trajectory is transport-invariant (tested below).
+    pub transport: Option<TransportBackend>,
 }
 
 impl Default for OneBitAdamConfig {
@@ -66,6 +76,7 @@ impl Default for OneBitAdamConfig {
             min_warmup_steps: 100,
             v_floor_rel: 1e-4,
             topology: CommTopology::Flat,
+            transport: None,
         }
     }
 }
@@ -120,11 +131,12 @@ impl OneBitAdam {
             params: init,
             m: vec![0.0; d],
             v: vec![0.0; d],
-            car: Collective::build(
+            car: Collective::build_with_transport(
                 cfg.topology,
                 n_workers,
                 d,
                 cfg.compression,
+                cfg.transport,
             ),
             cfg,
             backend,
@@ -202,7 +214,10 @@ impl OneBitAdam {
         }
     }
 
-    /// Export the training state (params, momentum, variance, phase).
+    /// Export the training state: params, momentum, variance, phase —
+    /// and, mid-compression, the carried error-feedback buffers (worker/
+    /// leader errors + server-chunk errors), so a restore resumes the
+    /// exact Algorithm-1 trajectory bit for bit.
     pub fn to_checkpoint(&self) -> crate::coordinator::checkpoint::Checkpoint {
         crate::coordinator::checkpoint::Checkpoint {
             step: self.t as u64,
@@ -210,12 +225,19 @@ impl OneBitAdam {
             params: self.params.clone(),
             m: self.m.clone(),
             v: self.v.clone(),
+            ec: if self.phase == Phase::Compression {
+                self.car.export_errors()
+            } else {
+                Vec::new() // warmup carries no EC state (all zeros)
+            },
         }
     }
 
-    /// Restore from a checkpoint.  A `Compression`-phase checkpoint resumes
-    /// directly in the compression stage with fresh error state (errors are
-    /// local transients — DeepSpeed restores the same way).
+    /// Restore from a checkpoint.  A `Compression`-phase checkpoint
+    /// resumes directly in the compression stage; if the checkpoint
+    /// carries error-feedback buffers that match this collective's shape
+    /// they are restored (bit-identical resume), otherwise the errors
+    /// start fresh (the legacy v1 restore semantics).
     pub fn from_checkpoint(
         n_workers: usize,
         ck: crate::coordinator::checkpoint::Checkpoint,
@@ -228,6 +250,11 @@ impl OneBitAdam {
         if ck.phase == Phase::Compression {
             opt.phase = Phase::Compression;
             opt.switch_step = Some(opt.t);
+            if !ck.ec.is_empty() && !opt.car.import_errors(&ck.ec) {
+                // shape mismatch (different topology/worker count than
+                // the saving run): fall back to fresh error state
+                opt.car.reset_errors();
+            }
         }
         opt
     }
@@ -577,9 +604,10 @@ mod tests {
 
     #[test]
     fn checkpoint_resume_is_exact() {
-        // Run 30 steps, checkpoint, run 10 more; vs restore + same 10 — the
-        // parameter trajectories must agree (compression errors are reset
-        // at the checkpoint boundary on both sides for a fair comparison).
+        // Run 30 steps, checkpoint, run 10 more; vs restore + same 10 —
+        // the checkpoint now carries the error-feedback buffers, so the
+        // original (un-reset) run and the restored run must stay
+        // bit-identical with no alignment step.
         let d = 128;
         let cfg = OneBitAdamConfig {
             warmup_steps: Some(10),
@@ -593,11 +621,10 @@ mod tests {
             opt.step(&g, 1e-3);
         }
         let ck = opt.to_checkpoint();
+        assert!(!ck.ec.is_empty(), "compression checkpoint carries EC state");
         let mut resumed = OneBitAdam::from_checkpoint(2, ck.clone(), cfg);
         assert_eq!(resumed.phase(), Phase::Compression);
         assert_eq!(resumed.t, 30);
-        // align error state: zero both (restore semantics)
-        opt.car.reset_errors();
         let mut fork_rng = Rng::new(77);
         for _ in 0..10 {
             let g: Vec<Vec<f32>> =
@@ -607,6 +634,103 @@ mod tests {
         }
         assert_eq!(opt.params(), resumed.params());
         assert_eq!(opt.momentum(), resumed.momentum());
+    }
+
+    #[test]
+    fn legacy_checkpoint_without_ec_state_still_resumes() {
+        // A checkpoint with no EC buffers (the v1 format) keeps the old
+        // semantics: resume in the compression phase with fresh errors.
+        let d = 64;
+        let cfg = OneBitAdamConfig {
+            warmup_steps: Some(5),
+            ..Default::default()
+        };
+        let mut opt = OneBitAdam::new(2, vec![0.5; d], cfg.clone());
+        let mut grad_rng = Rng::new(3);
+        for _ in 0..12 {
+            let g: Vec<Vec<f32>> =
+                (0..2).map(|_| grad_rng.normal_vec(d, 1.0)).collect();
+            opt.step(&g, 1e-3);
+        }
+        let mut ck = opt.to_checkpoint();
+        ck.ec.clear();
+        let resumed = OneBitAdam::from_checkpoint(2, ck, cfg);
+        assert_eq!(resumed.phase(), Phase::Compression);
+        assert!(resumed
+            .collective()
+            .export_errors()
+            .iter()
+            .all(|b| b.iter().all(|&e| e == 0.0)));
+    }
+
+    #[test]
+    fn transported_collective_matches_in_process_trajectory() {
+        // cfg.transport routes the compression-stage collective over the
+        // wire (framed messages, one OS thread per rank); the optimizer
+        // trajectory must be bit-identical to the in-process engine —
+        // flat and hierarchical.
+        for topology in [
+            CommTopology::Flat,
+            CommTopology::Hierarchical { group_size: 2 },
+        ] {
+            let d = 384;
+            let cfg_mem = OneBitAdamConfig {
+                warmup_steps: Some(4),
+                topology,
+                ..Default::default()
+            };
+            let cfg_wire = OneBitAdamConfig {
+                warmup_steps: Some(4),
+                topology,
+                transport: Some(TransportBackend::InMemory),
+                ..Default::default()
+            };
+            let mut a = OneBitAdam::new(4, vec![0.3; d], cfg_mem);
+            let mut b = OneBitAdam::new(4, vec![0.3; d], cfg_wire);
+            assert!(b.collective().as_transported().is_some());
+            let mut rng = Rng::new(31);
+            for step in 0..15 {
+                let grads: Vec<Vec<f32>> =
+                    (0..4).map(|_| rng.normal_vec(d, 1.0)).collect();
+                let sa = a.step(&grads, 1e-3);
+                let sb = b.step(&grads, 1e-3);
+                assert_eq!(
+                    a.params(),
+                    b.params(),
+                    "{topology:?} step={step}"
+                );
+                if sa.phase == Phase::Compression {
+                    assert_eq!(sa.comm, sb.comm, "{topology:?} step={step}");
+                }
+            }
+            assert_eq!(a.momentum(), b.momentum());
+        }
+    }
+
+    #[test]
+    fn tcp_transported_optimizer_matches_in_process_trajectory() {
+        // The same invariance over real loopback sockets (smaller run).
+        let d = 256;
+        let cfg_mem = OneBitAdamConfig {
+            warmup_steps: Some(2),
+            ..Default::default()
+        };
+        let cfg_tcp = OneBitAdamConfig {
+            warmup_steps: Some(2),
+            transport: Some(TransportBackend::Tcp),
+            ..Default::default()
+        };
+        let mut a = OneBitAdam::new(3, vec![0.1; d], cfg_mem);
+        let mut b = OneBitAdam::new(3, vec![0.1; d], cfg_tcp);
+        let mut rng = Rng::new(8);
+        for _ in 0..8 {
+            let grads: Vec<Vec<f32>> =
+                (0..3).map(|_| rng.normal_vec(d, 1.0)).collect();
+            a.step(&grads, 1e-3);
+            b.step(&grads, 1e-3);
+        }
+        assert_eq!(a.params(), b.params());
+        assert_eq!(a.momentum(), b.momentum());
     }
 
     #[test]

@@ -1,0 +1,852 @@
+//! The versioned, length-prefixed wire protocol of the transport layer.
+//!
+//! Every message between ranks is one **frame**:
+//!
+//! ```text
+//! magic  b"OBTW"           4 B
+//! version u8               1 B   (VERSION = 1)
+//! kind    u8               1 B   payload kind (fp32 / f64 / 1-bit / n-bit)
+//! phase   u8               1 B   collective phase tag (protocol check)
+//! rank    u16 LE           2 B   sender rank
+//! step    u32 LE           4 B   collective step counter (protocol check)
+//! payload_len u32 LE       4 B   ← the length prefix
+//! payload  [u8]            payload_len B
+//! checksum u64 LE          8 B   fletcher64 over header + payload
+//! ```
+//!
+//! [`decode_frame`] returns a zero-copy [`Frame`] whose `payload` borrows
+//! the input buffer; every malformed input — truncated buffer, bad magic,
+//! unknown version, corrupted checksum, oversized length prefix, trailing
+//! bytes — comes back as a typed [`FrameError`] (never a panic), which
+//! converts into the crate-wide [`crate::util::error::Error`].
+//!
+//! Payload codecs are defined next to the frame: fp32/f64 plain tensors,
+//! the packed 1-bit format (element count + scale + sign words — exactly
+//! [`pack::wire_size`] bytes, the same accounting every engine in
+//! [`crate::comm`] ledgers), and the packed n-bit format (count + max_abs
+//! + `bits`-wide codes — exactly `CompressionKind::NBit(bits)
+//! .wire_bytes`).  The n-bit codes are recovered losslessly from the
+//! dequantized tensor: with ≤ 16 bits the level index survives the f32
+//! round-trip (`levels ≤ 2¹⁶ ≪ 2²⁴`), so decode reconstructs the
+//! dequantized values **bit-for-bit** — the transported collectives stay
+//! bit-equal to the in-process reference engines for every
+//! [`CompressionKind`].
+
+use crate::compress::pack;
+use crate::compress::CompressionKind;
+
+/// Frame magic: "1-**B**it adam **O**ver **T**he **W**ire".
+pub const MAGIC: [u8; 4] = *b"OBTW";
+/// Current protocol version.
+pub const VERSION: u8 = 1;
+/// Fixed header size (through the payload-length prefix).
+pub const HEADER_LEN: usize = 17;
+/// Trailing checksum size.
+pub const TRAILER_LEN: usize = 8;
+/// Per-frame overhead on the wire beyond the payload itself — the
+/// "header-overhead term" `netsim::collectives::calibrate` documents.
+pub const FRAME_OVERHEAD: usize = HEADER_LEN + TRAILER_LEN;
+/// Upper bound a receiver enforces on the length prefix *before*
+/// allocating — a corrupted/hostile prefix cannot OOM the process.
+pub const MAX_PAYLOAD: usize = 1 << 30;
+
+/// What a frame's payload bytes encode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// Raw little-endian f32 values (4 B/element).
+    F32Plain,
+    /// Raw little-endian f64 values (8 B/element) — the hierarchical
+    /// identity path exchanges exact f64 node sums.
+    F64Plain,
+    /// Packed 1-bit: u32 count, f32 scale, `ceil(n/32)` sign words.
+    OneBit,
+    /// Packed n-bit codes: u32 count, f32 max_abs, `bits`-wide codes.
+    NBit(u8),
+}
+
+impl PayloadKind {
+    pub fn to_byte(self) -> u8 {
+        match self {
+            PayloadKind::F32Plain => 0x00,
+            PayloadKind::F64Plain => 0x02,
+            PayloadKind::OneBit => 0x01,
+            PayloadKind::NBit(b) => 0x20 | b,
+        }
+    }
+
+    pub fn from_byte(b: u8) -> Result<Self, FrameError> {
+        match b {
+            0x00 => Ok(PayloadKind::F32Plain),
+            0x02 => Ok(PayloadKind::F64Plain),
+            0x01 => Ok(PayloadKind::OneBit),
+            0x21..=0x30 => Ok(PayloadKind::NBit(b & 0x1F)),
+            other => Err(FrameError::BadKind(other)),
+        }
+    }
+
+    /// The wire payload kind a [`CompressionKind`] travels as.
+    pub fn for_compression(kind: CompressionKind) -> Self {
+        match kind {
+            CompressionKind::None => PayloadKind::F32Plain,
+            CompressionKind::OneBit => PayloadKind::OneBit,
+            CompressionKind::NBit(b) => PayloadKind::NBit(b as u8),
+        }
+    }
+}
+
+/// Which collective phase a frame belongs to — receivers assert the tag
+/// (and the step counter) so a protocol skew fails loudly instead of
+/// decoding the wrong payload into the wrong buffer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WirePhase {
+    /// Warmup-phase full-precision scatter.
+    Warmup,
+    /// Compressed chunk scatter (Figure 3 phase 1).
+    AllToAll,
+    /// Gathered averaged chunks (Figure 3 phase 3).
+    AllGather,
+    /// Hierarchy stage 1: member → node leader full tensor.
+    Reduce,
+    /// Hierarchy stage 3: leader → member gathered tensor.
+    Broadcast,
+}
+
+impl WirePhase {
+    pub fn to_byte(self) -> u8 {
+        match self {
+            WirePhase::Warmup => 0,
+            WirePhase::AllToAll => 1,
+            WirePhase::AllGather => 2,
+            WirePhase::Reduce => 3,
+            WirePhase::Broadcast => 4,
+        }
+    }
+
+    pub fn from_byte(b: u8) -> Result<Self, FrameError> {
+        match b {
+            0 => Ok(WirePhase::Warmup),
+            1 => Ok(WirePhase::AllToAll),
+            2 => Ok(WirePhase::AllGather),
+            3 => Ok(WirePhase::Reduce),
+            4 => Ok(WirePhase::Broadcast),
+            other => Err(FrameError::BadPhase(other)),
+        }
+    }
+}
+
+/// Typed decode failure — every malformed-frame path returns one of these
+/// (no panics), and they convert into [`crate::util::error::Error::Frame`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// Buffer shorter than the declared frame (or than a bare header).
+    Truncated { need: usize, have: usize },
+    /// Buffer longer than the declared frame.
+    TrailingBytes { extra: usize },
+    /// First four bytes are not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Unknown protocol version.
+    BadVersion(u8),
+    /// Length prefix exceeds [`MAX_PAYLOAD`].
+    OversizedPayload(usize),
+    /// Fletcher64 trailer does not match the header + payload bytes.
+    BadChecksum,
+    /// Unknown payload-kind byte.
+    BadKind(u8),
+    /// Unknown phase byte.
+    BadPhase(u8),
+    /// Payload bytes are malformed for their declared kind.
+    BadPayload(&'static str),
+    /// Frame is valid but not the one the protocol expected
+    /// (wrong phase/step/kind for the current collective position).
+    Protocol(&'static str),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need} bytes, have {have}")
+            }
+            FrameError::TrailingBytes { extra } => {
+                write!(f, "frame has {extra} trailing bytes")
+            }
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            FrameError::BadVersion(v) => {
+                write!(f, "unsupported frame version {v}")
+            }
+            FrameError::OversizedPayload(n) => write!(
+                f,
+                "length prefix {n} exceeds the {MAX_PAYLOAD}-byte cap"
+            ),
+            FrameError::BadChecksum => write!(f, "frame checksum mismatch"),
+            FrameError::BadKind(b) => {
+                write!(f, "unknown payload kind byte {b:#04x}")
+            }
+            FrameError::BadPhase(b) => write!(f, "unknown phase byte {b}"),
+            FrameError::BadPayload(what) => {
+                write!(f, "malformed payload: {what}")
+            }
+            FrameError::Protocol(what) => {
+                write!(f, "protocol violation: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// The frame trailer's checksum — [`crate::util::hash::fletcher64`],
+/// shared with the checkpoint format.
+pub use crate::util::hash::fletcher64;
+
+/// A decoded frame; `payload` borrows the input buffer (zero-copy view).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Frame<'a> {
+    pub kind: PayloadKind,
+    pub phase: WirePhase,
+    pub rank: u16,
+    pub step: u32,
+    pub payload: &'a [u8],
+}
+
+/// Total frame size for a payload of `payload_len` bytes.
+pub fn frame_len(payload_len: usize) -> usize {
+    HEADER_LEN + payload_len + TRAILER_LEN
+}
+
+/// Encode one frame (header + payload + checksum) into a fresh buffer.
+pub fn encode_frame(
+    kind: PayloadKind,
+    phase: WirePhase,
+    rank: u16,
+    step: u32,
+    payload: &[u8],
+) -> Vec<u8> {
+    assert!(payload.len() <= MAX_PAYLOAD, "payload exceeds MAX_PAYLOAD");
+    let mut buf = Vec::with_capacity(frame_len(payload.len()));
+    buf.extend_from_slice(&MAGIC);
+    buf.push(VERSION);
+    buf.push(kind.to_byte());
+    buf.push(phase.to_byte());
+    buf.extend_from_slice(&rank.to_le_bytes());
+    buf.extend_from_slice(&step.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(payload);
+    let sum = fletcher64(&buf);
+    buf.extend_from_slice(&sum.to_le_bytes());
+    buf
+}
+
+/// Decode and fully validate one frame.  The returned payload is a
+/// borrowed view into `bytes`.
+pub fn decode_frame(bytes: &[u8]) -> Result<Frame<'_>, FrameError> {
+    if bytes.len() < HEADER_LEN + TRAILER_LEN {
+        return Err(FrameError::Truncated {
+            need: HEADER_LEN + TRAILER_LEN,
+            have: bytes.len(),
+        });
+    }
+    if bytes[..4] != MAGIC {
+        let mut m = [0u8; 4];
+        m.copy_from_slice(&bytes[..4]);
+        return Err(FrameError::BadMagic(m));
+    }
+    if bytes[4] != VERSION {
+        return Err(FrameError::BadVersion(bytes[4]));
+    }
+    let payload_len =
+        u32::from_le_bytes(bytes[13..17].try_into().unwrap()) as usize;
+    if payload_len > MAX_PAYLOAD {
+        return Err(FrameError::OversizedPayload(payload_len));
+    }
+    let expect = frame_len(payload_len);
+    if bytes.len() < expect {
+        return Err(FrameError::Truncated { need: expect, have: bytes.len() });
+    }
+    if bytes.len() > expect {
+        return Err(FrameError::TrailingBytes { extra: bytes.len() - expect });
+    }
+    let (body, trailer) = bytes.split_at(expect - TRAILER_LEN);
+    let stored = u64::from_le_bytes(trailer.try_into().unwrap());
+    if fletcher64(body) != stored {
+        return Err(FrameError::BadChecksum);
+    }
+    let kind = PayloadKind::from_byte(bytes[5])?;
+    let phase = WirePhase::from_byte(bytes[6])?;
+    let rank = u16::from_le_bytes(bytes[7..9].try_into().unwrap());
+    let step = u32::from_le_bytes(bytes[9..13].try_into().unwrap());
+    Ok(Frame { kind, phase, rank, step, payload: &body[HEADER_LEN..] })
+}
+
+/// Read one whole frame off a byte stream (the TCP receive loop), using
+/// the header's length prefix to delimit it.  Returns `Ok(None)` on a
+/// clean end-of-stream (peer closed between frames); a prefix beyond
+/// [`MAX_PAYLOAD`] is rejected *before* any allocation.
+pub fn read_frame(
+    r: &mut impl std::io::Read,
+) -> std::io::Result<Option<Vec<u8>>> {
+    use std::io::{Error, ErrorKind};
+    let mut head = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        let n = r.read(&mut head[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None); // clean close between frames
+            }
+            return Err(Error::new(
+                ErrorKind::UnexpectedEof,
+                format!("stream ended inside a frame header ({got} bytes)"),
+            ));
+        }
+        got += n;
+    }
+    if head[..4] != MAGIC {
+        return Err(Error::new(
+            ErrorKind::InvalidData,
+            FrameError::BadMagic([head[0], head[1], head[2], head[3]])
+                .to_string(),
+        ));
+    }
+    if head[4] != VERSION {
+        return Err(Error::new(
+            ErrorKind::InvalidData,
+            FrameError::BadVersion(head[4]).to_string(),
+        ));
+    }
+    let payload_len =
+        u32::from_le_bytes(head[13..17].try_into().unwrap()) as usize;
+    if payload_len > MAX_PAYLOAD {
+        return Err(Error::new(
+            ErrorKind::InvalidData,
+            FrameError::OversizedPayload(payload_len).to_string(),
+        ));
+    }
+    let total = frame_len(payload_len);
+    let mut buf = Vec::with_capacity(total);
+    buf.extend_from_slice(&head);
+    buf.resize(total, 0);
+    r.read_exact(&mut buf[HEADER_LEN..])?;
+    Ok(Some(buf))
+}
+
+// ---- payload codecs --------------------------------------------------------
+
+/// Raw little-endian f32 payload (the fp32-plain kind).
+pub fn f32_payload(values: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(values.len() * 4);
+    for &v in values {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    buf
+}
+
+/// Decode an fp32-plain payload into `out` (must match exactly).
+pub fn decode_f32_into(
+    payload: &[u8],
+    out: &mut [f32],
+) -> Result<(), FrameError> {
+    if payload.len() != out.len() * 4 {
+        return Err(FrameError::BadPayload("f32 payload length mismatch"));
+    }
+    for (o, b) in out.iter_mut().zip(payload.chunks_exact(4)) {
+        *o = f32::from_le_bytes(b.try_into().unwrap());
+    }
+    Ok(())
+}
+
+/// Raw little-endian f64 payload (exact node sums of the hierarchical
+/// identity path).
+pub fn f64_payload(values: &[f64]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(values.len() * 8);
+    for &v in values {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    buf
+}
+
+/// Decode an f64 payload into `out` (must match exactly).
+pub fn decode_f64_into(
+    payload: &[u8],
+    out: &mut [f64],
+) -> Result<(), FrameError> {
+    if payload.len() != out.len() * 8 {
+        return Err(FrameError::BadPayload("f64 payload length mismatch"));
+    }
+    for (o, b) in out.iter_mut().zip(payload.chunks_exact(8)) {
+        *o = f64::from_le_bytes(b.try_into().unwrap());
+    }
+    Ok(())
+}
+
+/// Packed 1-bit payload from a dequantized ±scale tensor: u32 count, f32
+/// scale, sign words — exactly [`pack::wire_size`]`(n)` bytes, the byte
+/// count every [`crate::comm`] engine ledgers for a 1-bit chunk.
+pub fn onebit_payload(values: &[f32], scale: f32) -> Vec<u8> {
+    let words = pack::pack_signs(values);
+    let mut buf = Vec::with_capacity(pack::wire_size(values.len()));
+    buf.extend_from_slice(&(values.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&scale.to_le_bytes());
+    for w in words {
+        buf.extend_from_slice(&w.to_le_bytes());
+    }
+    buf
+}
+
+/// Decode a packed 1-bit payload into `out` — reproduces
+/// [`pack::unpack_signs_scaled`] bit-for-bit (it *is* that kernel, fed
+/// from the deserialized sign words).
+pub fn decode_onebit_into(
+    payload: &[u8],
+    out: &mut [f32],
+) -> Result<(), FrameError> {
+    if payload.len() < 8 {
+        return Err(FrameError::BadPayload("1-bit payload shorter than header"));
+    }
+    let n = u32::from_le_bytes(payload[..4].try_into().unwrap()) as usize;
+    if n != out.len() {
+        return Err(FrameError::BadPayload("1-bit element count mismatch"));
+    }
+    let scale = f32::from_le_bytes(payload[4..8].try_into().unwrap());
+    let words_bytes = &payload[8..];
+    if words_bytes.len() != n.div_ceil(32) * 4 {
+        return Err(FrameError::BadPayload("1-bit sign-word length mismatch"));
+    }
+    let words: Vec<u32> = words_bytes
+        .chunks_exact(4)
+        .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+    pack::unpack_signs_scaled(&words, scale, out);
+    Ok(())
+}
+
+/// Packed n-bit payload from a dequantized tensor produced by
+/// [`crate::compress::nbit::nbit_compress_ec`] with range `max_abs`: u32
+/// count, f32 max_abs, then `bits`-wide level codes packed LSB-first —
+/// exactly `CompressionKind::NBit(bits).wire_bytes(n)` bytes.  The codes
+/// are recovered from the dequantized values by inverting `q = code·step −
+/// max_abs`; with `bits ≤ 16` the rounding error of the f32 round-trip is
+/// < step/2, so the recovery (and hence the decode) is lossless.
+pub fn nbit_payload(bits: u32, values: &[f32], max_abs: f32) -> Vec<u8> {
+    assert!((1..=16).contains(&bits));
+    let n = values.len();
+    let mut buf =
+        Vec::with_capacity(8 + (n * bits as usize).div_ceil(8));
+    buf.extend_from_slice(&(n as u32).to_le_bytes());
+    buf.extend_from_slice(&max_abs.to_le_bytes());
+    let levels = (1u64 << bits) as f32 - 1.0;
+    let mut acc: u64 = 0;
+    let mut filled: u32 = 0;
+    for &q in values {
+        let code: u64 = if max_abs == 0.0 {
+            0
+        } else {
+            let step = 2.0 * max_abs / levels;
+            ((q + max_abs) / step).round().clamp(0.0, levels) as u64
+        };
+        acc |= code << filled;
+        filled += bits;
+        while filled >= 8 {
+            buf.push((acc & 0xFF) as u8);
+            acc >>= 8;
+            filled -= 8;
+        }
+    }
+    if filled > 0 {
+        buf.push((acc & 0xFF) as u8);
+    }
+    buf
+}
+
+/// Decode a packed n-bit payload into `out`, reconstructing the exact
+/// dequantized values `code·step − max_abs` the sender held.
+pub fn decode_nbit_into(
+    bits: u32,
+    payload: &[u8],
+    out: &mut [f32],
+) -> Result<(), FrameError> {
+    if !(1..=16).contains(&bits) {
+        return Err(FrameError::BadPayload("n-bit width out of range"));
+    }
+    if payload.len() < 8 {
+        return Err(FrameError::BadPayload("n-bit payload shorter than header"));
+    }
+    let n = u32::from_le_bytes(payload[..4].try_into().unwrap()) as usize;
+    if n != out.len() {
+        return Err(FrameError::BadPayload("n-bit element count mismatch"));
+    }
+    let max_abs = f32::from_le_bytes(payload[4..8].try_into().unwrap());
+    let codes = &payload[8..];
+    if codes.len() != (n * bits as usize).div_ceil(8) {
+        return Err(FrameError::BadPayload("n-bit code length mismatch"));
+    }
+    let levels = (1u64 << bits) as f32 - 1.0;
+    let step = if max_abs == 0.0 { 0.0 } else { 2.0 * max_abs / levels };
+    let mask: u64 = (1u64 << bits) - 1;
+    let mut acc: u64 = 0;
+    let mut filled: u32 = 0;
+    let mut next = codes.iter();
+    for o in out.iter_mut() {
+        while filled < bits {
+            // length was validated above, so the byte exists
+            acc |= (*next.next().unwrap() as u64) << filled;
+            filled += 8;
+        }
+        let code = acc & mask;
+        acc >>= bits;
+        filled -= bits;
+        *o = if max_abs == 0.0 {
+            0.0
+        } else {
+            code as f32 * step - max_abs
+        };
+    }
+    Ok(())
+}
+
+/// Byte length of the wire payload for `n` elements under `kind` —
+/// identical to [`CompressionKind::wire_bytes`]; the frame codecs above
+/// produce exactly this many payload bytes, which is what makes the
+/// measured-vs-predicted calibration exact.
+pub fn payload_len(kind: CompressionKind, n: usize) -> usize {
+    kind.wire_bytes(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::nbit::nbit_compress_ec;
+    use crate::compress::onebit::onebit_compress_ec;
+    use crate::util::check::{forall, gen_vec};
+    use crate::util::prng::Rng;
+
+    fn sample_frame() -> Vec<u8> {
+        let payload = f32_payload(&[1.0, -2.5, 3.25]);
+        encode_frame(PayloadKind::F32Plain, WirePhase::AllToAll, 3, 7, &payload)
+    }
+
+    #[test]
+    fn roundtrip_header_fields() {
+        let bytes = sample_frame();
+        let f = decode_frame(&bytes).unwrap();
+        assert_eq!(f.kind, PayloadKind::F32Plain);
+        assert_eq!(f.phase, WirePhase::AllToAll);
+        assert_eq!(f.rank, 3);
+        assert_eq!(f.step, 7);
+        let mut out = vec![0.0f32; 3];
+        decode_f32_into(f.payload, &mut out).unwrap();
+        assert_eq!(out, vec![1.0, -2.5, 3.25]);
+    }
+
+    #[test]
+    fn truncated_frames_are_typed_errors() {
+        let bytes = sample_frame();
+        // every strict prefix fails with a typed error, never a panic
+        for cut in 0..bytes.len() {
+            match decode_frame(&bytes[..cut]) {
+                Err(FrameError::Truncated { .. }) => {}
+                other => panic!("cut={cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut bytes = sample_frame();
+        bytes.push(0xAB);
+        assert_eq!(
+            decode_frame(&bytes),
+            Err(FrameError::TrailingBytes { extra: 1 })
+        );
+    }
+
+    #[test]
+    fn bad_magic_is_a_typed_error() {
+        let mut bytes = sample_frame();
+        bytes[0] = b'X';
+        assert!(matches!(
+            decode_frame(&bytes),
+            Err(FrameError::BadMagic(_))
+        ));
+    }
+
+    #[test]
+    fn wrong_version_is_a_typed_error() {
+        let mut bytes = sample_frame();
+        bytes[4] = VERSION + 1;
+        // re-checksum so the version check (not the checksum) fires
+        let body_len = bytes.len() - TRAILER_LEN;
+        let sum = fletcher64(&bytes[..body_len]).to_le_bytes();
+        bytes[body_len..].copy_from_slice(&sum);
+        assert_eq!(
+            decode_frame(&bytes),
+            Err(FrameError::BadVersion(VERSION + 1))
+        );
+    }
+
+    #[test]
+    fn corrupted_payload_fails_the_checksum() {
+        let mut bytes = sample_frame();
+        let mid = HEADER_LEN + 2;
+        bytes[mid] ^= 0x10;
+        assert_eq!(decode_frame(&bytes), Err(FrameError::BadChecksum));
+    }
+
+    #[test]
+    fn corrupted_trailer_fails_the_checksum() {
+        let mut bytes = sample_frame();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        assert_eq!(decode_frame(&bytes), Err(FrameError::BadChecksum));
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let mut bytes = sample_frame();
+        // declare a ludicrous payload length
+        bytes[13..17].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(
+            decode_frame(&bytes),
+            Err(FrameError::OversizedPayload(_))
+        ));
+        // the streaming reader rejects it too (before any allocation)
+        let mut cursor = std::io::Cursor::new(bytes);
+        let err = read_frame(&mut cursor).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn unknown_kind_and_phase_bytes_are_typed_errors() {
+        for (idx, expect_kind) in [(5usize, true), (6usize, false)] {
+            let mut bytes = sample_frame();
+            bytes[idx] = 0xEE;
+            let body_len = bytes.len() - TRAILER_LEN;
+            let sum = fletcher64(&bytes[..body_len]).to_le_bytes();
+            bytes[body_len..].copy_from_slice(&sum);
+            match decode_frame(&bytes) {
+                Err(FrameError::BadKind(0xEE)) if expect_kind => {}
+                Err(FrameError::BadPhase(0xEE)) if !expect_kind => {}
+                other => panic!("idx={idx}: got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn read_frame_delimits_a_stream_of_frames() {
+        let a = sample_frame();
+        let payload = f32_payload(&[9.0]);
+        let b = encode_frame(
+            PayloadKind::F32Plain,
+            WirePhase::AllGather,
+            1,
+            8,
+            &payload,
+        );
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&a);
+        stream.extend_from_slice(&b);
+        let mut cursor = std::io::Cursor::new(stream);
+        let got_a = read_frame(&mut cursor).unwrap().unwrap();
+        let got_b = read_frame(&mut cursor).unwrap().unwrap();
+        assert_eq!(got_a, a);
+        assert_eq!(got_b, b);
+        // clean end-of-stream
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
+    fn read_frame_mid_frame_eof_is_an_error() {
+        let bytes = sample_frame();
+        let mut cursor = std::io::Cursor::new(&bytes[..HEADER_LEN + 2]);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_property_over_random_payloads() {
+        // Arbitrary payload bytes survive encode → decode bit-for-bit,
+        // for every kind/phase tag and random rank/step values.
+        forall(
+            120,
+            |r| (gen_vec(r, 0, 200, 1.0), r.range(0, 5), r.range(0, 5)),
+            |&(ref v, kind_idx, phase_idx): &(Vec<f32>, usize, usize)| {
+                let payload = f32_payload(v);
+                let kind = [
+                    PayloadKind::F32Plain,
+                    PayloadKind::F64Plain,
+                    PayloadKind::OneBit,
+                    PayloadKind::NBit(4),
+                    PayloadKind::NBit(16),
+                ][kind_idx % 5];
+                let phase = [
+                    WirePhase::Warmup,
+                    WirePhase::AllToAll,
+                    WirePhase::AllGather,
+                    WirePhase::Reduce,
+                    WirePhase::Broadcast,
+                ][phase_idx % 5];
+                let rank = (v.len() % 17) as u16;
+                let step = (v.len() * 31) as u32;
+                let bytes = encode_frame(kind, phase, rank, step, &payload);
+                let f = decode_frame(&bytes)
+                    .map_err(|e| format!("decode failed: {e}"))?;
+                if f.kind != kind || f.phase != phase {
+                    return Err("kind/phase tag did not roundtrip".into());
+                }
+                if f.rank != rank || f.step != step {
+                    return Err("rank/step did not roundtrip".into());
+                }
+                if f.payload != payload.as_slice() {
+                    return Err("payload bytes did not roundtrip".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn single_bitflip_property_never_decodes() {
+        // Flip any single bit of a valid frame: decode must fail (typed),
+        // never return success with different content.
+        let bytes = sample_frame();
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let bit = rng.range(0, bytes.len() * 8);
+            let mut c = bytes.clone();
+            c[bit / 8] ^= 1 << (bit % 8);
+            if let Ok(f) = decode_frame(&c) {
+                // the only survivable flips would have to collide the
+                // checksum — fletcher64 catches all single-bit flips
+                panic!("single bit flip at {bit} decoded: {f:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn payload_sizes_match_the_ledgered_wire_bytes() {
+        for n in [0usize, 1, 31, 32, 33, 1000] {
+            let v = vec![1.0f32; n];
+            assert_eq!(
+                onebit_payload(&v, 0.5).len(),
+                CompressionKind::OneBit.wire_bytes(n),
+                "1-bit n={n}"
+            );
+            assert_eq!(
+                f32_payload(&v).len(),
+                CompressionKind::None.wire_bytes(n),
+                "fp32 n={n}"
+            );
+            for bits in [1u32, 4, 7, 16] {
+                assert_eq!(
+                    nbit_payload(bits, &v, 1.0).len(),
+                    CompressionKind::NBit(bits).wire_bytes(n),
+                    "nbit {bits} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn onebit_payload_roundtrip_is_bit_exact() {
+        forall(
+            120,
+            |r| gen_vec(r, 0, 300, 1.0),
+            |v: &Vec<f32>| {
+                let n = v.len();
+                let mut err = vec![0.0f32; n];
+                let mut comp = vec![0.0f32; n];
+                let mut quant = vec![0.0f32; n];
+                let scale =
+                    onebit_compress_ec(v, &mut err, &mut comp, &mut quant);
+                let payload = onebit_payload(&quant, scale);
+                let mut back = vec![7.0f32; n];
+                decode_onebit_into(&payload, &mut back)
+                    .map_err(|e| e.to_string())?;
+                // reference decode: unpack the same signs at the same scale
+                let words = pack::pack_signs(&quant);
+                let mut expect = vec![0.0f32; n];
+                pack::unpack_signs_scaled(&words, scale, &mut expect);
+                if back != expect {
+                    return Err("1-bit wire roundtrip diverged".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn nbit_payload_roundtrip_is_bit_exact() {
+        // The lossless-code-recovery claim: encode(dequantized) →
+        // decode == dequantized, bitwise, across widths and EC steps.
+        forall(
+            100,
+            |r| (gen_vec(r, 0, 300, 1.0), r.range(1, 17)),
+            |&(ref v, bits): &(Vec<f32>, usize)| {
+                let bits = bits.clamp(1, 16) as u32;
+                let n = v.len();
+                let mut err = vec![0.0f32; n];
+                let mut q = vec![0.0f32; n];
+                for step in 0..3 {
+                    let vs: Vec<f32> =
+                        v.iter().map(|&x| x + step as f32 * 0.25).collect();
+                    let max_abs =
+                        nbit_compress_ec(bits, &vs, &mut err, &mut q);
+                    let payload = nbit_payload(bits, &q, max_abs);
+                    let mut back = vec![7.0f32; n];
+                    decode_nbit_into(bits, &payload, &mut back)
+                        .map_err(|e| e.to_string())?;
+                    if back != q {
+                        return Err(format!(
+                            "n-bit wire roundtrip diverged (bits={bits} \
+                             step={step})"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn malformed_payload_bodies_are_typed_errors() {
+        let mut out3 = vec![0.0f32; 3];
+        // f32: wrong byte count
+        assert!(decode_f32_into(&[0u8; 11], &mut out3).is_err());
+        // f64: wrong byte count
+        assert!(decode_f64_into(&[0u8; 23], &mut [0.0f64; 3]).is_err());
+        // 1-bit: header too short / count mismatch / word shortage
+        assert!(decode_onebit_into(&[0u8; 5], &mut out3).is_err());
+        let p = onebit_payload(&[1.0, -1.0, 1.0], 0.5);
+        assert!(decode_onebit_into(&p, &mut vec![0.0f32; 4]).is_err());
+        let mut short = p.clone();
+        short.pop();
+        assert!(decode_onebit_into(&short, &mut out3).is_err());
+        // n-bit: truncated codes
+        let q = nbit_payload(4, &[0.5, -0.5, 0.25], 0.5);
+        let mut shortq = q.clone();
+        shortq.pop();
+        assert!(decode_nbit_into(4, &shortq, &mut out3).is_err());
+    }
+
+    #[test]
+    fn payload_kind_bytes_roundtrip() {
+        let kinds = [
+            PayloadKind::F32Plain,
+            PayloadKind::F64Plain,
+            PayloadKind::OneBit,
+            PayloadKind::NBit(1),
+            PayloadKind::NBit(16),
+        ];
+        for k in kinds {
+            assert_eq!(PayloadKind::from_byte(k.to_byte()).unwrap(), k);
+        }
+        assert!(PayloadKind::from_byte(0xFF).is_err());
+        assert!(PayloadKind::from_byte(0x31).is_err());
+        for p in 0u8..5 {
+            assert_eq!(
+                WirePhase::from_byte(p).unwrap().to_byte(),
+                p
+            );
+        }
+        assert!(WirePhase::from_byte(9).is_err());
+    }
+}

@@ -1,0 +1,1527 @@
+//! SPMD driver: the paper's collectives executed **over a transport**,
+//! one OS thread per rank, every payload framed, checksummed, and moved
+//! as real bytes.
+//!
+//! [`TransportCollective`] is the wire-backed sibling of
+//! [`crate::comm::CompressedAllreduce`] /
+//! [`crate::comm::HierarchicalAllreduce`]:
+//!
+//! * **flat** (`group_size = 1`): Figure 3 verbatim — every rank EC
+//!   compresses its tensor, scatters per-chunk frames, serves its owned
+//!   chunk (decode → average in rank order → EC recompress), and
+//!   broadcasts the gathered chunk.  Bit-identical to the sequential
+//!   [`CompressedAllreduce`] reference engine (property-tested below)
+//!   because every f32 operation and its order match: chunks decode via
+//!   the same [`pack`] kernels the reference uses, and the n-bit wire
+//!   codec reconstructs dequantized values losslessly.
+//! * **hierarchical** (`group_size > 1`): members ship full-precision
+//!   tensors to their node leader (stage 1 frames), the leader reduces
+//!   them with the same [`kernels::reduce`] tree the in-process hierarchy
+//!   uses and runs the flat 1-bit exchange among leaders only (per-leader
+//!   EC state), then broadcasts the result back (stage 3 frames).  The
+//!   identity kind exchanges exact f64 node sums so even the two-level
+//!   full-precision reduce is bit-identical to
+//!   [`HierarchicalAllreduce`]'s `identity_exact` path.
+//! * **warmup**: [`TransportCollective::plain_average`] runs the
+//!   full-precision average as a scatter → per-chunk tree reduce →
+//!   allgather, bit-identical to
+//!   [`crate::comm::plain::allreduce_average`].
+//!
+//! The returned [`CommStats`] ledger the *payload* bytes per GPU with the
+//! same per-phase convention every in-process engine uses (so the
+//! cross-engine equality tests extend to the wire); the full measured
+//! picture — gross bytes including the 25-byte frame overhead, per-phase,
+//! plus frame counts — is in [`TransportStats`], which
+//! [`crate::netsim::collectives::calibrate`] checks against the analytic
+//! volume model.
+//!
+//! The all-gather leg is a full mesh here (each rank sends its gathered
+//! chunk to every peer), so gross bytes carry an `(n−1)×` duplication a
+//! ring or tree gather would avoid; `CommStats` keeps the established
+//! unique-payload convention, and the duplication factor is part of what
+//! `calibrate` documents.
+//!
+//! Scratch and frame buffers are allocated per rank per step (as the
+//! threaded fabric always did) — real serialization means real buffers.
+//! The zero-allocation-per-step contract remains the in-process
+//! bit-domain arena's; the wire path's bench numbers deliberately
+//! include this serialization cost.
+
+use std::ops::Range;
+
+use crate::comm::CommStats;
+use crate::compress::nbit::nbit_compress_ec;
+use crate::compress::onebit::onebit_compress_ec;
+use crate::compress::CompressionKind;
+use crate::kernels::reduce::{
+    tree_average_into, tree_scaled_average_into, tree_sum_into, REDUCE_BLK,
+};
+use crate::tensor::chunk::ChunkLayout;
+use crate::util::error::Result;
+
+use super::frame::{
+    self, decode_frame, encode_frame, Frame, FrameError, PayloadKind,
+    WirePhase,
+};
+use super::{build_mesh, TcpOptions, Transport, TransportBackend};
+
+/// Measured wire traffic of one transported collective step.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TransportStats {
+    /// Payload-byte ledger, per-GPU maxima — same convention as every
+    /// in-process engine (equality-tested against them).
+    pub comm: CommStats,
+    /// Gross bytes (frame headers + checksums included) put on the wire
+    /// by *all* ranks during the scatter/all-to-all legs.
+    pub gross_alltoall_bytes: usize,
+    /// Gross bytes across all ranks during the all-gather legs.
+    pub gross_allgather_bytes: usize,
+    /// Gross bytes of the hierarchy's intra-node member↔leader frames.
+    pub gross_intra_bytes: usize,
+    /// Total frames sent by all ranks.
+    pub frames_sent: usize,
+}
+
+impl TransportStats {
+    /// All measured bytes on the wire (every backend byte, all ranks).
+    pub fn gross_total(&self) -> usize {
+        self.gross_alltoall_bytes
+            + self.gross_allgather_bytes
+            + self.gross_intra_bytes
+    }
+}
+
+/// Per-rank counters, written by that rank's thread during a step.
+#[derive(Debug, Clone, Copy, Default)]
+struct RankStats {
+    payload_a2a: usize,
+    payload_ag: usize,
+    gross_a2a: usize,
+    gross_ag: usize,
+    gross_intra: usize,
+    frames: usize,
+}
+
+/// One rank's persistent half of the mesh: its endpoint, its carried EC
+/// state (leaders only under a hierarchy), and its output view.
+struct RankSlot {
+    ep: Box<dyn Transport>,
+    /// `δ^(i)` — worker/leader-side compression error (full length;
+    /// empty for hierarchy members).
+    worker_err: Vec<f32>,
+    /// `δ̄_j` — server-side error for the owned chunk (leaders only).
+    server_err: Vec<f32>,
+    /// This rank's reconstructed output (identical across ranks after a
+    /// step — asserted in tests via [`TransportCollective::rank_output`]).
+    out: Vec<f32>,
+    stats: RankStats,
+}
+
+/// The wire-backed collective.  Construction builds the mesh once
+/// (persistent connections); every [`Self::allreduce`] step runs one OS
+/// thread per rank over it.
+pub struct TransportCollective {
+    n: usize,
+    len: usize,
+    kind: CompressionKind,
+    /// Workers per node (1 = flat).
+    group: usize,
+    backend: TransportBackend,
+    /// Chunk layout over all `n` ranks (flat exchange + warmup average).
+    flat_layout: ChunkLayout,
+    /// Chunk layout over the node leaders.
+    lead_layout: ChunkLayout,
+    /// Node `k` owns rank range `groups[k]`; `groups[k].start` leads it.
+    groups: Vec<Range<usize>>,
+    ranks: Vec<RankSlot>,
+    step: u32,
+    last: TransportStats,
+}
+
+// ---- kind-dispatched compress / encode / decode ----------------------------
+
+/// EC-compress `value` per `kind` into `quant_out` (dequantized), updating
+/// `err`.  Returns the payload scale: the 1-bit scale, the n-bit max_abs,
+/// or 0 for the identity kind.  Identical math (and state effects) to the
+/// reference engine's `compress_into`.
+fn compress_kind(
+    kind: CompressionKind,
+    value: &[f32],
+    err: &mut [f32],
+    comp_scratch: &mut [f32],
+    quant_out: &mut [f32],
+) -> f32 {
+    match kind {
+        CompressionKind::None => {
+            quant_out.copy_from_slice(value);
+            0.0
+        }
+        CompressionKind::OneBit => {
+            onebit_compress_ec(value, err, comp_scratch, quant_out)
+        }
+        CompressionKind::NBit(bits) => {
+            nbit_compress_ec(bits, value, err, quant_out)
+        }
+    }
+}
+
+/// Wire payload for one dequantized chunk under `kind`.
+fn encode_chunk(kind: CompressionKind, chunk: &[f32], scale: f32) -> Vec<u8> {
+    match kind {
+        CompressionKind::None => frame::f32_payload(chunk),
+        CompressionKind::OneBit => frame::onebit_payload(chunk, scale),
+        CompressionKind::NBit(bits) => {
+            frame::nbit_payload(bits, chunk, scale)
+        }
+    }
+}
+
+/// Validate a received frame against the protocol position and decode its
+/// payload into `out`.
+fn decode_chunk(
+    kind: CompressionKind,
+    f: &Frame<'_>,
+    phase: WirePhase,
+    step: u32,
+    out: &mut [f32],
+) -> Result<()> {
+    if f.phase != phase {
+        return Err(FrameError::Protocol("unexpected phase tag").into());
+    }
+    if f.step != step {
+        return Err(FrameError::Protocol("unexpected step tag").into());
+    }
+    if f.kind != PayloadKind::for_compression(kind) {
+        return Err(FrameError::Protocol("unexpected payload kind").into());
+    }
+    match kind {
+        CompressionKind::None => frame::decode_f32_into(f.payload, out)?,
+        CompressionKind::OneBit => {
+            frame::decode_onebit_into(f.payload, out)?
+        }
+        CompressionKind::NBit(bits) => {
+            frame::decode_nbit_into(bits, f.payload, out)?
+        }
+    }
+    Ok(())
+}
+
+/// Receive + fully validate one frame from `from`.
+fn recv_frame(ep: &mut dyn Transport, from: usize) -> Result<Vec<u8>> {
+    ep.recv(from)
+}
+
+// ---- the flat compressed exchange (also the hierarchy's leader stage) ------
+
+/// Peer set of one compressed exchange: `peers` are the participating
+/// global ranks in ascending order, `me` indexes into them, `layout`
+/// chunks the tensor `peers.len()` ways.
+struct ExchangeCtx<'a> {
+    kind: CompressionKind,
+    step: u32,
+    peers: &'a [usize],
+    me: usize,
+    layout: &'a ChunkLayout,
+}
+
+/// One rank's run of the Figure-3 compressed allreduce over the wire —
+/// the transported twin of `CompressedAllreduce::allreduce_reference`,
+/// same f32 ops in the same order.
+fn exchange_compressed(
+    ctx: &ExchangeCtx<'_>,
+    ep: &mut dyn Transport,
+    input: &[f32],
+    worker_err: &mut [f32],
+    server_err: &mut [f32],
+    out: &mut [f32],
+    st: &mut RankStats,
+) -> Result<()> {
+    let n_p = ctx.peers.len();
+    let len = input.len();
+    let me = ctx.me;
+    let my_rank = ctx.peers[me] as u16;
+    let wire_kind = PayloadKind::for_compression(ctx.kind);
+
+    // ---- Phase 1: EC-compress the full tensor, scatter per-chunk frames.
+    let mut comp = vec![0.0f32; len];
+    let mut quant = vec![0.0f32; len];
+    let scale =
+        compress_kind(ctx.kind, input, worker_err, &mut comp, &mut quant);
+    let mut own_frame: Option<Vec<u8>> = None;
+    for (j, &peer) in ctx.peers.iter().enumerate() {
+        let r = ctx.layout.range(j);
+        let payload = encode_chunk(ctx.kind, &quant[r], scale);
+        let fbytes = encode_frame(
+            wire_kind,
+            WirePhase::AllToAll,
+            my_rank,
+            ctx.step,
+            &payload,
+        );
+        if j == me {
+            own_frame = Some(fbytes);
+        } else {
+            st.payload_a2a += payload.len();
+            st.gross_a2a += fbytes.len();
+            st.frames += 1;
+            ep.send(peer, &fbytes)?;
+        }
+    }
+
+    // ---- Phase 2: serve the owned chunk — decode each worker's frame in
+    // rank order, average, EC-recompress with the server error.
+    let clen = ctx.layout.size(me);
+    let mut avg = vec![0.0f32; clen];
+    let mut dec = vec![0.0f32; clen];
+    for (i, &peer) in ctx.peers.iter().enumerate() {
+        let bytes = if i == me {
+            own_frame.take().expect("own phase-1 frame")
+        } else {
+            recv_frame(ep, peer)?
+        };
+        let f = decode_frame(&bytes)?;
+        decode_chunk(ctx.kind, &f, WirePhase::AllToAll, ctx.step, &mut dec)?;
+        for k in 0..clen {
+            avg[k] += dec[k];
+        }
+    }
+    let inv = 1.0 / n_p as f32;
+    for a in avg.iter_mut() {
+        *a *= inv;
+    }
+    let mut scomp = vec![0.0f32; clen];
+    let mut squant = vec![0.0f32; clen];
+    let sscale =
+        compress_kind(ctx.kind, &avg, server_err, &mut scomp, &mut squant);
+    let spayload = encode_chunk(ctx.kind, &squant, sscale);
+    // Unique-payload convention: the gathered chunk is ledgered once (a
+    // ring gather sends it once); the mesh duplication shows up only in
+    // the gross counters.
+    st.payload_ag += spayload.len();
+    let sbytes = encode_frame(
+        wire_kind,
+        WirePhase::AllGather,
+        my_rank,
+        ctx.step,
+        &spayload,
+    );
+    for (j, &peer) in ctx.peers.iter().enumerate() {
+        if j != me {
+            st.gross_ag += sbytes.len();
+            st.frames += 1;
+            ep.send(peer, &sbytes)?;
+        }
+    }
+
+    // ---- Phase 3: reconstruct the full tensor from the gathered chunks.
+    for (j, &peer) in ctx.peers.iter().enumerate() {
+        let bytes = if j == me {
+            sbytes.clone()
+        } else {
+            recv_frame(ep, peer)?
+        };
+        let f = decode_frame(&bytes)?;
+        decode_chunk(
+            ctx.kind,
+            &f,
+            WirePhase::AllGather,
+            ctx.step,
+            &mut out[ctx.layout.range(j)],
+        )?;
+    }
+    Ok(())
+}
+
+// ---- hierarchy stages ------------------------------------------------------
+
+/// Member half of a hierarchical step: ship the local tensor to the node
+/// leader, then adopt the leader's broadcast.
+fn member_rank(
+    step: u32,
+    rank: usize,
+    leader: usize,
+    ep: &mut dyn Transport,
+    input: &[f32],
+    out: &mut [f32],
+    st: &mut RankStats,
+) -> Result<()> {
+    let payload = frame::f32_payload(input);
+    let fbytes = encode_frame(
+        PayloadKind::F32Plain,
+        WirePhase::Reduce,
+        rank as u16,
+        step,
+        &payload,
+    );
+    st.gross_intra += fbytes.len();
+    st.frames += 1;
+    ep.send(leader, &fbytes)?;
+    let bytes = recv_frame(ep, leader)?;
+    let f = decode_frame(&bytes)?;
+    decode_chunk(CompressionKind::None, &f, WirePhase::Broadcast, step, out)
+}
+
+/// Leader stage 1: gather the members' tensors off the wire, returning
+/// the decoded buffers (rank order, leader's own tensor excluded).
+fn gather_members(
+    step: u32,
+    group: &Range<usize>,
+    ep: &mut dyn Transport,
+    len: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let mut bufs = Vec::with_capacity(group.len().saturating_sub(1));
+    for m in group.clone().skip(1) {
+        let bytes = recv_frame(ep, m)?;
+        let f = decode_frame(&bytes)?;
+        let mut buf = vec![0.0f32; len];
+        decode_chunk(
+            CompressionKind::None,
+            &f,
+            WirePhase::Reduce,
+            step,
+            &mut buf,
+        )?;
+        bufs.push(buf);
+    }
+    Ok(bufs)
+}
+
+/// Shared read-only context of a leader rank's hierarchical step.
+struct LeaderCtx<'a> {
+    step: u32,
+    n_workers: usize,
+    kind: CompressionKind,
+    /// Identity kind with a real hierarchy: exchange exact f64 sums.
+    identity: bool,
+    node: usize,
+    rank: usize,
+    groups: &'a [Range<usize>],
+    leader_ranks: &'a [usize],
+    lead_layout: &'a ChunkLayout,
+}
+
+/// Leader half of a hierarchical step: gather members, reduce, exchange
+/// among leaders, broadcast the result back.
+fn leader_rank(
+    c: &LeaderCtx<'_>,
+    ep: &mut dyn Transport,
+    input: &[f32],
+    worker_err: &mut [f32],
+    server_err: &mut [f32],
+    out: &mut [f32],
+    st: &mut RankStats,
+) -> Result<()> {
+    let member_bufs =
+        gather_members(c.step, &c.groups[c.node], ep, input.len())?;
+    // Node views in rank order: the leader is its group's first rank.
+    let mut views: Vec<&[f32]> =
+        Vec::with_capacity(c.groups[c.node].len());
+    views.push(input);
+    for b in &member_bufs {
+        views.push(b.as_slice());
+    }
+    if c.identity {
+        identity_leader(
+            c.step,
+            c.n_workers,
+            c.node,
+            c.groups,
+            c.leader_ranks,
+            ep,
+            &views,
+            out,
+            st,
+        )?;
+    } else {
+        // Stage 1: the scaled node mean — same kernel, same L/n
+        // weighting as the in-process hierarchy.
+        let div = c.n_workers as f64 / c.leader_ranks.len() as f64;
+        let mut node_mean = vec![0.0f32; input.len()];
+        tree_scaled_average_into(&views, 0, div, &mut node_mean);
+        // Stage 2: the flat compressed exchange among leaders only.
+        let ctx = ExchangeCtx {
+            kind: c.kind,
+            step: c.step,
+            peers: c.leader_ranks,
+            me: c.node,
+            layout: c.lead_layout,
+        };
+        exchange_compressed(
+            &ctx, ep, &node_mean, worker_err, server_err, out, st,
+        )?;
+    }
+    broadcast_members(c.step, c.rank, &c.groups[c.node], ep, out, st)
+}
+
+/// Leader stage 3: broadcast the gathered tensor to the node's members.
+fn broadcast_members(
+    step: u32,
+    rank: usize,
+    group: &Range<usize>,
+    ep: &mut dyn Transport,
+    out: &[f32],
+    st: &mut RankStats,
+) -> Result<()> {
+    let payload = frame::f32_payload(out);
+    let fbytes = encode_frame(
+        PayloadKind::F32Plain,
+        WirePhase::Broadcast,
+        rank as u16,
+        step,
+        &payload,
+    );
+    for m in group.clone().skip(1) {
+        st.gross_intra += fbytes.len();
+        st.frames += 1;
+        ep.send(m, &fbytes)?;
+    }
+    Ok(())
+}
+
+/// Leader half of the identity-kind hierarchy: exchange exact f64 node
+/// sums among leaders and combine them pairwise, reproducing
+/// `HierarchicalAllreduce`'s `identity_exact` bit for bit (same per-node
+/// tree sums, same iterative-halving combination order, one rounding).
+#[allow(clippy::too_many_arguments)]
+fn identity_leader(
+    step: u32,
+    n_workers: usize,
+    node: usize,
+    groups: &[Range<usize>],
+    leader_ranks: &[usize],
+    ep: &mut dyn Transport,
+    views: &[&[f32]],
+    out: &mut [f32],
+    st: &mut RankStats,
+) -> Result<()> {
+    let len = out.len();
+    let l = leader_ranks.len();
+    let my_rank = groups[node].start as u16;
+    // Per-node exact f64 sum, in REDUCE_BLK blocks (per-element value is
+    // block-independent; blocking only keeps the accumulator in L1).
+    let mut nsum = vec![0.0f64; len];
+    let mut i = 0;
+    while i < len {
+        let blk = REDUCE_BLK.min(len - i);
+        tree_sum_into(views, i, &mut nsum[i..i + blk]);
+        i += blk;
+    }
+    // Allgather the node sums among leaders.
+    let payload = frame::f64_payload(&nsum);
+    let fbytes = encode_frame(
+        PayloadKind::F64Plain,
+        WirePhase::AllGather,
+        my_rank,
+        step,
+        &payload,
+    );
+    for (k, &lr) in leader_ranks.iter().enumerate() {
+        if k != node {
+            st.gross_a2a += fbytes.len();
+            st.frames += 1;
+            ep.send(lr, &fbytes)?;
+        }
+    }
+    let mut sums: Vec<Vec<f64>> = Vec::with_capacity(l);
+    for (k, &lr) in leader_ranks.iter().enumerate() {
+        if k == node {
+            sums.push(std::mem::take(&mut nsum));
+        } else {
+            let bytes = recv_frame(ep, lr)?;
+            let f = decode_frame(&bytes)?;
+            if f.phase != WirePhase::AllGather || f.step != step {
+                return Err(
+                    FrameError::Protocol("unexpected f64 sum frame").into()
+                );
+            }
+            let mut buf = vec![0.0f64; len];
+            frame::decode_f64_into(f.payload, &mut buf)?;
+            sums.push(buf);
+        }
+    }
+    // Pairwise (tree) combination — the identical iterative halving the
+    // in-process identity path performs on its node strips.
+    let mut stp = 1;
+    while stp < l {
+        let mut k = 0;
+        while k + stp < l {
+            let (head, tail) = sums.split_at_mut(k + stp);
+            let dst = &mut head[k];
+            let src = &tail[0];
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                *d += *s;
+            }
+            k += 2 * stp;
+        }
+        stp *= 2;
+    }
+    let div = n_workers as f64;
+    for (o, &a) in out.iter_mut().zip(sums[0].iter()) {
+        *o = (a / div) as f32;
+    }
+    Ok(())
+}
+
+impl TransportCollective {
+    /// Flat topology on the chosen backend (default TCP options).
+    pub fn new(
+        backend: TransportBackend,
+        n_workers: usize,
+        len: usize,
+        kind: CompressionKind,
+    ) -> Result<Self> {
+        Self::with_topology(backend, n_workers, len, kind, 1)
+    }
+
+    /// Flat (`group_size = 1`) or hierarchical (`group_size > 1`)
+    /// topology, default TCP options.
+    pub fn with_topology(
+        backend: TransportBackend,
+        n_workers: usize,
+        len: usize,
+        kind: CompressionKind,
+        group_size: usize,
+    ) -> Result<Self> {
+        Self::with_options(
+            backend,
+            n_workers,
+            len,
+            kind,
+            group_size,
+            &TcpOptions::default(),
+        )
+    }
+
+    /// Full control, including the TCP backend's socket options.
+    pub fn with_options(
+        backend: TransportBackend,
+        n_workers: usize,
+        len: usize,
+        kind: CompressionKind,
+        group_size: usize,
+        tcp: &TcpOptions,
+    ) -> Result<Self> {
+        assert!(n_workers > 0);
+        let group = group_size.clamp(1, n_workers);
+        let l = n_workers.div_ceil(group);
+        let groups: Vec<Range<usize>> = (0..l)
+            .map(|k| k * group..((k + 1) * group).min(n_workers))
+            .collect();
+        let flat_layout = ChunkLayout::new(len, n_workers);
+        let lead_layout = ChunkLayout::new(len, l);
+        let mesh = build_mesh(backend, n_workers, tcp)?;
+        let ranks: Vec<RankSlot> = mesh
+            .into_iter()
+            .enumerate()
+            .map(|(rank, ep)| {
+                // EC state lives on leaders (every rank, when flat).
+                let node = rank / group;
+                let is_leader = groups[node].start == rank;
+                RankSlot {
+                    ep,
+                    worker_err: if is_leader {
+                        vec![0.0; len]
+                    } else {
+                        Vec::new()
+                    },
+                    server_err: if is_leader {
+                        vec![0.0; lead_layout.size(node)]
+                    } else {
+                        Vec::new()
+                    },
+                    out: vec![0.0; len],
+                    stats: RankStats::default(),
+                }
+            })
+            .collect();
+        Ok(TransportCollective {
+            n: n_workers,
+            len,
+            kind,
+            group,
+            backend,
+            flat_layout,
+            lead_layout,
+            groups,
+            ranks,
+            step: 0,
+            last: TransportStats::default(),
+        })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn kind(&self) -> CompressionKind {
+        self.kind
+    }
+
+    pub fn backend(&self) -> TransportBackend {
+        self.backend
+    }
+
+    /// Workers per node (1 = flat).
+    pub fn group_size(&self) -> usize {
+        self.group
+    }
+
+    /// Number of nodes / leaders (== `n_workers` when flat).
+    pub fn n_nodes(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Measured traffic of the last step (gross bytes + frame counts).
+    pub fn last_stats(&self) -> TransportStats {
+        self.last
+    }
+
+    /// Leader `k`'s carried worker-side error (the flat path's worker
+    /// `k`, since every rank leads its own node there).
+    pub fn leader_error(&self, k: usize) -> &[f32] {
+        &self.ranks[self.groups[k].start].worker_err
+    }
+
+    /// Server-side error of leader chunk `k`.
+    pub fn server_error(&self, k: usize) -> &[f32] {
+        &self.ranks[self.groups[k].start].server_err
+    }
+
+    /// Rank `r`'s reconstructed output from the last step (identical
+    /// across ranks — asserted in tests).
+    pub fn rank_output(&self, r: usize) -> &[f32] {
+        &self.ranks[r].out
+    }
+
+    /// Reset all carried errors (warmup→compression boundary).
+    pub fn reset_errors(&mut self) {
+        for slot in self.ranks.iter_mut() {
+            slot.worker_err.iter_mut().for_each(|x| *x = 0.0);
+            slot.server_err.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    /// Snapshot the carried EC state: the leaders' worker errors (node
+    /// order) followed by the leaders' server errors — the layout
+    /// [`crate::comm::Collective::export_errors`] uses for checkpoints.
+    pub fn export_errors(&self) -> Vec<Vec<f32>> {
+        let mut out = Vec::with_capacity(2 * self.groups.len());
+        for g in &self.groups {
+            out.push(self.ranks[g.start].worker_err.clone());
+        }
+        for g in &self.groups {
+            out.push(self.ranks[g.start].server_err.clone());
+        }
+        out
+    }
+
+    /// Restore a state exported by [`Self::export_errors`].  Returns
+    /// false (leaving the state untouched) on any shape mismatch.
+    pub fn import_errors(&mut self, bufs: &[Vec<f32>]) -> bool {
+        let l = self.groups.len();
+        if bufs.len() != 2 * l {
+            return false;
+        }
+        for (k, g) in self.groups.iter().enumerate() {
+            if bufs[k].len() != self.ranks[g.start].worker_err.len()
+                || bufs[l + k].len() != self.ranks[g.start].server_err.len()
+            {
+                return false;
+            }
+        }
+        for k in 0..l {
+            let lead = self.groups[k].start;
+            self.ranks[lead].worker_err.copy_from_slice(&bufs[k]);
+            self.ranks[lead].server_err.copy_from_slice(&bufs[l + k]);
+        }
+        true
+    }
+
+    /// Run one compressed-allreduce step over the wire: `inputs[i]` is
+    /// rank `i`'s local tensor; on return `output` holds the identical
+    /// aggregated tensor every rank reconstructed.  Panics if the
+    /// underlying transport fails mid-collective (a dead mesh is not
+    /// recoverable); surviving peers unwind too, within
+    /// [`super::RECV_TIMEOUT`], rather than blocking forever on a rank
+    /// that will never send.
+    pub fn allreduce(
+        &mut self,
+        inputs: &[Vec<f32>],
+        output: &mut [f32],
+    ) -> CommStats {
+        assert_eq!(inputs.len(), self.n);
+        assert_eq!(output.len(), self.len);
+        for inp in inputs {
+            assert_eq!(inp.len(), self.len);
+        }
+        self.step = self.step.wrapping_add(1);
+        let step = self.step;
+        let n = self.n;
+        let kind = self.kind;
+        let group = self.group;
+        let identity_hier = group > 1
+            && matches!(kind, CompressionKind::None);
+        let groups = &self.groups;
+        let flat_layout = &self.flat_layout;
+        let lead_layout = &self.lead_layout;
+        let flat_peers: Vec<usize> = (0..n).collect();
+        let leader_ranks: Vec<usize> =
+            groups.iter().map(|g| g.start).collect();
+
+        std::thread::scope(|scope| {
+            for (rank, slot) in self.ranks.iter_mut().enumerate() {
+                let input = &inputs[rank];
+                let flat_peers = &flat_peers;
+                let leader_ranks = &leader_ranks;
+                scope.spawn(move || {
+                    slot.stats = RankStats::default();
+                    let node = rank / group;
+                    let leader = groups[node].start;
+                    let res: Result<()> = if group == 1 {
+                        // Flat: every rank is its own leader.
+                        let ctx = ExchangeCtx {
+                            kind,
+                            step,
+                            peers: flat_peers,
+                            me: rank,
+                            layout: flat_layout,
+                        };
+                        exchange_compressed(
+                            &ctx,
+                            slot.ep.as_mut(),
+                            input,
+                            &mut slot.worker_err,
+                            &mut slot.server_err,
+                            &mut slot.out,
+                            &mut slot.stats,
+                        )
+                    } else if rank != leader {
+                        member_rank(
+                            step,
+                            rank,
+                            leader,
+                            slot.ep.as_mut(),
+                            input,
+                            &mut slot.out,
+                            &mut slot.stats,
+                        )
+                    } else {
+                        let lc = LeaderCtx {
+                            step,
+                            n_workers: n,
+                            kind,
+                            identity: identity_hier,
+                            node,
+                            rank,
+                            groups,
+                            leader_ranks,
+                            lead_layout,
+                        };
+                        leader_rank(
+                            &lc,
+                            slot.ep.as_mut(),
+                            input,
+                            &mut slot.worker_err,
+                            &mut slot.server_err,
+                            &mut slot.out,
+                            &mut slot.stats,
+                        )
+                    };
+                    res.unwrap_or_else(|e| {
+                        panic!("rank {rank}: transport collective failed: {e}")
+                    });
+                });
+            }
+        });
+
+        self.finish_step(identity_hier, output)
+    }
+
+    /// Warmup-phase full-precision average over the wire: scatter chunks,
+    /// tree-reduce each chunk where it lands, allgather.  Bit-identical
+    /// to [`crate::comm::plain::allreduce_average`] (property-tested);
+    /// returns the same ring-convention [`CommStats`], with measured
+    /// gross bytes in [`Self::last_stats`].
+    pub fn plain_average(
+        &mut self,
+        inputs: &[Vec<f32>],
+        output: &mut [f32],
+    ) -> CommStats {
+        assert_eq!(inputs.len(), self.n);
+        assert_eq!(output.len(), self.len);
+        for inp in inputs {
+            assert_eq!(inp.len(), self.len);
+        }
+        self.step = self.step.wrapping_add(1);
+        let step = self.step;
+        let n = self.n;
+        let layout = &self.flat_layout;
+
+        std::thread::scope(|scope| {
+            for (rank, slot) in self.ranks.iter_mut().enumerate() {
+                let input = &inputs[rank];
+                scope.spawn(move || {
+                    slot.stats = RankStats::default();
+                    plain_average_rank(
+                        step,
+                        n,
+                        rank,
+                        layout,
+                        slot.ep.as_mut(),
+                        input,
+                        &mut slot.out,
+                        &mut slot.stats,
+                    )
+                    .unwrap_or_else(|e| {
+                        panic!("rank {rank}: transported average failed: {e}")
+                    });
+                });
+            }
+        });
+
+        // Aggregate the measured picture, then report the ring-formula
+        // CommStats the in-process plain engine uses.
+        self.finish_step(false, output);
+        let bytes = self.len * 4;
+        let ring_per_gpu =
+            if n > 1 { 2 * bytes * (n - 1) / n } else { 0 };
+        let comm = CommStats {
+            alltoall_bytes_per_gpu: ring_per_gpu / 2,
+            allgather_bytes_per_gpu: ring_per_gpu / 2,
+            uncompressed_bytes: bytes,
+        };
+        self.last.comm = comm;
+        comm
+    }
+
+    /// Join-time aggregation: fold the per-rank counters into
+    /// [`TransportStats`], surface rank 0's output, return the ledger.
+    fn finish_step(
+        &mut self,
+        identity_hier: bool,
+        output: &mut [f32],
+    ) -> CommStats {
+        let mut ts = TransportStats::default();
+        let mut a2a = 0usize;
+        let mut ag = 0usize;
+        for slot in &self.ranks {
+            ts.gross_alltoall_bytes += slot.stats.gross_a2a;
+            ts.gross_allgather_bytes += slot.stats.gross_ag;
+            ts.gross_intra_bytes += slot.stats.gross_intra;
+            ts.frames_sent += slot.stats.frames;
+            a2a = a2a.max(slot.stats.payload_a2a);
+            ag = ag.max(slot.stats.payload_ag);
+        }
+        let comm = if identity_hier {
+            // The identity hierarchy moves exact f64 sums (ledgered in
+            // the gross counters); the payload CommStats keep the same
+            // closed form the in-process engine reports for this path.
+            closed_form_stats(self.kind, &self.lead_layout, self.len)
+        } else {
+            CommStats {
+                alltoall_bytes_per_gpu: a2a,
+                allgather_bytes_per_gpu: ag,
+                uncompressed_bytes: self.len * 4,
+            }
+        };
+        ts.comm = comm;
+        self.last = ts;
+        output.copy_from_slice(&self.ranks[0].out);
+        comm
+    }
+}
+
+/// The Arena closed form: per-GPU payload volume as a pure function of
+/// (layout, kind) — what every in-process engine reports, derived from
+/// the one shared [`crate::comm::chunk_wire_volume`] scan.
+fn closed_form_stats(
+    kind: CompressionKind,
+    layout: &ChunkLayout,
+    len: usize,
+) -> CommStats {
+    let (total, min, max) = crate::comm::chunk_wire_volume(kind, layout);
+    CommStats {
+        alltoall_bytes_per_gpu: total - min,
+        allgather_bytes_per_gpu: max,
+        uncompressed_bytes: len * 4,
+    }
+}
+
+/// One rank's run of the transported warmup average.
+#[allow(clippy::too_many_arguments)]
+fn plain_average_rank(
+    step: u32,
+    n: usize,
+    rank: usize,
+    layout: &ChunkLayout,
+    ep: &mut dyn Transport,
+    input: &[f32],
+    out: &mut [f32],
+    st: &mut RankStats,
+) -> Result<()> {
+    // ---- Scatter: chunk `j` of my tensor goes to rank `j`.
+    for j in 0..n {
+        if j == rank {
+            continue;
+        }
+        let payload = frame::f32_payload(&input[layout.range(j)]);
+        let fbytes = encode_frame(
+            PayloadKind::F32Plain,
+            WirePhase::Warmup,
+            rank as u16,
+            step,
+            &payload,
+        );
+        st.payload_a2a += payload.len();
+        st.gross_a2a += fbytes.len();
+        st.frames += 1;
+        ep.send(j, &fbytes)?;
+    }
+    // ---- Reduce my chunk: decode every worker's slice (rank order) and
+    // run the same pairwise-f64 tree the in-process warmup path uses.
+    let clen = layout.size(rank);
+    let mut bufs: Vec<Vec<f32>> = (0..n).map(|_| Vec::new()).collect();
+    for (i, buf) in bufs.iter_mut().enumerate() {
+        if i == rank {
+            continue;
+        }
+        let bytes = recv_frame(ep, i)?;
+        let f = decode_frame(&bytes)?;
+        buf.resize(clen, 0.0);
+        decode_chunk(CompressionKind::None, &f, WirePhase::Warmup, step, buf)?;
+    }
+    let own = &input[layout.range(rank)];
+    let views: Vec<&[f32]> = (0..n)
+        .map(|i| if i == rank { own } else { bufs[i].as_slice() })
+        .collect();
+    let mut avg = vec![0.0f32; clen];
+    tree_average_into(&views, 0, &mut avg);
+    // ---- Allgather the averaged chunk.
+    let payload = frame::f32_payload(&avg);
+    st.payload_ag += payload.len();
+    let fbytes = encode_frame(
+        PayloadKind::F32Plain,
+        WirePhase::AllGather,
+        rank as u16,
+        step,
+        &payload,
+    );
+    for j in 0..n {
+        if j != rank {
+            st.gross_ag += fbytes.len();
+            st.frames += 1;
+            ep.send(j, &fbytes)?;
+        }
+    }
+    out[layout.range(rank)].copy_from_slice(&avg);
+    for j in 0..n {
+        if j == rank {
+            continue;
+        }
+        let bytes = recv_frame(ep, j)?;
+        let f = decode_frame(&bytes)?;
+        decode_chunk(
+            CompressionKind::None,
+            &f,
+            WirePhase::AllGather,
+            step,
+            &mut out[layout.range(j)],
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::plain::allreduce_average;
+    use crate::comm::{
+        AllreducePath, CompressedAllreduce, HierarchicalAllreduce,
+    };
+    use crate::util::check::forall;
+    use crate::util::prng::Rng;
+
+    fn random_inputs(n: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let base = Rng::new(seed);
+        (0..n)
+            .map(|i| base.fork(i as u64).normal_vec(len, 1.0))
+            .collect()
+    }
+
+    fn kind_of(idx: usize) -> CompressionKind {
+        match idx % 3 {
+            0 => CompressionKind::OneBit,
+            1 => CompressionKind::None,
+            _ => CompressionKind::NBit(4),
+        }
+    }
+
+    /// Multi-step bit-equality of a transported flat collective against
+    /// the sequential reference engine — outputs, CommStats, both error
+    /// states.
+    fn assert_flat_matches_reference(
+        backend: TransportBackend,
+        workers: usize,
+        len: usize,
+        kind: CompressionKind,
+        seed: u64,
+        steps: u64,
+    ) -> std::result::Result<(), String> {
+        let mut wire =
+            TransportCollective::new(backend, workers, len, kind)
+                .map_err(|e| format!("mesh: {e}"))?;
+        let mut reference = CompressedAllreduce::with_options(
+            workers,
+            len,
+            kind,
+            AllreducePath::DecodeAverage,
+            1,
+        );
+        let mut out_w = vec![0.0f32; len];
+        let mut out_r = vec![0.0f32; len];
+        for s in 0..steps {
+            let inputs = random_inputs(workers, len, seed + s);
+            let st_w = wire.allreduce(&inputs, &mut out_w);
+            let st_r = reference.allreduce(&inputs, &mut out_r);
+            if out_w != out_r {
+                return Err(format!(
+                    "output diverged: {backend:?} w={workers} len={len} \
+                     {kind:?} step={s}"
+                ));
+            }
+            if st_w != st_r {
+                return Err(format!(
+                    "stats diverged: {st_w:?} vs {st_r:?} ({backend:?} \
+                     w={workers} len={len} {kind:?})"
+                ));
+            }
+            for i in 0..workers {
+                if wire.leader_error(i) != reference.worker_error(i)
+                    || wire.server_error(i) != reference.server_error(i)
+                {
+                    return Err(format!(
+                        "error state diverged: {backend:?} w={workers} \
+                         len={len} {kind:?} i={i} step={s}"
+                    ));
+                }
+            }
+            // transport invariance *within* the mesh: every rank holds
+            // the same reconstruction
+            for r in 1..workers {
+                if wire.rank_output(r) != wire.rank_output(0) {
+                    return Err(format!(
+                        "rank {r} output differs from rank 0"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn in_memory_flat_equals_sequential_reference_property() {
+        // The tentpole contract, reference backend: arbitrary lengths ×
+        // ranks 1–8 × every CompressionKind, multiple EC steps.
+        forall(
+            36,
+            |r| (r.range(0, 4097), r.range(1, 9), r.range(0, 3)),
+            |&(len, workers, kind_idx): &(usize, usize, usize)| {
+                assert_flat_matches_reference(
+                    TransportBackend::InMemory,
+                    workers.clamp(1, 8),
+                    len,
+                    kind_of(kind_idx),
+                    9000 + len as u64,
+                    3,
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn tcp_flat_equals_sequential_reference_property() {
+        // Same contract over real loopback sockets (smaller sweep — each
+        // case builds a fresh socket mesh).
+        forall(
+            10,
+            |r| (r.range(0, 1025), r.range(1, 7), r.range(0, 3)),
+            |&(len, workers, kind_idx): &(usize, usize, usize)| {
+                assert_flat_matches_reference(
+                    TransportBackend::Tcp,
+                    workers.clamp(1, 6),
+                    len,
+                    kind_of(kind_idx),
+                    11_000 + len as u64,
+                    2,
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn tcp_flat_covers_the_acceptance_corners() {
+        // Pinned corners on TCP: 8 ranks, length 4096 and an uneven
+        // length, all kinds, 3 steps each.
+        for kind_idx in 0..3 {
+            for len in [4096usize, 4097] {
+                assert_flat_matches_reference(
+                    TransportBackend::Tcp,
+                    8,
+                    len,
+                    kind_of(kind_idx),
+                    500 + len as u64,
+                    3,
+                )
+                .unwrap();
+            }
+        }
+    }
+
+    fn assert_hier_matches_reference(
+        backend: TransportBackend,
+        workers: usize,
+        len: usize,
+        kind: CompressionKind,
+        group: usize,
+        seed: u64,
+        steps: u64,
+    ) -> std::result::Result<(), String> {
+        let mut wire = TransportCollective::with_topology(
+            backend, workers, len, kind, group,
+        )
+        .map_err(|e| format!("mesh: {e}"))?;
+        let mut reference = HierarchicalAllreduce::with_options(
+            workers,
+            len,
+            kind,
+            group,
+            AllreducePath::DecodeAverage,
+            1,
+        );
+        assert_eq!(wire.n_nodes(), reference.n_nodes());
+        let mut out_w = vec![0.0f32; len];
+        let mut out_r = vec![0.0f32; len];
+        for s in 0..steps {
+            let inputs = random_inputs(workers, len, seed + s);
+            let st_w = wire.allreduce(&inputs, &mut out_w);
+            let st_r = reference.allreduce(&inputs, &mut out_r);
+            if out_w != out_r {
+                return Err(format!(
+                    "output diverged: {backend:?} w={workers} len={len} \
+                     {kind:?} g={group} step={s}"
+                ));
+            }
+            if st_w != st_r {
+                return Err(format!(
+                    "stats diverged: {st_w:?} vs {st_r:?} (w={workers} \
+                     len={len} {kind:?} g={group})"
+                ));
+            }
+            for k in 0..wire.n_nodes() {
+                if wire.leader_error(k) != reference.leader_error(k)
+                    || wire.server_error(k) != reference.server_error(k)
+                {
+                    return Err(format!(
+                        "leader error state diverged: w={workers} \
+                         len={len} {kind:?} g={group} k={k} step={s}"
+                    ));
+                }
+            }
+            for r in 1..workers {
+                if wire.rank_output(r) != wire.rank_output(0) {
+                    return Err(format!(
+                        "rank {r} output differs from rank 0 (g={group})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn in_memory_hierarchical_equals_reference_property() {
+        // Two-level topology over the wire == in-process hierarchy, for
+        // every kind (the identity kind exercises the exact-f64 leg),
+        // divisible and non-divisible groups.
+        forall(
+            24,
+            |r| {
+                (
+                    r.range(0, 4097),
+                    r.range(1, 9),
+                    r.range(0, 3),
+                    r.range(2, 5),
+                )
+            },
+            |&(len, workers, kind_idx, group): &(
+                usize,
+                usize,
+                usize,
+                usize,
+            )| {
+                assert_hier_matches_reference(
+                    TransportBackend::InMemory,
+                    workers.clamp(1, 8),
+                    len,
+                    kind_of(kind_idx),
+                    group,
+                    13_000 + len as u64,
+                    3,
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn tcp_hierarchical_equals_reference() {
+        for (kind_idx, group, len) in
+            [(0usize, 2usize, 1500usize), (1, 4, 777), (2, 3, 64)]
+        {
+            assert_hier_matches_reference(
+                TransportBackend::Tcp,
+                8,
+                len,
+                kind_of(kind_idx),
+                group,
+                700 + len as u64,
+                2,
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn group_size_one_is_the_flat_path() {
+        // group_size = 1 must collapse to the flat exchange (and hence
+        // the sequential reference), mirroring the in-process hierarchy.
+        let mut g1 = TransportCollective::with_topology(
+            TransportBackend::InMemory,
+            4,
+            513,
+            CompressionKind::OneBit,
+            1,
+        )
+        .unwrap();
+        let mut flat = CompressedAllreduce::new(
+            4,
+            513,
+            CompressionKind::OneBit,
+        );
+        let mut out_a = vec![0.0f32; 513];
+        let mut out_b = vec![0.0f32; 513];
+        for s in 0..3u64 {
+            let inputs = random_inputs(4, 513, 40 + s);
+            g1.allreduce(&inputs, &mut out_a);
+            flat.allreduce(&inputs, &mut out_b);
+            assert_eq!(out_a, out_b, "step={s}");
+        }
+    }
+
+    #[test]
+    fn plain_average_equals_in_process_engine_property() {
+        // The transported warmup average: bit-identical outputs and
+        // identical (ring-convention) CommStats.
+        forall(
+            24,
+            |r| (r.range(0, 3001), r.range(1, 9)),
+            |&(len, workers): &(usize, usize)| {
+                let workers = workers.clamp(1, 8);
+                let inputs =
+                    random_inputs(workers, len, 21_000 + len as u64);
+                let mut wire = TransportCollective::new(
+                    TransportBackend::InMemory,
+                    workers,
+                    len,
+                    CompressionKind::None,
+                )
+                .map_err(|e| format!("mesh: {e}"))?;
+                let mut out_w = vec![0.0f32; len];
+                let st_w = wire.plain_average(&inputs, &mut out_w);
+                let mut out_p = vec![0.0f32; len];
+                let st_p = allreduce_average(&inputs, &mut out_p);
+                if out_w != out_p {
+                    return Err(format!(
+                        "warmup average diverged (w={workers} len={len})"
+                    ));
+                }
+                if st_w != st_p {
+                    return Err(format!(
+                        "warmup stats diverged: {st_w:?} vs {st_p:?}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tcp_plain_average_matches_in_memory() {
+        let (workers, len) = (5usize, 2000usize);
+        let inputs = random_inputs(workers, len, 77);
+        let mut mem = TransportCollective::new(
+            TransportBackend::InMemory,
+            workers,
+            len,
+            CompressionKind::None,
+        )
+        .unwrap();
+        let mut tcp = TransportCollective::new(
+            TransportBackend::Tcp,
+            workers,
+            len,
+            CompressionKind::None,
+        )
+        .unwrap();
+        let mut out_m = vec![0.0f32; len];
+        let mut out_t = vec![0.0f32; len];
+        mem.plain_average(&inputs, &mut out_m);
+        tcp.plain_average(&inputs, &mut out_t);
+        assert_eq!(out_m, out_t);
+    }
+
+    #[test]
+    fn error_state_persists_and_resets_like_the_fabric() {
+        let (n, len) = (4usize, 512usize);
+        let mut wire = TransportCollective::new(
+            TransportBackend::InMemory,
+            n,
+            len,
+            CompressionKind::OneBit,
+        )
+        .unwrap();
+        let inputs = random_inputs(n, len, 7);
+        let mut out1 = vec![0.0f32; len];
+        let mut out2 = vec![0.0f32; len];
+        wire.allreduce(&inputs, &mut out1);
+        // same inputs, advanced error state ⇒ different output
+        wire.allreduce(&inputs, &mut out2);
+        assert_ne!(out1, out2);
+        // resetting the errors reproduces the first call exactly
+        wire.reset_errors();
+        let mut out3 = vec![0.0f32; len];
+        wire.allreduce(&inputs, &mut out3);
+        assert_eq!(out1, out3);
+    }
+
+    #[test]
+    fn export_import_errors_roundtrip_mid_run() {
+        let (n, len, group) = (6usize, 300usize, 2usize);
+        let mut a = TransportCollective::with_topology(
+            TransportBackend::InMemory,
+            n,
+            len,
+            CompressionKind::OneBit,
+            group,
+        )
+        .unwrap();
+        let mut out = vec![0.0f32; len];
+        for s in 0..3u64 {
+            let inputs = random_inputs(n, len, 60 + s);
+            a.allreduce(&inputs, &mut out);
+        }
+        let snap = a.export_errors();
+        assert_eq!(snap.len(), 2 * a.n_nodes());
+        assert!(snap[0].iter().any(|&e| e != 0.0));
+        // a fresh mesh resumes the same trajectory after import
+        let mut b = TransportCollective::with_topology(
+            TransportBackend::InMemory,
+            n,
+            len,
+            CompressionKind::OneBit,
+            group,
+        )
+        .unwrap();
+        assert!(b.import_errors(&snap));
+        let mut out_a = vec![0.0f32; len];
+        let mut out_b = vec![0.0f32; len];
+        for s in 0..3u64 {
+            let inputs = random_inputs(n, len, 90 + s);
+            a.allreduce(&inputs, &mut out_a);
+            b.allreduce(&inputs, &mut out_b);
+            assert_eq!(out_a, out_b, "step={s}");
+        }
+        // shape mismatches are rejected without touching state
+        assert!(!b.import_errors(&snap[..1]));
+        let mut wrong = snap.clone();
+        wrong[0].push(0.0);
+        assert!(!b.import_errors(&wrong));
+    }
+
+    #[test]
+    fn measured_gross_traffic_exceeds_payload_by_the_frame_overhead() {
+        let (n, len) = (4usize, 1000usize);
+        let mut wire = TransportCollective::new(
+            TransportBackend::InMemory,
+            n,
+            len,
+            CompressionKind::OneBit,
+        )
+        .unwrap();
+        let inputs = random_inputs(n, len, 5);
+        let mut out = vec![0.0f32; len];
+        wire.allreduce(&inputs, &mut out);
+        let ts = wire.last_stats();
+        assert!(ts.frames_sent > 0);
+        // gross = payloads-actually-sent + frames × FRAME_OVERHEAD
+        let layout = ChunkLayout::new(len, n);
+        let total_wire: usize = (0..n)
+            .map(|j| CompressionKind::OneBit.wire_bytes(layout.size(j)))
+            .sum();
+        let expect_gross = 2 * (n - 1) * total_wire
+            + ts.frames_sent * frame::FRAME_OVERHEAD;
+        assert_eq!(ts.gross_total(), expect_gross);
+        assert_eq!(ts.frames_sent, 2 * n * (n - 1));
+    }
+
+    #[test]
+    fn single_rank_has_no_wire_traffic() {
+        let mut wire = TransportCollective::new(
+            TransportBackend::InMemory,
+            1,
+            64,
+            CompressionKind::OneBit,
+        )
+        .unwrap();
+        let inputs = random_inputs(1, 64, 9);
+        let mut out = vec![0.0f32; 64];
+        let stats = wire.allreduce(&inputs, &mut out);
+        assert_eq!(stats.alltoall_bytes_per_gpu, 0);
+        assert_eq!(wire.last_stats().gross_total(), 0);
+        assert_eq!(wire.last_stats().frames_sent, 0);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn empty_tensor_is_well_defined() {
+        for kind_idx in 0..3 {
+            let mut wire = TransportCollective::new(
+                TransportBackend::InMemory,
+                3,
+                0,
+                kind_of(kind_idx),
+            )
+            .unwrap();
+            let inputs = vec![vec![], vec![], vec![]];
+            let mut out = vec![];
+            let mut reference = CompressedAllreduce::with_options(
+                3,
+                0,
+                kind_of(kind_idx),
+                AllreducePath::DecodeAverage,
+                1,
+            );
+            let mut out_r = vec![];
+            let st_w = wire.allreduce(&inputs, &mut out);
+            let st_r = reference.allreduce(&inputs, &mut out_r);
+            assert_eq!(st_w, st_r);
+        }
+    }
+}

@@ -93,6 +93,27 @@ impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
     }
 }
 
+impl<A: Shrink, B: Shrink, C: Shrink, D: Shrink> Shrink for (A, B, C, D) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone(), self.3.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| {
+            (self.0.clone(), b, self.2.clone(), self.3.clone())
+        }));
+        out.extend(self.2.shrink().into_iter().map(|c| {
+            (self.0.clone(), self.1.clone(), c, self.3.clone())
+        }));
+        out.extend(self.3.shrink().into_iter().map(|d| {
+            (self.0.clone(), self.1.clone(), self.2.clone(), d)
+        }));
+        out
+    }
+}
+
 /// Run `prop` on `cases` random inputs from `gen`; shrink + panic on failure.
 pub fn forall<T, G, P>(cases: usize, mut gen: G, prop: P)
 where

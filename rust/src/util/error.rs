@@ -10,6 +10,8 @@ pub enum Error {
     Io(#[from] std::io::Error),
     #[error("config error: {0}")]
     Config(String),
+    #[error("wire frame error: {0}")]
+    Frame(#[from] crate::transport::frame::FrameError),
     #[error("{0}")]
     Msg(String),
 }

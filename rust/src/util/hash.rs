@@ -1,0 +1,46 @@
+//! Shared non-cryptographic checksums.
+//!
+//! One integrity primitive, two consumers: the wire-frame trailer
+//! ([`crate::transport::frame`]) and the on-disk checkpoint format
+//! ([`crate::coordinator::checkpoint`]).  Fletcher64 detects all
+//! single-bit flips and the common burst corruptions; it is **not** a
+//! defense against a deliberate forger (both formats say so).
+
+/// Fletcher64 over arbitrary bytes: the input is consumed as 4-byte
+/// little-endian words (zero-padded tail), accumulated into two running
+/// sums modulo `0xFFFF_FFFF`, returned as `(b << 32) | a`.
+pub fn fletcher64(data: &[u8]) -> u64 {
+    let mut a: u64 = 0;
+    let mut b: u64 = 0;
+    for chunk in data.chunks(4) {
+        let mut word = [0u8; 4];
+        word[..chunk.len()].copy_from_slice(chunk);
+        a = (a + u32::from_le_bytes(word) as u64) % 0xFFFF_FFFF;
+        b = (b + a) % 0xFFFF_FFFF;
+    }
+    (b << 32) | a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_length_sensitive() {
+        assert_eq!(fletcher64(b"abc"), fletcher64(b"abc"));
+        assert_ne!(fletcher64(b"abc"), fletcher64(b"abd"));
+        assert_ne!(fletcher64(b"abc"), fletcher64(b"abc\0"));
+        assert_eq!(fletcher64(b""), 0);
+    }
+
+    #[test]
+    fn detects_every_single_bit_flip() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let base = fletcher64(data);
+        for bit in 0..data.len() * 8 {
+            let mut c = data.to_vec();
+            c[bit / 8] ^= 1 << (bit % 8);
+            assert_ne!(fletcher64(&c), base, "bit {bit} undetected");
+        }
+    }
+}
