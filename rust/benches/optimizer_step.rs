@@ -13,8 +13,13 @@
 //!     cargo bench --bench optimizer_step
 
 use onebit_adam::comm::{AllreducePath, PlainPath};
+use onebit_adam::compress::CompressionKind;
+use onebit_adam::netsim::collectives::{
+    onebit_adam_run_payload_per_gpu, zeroone_adam_run_payload_per_gpu,
+};
 use onebit_adam::optim::backend::ScalarBackend;
 use onebit_adam::optim::onebit_adam::{OneBitAdam, OneBitAdamConfig};
+use onebit_adam::optim::zeroone_adam::{ZeroOneAdam, ZeroOneAdamConfig};
 use onebit_adam::optim::{Adam, DistOptimizer};
 use onebit_adam::runtime::Runtime;
 use onebit_adam::util::bench::{black_box, smoke_mode, BenchJson, Bencher};
@@ -73,9 +78,113 @@ fn warmup_phase(b: &Bencher) {
     json.flush();
 }
 
+/// 0/1 Adam section (`BENCH_zeroone.json`): steady-state step cost next
+/// to 1-bit Adam's compression step, plus the run-level **measured**
+/// wire volume of both optimizers over the same horizon — reconciled
+/// exactly against the `netsim::collectives` run model and asserted
+/// strictly smaller for 0/1 Adam (the warmup fp32 term is gone).
+fn zeroone_phase(b: &Bencher) {
+    let mut json =
+        BenchJson::new_in("optimizer_step_zeroone", "BENCH_zeroone.json");
+    let workers = 8usize;
+    let n: usize = if smoke_mode() { 1 << 16 } else { 1 << 20 };
+    let steps: usize = if smoke_mode() { 40 } else { 100 };
+    let base = Rng::new(17);
+    let grads: Vec<Vec<f32>> = (0..workers)
+        .map(|i| base.fork(i as u64).normal_vec(n, 1.0))
+        .collect();
+
+    let mut zo = ZeroOneAdam::new(
+        workers,
+        vec![0.1; n],
+        ZeroOneAdamConfig::default(),
+    );
+    // skip the dense early syncs so the timed steps are dominated by
+    // the steady-state 1-bit path (rare sync steps still land in the
+    // sample set; the median absorbs them)
+    for _ in 0..5 {
+        zo.step(&grads, 1e-4);
+    }
+    let r_zo = b.run(&format!("zeroone_step (native) n={n}"), || {
+        black_box(zo.step(&grads, 1e-4));
+    });
+    println!(
+        "{}  => {:.2} GB/s over {workers} momenta",
+        r_zo.report(),
+        r_zo.throughput((n * workers) as f64 * 4.0) / 1e9
+    );
+
+    let mut ob = OneBitAdam::new(
+        workers,
+        vec![0.1; n],
+        OneBitAdamConfig { warmup_steps: Some(0), ..Default::default() },
+    );
+    ob.step(&grads, 1e-4); // enter compression phase
+    let r_ob =
+        b.run(&format!("onebit_compression_step (native) n={n}"), || {
+            black_box(ob.step(&grads, 1e-4));
+        });
+    println!("{}", r_ob.report());
+
+    // Run-level measured volume on fresh optimizers: 0/1 Adam from step
+    // 0 vs 1-bit Adam with its default warmup fraction (steps/5).
+    let warmup = steps / 5;
+    let mut zo = ZeroOneAdam::new(
+        workers,
+        vec![0.1; n],
+        ZeroOneAdamConfig::default(),
+    );
+    let mut ob = OneBitAdam::new(
+        workers,
+        vec![0.1; n],
+        OneBitAdamConfig {
+            warmup_steps: Some(warmup),
+            ..Default::default()
+        },
+    );
+    let (mut zo_bytes, mut ob_bytes) = (0usize, 0usize);
+    for _ in 0..steps {
+        zo_bytes += zo.step(&grads, 1e-4).comm.total_per_gpu();
+        ob_bytes += ob.step(&grads, 1e-4).comm.total_per_gpu();
+    }
+    let kind = CompressionKind::OneBit;
+    assert_eq!(
+        zo_bytes,
+        zeroone_adam_run_payload_per_gpu(kind, workers, n, steps, 1),
+        "0/1 Adam measured volume disagrees with the netsim run model"
+    );
+    assert_eq!(
+        ob_bytes,
+        onebit_adam_run_payload_per_gpu(kind, workers, n, warmup, steps),
+        "1-bit Adam measured volume disagrees with the netsim run model"
+    );
+    assert!(
+        zo_bytes < ob_bytes,
+        "0/1 Adam must move strictly fewer bytes: {zo_bytes} vs {ob_bytes}"
+    );
+    let reduction = ob_bytes as f64 / zo_bytes as f64;
+    println!(
+        "  run volume over {steps} steps: zeroone {:.2} MB/gpu vs onebit \
+         {:.2} MB/gpu => {reduction:.2}x reduction (model agrees exactly)",
+        zo_bytes as f64 / 1e6,
+        ob_bytes as f64 / 1e6
+    );
+    json.push(&r_ob);
+    json.push_with(
+        &r_zo,
+        &[
+            ("measured_run_payload_bytes_per_gpu", zo_bytes as f64),
+            ("onebit_run_payload_bytes_per_gpu", ob_bytes as f64),
+            ("volume_reduction_vs_onebit_adam", reduction),
+        ],
+    );
+    json.flush();
+}
+
 fn main() {
     let b = Bencher::from_env();
     warmup_phase(&b);
+    zeroone_phase(&b);
     let mut json = BenchJson::new("optimizer_step");
     let workers = 4;
     let sizes: &[usize] =

@@ -85,6 +85,16 @@ impl CommStats {
         self.alltoall_bytes_per_gpu + self.allgather_bytes_per_gpu
     }
 
+    /// Fold another collective's ledger into this one — for steps that
+    /// run more than one collective (0/1 Adam's per-step compressed
+    /// momentum exchange plus its sync-point full-precision variance
+    /// resync) and must report their combined wire volume.
+    pub fn merge(&mut self, other: CommStats) {
+        self.alltoall_bytes_per_gpu += other.alltoall_bytes_per_gpu;
+        self.allgather_bytes_per_gpu += other.allgather_bytes_per_gpu;
+        self.uncompressed_bytes += other.uncompressed_bytes;
+    }
+
     /// Volume reduction vs fp32 allreduce (ring: ~2x payload per GPU).
     pub fn reduction_vs_fp32(&self) -> f64 {
         if self.total_per_gpu() == 0 {

@@ -6,8 +6,14 @@
 //! collective topologies: the hierarchical two-level allreduce groups
 //! workers by GPUs-per-node (one 1-bit leader per node), falling back to
 //! the flat exchange for single-node jobs.
+//!
+//! [`ZeroOnePreset`] does the same for the warmup-free 0/1 Adam
+//! follow-up ([`crate::optim::zeroone_adam::ZeroOneAdam`]): cluster
+//! shape plus the variance-sync schedule base, yielding a ready
+//! [`ZeroOneAdamConfig`].
 
 use crate::comm::CommTopology;
+use crate::optim::zeroone_adam::ZeroOneAdamConfig;
 
 /// One row of the paper's Table 2 (+ the SQuAD fine-tune schedule).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -154,6 +160,62 @@ impl TopologyPreset {
     }
 }
 
+/// A 0/1 Adam deployment shape: cluster node size (for the topology
+/// mapping) plus the variance-sync schedule base.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ZeroOnePreset {
+    pub name: &'static str,
+    /// GPUs sharing one node (and one NIC).
+    pub gpus_per_node: usize,
+    /// First nonzero variance-sync step `k₀` (the schedule doubles from
+    /// there); 1 = the paper's densest early schedule.
+    pub var_sync_base: usize,
+    /// Run the hierarchy's leader exchange on the chunk-streamed engine.
+    pub pipelined: bool,
+}
+
+/// 0/1 Adam on the paper's two clusters (§3.1 / Table 1 shapes).
+pub const ZEROONE_PRESETS: &[ZeroOnePreset] = &[
+    ZeroOnePreset {
+        name: "zeroone-ethernet-4gpu",
+        gpus_per_node: 4,
+        var_sync_base: 1,
+        pipelined: false,
+    },
+    ZeroOnePreset {
+        name: "zeroone-infiniband-8gpu",
+        gpus_per_node: 8,
+        var_sync_base: 1,
+        pipelined: true,
+    },
+];
+
+impl ZeroOnePreset {
+    pub fn by_name(name: &str) -> Option<&'static ZeroOnePreset> {
+        ZEROONE_PRESETS.iter().find(|p| p.name == name)
+    }
+
+    /// Collective topology for an `n_workers` job on this cluster —
+    /// delegates to [`TopologyPreset::comm_topology`] so the
+    /// flat/hierarchical/pipelined mapping has exactly one home.
+    pub fn comm_topology(&self, n_workers: usize) -> CommTopology {
+        TopologyPreset {
+            name: self.name,
+            gpus_per_node: self.gpus_per_node,
+        }
+        .comm_topology(n_workers, self.pipelined)
+    }
+
+    /// Ready-to-use [`ZeroOneAdamConfig`] for an `n_workers` job.
+    pub fn config(&self, n_workers: usize) -> ZeroOneAdamConfig {
+        ZeroOneAdamConfig {
+            var_sync_base: self.var_sync_base,
+            topology: self.comm_topology(n_workers),
+            ..Default::default()
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,6 +268,36 @@ mod tests {
         let large = combined("bert-large-seq128", "bert-large-seq512");
         assert!(base > 4.5 && base < 6.0, "base={base}");
         assert!(large > 4.5 && large < 5.5, "large={large}");
+    }
+
+    #[test]
+    fn zeroone_presets_build_configs() {
+        let eth = ZeroOnePreset::by_name("zeroone-ethernet-4gpu").unwrap();
+        assert_eq!(eth.comm_topology(4), CommTopology::Flat);
+        assert_eq!(
+            eth.comm_topology(16),
+            CommTopology::Hierarchical { group_size: 4 }
+        );
+        let cfg = eth.config(16);
+        assert_eq!(cfg.var_sync_base, 1);
+        assert_eq!(
+            cfg.topology,
+            CommTopology::Hierarchical { group_size: 4 }
+        );
+        let ib = ZeroOnePreset::by_name("zeroone-infiniband-8gpu").unwrap();
+        assert_eq!(
+            ib.comm_topology(64),
+            CommTopology::HierarchicalPipelined { group_size: 8 }
+        );
+        assert_eq!(ib.config(8).topology, CommTopology::Flat);
+        assert!(ZeroOnePreset::by_name("nope").is_none());
+        // the preset actually drives a working optimizer
+        use crate::optim::zeroone_adam::ZeroOneAdam;
+        use crate::optim::DistOptimizer;
+        let mut opt = ZeroOneAdam::new(2, vec![0.1; 32], eth.config(2));
+        let grads = vec![vec![0.5f32; 32], vec![-0.5f32; 32]];
+        let stats = opt.step(&grads, 1e-3);
+        assert_eq!(stats.phase, crate::optim::Phase::Compression);
     }
 
     #[test]

@@ -26,8 +26,9 @@ obadam — 1-bit Adam (ICML 2021) full-system reproduction
 
 USAGE:
   obadam train [--workload lm-tiny|lm-small|lm-med|cnn|oracle]
-               [--optimizer adam|1bit-adam|1bit-adam-32|1bit-naive|sgd|
-                momentum|ef-momentum|double-squeeze|local-sgd|local-momentum]
+               [--optimizer adam|1bit-adam|1bit-adam-32|01-adam|1bit-naive|
+                sgd|momentum|ef-momentum|double-squeeze|local-sgd|
+                local-momentum]
                [--steps N] [--workers N] [--lr F] [--warmup N]
                [--net ethernet|infiniband|none] [--gpus N]
                [--seed N] [--artifacts DIR] [--out results/run.csv]

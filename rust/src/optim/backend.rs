@@ -15,6 +15,7 @@ use std::rc::Rc;
 use crate::kernels;
 use crate::runtime::Runtime;
 use crate::util::error::{Error, Result};
+use crate::util::par::{par_tasks, PAR_MIN_LEN};
 
 pub use crate::kernels::AdamHyper;
 
@@ -187,6 +188,88 @@ pub fn adam_step_auto(
         kernels::adam_step_par(threads, h, p, m, v, g, lr);
     } else {
         backend.adam_step(h, p, m, v, g, lr).expect("adam_step backend");
+    }
+}
+
+/// Compression-stage per-worker momentum refresh shared by the
+/// frozen-variance optimizers (`OneBitAdam`, `ZeroOneAdam`):
+/// `local_m[i] ← β₁·m̄ + (1−β₁)·g_i` against the globally-agreed
+/// momentum of the previous step.  Native backends run the fused kernel
+/// — fanned out one scoped task per worker above [`PAR_MIN_LEN`],
+/// direct loops otherwise (bit-identical either way: workers are
+/// independent); non-native backends keep the copy + update sequence
+/// they always executed.
+pub fn momentum_refresh_auto(
+    backend: &dyn MathBackend,
+    threads: usize,
+    beta1: f32,
+    m: &[f32],
+    grads: &[Vec<f32>],
+    local_m: &mut [Vec<f32>],
+) {
+    if backend.elementwise_native() {
+        let d = m.len();
+        if local_m.len() == 1 {
+            // Single worker: one fused pass, no task setup.
+            kernels::momentum_refresh_fused(
+                beta1,
+                m,
+                &grads[0],
+                &mut local_m[0],
+            );
+        } else if d >= PAR_MIN_LEN {
+            struct MomTask<'a> {
+                local: &'a mut [f32],
+                g: &'a [f32],
+            }
+            let mut tasks: Vec<MomTask> = local_m
+                .iter_mut()
+                .zip(grads.iter())
+                .map(|(local, g)| MomTask {
+                    local: local.as_mut_slice(),
+                    g: g.as_slice(),
+                })
+                .collect();
+            par_tasks(threads, &mut tasks, |t| {
+                kernels::momentum_refresh_fused(beta1, m, t.g, t.local)
+            });
+        } else {
+            // Below the parallel threshold: direct fused loops — no
+            // per-step task allocation on the convergence-sweep hot
+            // path.
+            for (local, g) in local_m.iter_mut().zip(grads.iter()) {
+                kernels::momentum_refresh_fused(beta1, m, g, local);
+            }
+        }
+    } else {
+        for (local, g) in local_m.iter_mut().zip(grads.iter()) {
+            local.copy_from_slice(m);
+            backend
+                .momentum_update(beta1, local, g)
+                .expect("momentum backend");
+        }
+    }
+}
+
+/// Compression-stage preconditioned update dispatch:
+/// `p ← p − lr·m/(√v + ε)` against the frozen variance — block-parallel
+/// fused kernels for native elementwise backends (bit-identical split),
+/// the backend's own whole-tensor call otherwise.
+pub fn precond_step_auto(
+    backend: &dyn MathBackend,
+    threads: usize,
+    eps: f32,
+    p: &mut [f32],
+    m: &[f32],
+    v_frozen: &[f32],
+    lr: f32,
+) {
+    if backend.elementwise_native() {
+        kernels::precond_step_par(threads, eps, p, m, v_frozen, lr);
+    } else {
+        backend
+            .precond_step(eps, p, m, v_frozen, lr)
+            .expect("precond backend");
     }
 }
 

@@ -1,0 +1,258 @@
+//! Shared freeze / floor / switch policy machinery for the
+//! frozen-variance optimizer family.
+//!
+//! Two optimizers freeze Adam's second moment and pay for it in
+//! different currencies:
+//!
+//! * [`crate::optim::onebit_adam::OneBitAdam`] (the source paper) runs a
+//!   full-precision **warmup phase** and freezes `v` once — either at a
+//!   fixed step or when the [`VarianceMonitor`] reports stability.  Its
+//!   policy state is [`FreezePolicy`].
+//! * [`crate::optim::zeroone_adam::ZeroOneAdam`] (0/1 Adam, Lu et al.,
+//!   arXiv 2202.06009) never warms up: `v` is updated **adaptively** at
+//!   exponentially-spaced sync points and frozen in between, so the
+//!   1-bit communication runs from step 0.  Its policy state is
+//!   [`VarianceSyncSchedule`].
+//!
+//! Both share the variance floor ([`apply_variance_floor`]): Theorem 1's
+//! rate carries a 1/v_min³ term, and coordinates whose variance never
+//! grew (rare-token embeddings) would otherwise amplify the ±scale
+//! quantized momentum by 1/√v and blow up.  Keeping the floor, the
+//! switch test, and the sync schedule in one module is what lets the
+//! two optimizers stay behaviorally aligned instead of drifting apart —
+//! the freeze-policy bugs this PR fixes all lived in duplicated
+//! versions of exactly this logic.
+
+use crate::optim::monitor::VarianceMonitor;
+use crate::tensor::norm1;
+
+/// Apply the relative variance floor at freeze / resync time:
+/// `v_i ← max(v_i, rel · mean(v))`.  No-op when `rel ≤ 0` or `v` is
+/// empty (and when `mean(v) == 0`, where the floor is vacuous).
+pub fn apply_variance_floor(rel: f32, v: &mut [f32]) {
+    if rel <= 0.0 || v.is_empty() {
+        return;
+    }
+    let mean = (norm1(v) / v.len() as f64) as f32;
+    let floor = rel * mean;
+    for vi in v.iter_mut() {
+        *vi = vi.max(floor);
+    }
+}
+
+/// 1-bit Adam's warmup→compression switch policy: fixed-length warmup
+/// (`warmup_steps = Some(w)`) or the paper's auto-switch criterion
+/// (`None`, §7.1 — stop once ‖v‖₁ is stable over a Δ = 1/(1−β₂)
+/// window).
+///
+/// The monitor is fed **in both modes** — under a fixed warmup it still
+/// observes every step so `variance_ratio()` stays a live diagnostic
+/// (the pre-refactor code starved it; see the regression test in
+/// `onebit_adam`) — but it *gates* the switch only in auto mode.
+#[derive(Debug, Clone)]
+pub struct FreezePolicy {
+    warmup_steps: Option<usize>,
+    monitor: VarianceMonitor,
+}
+
+impl FreezePolicy {
+    pub fn new(warmup_steps: Option<usize>, monitor: VarianceMonitor) -> Self {
+        FreezePolicy { warmup_steps, monitor }
+    }
+
+    /// The configured fixed warmup length (`None` = auto-switch mode).
+    pub fn warmup_steps(&self) -> Option<usize> {
+        self.warmup_steps
+    }
+
+    pub fn monitor(&self) -> &VarianceMonitor {
+        &self.monitor
+    }
+
+    /// Current value of the stability indicator ‖v_{t−Δ}‖₁/‖v_t‖₁.
+    pub fn variance_ratio(&self) -> Option<f64> {
+        self.monitor.ratio()
+    }
+
+    /// Fixed-length warmup check, evaluated *before* a step runs (so
+    /// `warmup_steps = w` means exactly `w` full-precision Adam steps).
+    /// Always false in auto mode.
+    pub fn fixed_switch_due(&self, t: usize) -> bool {
+        matches!(self.warmup_steps, Some(w) if t >= w)
+    }
+
+    /// Record ‖v_t‖₁ after a warmup step.  Feeds the monitor in both
+    /// modes; returns `true` when the **auto** criterion says to freeze
+    /// now (never under a fixed warmup — the fixed length wins there).
+    pub fn observe_warmup(&mut self, v: &[f32]) -> bool {
+        let stable = self.monitor.observe(v);
+        self.warmup_steps.is_none() && stable
+    }
+}
+
+/// 0/1 Adam's variance-update policy: `v` is resynchronized (one
+/// full-precision allreduce + one EMA update) only at sync points
+/// `t = 0` and `t = k₀·2ʲ` — the exponentially-growing schedule
+/// `k_{j+1} = 2·k_j` of the paper — and frozen at every other step.
+///
+/// The schedule is a pure function of the step index, which is what
+/// makes mid-interval checkpoint/restore bit-exact: a restored run
+/// recomputes the same sync points from `t` alone, with no carried
+/// schedule state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VarianceSyncSchedule {
+    /// k₀ — the first nonzero sync step (clamped to ≥ 1).
+    base: usize,
+}
+
+impl VarianceSyncSchedule {
+    pub fn new(base: usize) -> Self {
+        VarianceSyncSchedule { base: base.max(1) }
+    }
+
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// Is step `t` a variance sync point?  True at `t = 0` (the very
+    /// first step must populate `v` — there is no warmup to do it) and
+    /// at `t = k₀·2ʲ` for every `j ≥ 0`.
+    pub fn is_sync(&self, t: usize) -> bool {
+        t == 0 || (t % self.base == 0 && (t / self.base).is_power_of_two())
+    }
+
+    /// Number of sync points among steps `0..total_steps` — the count
+    /// of full-precision resync allreduces a `total_steps`-long run
+    /// pays for.  O(log total_steps): this is the whole point of the
+    /// exponential schedule.
+    pub fn sync_count(&self, total_steps: usize) -> usize {
+        if total_steps == 0 {
+            return 0;
+        }
+        let mut count = 1; // t = 0
+        let mut k = self.base;
+        while k < total_steps {
+            count += 1;
+            match k.checked_mul(2) {
+                Some(next) => k = next,
+                None => break,
+            }
+        }
+        count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_lifts_small_coordinates_only() {
+        let mut v = vec![4.0f32, 0.0, 2.0, 1e-9];
+        // mean = 1.5, rel = 0.1 => floor = 0.15
+        apply_variance_floor(0.1, &mut v);
+        assert_eq!(v[0], 4.0);
+        assert_eq!(v[1], 0.15);
+        assert_eq!(v[2], 2.0);
+        assert_eq!(v[3], 0.15);
+    }
+
+    #[test]
+    fn floor_disabled_and_degenerate_cases() {
+        let mut v = vec![1.0f32, 0.0];
+        apply_variance_floor(0.0, &mut v);
+        assert_eq!(v, vec![1.0, 0.0]);
+        let mut empty: Vec<f32> = Vec::new();
+        apply_variance_floor(0.5, &mut empty); // must not panic
+        let mut zeros = vec![0.0f32; 4];
+        apply_variance_floor(0.5, &mut zeros);
+        assert_eq!(zeros, vec![0.0; 4]); // zero mean => vacuous floor
+    }
+
+    #[test]
+    fn floor_is_idempotent() {
+        // The second application must not move anything: every
+        // coordinate is already ≥ the floor, and the mean can only have
+        // grown, keeping floored coordinates at (not below) it... which
+        // is exactly why freeze_now must not re-run it on live state —
+        // the mean DOES grow, so a re-application with the new mean
+        // would lift the floor again.  Pin the single-application
+        // contract instead: after one pass, min(v) ≥ rel·mean_before.
+        let mut v = vec![10.0f32, 0.0, 0.0, 0.0];
+        apply_variance_floor(0.2, &mut v); // mean 2.5 => floor 0.5
+        assert_eq!(v, vec![10.0, 0.5, 0.5, 0.5]);
+        // a second pass moves the floor because the mean moved
+        let mut v2 = v.clone();
+        apply_variance_floor(0.2, &mut v2);
+        assert!(v2[1] > v[1], "re-applying the floor re-lifts: {v2:?}");
+    }
+
+    #[test]
+    fn fixed_policy_gates_on_step_and_never_auto_fires() {
+        let mon = VarianceMonitor::new(0.9, 0.96, 0);
+        let mut p = FreezePolicy::new(Some(3), mon);
+        assert!(!p.fixed_switch_due(2));
+        assert!(p.fixed_switch_due(3));
+        assert!(p.fixed_switch_due(4));
+        // perfectly stable variance, but fixed mode never auto-fires
+        for _ in 0..50 {
+            assert!(!p.observe_warmup(&[1.0, 2.0, 3.0]));
+        }
+        // ... yet the monitor was fed throughout
+        assert_eq!(p.variance_ratio(), Some(1.0));
+    }
+
+    #[test]
+    fn auto_policy_fires_on_stability() {
+        let mon = VarianceMonitor::new(0.9, 0.96, 15);
+        let mut p = FreezePolicy::new(None, mon);
+        assert!(!p.fixed_switch_due(usize::MAX - 1));
+        let mut fired_at = None;
+        for t in 0..40 {
+            if p.observe_warmup(&[5.0, 5.0]) && fired_at.is_none() {
+                fired_at = Some(t);
+            }
+        }
+        // ratio hits 1.0 once the Δ+1 window fills; min_steps gates to 15
+        assert_eq!(fired_at, Some(14));
+    }
+
+    #[test]
+    fn sync_schedule_doubles() {
+        let s = VarianceSyncSchedule::new(1);
+        let expect: Vec<usize> =
+            vec![0, 1, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+        let got: Vec<usize> =
+            (0..600).filter(|&t| s.is_sync(t)).collect();
+        assert_eq!(got, expect);
+        assert_eq!(s.sync_count(600), expect.len());
+        assert_eq!(s.sync_count(0), 0);
+        assert_eq!(s.sync_count(1), 1);
+        assert_eq!(s.sync_count(2), 2);
+    }
+
+    #[test]
+    fn sync_schedule_with_larger_base() {
+        let s = VarianceSyncSchedule::new(5);
+        let got: Vec<usize> = (0..100).filter(|&t| s.is_sync(t)).collect();
+        assert_eq!(got, vec![0, 5, 10, 20, 40, 80]);
+        assert_eq!(s.sync_count(100), 6);
+        // base 0 clamps to 1
+        assert_eq!(VarianceSyncSchedule::new(0).base(), 1);
+    }
+
+    #[test]
+    fn sync_count_matches_enumeration() {
+        for base in [1usize, 2, 3, 7] {
+            let s = VarianceSyncSchedule::new(base);
+            for total in [0usize, 1, 2, 3, 10, 100, 1000] {
+                let brute = (0..total).filter(|&t| s.is_sync(t)).count();
+                assert_eq!(
+                    s.sync_count(total),
+                    brute,
+                    "base={base} total={total}"
+                );
+            }
+        }
+    }
+}

@@ -5,6 +5,7 @@
 //! |---|---|
 //! | [`adam::Adam`] | uncompressed baseline (BertAdam: no bias correction) |
 //! | [`onebit_adam::OneBitAdam`] | Algorithm 1 (also the "32-bits" ablation via `CompressionKind::None`) |
+//! | [`zeroone_adam::ZeroOneAdam`] | 0/1 Adam follow-up (Lu et al., arXiv 2202.06009): warmup-free, adaptively-frozen variance, 1-bit from step 0 |
 //! | [`naive::NaiveCompressedAdam`] | Figure 1 / "Adam (1-bit Naive)" |
 //! | [`momentum::Sgd`], [`momentum::MomentumSgd`] | Figure 6 baselines |
 //! | [`ef_momentum::EfMomentumSgd`] | Figure 11 (Zheng et al. 2019) |
@@ -12,6 +13,11 @@
 //! | [`local_sgd::LocalSgd`] | Figures 10/11 (Stich 2019), ± momentum |
 //! | [`variance_ablation::NBitVarianceAdam`] | Figure 12 |
 //! | [`variance_ablation::LazyVarianceAdam`] | Figure 13 |
+//!
+//! The frozen-variance family (`OneBitAdam`, `ZeroOneAdam`) shares its
+//! freeze/floor/switch machinery in [`freeze`]: the relative variance
+//! floor, 1-bit Adam's fixed-or-auto warmup switch, and 0/1 Adam's
+//! exponentially-spaced variance-sync schedule.
 //!
 //! All optimizers implement [`DistOptimizer`] over `n` data-parallel
 //! workers and a fused flat parameter vector; communication goes through
@@ -21,6 +27,7 @@ pub mod adam;
 pub mod backend;
 pub mod double_squeeze;
 pub mod ef_momentum;
+pub mod freeze;
 pub mod local_sgd;
 pub mod momentum;
 pub mod monitor;
@@ -28,17 +35,20 @@ pub mod naive;
 pub mod onebit_adam;
 pub mod oracle;
 pub mod variance_ablation;
+pub mod zeroone_adam;
 
 pub use adam::Adam;
 pub use backend::{MathBackend, NativeBackend, ScalarBackend};
 pub use double_squeeze::DoubleSqueeze;
 pub use ef_momentum::EfMomentumSgd;
+pub use freeze::{apply_variance_floor, FreezePolicy, VarianceSyncSchedule};
 pub use local_sgd::LocalSgd;
 pub use momentum::{MomentumSgd, Sgd};
 pub use monitor::VarianceMonitor;
 pub use naive::NaiveCompressedAdam;
 pub use onebit_adam::{OneBitAdam, OneBitAdamConfig};
 pub use variance_ablation::{LazyVarianceAdam, NBitVarianceAdam};
+pub use zeroone_adam::{ZeroOneAdam, ZeroOneAdamConfig};
 
 use crate::comm::CommStats;
 
@@ -87,6 +97,10 @@ pub enum OptimizerKind {
     OneBitAdam,
     /// Frozen variance, uncompressed momentum.
     OneBitAdam32,
+    /// 0/1 Adam: no warmup, exponentially-spaced variance resyncs,
+    /// 1-bit communication from step 0 (the `warmup` build argument is
+    /// ignored — there is nothing to warm up).
+    ZeroOneAdam,
     /// EC-compress the gradient, keep updating variance (Fig 1/6).
     OneBitNaive,
     EfMomentumSgd,
@@ -103,6 +117,9 @@ impl OptimizerKind {
             "adam" => OptimizerKind::Adam,
             "1bit-adam" | "onebit-adam" => OptimizerKind::OneBitAdam,
             "1bit-adam-32" | "onebit-adam-32" => OptimizerKind::OneBitAdam32,
+            "01-adam" | "zeroone-adam" | "zero-one-adam" => {
+                OptimizerKind::ZeroOneAdam
+            }
             "1bit-naive" | "onebit-naive" => OptimizerKind::OneBitNaive,
             "ef-momentum" => OptimizerKind::EfMomentumSgd,
             "double-squeeze" => OptimizerKind::DoubleSqueeze,
@@ -119,6 +136,7 @@ impl OptimizerKind {
             ("adam", OptimizerKind::Adam),
             ("1bit-adam", OptimizerKind::OneBitAdam),
             ("1bit-adam-32", OptimizerKind::OneBitAdam32),
+            ("01-adam", OptimizerKind::ZeroOneAdam),
             ("1bit-naive", OptimizerKind::OneBitNaive),
             ("ef-momentum", OptimizerKind::EfMomentumSgd),
             ("double-squeeze", OptimizerKind::DoubleSqueeze),
@@ -160,6 +178,11 @@ impl OptimizerKind {
                     compression: CompressionKind::None,
                     ..OneBitAdamConfig::default()
                 },
+            )),
+            OptimizerKind::ZeroOneAdam => Box::new(ZeroOneAdam::new(
+                n_workers,
+                init_params,
+                ZeroOneAdamConfig::default(),
             )),
             OptimizerKind::OneBitNaive => {
                 Box::new(NaiveCompressedAdam::new(n_workers, init_params))

@@ -55,6 +55,15 @@ impl VarianceMonitor {
     }
 
     /// ‖v_{t−Δ}‖₁ / ‖v_t‖₁ (≤ 1 while the variance is still growing).
+    ///
+    /// An identically-zero window reports a unit ratio: a model whose
+    /// observed gradients are exactly zero (frozen embeddings, masked
+    /// heads) has a variance that cannot be *less* stable than
+    /// identically zero, and returning `None` forever would stall the
+    /// auto-switch past `min_steps` with no way out.  A window that
+    /// merely *decayed* to zero (`old > 0`, `new == 0`) is still
+    /// transient, so no ratio is reported until the window is uniformly
+    /// zero.
     pub fn ratio(&self) -> Option<f64> {
         if self.history.len() < self.delta + 1 {
             return None;
@@ -62,7 +71,7 @@ impl VarianceMonitor {
         let old = *self.history.front().unwrap();
         let new = *self.history.back().unwrap();
         if new == 0.0 {
-            return None;
+            return if old == 0.0 { Some(1.0) } else { None };
         }
         Some(old / new)
     }
@@ -114,6 +123,40 @@ mod tests {
         }
         assert!(m.ratio().is_none());
         m.observe_norm(5.0);
+        assert_eq!(m.ratio(), Some(1.0));
+    }
+
+    #[test]
+    fn zero_norm_window_counts_as_stable() {
+        // Exactly-zero gradients early in training (frozen embeddings,
+        // masked heads) must not stall the auto-switch forever: once
+        // the window is uniformly zero and min_steps has passed, the
+        // monitor reports stability.
+        let mut m = VarianceMonitor::new(0.9, 0.96, 20);
+        let mut fired_at = None;
+        for t in 0..30 {
+            if m.observe_norm(0.0) && fired_at.is_none() {
+                fired_at = Some(t);
+            }
+        }
+        assert_eq!(fired_at, Some(19), "zero window gated by min_steps");
+        assert_eq!(m.ratio(), Some(1.0));
+    }
+
+    #[test]
+    fn window_that_decayed_to_zero_is_still_transient() {
+        let mut m = VarianceMonitor::new(0.9, 0.96, 0);
+        for _ in 0..11 {
+            m.observe_norm(5.0);
+        }
+        assert_eq!(m.ratio(), Some(1.0));
+        // norm collapses to zero: old > 0, new == 0 => no ratio yet
+        m.observe_norm(0.0);
+        assert_eq!(m.ratio(), None);
+        // ... until the whole window is zero
+        for _ in 0..10 {
+            m.observe_norm(0.0);
+        }
         assert_eq!(m.ratio(), Some(1.0));
     }
 

@@ -22,12 +22,12 @@
 use crate::comm::plain::{allreduce_average_path, PlainPath};
 use crate::comm::{Collective, CommStats, CommTopology};
 use crate::compress::CompressionKind;
-use crate::transport::TransportBackend;
-use crate::kernels;
 use crate::optim::backend::{AdamHyper, MathBackend, NativeBackend};
+use crate::optim::freeze::{self, FreezePolicy};
 use crate::optim::monitor::VarianceMonitor;
 use crate::optim::{DistOptimizer, Phase, StepStats};
-use crate::util::par::{default_threads, par_tasks, PAR_MIN_LEN};
+use crate::transport::TransportBackend;
+use crate::util::par::default_threads;
 
 /// Configuration for [`OneBitAdam`].
 #[derive(Debug, Clone)]
@@ -90,7 +90,9 @@ pub struct OneBitAdam {
     v: Vec<f32>,
     cfg: OneBitAdamConfig,
     backend: Box<dyn MathBackend>,
-    monitor: VarianceMonitor,
+    /// Warmup→compression switch policy (shared [`freeze`] machinery:
+    /// fixed-length or monitor-gated auto switch).
+    freeze: FreezePolicy,
     /// Compression-stage collective, topology-dispatched (flat or
     /// hierarchical per `cfg.topology`).
     car: Collective,
@@ -121,10 +123,13 @@ impl OneBitAdam {
         backend: Box<dyn MathBackend>,
     ) -> Self {
         let d = init.len();
-        let monitor = VarianceMonitor::new(
-            cfg.hyper.beta2,
-            cfg.stability_threshold,
-            cfg.min_warmup_steps,
+        let freeze = FreezePolicy::new(
+            cfg.warmup_steps,
+            VarianceMonitor::new(
+                cfg.hyper.beta2,
+                cfg.stability_threshold,
+                cfg.min_warmup_steps,
+            ),
         );
         OneBitAdam {
             n: n_workers,
@@ -140,7 +145,7 @@ impl OneBitAdam {
             ),
             cfg,
             backend,
-            monitor,
+            freeze,
             phase: Phase::Warmup,
             t: 0,
             switch_step: None,
@@ -165,8 +170,12 @@ impl OneBitAdam {
     }
 
     /// Current value of the stability indicator ‖v_{t−Δ}‖₁/‖v_t‖₁.
+    /// Live in **both** warmup modes: the monitor observes every warmup
+    /// step even under a fixed `warmup_steps` (it gates the switch only
+    /// in auto mode), so this diagnostic never silently reads `None`
+    /// just because the warmup length was pinned.
     pub fn variance_ratio(&self) -> Option<f64> {
-        self.monitor.ratio()
+        self.freeze.variance_ratio()
     }
 
     /// Select the compressed-allreduce engine (fused bit-domain,
@@ -198,20 +207,22 @@ impl OneBitAdam {
 
     /// Force the warmup→compression switch now (used by coordinators that
     /// checkpoint/restore mid-run).
+    ///
+    /// **Idempotent**: a strict no-op once `phase == Compression`.  A
+    /// second call (e.g. a coordinator forcing a switch after the
+    /// auto-criterion already fired) must not re-apply the `v_floor_rel`
+    /// floor — the post-freeze mean has moved, so re-flooring would lift
+    /// small coordinates again — nor re-zero live error-feedback state,
+    /// nor move `switch_step`.  Pinned by
+    /// `freeze_now_is_idempotent_once_compressing` below.
     pub fn freeze_now(&mut self) {
-        if self.phase == Phase::Warmup {
-            self.phase = Phase::Compression;
-            self.switch_step = Some(self.t);
-            self.car.reset_errors();
-            if self.cfg.v_floor_rel > 0.0 && !self.v.is_empty() {
-                let mean =
-                    (crate::tensor::norm1(&self.v) / self.v.len() as f64) as f32;
-                let floor = self.cfg.v_floor_rel * mean;
-                for vi in self.v.iter_mut() {
-                    *vi = vi.max(floor);
-                }
-            }
+        if self.phase != Phase::Warmup {
+            return;
         }
+        self.phase = Phase::Compression;
+        self.switch_step = Some(self.t);
+        self.car.reset_errors();
+        freeze::apply_variance_floor(self.cfg.v_floor_rel, &mut self.v);
     }
 
     /// Export the training state: params, momentum, variance, phase —
@@ -259,17 +270,6 @@ impl OneBitAdam {
         opt
     }
 
-    /// Fixed-length warmup is checked *before* a step runs (so
-    /// `warmup_steps = w` means exactly `w` Adam steps); the auto-switch
-    /// criterion is evaluated after each warmup step once ‖v‖ is observed.
-    fn due_for_switch(&self) -> bool {
-        matches!(self.cfg.warmup_steps, Some(w) if self.t >= w)
-    }
-
-    fn observe_switch(&mut self) -> bool {
-        self.cfg.warmup_steps.is_none() && self.monitor.observe(&self.v)
-    }
-
     fn warmup_step(&mut self, grads: &[Vec<f32>], lr: f32) -> CommStats {
         // Full-volume fp32 allreduce — the warmup throughput ceiling.
         // Tree-reduce path: chunk-parallel over threads, pairwise f64
@@ -296,80 +296,30 @@ impl OneBitAdam {
     }
 
     fn compression_step(&mut self, grads: &[Vec<f32>], lr: f32) -> CommStats {
-        let d = self.params.len();
-        let par = self.backend.elementwise_native() && d >= PAR_MIN_LEN;
         // Line 6: every worker refreshes the shared momentum with its own
-        // gradient.  The fused kernel writes `β₁·m̄ + (1−β₁)·g` straight
-        // into the per-worker buffer — no copy_from_slice double pass —
-        // and is embarrassingly parallel across workers (bit-identical to
-        // the sequential order).
-        let beta1 = self.cfg.hyper.beta1;
-        if self.backend.elementwise_native() {
-            if self.n == 1 {
-                // Single worker: the "fan-out" is one fused pass — skip
-                // task setup and threading entirely.
-                kernels::momentum_refresh_fused(
-                    beta1,
-                    &self.m,
-                    &grads[0],
-                    &mut self.local_m[0],
-                );
-            } else if par {
-                let m: &[f32] = &self.m;
-                struct MomTask<'a> {
-                    local: &'a mut [f32],
-                    g: &'a [f32],
-                }
-                let mut tasks: Vec<MomTask> = self
-                    .local_m
-                    .iter_mut()
-                    .zip(grads.iter())
-                    .map(|(local, g)| MomTask {
-                        local: local.as_mut_slice(),
-                        g: g.as_slice(),
-                    })
-                    .collect();
-                par_tasks(self.threads, &mut tasks, |t| {
-                    kernels::momentum_refresh_fused(beta1, m, t.g, t.local)
-                });
-            } else {
-                // Below the parallel threshold: direct fused loop — no
-                // per-step task allocation on the convergence-sweep hot
-                // path.
-                for (local, g) in self.local_m.iter_mut().zip(grads.iter()) {
-                    kernels::momentum_refresh_fused(beta1, &self.m, g, local);
-                }
-            }
-        } else {
-            for (i, g) in grads.iter().enumerate() {
-                self.local_m[i].copy_from_slice(&self.m);
-                self.backend
-                    .momentum_update(beta1, &mut self.local_m[i], g)
-                    .expect("momentum backend");
-            }
-        }
+        // gradient — the fused per-worker kernel dispatch shared with
+        // `ZeroOneAdam` (`optim::backend::momentum_refresh_auto`).
+        crate::optim::backend::momentum_refresh_auto(
+            self.backend.as_ref(),
+            self.threads,
+            self.cfg.hyper.beta1,
+            &self.m,
+            grads,
+            &mut self.local_m,
+        );
         // Lines 7–11: compressed allreduce of the fused momenta.
         let comm = self.car.allreduce(&self.local_m, &mut self.avg);
         self.m.copy_from_slice(&self.avg);
-        // Line 13: preconditioned update against the frozen variance —
-        // elementwise, so block-parallel over contiguous sub-slices (the
-        // kernel falls back to one fused sequential pass below the
-        // parallel threshold).
-        let eps = self.cfg.hyper.eps;
-        if self.backend.elementwise_native() {
-            kernels::precond_step_par(
-                self.threads,
-                eps,
-                &mut self.params,
-                &self.m,
-                &self.v,
-                lr,
-            );
-        } else {
-            self.backend
-                .precond_step(eps, &mut self.params, &self.m, &self.v, lr)
-                .expect("precond backend");
-        }
+        // Line 13: preconditioned update against the frozen variance.
+        crate::optim::backend::precond_step_auto(
+            self.backend.as_ref(),
+            self.threads,
+            self.cfg.hyper.eps,
+            &mut self.params,
+            &self.m,
+            &self.v,
+            lr,
+        );
         comm
     }
 }
@@ -393,14 +343,22 @@ impl DistOptimizer for OneBitAdam {
 
     fn step(&mut self, grads: &[Vec<f32>], lr: f32) -> StepStats {
         assert_eq!(grads.len(), self.n);
-        if self.phase == Phase::Warmup && self.due_for_switch() {
+        // Fixed-length warmup is checked *before* a step runs (so
+        // `warmup_steps = w` means exactly `w` Adam steps); the
+        // auto-switch criterion is evaluated after each warmup step once
+        // ‖v‖ is observed.
+        if self.phase == Phase::Warmup && self.freeze.fixed_switch_due(self.t)
+        {
             self.freeze_now();
         }
         match self.phase {
             Phase::Warmup => {
                 let comm = self.warmup_step(grads, lr);
                 self.t += 1;
-                if self.observe_switch() {
+                // Feed the monitor in BOTH modes (it gates the switch
+                // only in auto mode) — a fixed warmup must not starve
+                // `variance_ratio()`.
+                if self.freeze.observe_warmup(&self.v) {
                     self.freeze_now();
                 }
                 StepStats { comm, phase: Phase::Warmup }
@@ -467,6 +425,70 @@ mod tests {
             }
         }
         assert_eq!(opt.switch_step, Some(5));
+    }
+
+    #[test]
+    fn fixed_warmup_still_feeds_the_variance_monitor() {
+        // Regression: the pre-refactor auto-switch check short-circuited
+        // on `warmup_steps.is_some()`, so a fixed warmup never fed the
+        // VarianceMonitor and `variance_ratio()` was permanently `None`.
+        // β₂ = 0.9 ⇒ Δ = 10: the ratio must be live after Δ+1 warmup
+        // steps even though the warmup length is pinned.
+        let mut rng = Rng::new(7);
+        let cfg = OneBitAdamConfig {
+            warmup_steps: Some(20),
+            hyper: AdamHyper { beta2: 0.9, ..AdamHyper::default() },
+            ..Default::default()
+        };
+        let mut opt = OneBitAdam::new(2, vec![1.0; 32], cfg);
+        for t in 0..15 {
+            assert_eq!(opt.phase(), Phase::Warmup, "t={t}");
+            let grads: Vec<Vec<f32>> =
+                (0..2).map(|_| rng.normal_vec(32, 1.0)).collect();
+            opt.step(&grads, 1e-3);
+        }
+        assert!(
+            opt.variance_ratio().is_some(),
+            "fixed warmup starved the variance monitor"
+        );
+        // ... and the fixed length still wins: no auto-switch before 20.
+        assert_eq!(opt.phase(), Phase::Warmup);
+        assert_eq!(opt.switch_step, None);
+    }
+
+    #[test]
+    fn freeze_now_is_idempotent_once_compressing() {
+        // Regression: a second freeze_now (e.g. a coordinator forcing
+        // the switch after the auto-criterion already fired) must not
+        // re-apply the variance floor or re-zero live EC error state.
+        let mut rng = Rng::new(8);
+        let cfg = OneBitAdamConfig {
+            warmup_steps: Some(3),
+            ..Default::default()
+        };
+        let mut opt = OneBitAdam::new(2, vec![0.5; 64], cfg);
+        for _ in 0..10 {
+            let grads: Vec<Vec<f32>> =
+                (0..2).map(|_| rng.normal_vec(64, 1.0)).collect();
+            opt.step(&grads, 1e-3);
+        }
+        assert_eq!(opt.phase(), Phase::Compression);
+        let errors = opt.collective().export_errors();
+        assert!(
+            errors.iter().any(|b| b.iter().any(|&e| e != 0.0)),
+            "EC state should be hot mid-compression"
+        );
+        let v = opt.variance().to_vec();
+        let switch = opt.switch_step;
+        opt.freeze_now(); // second call: must be a strict no-op
+        assert_eq!(opt.phase(), Phase::Compression);
+        assert_eq!(opt.switch_step, switch, "switch_step moved");
+        assert_eq!(opt.variance(), &v[..], "v floor was re-applied");
+        assert_eq!(
+            opt.collective().export_errors(),
+            errors,
+            "live EC error state was re-zeroed"
+        );
     }
 
     #[test]

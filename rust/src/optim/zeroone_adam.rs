@@ -1,0 +1,633 @@
+//! **0/1 Adam** — warmup-free adaptive variance freezing with 1-bit
+//! communication from step 0 (Lu et al., "Maximizing Communication
+//! Efficiency for Large-scale Training via 0/1 Adam", arXiv 2202.06009).
+//!
+//! 1-bit Adam ([`crate::optim::onebit_adam::OneBitAdam`]) pays a
+//! full-volume fp32 allreduce for its entire warmup phase before any
+//! compression happens — the warmup wall-clock ceiling.  0/1 Adam
+//! removes the warmup with two policies:
+//!
+//! * **Variance-update policy** ([`freeze::VarianceSyncSchedule`]):
+//!   `v` is updated only at exponentially-spaced sync points
+//!   `t = 0, k₀, 2k₀, 4k₀, …` (`k_{j+1} = 2·k_j`) and frozen in
+//!   between.  At a sync point the workers run one full-precision
+//!   allreduce of their gradients and fold the synchronized mean into
+//!   `v` with a single EMA update `v ← β₂·v + (1−β₂)·ḡ²`, then
+//!   re-apply the shared variance floor
+//!   ([`freeze::apply_variance_floor`]).  Only O(log T) resyncs happen
+//!   over a T-step run, so the fp32 volume term vanishes from the
+//!   communication budget (asserted against the
+//!   [`crate::netsim::collectives`] volume model).
+//! * **1-bit communication policy**: the error-compensated compressed
+//!   momentum allreduce — the same [`Collective`] engines, topologies
+//!   and transports 1-bit Adam uses in its compression stage — runs
+//!   **every step from step 0**.  There is no warmup phase at all;
+//!   every [`StepStats`] reports [`Phase::Compression`].
+//!
+//! Per step `t`:
+//! 1. if `t` is a sync point: full-precision gradient allreduce, EMA
+//!    update of `v`, floor (the fp32 volume rides the step's
+//!    [`CommStats`] via [`CommStats::merge`]);
+//! 2. every worker refreshes the shared momentum
+//!    `m_t^{(i)} = β₁·m̄_{t−1} + (1−β₁)·g_t^{(i)}` and the fused momenta
+//!    go through the compressed collective (worker-side EC 1-bit
+//!    compression, server-side average + second EC compression,
+//!    all-gather);
+//! 3. `x_{t+1} = x_t − γ·m̄_t/(√v_t + ε)` against the (frozen-between-
+//!    syncs) variance.
+//!
+//! The schedule is a pure function of `t`, so a mid-interval
+//! checkpoint/restore (format v2, EC buffers included) resumes the
+//! trajectory bit for bit — tested below across a sync boundary.
+//!
+//! Practical note (the paper's "learning-rate-scaled" framing): the
+//! dense early syncs (`t = 0, 1, 2, 4…` with the default `k₀ = 1`)
+//! populate `v` while the LR schedule is still warming up, so pair this
+//! optimizer with an LR warmup the way every schedule in
+//! [`crate::config::presets`] already does.
+
+use crate::comm::plain::{allreduce_average_path, PlainPath};
+use crate::comm::{AllreducePath, Collective, CommStats, CommTopology};
+use crate::compress::CompressionKind;
+use crate::optim::backend::{
+    momentum_refresh_auto, precond_step_auto, AdamHyper, MathBackend,
+    NativeBackend,
+};
+use crate::optim::freeze::{self, VarianceSyncSchedule};
+use crate::optim::{DistOptimizer, Phase, StepStats};
+use crate::transport::TransportBackend;
+use crate::util::par::default_threads;
+
+/// Configuration for [`ZeroOneAdam`].
+#[derive(Debug, Clone)]
+pub struct ZeroOneAdamConfig {
+    /// Compression of the per-step momentum allreduce (`OneBit` = the
+    /// paper; `None` = a frozen-variance ablation with uncompressed
+    /// momentum).
+    pub compression: CompressionKind,
+    pub hyper: AdamHyper,
+    /// First nonzero variance-sync step `k₀`; the schedule doubles from
+    /// there (`k_{j+1} = 2·k_j`).  1 (default) gives the densest early
+    /// schedule `0, 1, 2, 4, 8, …`.
+    pub var_sync_base: usize,
+    /// Relative floor re-applied to `v` after every variance resync:
+    /// `v_i ← max(v_i, v_floor_rel · mean(v))` — same rationale as
+    /// 1-bit Adam's freeze-time floor (Theorem 1's 1/v_min³ term).
+    /// 0 disables.
+    pub v_floor_rel: f32,
+    /// Topology of the compressed momentum collective — flat, or the
+    /// two-level hierarchy (optionally chunk-streamed), exactly as for
+    /// [`crate::optim::onebit_adam::OneBitAdamConfig::topology`].
+    pub topology: CommTopology,
+    /// Wire backend: `None` keeps the in-process SPMD engines;
+    /// `Some(TransportBackend::InMemory | Tcp)` routes both the
+    /// compressed momentum exchange *and* the sync-point fp32 resync
+    /// through [`crate::transport`] as framed messages.  All backends
+    /// are bit-identical, so the trajectory is transport-invariant
+    /// (tested below).
+    pub transport: Option<TransportBackend>,
+}
+
+impl Default for ZeroOneAdamConfig {
+    fn default() -> Self {
+        ZeroOneAdamConfig {
+            compression: CompressionKind::OneBit,
+            hyper: AdamHyper::default(),
+            var_sync_base: 1,
+            v_floor_rel: 1e-4,
+            topology: CommTopology::Flat,
+            transport: None,
+        }
+    }
+}
+
+pub struct ZeroOneAdam {
+    n: usize,
+    params: Vec<f32>,
+    /// Globally-agreed momentum (identical on all workers after each
+    /// step).
+    m: Vec<f32>,
+    /// Adaptively-frozen variance: EMA-updated at sync points only.
+    v: Vec<f32>,
+    cfg: ZeroOneAdamConfig,
+    backend: Box<dyn MathBackend>,
+    /// The variance-update policy (pure function of the step index).
+    schedule: VarianceSyncSchedule,
+    /// Compressed momentum collective, topology/transport-dispatched.
+    car: Collective,
+    /// Step index (no phases — compression runs from step 0).
+    pub t: usize,
+    /// Fan-out for the elementwise stages (resolved once).
+    threads: usize,
+    /// Engine of the sync-point full-precision resync when the
+    /// collective is in-process ([`PlainPath::TreeReduce`] default —
+    /// the thread-count-bit-invariant engine the transported
+    /// `plain_average` is property-tested equal to).
+    plain_path: PlainPath,
+    // scratch
+    avg: Vec<f32>,
+    avg_g: Vec<f32>,
+    local_m: Vec<Vec<f32>>,
+}
+
+impl ZeroOneAdam {
+    pub fn new(n_workers: usize, init: Vec<f32>, cfg: ZeroOneAdamConfig) -> Self {
+        Self::with_backend(n_workers, init, cfg, Box::new(NativeBackend))
+    }
+
+    pub fn with_backend(
+        n_workers: usize,
+        init: Vec<f32>,
+        cfg: ZeroOneAdamConfig,
+        backend: Box<dyn MathBackend>,
+    ) -> Self {
+        let d = init.len();
+        ZeroOneAdam {
+            n: n_workers,
+            params: init,
+            m: vec![0.0; d],
+            v: vec![0.0; d],
+            schedule: VarianceSyncSchedule::new(cfg.var_sync_base),
+            car: Collective::build_with_transport(
+                cfg.topology,
+                n_workers,
+                d,
+                cfg.compression,
+                cfg.transport,
+            ),
+            cfg,
+            backend,
+            t: 0,
+            threads: default_threads(),
+            plain_path: PlainPath::default(),
+            avg: vec![0.0; d],
+            avg_g: vec![0.0; d],
+            local_m: (0..n_workers).map(|_| vec![0.0; d]).collect(),
+        }
+    }
+
+    /// Always [`Phase::Compression`] — there is no warmup phase.
+    pub fn phase(&self) -> Phase {
+        Phase::Compression
+    }
+
+    /// The adaptively-frozen variance term.
+    pub fn variance(&self) -> &[f32] {
+        &self.v
+    }
+
+    pub fn momentum(&self) -> &[f32] {
+        &self.m
+    }
+
+    /// The variance-update schedule.
+    pub fn schedule(&self) -> VarianceSyncSchedule {
+        self.schedule
+    }
+
+    /// Is `t` a variance sync step under this config?
+    pub fn is_sync_step(&self, t: usize) -> bool {
+        self.schedule.is_sync(t)
+    }
+
+    /// Topology the momentum collective was built with.
+    pub fn topology(&self) -> CommTopology {
+        self.cfg.topology
+    }
+
+    /// The collective itself (diagnostics / tests).
+    pub fn collective(&self) -> &Collective {
+        &self.car
+    }
+
+    /// Select the compressed-allreduce engine (bench/diagnostic use; the
+    /// engines are bit-identical, so this never changes a trajectory).
+    pub fn set_allreduce_path(&mut self, path: AllreducePath) {
+        self.car.set_path(path);
+    }
+
+    /// Select the in-process engine of the sync-point resync.  NOTE:
+    /// unlike the allreduce engines, [`PlainPath::Reference`] agrees
+    /// with the default tree path only within 1 ULP (not bitwise) —
+    /// bench/diagnostic use.
+    pub fn set_plain_path(&mut self, path: PlainPath) {
+        self.plain_path = path;
+    }
+
+    /// Export the training state: params, momentum, variance and the
+    /// carried error-feedback buffers (the checkpoint-format-v2 `ec`
+    /// section), so a restore resumes the exact trajectory bit for bit
+    /// — including across a variance-sync boundary, because the sync
+    /// schedule is a pure function of the restored step index.
+    pub fn to_checkpoint(&self) -> crate::coordinator::checkpoint::Checkpoint {
+        crate::coordinator::checkpoint::Checkpoint {
+            step: self.t as u64,
+            phase: Phase::Compression,
+            params: self.params.clone(),
+            m: self.m.clone(),
+            v: self.v.clone(),
+            ec: self.car.export_errors(),
+        }
+    }
+
+    /// Restore from a checkpoint.  EC buffers matching this collective's
+    /// shape are restored (bit-identical resume); on shape mismatch
+    /// (different topology/worker count) the errors start fresh.
+    pub fn from_checkpoint(
+        n_workers: usize,
+        ck: crate::coordinator::checkpoint::Checkpoint,
+        cfg: ZeroOneAdamConfig,
+    ) -> Self {
+        let mut opt = Self::new(n_workers, ck.params, cfg);
+        opt.m = ck.m;
+        opt.v = ck.v;
+        opt.t = ck.step as usize;
+        if !ck.ec.is_empty() && !opt.car.import_errors(&ck.ec) {
+            opt.car.reset_errors();
+        }
+        opt
+    }
+
+    /// Sync-point variance resync: one full-precision allreduce of the
+    /// raw gradients (over the wire when the collective is transported,
+    /// so the fp32 bytes are really measured), one EMA fold into `v`,
+    /// floor re-applied.  Returns the resync's wire ledger.
+    fn variance_resync(&mut self, grads: &[Vec<f32>]) -> CommStats {
+        let comm = match &mut self.car {
+            Collective::Transported(t) => {
+                t.plain_average(grads, &mut self.avg_g)
+            }
+            _ => allreduce_average_path(
+                self.plain_path,
+                grads,
+                &mut self.avg_g,
+                self.threads,
+            ),
+        };
+        let beta2 = self.cfg.hyper.beta2;
+        let omb2 = 1.0 - beta2;
+        // One EMA update per sync point — elementwise and sequential
+        // (sync points are O(log T) rare; determinism matters more than
+        // fan-out here).  The mul_add form matches the warmup Adam
+        // kernel's `v` arithmetic exactly.
+        for (vi, &gi) in self.v.iter_mut().zip(self.avg_g.iter()) {
+            *vi = beta2.mul_add(*vi, (omb2 * gi) * gi);
+        }
+        freeze::apply_variance_floor(self.cfg.v_floor_rel, &mut self.v);
+        comm
+    }
+}
+
+impl DistOptimizer for ZeroOneAdam {
+    fn n_workers(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    fn local_params(&self, _worker: usize) -> &[f32] {
+        &self.params
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn step(&mut self, grads: &[Vec<f32>], lr: f32) -> StepStats {
+        assert_eq!(grads.len(), self.n);
+        // Variance policy first: a sync step folds this step's
+        // synchronized gradient into `v` *before* the parameter update
+        // uses it (matching Adam's v_t-then-update order; crucial at
+        // t = 0, where v would otherwise still be zero).
+        let mut comm = if self.schedule.is_sync(self.t) {
+            self.variance_resync(grads)
+        } else {
+            CommStats::default()
+        };
+        // 1-bit policy: EC-compressed momentum consensus, every step.
+        momentum_refresh_auto(
+            self.backend.as_ref(),
+            self.threads,
+            self.cfg.hyper.beta1,
+            &self.m,
+            grads,
+            &mut self.local_m,
+        );
+        comm.merge(self.car.allreduce(&self.local_m, &mut self.avg));
+        self.m.copy_from_slice(&self.avg);
+        precond_step_auto(
+            self.backend.as_ref(),
+            self.threads,
+            self.cfg.hyper.eps,
+            &mut self.params,
+            &self.m,
+            &self.v,
+            lr,
+        );
+        self.t += 1;
+        StepStats { comm, phase: Phase::Compression }
+    }
+
+    fn name(&self) -> &'static str {
+        match self.cfg.compression {
+            CompressionKind::OneBit => "01-adam",
+            CompressionKind::None => "01-adam-32",
+            CompressionKind::NBit(_) => "01-adam-nbit",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn rand_grads(rng: &mut Rng, n: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|_| rng.normal_vec(d, 1.0)).collect()
+    }
+
+    #[test]
+    fn compresses_from_step_zero_with_no_warmup_phase() {
+        let mut rng = Rng::new(1);
+        let d = 10_000;
+        let mut opt = ZeroOneAdam::new(4, vec![0.5; d], Default::default());
+        let fp32_ring_per_gpu = 2 * ((2 * (d * 4) * 3 / 4) / 2);
+        let mut per_step = Vec::new();
+        for t in 0..6 {
+            let grads = rand_grads(&mut rng, 4, d);
+            let stats = opt.step(&grads, 1e-4);
+            assert_eq!(stats.phase, Phase::Compression, "t={t}: no warmup");
+            per_step.push(stats.comm.total_per_gpu());
+        }
+        // t = 3 and t = 5 are not sync points: pure 1-bit traffic, far
+        // below one fp32 ring allreduce.
+        for &t in &[3usize, 5] {
+            assert!(
+                (fp32_ring_per_gpu as f64) / (per_step[t] as f64) > 20.0,
+                "t={t}: {} vs fp32 {}",
+                per_step[t],
+                fp32_ring_per_gpu
+            );
+        }
+        // sync steps (0, 1, 2, 4) carry the fp32 resync on top of the
+        // 1-bit exchange.
+        for &t in &[0usize, 1, 2, 4] {
+            assert_eq!(
+                per_step[t],
+                per_step[3] + fp32_ring_per_gpu,
+                "t={t} should be 1-bit + one fp32 resync"
+            );
+        }
+    }
+
+    #[test]
+    fn variance_is_frozen_between_sync_points() {
+        let mut rng = Rng::new(2);
+        let d = 64;
+        let mut opt = ZeroOneAdam::new(2, vec![1.0; d], Default::default());
+        let mut prev_v = opt.variance().to_vec();
+        for t in 0..20 {
+            let grads = rand_grads(&mut rng, 2, d);
+            opt.step(&grads, 1e-3);
+            let changed = opt.variance() != &prev_v[..];
+            assert_eq!(
+                changed,
+                opt.is_sync_step(t),
+                "t={t}: v must change exactly at sync points"
+            );
+            prev_v = opt.variance().to_vec();
+        }
+    }
+
+    #[test]
+    fn first_sync_populates_variance_and_floor_applies() {
+        let mut rng = Rng::new(3);
+        let d = 128;
+        let mut opt = ZeroOneAdam::new(2, vec![1.0; d], Default::default());
+        assert!(opt.variance().iter().all(|&v| v == 0.0));
+        let grads = rand_grads(&mut rng, 2, d);
+        opt.step(&grads, 1e-4);
+        // v populated at t = 0, and strictly positive everywhere thanks
+        // to the floor (no 1/√0 amplification from step 1 on).
+        assert!(opt.variance().iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn thirtytwo_bit_variant_is_preconditioned_momentum_between_syncs() {
+        // With identity compression, a non-sync step IS momentum SGD
+        // preconditioned by the currently-frozen v — replay it by hand.
+        let d = 64;
+        let mut rng = Rng::new(4);
+        let cfg = ZeroOneAdamConfig {
+            compression: CompressionKind::None,
+            ..Default::default()
+        };
+        let mut opt = ZeroOneAdam::new(2, rng.normal_vec(d, 1.0), cfg);
+        let mut grad_rng = Rng::new(77);
+        // steps 0..=2 are syncs; advance past them, then check step 3.
+        for _ in 0..3 {
+            let g = rand_grads(&mut grad_rng, 2, d);
+            opt.step(&g, 1e-3);
+        }
+        let v0 = opt.variance().to_vec();
+        let mut m = opt.momentum().to_vec();
+        let mut p = opt.params().to_vec();
+        let g = rand_grads(&mut grad_rng, 2, d);
+        opt.step(&g, 1e-3);
+        assert_eq!(opt.variance(), &v0[..], "t=3 is not a sync point");
+        let mut avg = vec![0.0f32; d];
+        crate::comm::plain::allreduce_average(&g, &mut avg);
+        for i in 0..d {
+            m[i] = 0.9 * m[i] + 0.1 * avg[i];
+            p[i] -= 1e-3 * m[i] / (v0[i].sqrt() + 1e-8);
+        }
+        for i in 0..d {
+            assert!(
+                (opt.params()[i] - p[i]).abs() < 1e-5,
+                "divergence at {i}: {} vs {}",
+                opt.params()[i],
+                p[i]
+            );
+        }
+    }
+
+    #[test]
+    fn trajectory_is_transport_invariant_flat_and_hierarchical() {
+        // cfg.transport routes BOTH the compressed momentum exchange and
+        // the sync-point fp32 resync over the wire; the trajectory must
+        // be bit-identical to the in-process engines.
+        for topology in [
+            CommTopology::Flat,
+            CommTopology::Hierarchical { group_size: 2 },
+        ] {
+            let d = 384;
+            let cfg_mem = ZeroOneAdamConfig {
+                topology,
+                ..Default::default()
+            };
+            let cfg_wire = ZeroOneAdamConfig {
+                topology,
+                transport: Some(TransportBackend::InMemory),
+                ..Default::default()
+            };
+            let mut a = ZeroOneAdam::new(4, vec![0.3; d], cfg_mem);
+            let mut b = ZeroOneAdam::new(4, vec![0.3; d], cfg_wire);
+            assert!(b.collective().as_transported().is_some());
+            let mut rng = Rng::new(31);
+            for step in 0..12 {
+                let grads = rand_grads(&mut rng, 4, d);
+                let sa = a.step(&grads, 1e-3);
+                let sb = b.step(&grads, 1e-3);
+                assert_eq!(a.params(), b.params(), "{topology:?} step={step}");
+                assert_eq!(sa.comm, sb.comm, "{topology:?} step={step}");
+            }
+            assert_eq!(a.momentum(), b.momentum());
+            assert_eq!(a.variance(), b.variance());
+        }
+    }
+
+    #[test]
+    fn tcp_trajectory_matches_in_process() {
+        // The same invariance over real loopback sockets (smaller run).
+        let d = 256;
+        let cfg_tcp = ZeroOneAdamConfig {
+            transport: Some(TransportBackend::Tcp),
+            ..Default::default()
+        };
+        let mut a = ZeroOneAdam::new(3, vec![0.1; d], Default::default());
+        let mut b = ZeroOneAdam::new(3, vec![0.1; d], cfg_tcp);
+        let mut rng = Rng::new(8);
+        for _ in 0..6 {
+            let grads = rand_grads(&mut rng, 3, d);
+            a.step(&grads, 1e-3);
+            b.step(&grads, 1e-3);
+        }
+        assert_eq!(a.params(), b.params());
+        assert_eq!(a.momentum(), b.momentum());
+        assert_eq!(a.variance(), b.variance());
+    }
+
+    #[test]
+    fn hierarchical_pipelined_matches_hierarchical_exactly() {
+        let d = 512;
+        let cfg_barrier = ZeroOneAdamConfig {
+            topology: CommTopology::Hierarchical { group_size: 2 },
+            ..Default::default()
+        };
+        let cfg_pipe = ZeroOneAdamConfig {
+            topology: CommTopology::HierarchicalPipelined { group_size: 2 },
+            ..Default::default()
+        };
+        let mut a = ZeroOneAdam::new(4, vec![0.3; d], cfg_barrier);
+        let mut b = ZeroOneAdam::new(4, vec![0.3; d], cfg_pipe);
+        let mut rng = Rng::new(12);
+        for _ in 0..20 {
+            let grads = rand_grads(&mut rng, 4, d);
+            a.step(&grads, 1e-3);
+            b.step(&grads, 1e-3);
+        }
+        assert_eq!(a.params(), b.params());
+        assert_eq!(a.momentum(), b.momentum());
+        assert_eq!(a.variance(), b.variance());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_across_a_variance_sync_boundary() {
+        // Save mid-interval (t = 11, between syncs at 8 and 16), restore
+        // through the v2 byte format (EC buffers included), continue
+        // through the t = 16 sync: bit-identical continuation.
+        use crate::coordinator::checkpoint::Checkpoint;
+        let (workers, d) = (4usize, 96usize);
+        let cfg = ZeroOneAdamConfig::default();
+        let mut opt = ZeroOneAdam::new(workers, vec![0.4; d], cfg.clone());
+        let mut rng = Rng::new(11);
+        for _ in 0..11 {
+            let g = rand_grads(&mut rng, workers, d);
+            opt.step(&g, 1e-3);
+        }
+        assert!(!opt.is_sync_step(opt.t), "t=11 must be mid-interval");
+        let ck = opt.to_checkpoint();
+        assert!(
+            ck.ec.iter().any(|b| b.iter().any(|&e| e != 0.0)),
+            "mid-run EC state should be hot"
+        );
+        // through the wire format, checksum and all (v2 carries ec)
+        let restored_ck = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(ck, restored_ck);
+        let mut resumed =
+            ZeroOneAdam::from_checkpoint(workers, restored_ck, cfg);
+        assert_eq!(opt.variance(), resumed.variance());
+        assert_eq!(resumed.t, 11);
+        let mut fork = Rng::new(99);
+        for _ in 0..10 {
+            // crosses the t = 16 sync point in both runs
+            let g = rand_grads(&mut fork, workers, d);
+            opt.step(&g, 1e-3);
+            resumed.step(&g, 1e-3);
+        }
+        assert_eq!(opt.params(), resumed.params());
+        assert_eq!(opt.momentum(), resumed.momentum());
+        assert_eq!(opt.variance(), resumed.variance());
+        assert_eq!(
+            opt.collective().export_errors(),
+            resumed.collective().export_errors()
+        );
+    }
+
+    #[test]
+    fn checkpoint_with_mismatched_shape_resets_errors() {
+        let d = 64;
+        let cfg = ZeroOneAdamConfig::default();
+        let mut opt = ZeroOneAdam::new(2, vec![0.5; d], cfg.clone());
+        let mut rng = Rng::new(5);
+        for _ in 0..6 {
+            let g = rand_grads(&mut rng, 2, d);
+            opt.step(&g, 1e-3);
+        }
+        let mut ck = opt.to_checkpoint();
+        ck.ec.pop(); // wrong buffer count => shape mismatch
+        let resumed = ZeroOneAdam::from_checkpoint(2, ck, cfg);
+        assert!(resumed
+            .collective()
+            .export_errors()
+            .iter()
+            .all(|b| b.iter().all(|&e| e == 0.0)));
+    }
+
+    #[test]
+    fn custom_sync_base_is_honored() {
+        let mut rng = Rng::new(6);
+        let d = 32;
+        let cfg = ZeroOneAdamConfig {
+            var_sync_base: 3,
+            ..Default::default()
+        };
+        let mut opt = ZeroOneAdam::new(2, vec![1.0; d], cfg);
+        let mut sync_steps = Vec::new();
+        let mut prev_v = opt.variance().to_vec();
+        for t in 0..14 {
+            let grads = rand_grads(&mut rng, 2, d);
+            opt.step(&grads, 1e-3);
+            if opt.variance() != &prev_v[..] {
+                sync_steps.push(t);
+            }
+            prev_v = opt.variance().to_vec();
+        }
+        assert_eq!(sync_steps, vec![0, 3, 6, 12]);
+    }
+
+    #[test]
+    fn names_follow_the_compression_kind() {
+        let mk = |compression| {
+            ZeroOneAdam::new(
+                1,
+                vec![0.0; 4],
+                ZeroOneAdamConfig { compression, ..Default::default() },
+            )
+        };
+        assert_eq!(mk(CompressionKind::OneBit).name(), "01-adam");
+        assert_eq!(mk(CompressionKind::None).name(), "01-adam-32");
+    }
+}

@@ -35,13 +35,18 @@ use crate::util::error::{Error, Result};
 
 pub use runner::{TransportCollective, TransportStats};
 
-/// Upper bound on one blocking [`Transport::recv`].  Collective peers
-/// exchange frames within milliseconds of each other; if a rank dies
-/// mid-collective (I/O error, corrupted frame, panic) its healthy peers
-/// would otherwise block forever — the timeout converts a wedged
+/// Default upper bound on one blocking [`Transport::recv`].  Collective
+/// peers exchange frames within milliseconds of each other; if a rank
+/// dies mid-collective (I/O error, corrupted frame, panic) its healthy
+/// peers would otherwise block forever — the timeout converts a wedged
 /// collective into an error on every surviving rank, letting the
 /// per-rank threads unwind instead of hanging the step.  Generous enough
 /// (60 s) that no legitimate loopback exchange can trip it.
+///
+/// Tunable per mesh via [`TcpOptions::recv_timeout`]: long-running
+/// benches on loaded CI can raise it, and tests that *want* a dead peer
+/// to unwind quickly can shorten it (see
+/// `dead_peer_recv_times_out_within_the_configured_bound` below).
 pub const RECV_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Which wire backend a mesh runs on.
@@ -54,7 +59,9 @@ pub enum TransportBackend {
     Tcp,
 }
 
-/// Tuning knobs for the TCP backend.
+/// Tuning knobs for the mesh backends (named for the TCP backend it
+/// grew up with; the `recv_timeout` applies to the in-memory backend
+/// too).
 #[derive(Debug, Clone)]
 pub struct TcpOptions {
     /// Disable Nagle's algorithm (`TCP_NODELAY`).  The collectives send
@@ -63,11 +70,19 @@ pub struct TcpOptions {
     pub nodelay: bool,
     /// Userspace buffer size for the per-connection writer and reader.
     pub buffer_bytes: usize,
+    /// Upper bound on one blocking [`Transport::recv`] before the
+    /// endpoint reports its peer dead.  Default [`RECV_TIMEOUT`] (60 s
+    /// — unchanged from when it was a hardcoded const).
+    pub recv_timeout: Duration,
 }
 
 impl Default for TcpOptions {
     fn default() -> Self {
-        TcpOptions { nodelay: true, buffer_bytes: 256 * 1024 }
+        TcpOptions {
+            nodelay: true,
+            buffer_bytes: 256 * 1024,
+            recv_timeout: RECV_TIMEOUT,
+        }
     }
 }
 
@@ -98,10 +113,12 @@ pub fn build_mesh(
     tcp: &TcpOptions,
 ) -> Result<Vec<Box<dyn Transport>>> {
     match backend {
-        TransportBackend::InMemory => Ok(in_memory_mesh(n)
-            .into_iter()
-            .map(|e| Box::new(e) as Box<dyn Transport>)
-            .collect()),
+        TransportBackend::InMemory => {
+            Ok(in_memory_mesh_with(n, tcp.recv_timeout)
+                .into_iter()
+                .map(|e| Box::new(e) as Box<dyn Transport>)
+                .collect())
+        }
         TransportBackend::Tcp => Ok(tcp_loopback_mesh(n, tcp)?
             .into_iter()
             .map(|e| Box::new(e) as Box<dyn Transport>)
@@ -122,10 +139,20 @@ pub struct InMemoryTransport {
     n: usize,
     tx: Vec<Option<MemTx>>,
     rx: Vec<Option<MemRx>>,
+    timeout: Duration,
 }
 
-/// Build the `n`-rank in-memory mesh.
+/// Build the `n`-rank in-memory mesh with the default dead-peer
+/// timeout.
 pub fn in_memory_mesh(n: usize) -> Vec<InMemoryTransport> {
+    in_memory_mesh_with(n, RECV_TIMEOUT)
+}
+
+/// [`in_memory_mesh`] with an explicit dead-peer receive timeout.
+pub fn in_memory_mesh_with(
+    n: usize,
+    timeout: Duration,
+) -> Vec<InMemoryTransport> {
     assert!(n > 0);
     let mut txs: Vec<Vec<Option<MemTx>>> =
         (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
@@ -144,7 +171,13 @@ pub fn in_memory_mesh(n: usize) -> Vec<InMemoryTransport> {
     txs.into_iter()
         .zip(rxs)
         .enumerate()
-        .map(|(rank, (tx, rx))| InMemoryTransport { rank, n, tx, rx })
+        .map(|(rank, (tx, rx))| InMemoryTransport {
+            rank,
+            n,
+            tx,
+            rx,
+            timeout,
+        })
         .collect()
 }
 
@@ -180,7 +213,7 @@ impl Transport for InMemoryTransport {
                 "rank {}: no channel from rank {from}",
                 self.rank
             )))?;
-        match rx.recv_timeout(RECV_TIMEOUT) {
+        match rx.recv_timeout(self.timeout) {
             Ok(bytes) => Ok(bytes),
             Err(mpsc::RecvTimeoutError::Timeout) => Err(Error::msg(format!(
                 "timed out waiting for a frame from rank {from} \
@@ -215,6 +248,7 @@ pub struct TcpTransport {
     raw: Vec<Option<TcpStream>>,
     rx: Vec<Option<TcpRx>>,
     readers: Vec<Option<std::thread::JoinHandle<()>>>,
+    timeout: Duration,
 }
 
 /// Build an `n`-rank full mesh over loopback TCP: for every rank pair one
@@ -234,6 +268,7 @@ pub fn tcp_loopback_mesh(
             raw: (0..n).map(|_| None).collect(),
             rx: (0..n).map(|_| None).collect(),
             readers: (0..n).map(|_| None).collect(),
+            timeout: opts.recv_timeout,
         })
         .collect();
     for i in 0..n {
@@ -328,7 +363,7 @@ impl Transport for TcpTransport {
                 "rank {}: no connection from rank {from}",
                 self.rank
             )))?;
-        match rx.recv_timeout(RECV_TIMEOUT) {
+        match rx.recv_timeout(self.timeout) {
             Ok(Ok(bytes)) => Ok(bytes),
             Ok(Err(e)) => Err(Error::Io(e)),
             Err(mpsc::RecvTimeoutError::Timeout) => Err(Error::msg(format!(
@@ -484,5 +519,46 @@ mod tests {
         assert!(eps[0].send(0, &[1, 2, 3]).is_err()); // no self-channel
         let mut tcp = tcp_loopback_mesh(2, &TcpOptions::default()).unwrap();
         assert!(tcp[1].send(9, &[0]).is_err());
+    }
+
+    #[test]
+    fn default_recv_timeout_is_the_historical_sixty_seconds() {
+        // The timeout became configurable; the default must not move.
+        assert_eq!(TcpOptions::default().recv_timeout, RECV_TIMEOUT);
+        assert_eq!(RECV_TIMEOUT, Duration::from_secs(60));
+    }
+
+    #[test]
+    fn dead_peer_recv_times_out_within_the_configured_bound() {
+        // A silent-but-alive peer (the dead-rank failure mode: wedged,
+        // not disconnected) must unwind recv within the *configured*
+        // timeout — with the historical hardcoded 60 s this test could
+        // not exist without a one-minute stall.
+        let opts = TcpOptions {
+            recv_timeout: Duration::from_millis(100),
+            ..TcpOptions::default()
+        };
+        for backend in [TransportBackend::InMemory, TransportBackend::Tcp] {
+            let mut eps = build_mesh(backend, 2, &opts).unwrap();
+            // keep rank 1 alive (its channels/sockets open) but silent
+            let (head, _tail) = eps.split_at_mut(1);
+            let start = std::time::Instant::now();
+            let res = head[0].recv(1);
+            let elapsed = start.elapsed();
+            assert!(res.is_err(), "{backend:?}: recv from a dead peer");
+            assert!(
+                format!("{}", res.unwrap_err()).contains("timed out"),
+                "{backend:?}: expected a timeout error"
+            );
+            assert!(
+                elapsed >= Duration::from_millis(100),
+                "{backend:?}: returned before the timeout ({elapsed:?})"
+            );
+            assert!(
+                elapsed < Duration::from_secs(10),
+                "{backend:?}: nowhere near the configured bound \
+                 ({elapsed:?})"
+            );
+        }
     }
 }

@@ -750,7 +750,8 @@ impl TransportCollective {
     /// aggregated tensor every rank reconstructed.  Panics if the
     /// underlying transport fails mid-collective (a dead mesh is not
     /// recoverable); surviving peers unwind too, within
-    /// [`super::RECV_TIMEOUT`], rather than blocking forever on a rank
+    /// the configured receive timeout ([`super::TcpOptions::recv_timeout`],
+    /// default [`super::RECV_TIMEOUT`]), rather than blocking forever on a rank
     /// that will never send.
     pub fn allreduce(
         &mut self,
