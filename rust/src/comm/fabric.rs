@@ -17,7 +17,9 @@
 //! can use any of the three.
 
 use crate::compress::CompressionKind;
-use crate::transport::{TransportBackend, TransportCollective};
+use crate::transport::{
+    ChaosScenario, TcpOptions, TransportBackend, TransportCollective,
+};
 
 use super::CommStats;
 
@@ -35,6 +37,30 @@ impl ThreadedFabric {
             n_workers,
             len,
             CompressionKind::OneBit,
+        )
+        .expect("in-memory transport mesh cannot fail to build");
+        ThreadedFabric { inner }
+    }
+
+    /// [`Self::new`] on an adversarial wire: the in-memory mesh is
+    /// wrapped in the chaos fault injector and its NACK/retransmit
+    /// recovery layer, so the fabric exercises the paper's collective
+    /// under dropped/corrupted/reordered frames while staying
+    /// bit-identical to the clean fabric (see
+    /// [`crate::transport::chaos`]).
+    pub fn with_chaos(
+        n_workers: usize,
+        len: usize,
+        scenario: &ChaosScenario,
+    ) -> Self {
+        let inner = TransportCollective::with_chaos(
+            TransportBackend::InMemory,
+            n_workers,
+            len,
+            CompressionKind::OneBit,
+            1,
+            &TcpOptions::default(),
+            scenario,
         )
         .expect("in-memory transport mesh cannot fail to build");
         ThreadedFabric { inner }
@@ -131,6 +157,33 @@ mod tests {
         let stats = thr.allreduce(&inputs, &mut out);
         assert_eq!(stats.alltoall_bytes_per_gpu, 0);
         assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn chaos_fabric_matches_the_clean_fabric_bit_for_bit() {
+        // A lossy wire below the fabric repairs itself: same bits, same
+        // stats, with the repair work visible in the recovery ledger.
+        let (n, len) = (4usize, 640usize);
+        let mut clean = ThreadedFabric::new(n, len);
+        let mut lossy =
+            ThreadedFabric::with_chaos(n, len, &ChaosScenario::lossy(21));
+        let mut out_c = vec![0.0f32; len];
+        let mut out_l = vec![0.0f32; len];
+        for step in 0..3 {
+            let inputs = random_inputs(n, len, 400 + step);
+            let s_c = clean.allreduce(&inputs, &mut out_c);
+            let s_l = lossy.allreduce(&inputs, &mut out_l);
+            assert_eq!(out_c, out_l, "step={step}");
+            assert_eq!(s_c, s_l, "step={step}");
+            assert_eq!(
+                clean.transport().last_stats(),
+                lossy.transport().last_stats(),
+                "step={step}"
+            );
+        }
+        let rec = lossy.transport().recovery_stats();
+        assert!(rec.frames_injected > 0);
+        assert_eq!(clean.transport().recovery_stats().frames_injected, 0);
     }
 
     #[test]

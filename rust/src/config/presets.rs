@@ -216,6 +216,108 @@ impl ZeroOnePreset {
     }
 }
 
+/// A named adversarial-network shape for the chaos transport
+/// ([`crate::transport::ChaosScenario`]), const-friendly: scalar
+/// probabilities + microsecond delays, turned into a runtime scenario
+/// (which owns a `Vec` of straggler ranks) by [`Self::scenario`].
+///
+/// These mirror the analytic
+/// [`crate::netsim::collectives::DegradedScenario`] grid, so the
+/// measured chaos benches and the fig5/fig9 degraded sweeps speak the
+/// same scenario names.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosPreset {
+    pub name: &'static str,
+    /// Frame drop probability.
+    pub drop_p: f64,
+    /// Single-bit corruption probability (framing-safe).
+    pub corrupt_p: f64,
+    /// Adjacent-reorder probability.
+    pub reorder_p: f64,
+    /// Injected per-frame latency, microseconds.
+    pub latency_us: u64,
+    /// Uniform extra latency in `[0, jitter_us)`, microseconds.
+    pub jitter_us: u64,
+    /// Link bandwidth cap in bits/s (`0.0` = uncapped).
+    pub bandwidth_bps: f64,
+    /// At most one straggler rank in a preset (the runtime scenario
+    /// accepts any set).
+    pub straggler_rank: Option<usize>,
+    /// Extra per-send delay of the straggler, microseconds.
+    pub straggler_delay_us: u64,
+}
+
+/// The degraded-network grid the robustness tier sweeps.
+pub const CHAOS_PRESETS: &[ChaosPreset] = &[
+    ChaosPreset {
+        name: "clean",
+        drop_p: 0.0,
+        corrupt_p: 0.0,
+        reorder_p: 0.0,
+        latency_us: 0,
+        jitter_us: 0,
+        bandwidth_bps: 0.0,
+        straggler_rank: None,
+        straggler_delay_us: 0,
+    },
+    ChaosPreset {
+        name: "lossy-ethernet",
+        drop_p: 0.05,
+        corrupt_p: 0.02,
+        reorder_p: 0.05,
+        latency_us: 0,
+        jitter_us: 0,
+        bandwidth_bps: 0.0,
+        straggler_rank: None,
+        straggler_delay_us: 0,
+    },
+    ChaosPreset {
+        name: "wan-latency",
+        drop_p: 0.01,
+        corrupt_p: 0.0,
+        reorder_p: 0.0,
+        latency_us: 500,
+        jitter_us: 250,
+        bandwidth_bps: 1e9,
+        straggler_rank: None,
+        straggler_delay_us: 0,
+    },
+    ChaosPreset {
+        name: "straggler-one-rank",
+        drop_p: 0.0,
+        corrupt_p: 0.0,
+        reorder_p: 0.0,
+        latency_us: 0,
+        jitter_us: 0,
+        bandwidth_bps: 0.0,
+        straggler_rank: Some(1),
+        straggler_delay_us: 200,
+    },
+];
+
+impl ChaosPreset {
+    pub fn by_name(name: &str) -> Option<&'static ChaosPreset> {
+        CHAOS_PRESETS.iter().find(|p| p.name == name)
+    }
+
+    /// Materialize the preset as a seeded runtime scenario.
+    pub fn scenario(&self, seed: u64) -> crate::transport::ChaosScenario {
+        use std::time::Duration;
+        crate::transport::ChaosScenario {
+            seed,
+            drop_p: self.drop_p,
+            corrupt_p: self.corrupt_p,
+            reorder_p: self.reorder_p,
+            latency: Duration::from_micros(self.latency_us),
+            jitter: Duration::from_micros(self.jitter_us),
+            bandwidth_bps: self.bandwidth_bps,
+            straggler_ranks: self.straggler_rank.into_iter().collect(),
+            straggler_delay: Duration::from_micros(self.straggler_delay_us),
+            ..crate::transport::ChaosScenario::clean(seed)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,6 +400,43 @@ mod tests {
         let grads = vec![vec![0.5f32; 32], vec![-0.5f32; 32]];
         let stats = opt.step(&grads, 1e-3);
         assert_eq!(stats.phase, crate::optim::Phase::Compression);
+    }
+
+    #[test]
+    fn chaos_presets_materialize_and_drive_the_fabric() {
+        // Every preset builds a seeded runtime scenario, and the lossy
+        // one actually repairs a collective bit-for-bit.
+        for p in CHAOS_PRESETS {
+            let sc = p.scenario(7);
+            assert_eq!(sc.seed, 7);
+            assert_eq!(sc.drop_p, p.drop_p);
+            assert_eq!(
+                sc.straggler_ranks.is_empty(),
+                p.straggler_rank.is_none(),
+                "{}",
+                p.name
+            );
+        }
+        assert!(ChaosPreset::by_name("clean").unwrap().scenario(0).is_clean());
+        assert!(ChaosPreset::by_name("nope").is_none());
+
+        use crate::comm::fabric::ThreadedFabric;
+        use crate::util::prng::Rng;
+        let lossy = ChaosPreset::by_name("lossy-ethernet").unwrap();
+        let (n, len) = (3usize, 256usize);
+        let mut clean = ThreadedFabric::new(n, len);
+        let mut chaotic =
+            ThreadedFabric::with_chaos(n, len, &lossy.scenario(11));
+        let base = Rng::new(31);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|i| base.fork(i as u64).normal_vec(len, 1.0))
+            .collect();
+        let mut out_c = vec![0.0f32; len];
+        let mut out_x = vec![0.0f32; len];
+        clean.allreduce(&inputs, &mut out_c);
+        chaotic.allreduce(&inputs, &mut out_x);
+        assert_eq!(out_c, out_x);
+        assert!(chaotic.transport().recovery_stats().frames_injected > 0);
     }
 
     #[test]

@@ -254,6 +254,148 @@ pub fn fp16_allreduce_time(
     allreduce_time(net, n_gpus, elements * 2)
 }
 
+// ---- degraded-network scenarios --------------------------------------------
+
+/// An adversarial network condition layered over a clean
+/// [`NetworkModel`] — the analytic twin of a
+/// [`crate::transport::ChaosScenario`]: random frame loss (repaired by
+/// retransmission, so it costs goodput and round-trips rather than
+/// correctness), a latency factor (WAN paths / congested switches), and
+/// a straggler factor (a synchronous collective finishes at the slowest
+/// rank's pace).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradedScenario {
+    pub name: &'static str,
+    /// Frame-loss probability on every inter-node link.
+    pub loss_p: f64,
+    /// Multiplier on the per-message inter-node latency.
+    pub latency_factor: f64,
+    /// Finish-time multiplier contributed by the slowest rank
+    /// (`1.0` = no straggler).
+    pub straggler_factor: f64,
+}
+
+impl DegradedScenario {
+    /// No degradation — must reproduce the clean model exactly.
+    pub fn clean() -> Self {
+        DegradedScenario {
+            name: "clean",
+            loss_p: 0.0,
+            latency_factor: 1.0,
+            straggler_factor: 1.0,
+        }
+    }
+
+    /// Lossy commodity Ethernet: 1% frame loss.
+    pub fn lossy() -> Self {
+        DegradedScenario { name: "lossy-1pct", loss_p: 0.01, ..Self::clean() }
+    }
+
+    /// Congested/WAN path: 5% loss and 10× message latency.
+    pub fn wan() -> Self {
+        DegradedScenario {
+            name: "wan-5pct-10xlat",
+            loss_p: 0.05,
+            latency_factor: 10.0,
+            ..Self::clean()
+        }
+    }
+
+    /// One slow node: the step finishes at 1.5× the healthy pace.
+    pub fn straggler() -> Self {
+        DegradedScenario {
+            name: "straggler-1.5x",
+            straggler_factor: 1.5,
+            ..Self::clean()
+        }
+    }
+
+    /// The fig5/fig9 degraded sweep grid.
+    pub fn paper_sweep() -> [Self; 4] {
+        [Self::clean(), Self::lossy(), Self::wan(), Self::straggler()]
+    }
+
+    /// Delivered-volume inflation from retransmitting lost frames: a
+    /// frame lost with probability `p` is resent until it lands, so the
+    /// wire carries `1/(1−p)` copies in expectation.  Loss hits 1-bit
+    /// and fp32 frames alike — which is *why* the volume-ratio claim
+    /// survives degradation.
+    pub fn volume_inflation(&self) -> f64 {
+        1.0 / (1.0 - self.loss_p)
+    }
+}
+
+/// Apply a scenario to a network model:
+///
+/// * **bandwidth** — goodput shrinks by the loss fraction (retransmitted
+///   copies occupy the wire without delivering new bytes);
+/// * **latency** — the factor, times a loss-dependent round-trip term
+///   `1 + 2p/(1−p)`: each loss costs a NACK + replay exchange, which
+///   weighs relatively *heavier* on the small 1-bit frames than on bulk
+///   fp32 transfers — degradation narrows the latency-bound end of the
+///   speedup, and the sweep tests check the trend survives anyway.
+///
+/// The straggler factor is not folded in here (it scales finish time,
+/// not link parameters) — the `degraded_*_time` helpers apply it.
+pub fn degraded_network(
+    base: &NetworkModel,
+    s: &DegradedScenario,
+) -> NetworkModel {
+    let mut m = base.clone();
+    m.internode_bw *= 1.0 - s.loss_p;
+    m.internode_lat *=
+        s.latency_factor * (1.0 + 2.0 * s.loss_p / (1.0 - s.loss_p));
+    m.name = s.name;
+    m
+}
+
+/// [`compressed_allreduce_time`] under a degraded scenario (straggler
+/// pacing included).
+pub fn degraded_compressed_allreduce_time(
+    net: &NetworkModel,
+    s: &DegradedScenario,
+    n_gpus: usize,
+    elements: usize,
+) -> f64 {
+    compressed_allreduce_time(&degraded_network(net, s), n_gpus, elements)
+        * s.straggler_factor
+}
+
+/// [`fp16_allreduce_time`] under a degraded scenario (straggler pacing
+/// included).
+pub fn degraded_fp16_allreduce_time(
+    net: &NetworkModel,
+    s: &DegradedScenario,
+    n_gpus: usize,
+    elements: usize,
+) -> f64 {
+    fp16_allreduce_time(&degraded_network(net, s), n_gpus, elements)
+        * s.straggler_factor
+}
+
+/// Delivered gross wire bytes of one transported flat compressed step
+/// under loss: the fault-free closed form times the retransmission
+/// inflation.
+pub fn degraded_compressed_step_gross_total(
+    kind: crate::compress::CompressionKind,
+    n_ranks: usize,
+    elements: usize,
+    s: &DegradedScenario,
+) -> f64 {
+    compressed_step_gross_total(kind, n_ranks, elements) as f64
+        * s.volume_inflation()
+}
+
+/// Delivered gross wire bytes of one transported plain fp32 average
+/// step under loss.
+pub fn degraded_plain_step_gross_total(
+    n_ranks: usize,
+    elements: usize,
+    s: &DegradedScenario,
+) -> f64 {
+    plain_step_gross_total(n_ranks, elements) as f64 * s.volume_inflation()
+}
+
 // ---- run-level comm-volume model (1-bit Adam vs 0/1 Adam) ------------------
 //
 // Byte-exact mirrors of the engines' `CommStats` conventions, composed
@@ -766,5 +908,133 @@ mod tests {
             measured,
             zeroone_adam_run_gross_total(kind, n, d, steps, 1)
         );
+    }
+
+    // ---- degraded-network fig5/fig9 sweeps at paper scale ------------------
+
+    #[test]
+    fn clean_scenario_is_the_identity_transform() {
+        let net = NetworkModel::ethernet();
+        let s = DegradedScenario::clean();
+        assert_eq!(degraded_network(&net, &s).internode_bw, net.internode_bw);
+        assert_eq!(
+            degraded_network(&net, &s).internode_lat,
+            net.internode_lat
+        );
+        assert_eq!(s.volume_inflation(), 1.0);
+        for n in [64usize, 128, 256] {
+            assert_eq!(
+                degraded_compressed_allreduce_time(&net, &s, n, BERT_LARGE),
+                compressed_allreduce_time(&net, n, BERT_LARGE),
+            );
+            assert_eq!(
+                degraded_fp16_allreduce_time(&net, &s, n, BERT_LARGE),
+                fp16_allreduce_time(&net, n, BERT_LARGE),
+            );
+        }
+    }
+
+    #[test]
+    fn degraded_sweep_preserves_the_5x_volume_claim_at_paper_scale() {
+        // Fig. 5/9 scale (64–256 GPUs): under every degraded scenario the
+        // *delivered* 1-bit wire volume — retransmission inflation
+        // included — stays at least 5× below the fp32 volume under the
+        // same degradation, and even below the *fault-free* fp32 volume:
+        // the recovery overhead does not eat the paper's headline claim.
+        use crate::compress::CompressionKind;
+        let d = 1_000_000usize;
+        for n in [64usize, 128, 256] {
+            for s in DegradedScenario::paper_sweep() {
+                let bit = degraded_compressed_step_gross_total(
+                    CompressionKind::OneBit,
+                    n,
+                    d,
+                    &s,
+                );
+                let fp32 = degraded_plain_step_gross_total(n, d, &s);
+                assert!(
+                    fp32 / bit >= 5.0,
+                    "n={n} scenario={}: ratio {}",
+                    s.name,
+                    fp32 / bit
+                );
+                let fp32_clean = plain_step_gross_total(n, d) as f64;
+                assert!(
+                    fp32_clean / bit >= 5.0,
+                    "n={n} scenario={}: clean-fp32 ratio {}",
+                    s.name,
+                    fp32_clean / bit
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degraded_throughput_trends_survive_the_sweep() {
+        // The throughput story holds under degradation at every paper
+        // scale: 1-bit stays faster than fp16 allreduce on degraded
+        // Ethernet, and no scenario is faster than the clean network.
+        let net = NetworkModel::ethernet();
+        for n in [64usize, 128, 256] {
+            let clean_comp =
+                compressed_allreduce_time(&net, n, BERT_LARGE);
+            for s in DegradedScenario::paper_sweep() {
+                let comp =
+                    degraded_compressed_allreduce_time(&net, &s, n, BERT_LARGE);
+                let full =
+                    degraded_fp16_allreduce_time(&net, &s, n, BERT_LARGE);
+                assert!(
+                    comp < full,
+                    "n={n} scenario={}: compressed {comp} vs fp16 {full}",
+                    s.name
+                );
+                assert!(
+                    comp >= clean_comp,
+                    "n={n} scenario={}: degraded faster than clean",
+                    s.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degradation_is_monotone_in_loss_and_straggler_pace() {
+        let net = NetworkModel::ethernet();
+        let n = 128usize;
+        // time grows with loss probability
+        let mut prev = 0.0f64;
+        for loss in [0.0, 0.01, 0.05, 0.10] {
+            let s = DegradedScenario {
+                name: "loss-ramp",
+                loss_p: loss,
+                ..DegradedScenario::clean()
+            };
+            let t =
+                degraded_compressed_allreduce_time(&net, &s, n, BERT_LARGE);
+            assert!(t > prev, "loss={loss}: {t} !> {prev}");
+            prev = t;
+        }
+        // a straggler scales finish time exactly
+        let s = DegradedScenario::straggler();
+        assert_eq!(
+            degraded_compressed_allreduce_time(&net, &s, n, BERT_LARGE),
+            compressed_allreduce_time(&net, n, BERT_LARGE)
+                * s.straggler_factor,
+        );
+        // lossy links inflate delivered volume, symmetrically
+        let lossy = DegradedScenario::wan();
+        assert!(lossy.volume_inflation() > 1.0);
+        let bit = degraded_compressed_step_gross_total(
+            crate::compress::CompressionKind::OneBit,
+            n,
+            1_000_000,
+            &lossy,
+        );
+        let clean_bit = compressed_step_gross_total(
+            crate::compress::CompressionKind::OneBit,
+            n,
+            1_000_000,
+        ) as f64;
+        assert!((bit / clean_bit - lossy.volume_inflation()).abs() < 1e-12);
     }
 }

@@ -4,15 +4,24 @@
 //!
 //! ```text
 //! magic  b"OBTW"           4 B
-//! version u8               1 B   (VERSION = 1)
-//! kind    u8               1 B   payload kind (fp32 / f64 / 1-bit / n-bit)
+//! version u8               1 B   (VERSION = 2)
+//! kind    u8               1 B   payload kind (fp32 / f64 / 1-bit / n-bit / control)
 //! phase   u8               1 B   collective phase tag (protocol check)
 //! rank    u16 LE           2 B   sender rank
 //! step    u32 LE           4 B   collective step counter (protocol check)
+//! seq     u32 LE           4 B   per-link sequence number (recovery layer)
 //! payload_len u32 LE       4 B   ← the length prefix
 //! payload  [u8]            payload_len B
 //! checksum u64 LE          8 B   fletcher64 over header + payload
 //! ```
+//!
+//! Version 2 adds the `seq` field: [`encode_frame`] always stamps it with
+//! zero, and the reliable link layer ([`crate::transport::chaos`])
+//! re-stamps a per-link counter via [`stamp_seq`] just before the bytes
+//! hit the wire — so collective code builds frames exactly as before, and
+//! one encoded frame can be broadcast to many peers with per-link
+//! sequencing.  Control frames ([`PayloadKind::Control`] with
+//! [`WirePhase::Nack`]/[`WirePhase::Fin`]) carry the retransmit protocol.
 //!
 //! [`decode_frame`] returns a zero-copy [`Frame`] whose `payload` borrows
 //! the input buffer; every malformed input — truncated buffer, bad magic,
@@ -38,9 +47,13 @@ use crate::compress::CompressionKind;
 /// Frame magic: "1-**B**it adam **O**ver **T**he **W**ire".
 pub const MAGIC: [u8; 4] = *b"OBTW";
 /// Current protocol version.
-pub const VERSION: u8 = 1;
+pub const VERSION: u8 = 2;
 /// Fixed header size (through the payload-length prefix).
-pub const HEADER_LEN: usize = 17;
+pub const HEADER_LEN: usize = 21;
+/// Byte offset of the per-link sequence number inside the header.
+pub const SEQ_OFFSET: usize = 13;
+/// Byte offset of the payload-length prefix inside the header.
+pub const LEN_OFFSET: usize = 17;
 /// Trailing checksum size.
 pub const TRAILER_LEN: usize = 8;
 /// Per-frame overhead on the wire beyond the payload itself — the
@@ -62,6 +75,9 @@ pub enum PayloadKind {
     OneBit,
     /// Packed n-bit codes: u32 count, f32 max_abs, `bits`-wide codes.
     NBit(u8),
+    /// Recovery-layer control traffic (NACK / FIN) — never carries tensor
+    /// data, never enters the collective payload ledgers.
+    Control,
 }
 
 impl PayloadKind {
@@ -71,6 +87,7 @@ impl PayloadKind {
             PayloadKind::F64Plain => 0x02,
             PayloadKind::OneBit => 0x01,
             PayloadKind::NBit(b) => 0x20 | b,
+            PayloadKind::Control => 0x03,
         }
     }
 
@@ -79,6 +96,7 @@ impl PayloadKind {
             0x00 => Ok(PayloadKind::F32Plain),
             0x02 => Ok(PayloadKind::F64Plain),
             0x01 => Ok(PayloadKind::OneBit),
+            0x03 => Ok(PayloadKind::Control),
             0x21..=0x30 => Ok(PayloadKind::NBit(b & 0x1F)),
             other => Err(FrameError::BadKind(other)),
         }
@@ -109,6 +127,12 @@ pub enum WirePhase {
     Reduce,
     /// Hierarchy stage 3: leader → member gathered tensor.
     Broadcast,
+    /// Recovery layer: receiver requests retransmission of every data
+    /// frame from the payload's u32 sequence number onward.
+    Nack,
+    /// Recovery layer: sender finished its step on this link; the payload
+    /// carries the last data sequence number it sent (u32).
+    Fin,
 }
 
 impl WirePhase {
@@ -119,6 +143,8 @@ impl WirePhase {
             WirePhase::AllGather => 2,
             WirePhase::Reduce => 3,
             WirePhase::Broadcast => 4,
+            WirePhase::Nack => 5,
+            WirePhase::Fin => 6,
         }
     }
 
@@ -129,6 +155,8 @@ impl WirePhase {
             2 => Ok(WirePhase::AllGather),
             3 => Ok(WirePhase::Reduce),
             4 => Ok(WirePhase::Broadcast),
+            5 => Ok(WirePhase::Nack),
+            6 => Ok(WirePhase::Fin),
             other => Err(FrameError::BadPhase(other)),
         }
     }
@@ -206,6 +234,8 @@ pub struct Frame<'a> {
     pub phase: WirePhase,
     pub rank: u16,
     pub step: u32,
+    /// Per-link sequence number (0 until the link layer stamps it).
+    pub seq: u32,
     pub payload: &'a [u8],
 }
 
@@ -230,11 +260,36 @@ pub fn encode_frame(
     buf.push(phase.to_byte());
     buf.extend_from_slice(&rank.to_le_bytes());
     buf.extend_from_slice(&step.to_le_bytes());
+    buf.extend_from_slice(&0u32.to_le_bytes()); // seq — stamped by the link
     buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     buf.extend_from_slice(payload);
     let sum = fletcher64(&buf);
     buf.extend_from_slice(&sum.to_le_bytes());
     buf
+}
+
+/// Re-stamp the per-link sequence number of an already-encoded frame and
+/// recompute the fletcher64 trailer.  The link layer calls this on its
+/// private copy just before the bytes hit the wire, so one encoded frame
+/// can be fanned out to many peers with independent per-link sequencing.
+pub fn stamp_seq(bytes: &mut [u8], seq: u32) {
+    assert!(bytes.len() >= HEADER_LEN + TRAILER_LEN, "not a whole frame");
+    bytes[SEQ_OFFSET..SEQ_OFFSET + 4].copy_from_slice(&seq.to_le_bytes());
+    let body_len = bytes.len() - TRAILER_LEN;
+    let sum = fletcher64(&bytes[..body_len]).to_le_bytes();
+    bytes[body_len..].copy_from_slice(&sum);
+}
+
+/// Peek the sequence number of an encoded frame without a full decode.
+/// Only meaningful once the frame has passed checksum validation — on a
+/// corrupt buffer the returned value is untrustworthy.
+pub fn frame_seq(bytes: &[u8]) -> Option<u32> {
+    if bytes.len() < HEADER_LEN {
+        return None;
+    }
+    Some(u32::from_le_bytes(
+        bytes[SEQ_OFFSET..SEQ_OFFSET + 4].try_into().unwrap(),
+    ))
 }
 
 /// Decode and fully validate one frame.  The returned payload is a
@@ -254,8 +309,9 @@ pub fn decode_frame(bytes: &[u8]) -> Result<Frame<'_>, FrameError> {
     if bytes[4] != VERSION {
         return Err(FrameError::BadVersion(bytes[4]));
     }
-    let payload_len =
-        u32::from_le_bytes(bytes[13..17].try_into().unwrap()) as usize;
+    let payload_len = u32::from_le_bytes(
+        bytes[LEN_OFFSET..LEN_OFFSET + 4].try_into().unwrap(),
+    ) as usize;
     if payload_len > MAX_PAYLOAD {
         return Err(FrameError::OversizedPayload(payload_len));
     }
@@ -275,7 +331,10 @@ pub fn decode_frame(bytes: &[u8]) -> Result<Frame<'_>, FrameError> {
     let phase = WirePhase::from_byte(bytes[6])?;
     let rank = u16::from_le_bytes(bytes[7..9].try_into().unwrap());
     let step = u32::from_le_bytes(bytes[9..13].try_into().unwrap());
-    Ok(Frame { kind, phase, rank, step, payload: &body[HEADER_LEN..] })
+    let seq = u32::from_le_bytes(
+        bytes[SEQ_OFFSET..SEQ_OFFSET + 4].try_into().unwrap(),
+    );
+    Ok(Frame { kind, phase, rank, step, seq, payload: &body[HEADER_LEN..] })
 }
 
 /// Read one whole frame off a byte stream (the TCP receive loop), using
@@ -314,8 +373,9 @@ pub fn read_frame(
             FrameError::BadVersion(head[4]).to_string(),
         ));
     }
-    let payload_len =
-        u32::from_le_bytes(head[13..17].try_into().unwrap()) as usize;
+    let payload_len = u32::from_le_bytes(
+        head[LEN_OFFSET..LEN_OFFSET + 4].try_into().unwrap(),
+    ) as usize;
     if payload_len > MAX_PAYLOAD {
         return Err(Error::new(
             ErrorKind::InvalidData,
@@ -604,7 +664,8 @@ mod tests {
     fn oversized_length_prefix_is_rejected_without_allocating() {
         let mut bytes = sample_frame();
         // declare a ludicrous payload length
-        bytes[13..17].copy_from_slice(&(u32::MAX).to_le_bytes());
+        bytes[LEN_OFFSET..LEN_OFFSET + 4]
+            .copy_from_slice(&(u32::MAX).to_le_bytes());
         assert!(matches!(
             decode_frame(&bytes),
             Err(FrameError::OversizedPayload(_))
@@ -833,6 +894,7 @@ mod tests {
             PayloadKind::F32Plain,
             PayloadKind::F64Plain,
             PayloadKind::OneBit,
+            PayloadKind::Control,
             PayloadKind::NBit(1),
             PayloadKind::NBit(16),
         ];
@@ -841,12 +903,53 @@ mod tests {
         }
         assert!(PayloadKind::from_byte(0xFF).is_err());
         assert!(PayloadKind::from_byte(0x31).is_err());
-        for p in 0u8..5 {
+        for p in 0u8..7 {
             assert_eq!(
                 WirePhase::from_byte(p).unwrap().to_byte(),
                 p
             );
         }
         assert!(WirePhase::from_byte(9).is_err());
+    }
+
+    #[test]
+    fn encode_stamps_seq_zero_and_stamp_seq_restamps() {
+        let bytes = sample_frame();
+        assert_eq!(frame_seq(&bytes), Some(0));
+        assert_eq!(decode_frame(&bytes).unwrap().seq, 0);
+        let mut stamped = bytes.clone();
+        stamp_seq(&mut stamped, 0xDEAD_BEEF);
+        // still a fully valid frame after the re-stamp…
+        let f = decode_frame(&stamped).unwrap();
+        assert_eq!(f.seq, 0xDEAD_BEEF);
+        assert_eq!(frame_seq(&stamped), Some(0xDEAD_BEEF));
+        // …with everything except the seq + trailer untouched
+        assert_eq!(f.kind, PayloadKind::F32Plain);
+        assert_eq!(f.rank, 3);
+        assert_eq!(f.step, 7);
+        assert_eq!(f.payload, decode_frame(&bytes).unwrap().payload);
+        // and stamping back to 0 restores the original bytes exactly
+        stamp_seq(&mut stamped, 0);
+        assert_eq!(stamped, bytes);
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        for phase in [WirePhase::Nack, WirePhase::Fin] {
+            let payload = 42u32.to_le_bytes();
+            let bytes =
+                encode_frame(PayloadKind::Control, phase, 2, 11, &payload);
+            let f = decode_frame(&bytes).unwrap();
+            assert_eq!(f.kind, PayloadKind::Control);
+            assert_eq!(f.phase, phase);
+            assert_eq!(f.rank, 2);
+            assert_eq!(f.step, 11);
+            assert_eq!(f.payload, &payload);
+        }
+    }
+
+    #[test]
+    fn frame_seq_peek_rejects_short_buffers() {
+        assert_eq!(frame_seq(&[0u8; HEADER_LEN - 1]), None);
     }
 }

@@ -22,7 +22,14 @@
 //! in-process engines (property-tested in `runner`); `rust/tests` and the
 //! `comm_transport` bench compare backends against each other and against
 //! the [`crate::comm::CompressedAllreduce`] reference.
+//!
+//! The [`chaos`] module layers deterministic fault injection
+//! ([`chaos::ChaosTransport`]) and NACK/retransmit recovery
+//! ([`chaos::ReliableTransport`]) on top of either backend, so the same
+//! collectives survive dropped, corrupted, reordered, delayed, and
+//! bandwidth-capped links bit-identically.
 
+pub mod chaos;
 pub mod frame;
 pub mod runner;
 
@@ -33,6 +40,8 @@ use std::time::Duration;
 
 use crate::util::error::{Error, Result};
 
+pub use chaos::{ChaosScenario, ChaosTransport, RecoveryStats,
+    ReliableTransport};
 pub use runner::{TransportCollective, TransportStats};
 
 /// Default upper bound on one blocking [`Transport::recv`].  Collective
@@ -48,6 +57,83 @@ pub use runner::{TransportCollective, TransportStats};
 /// to unwind quickly can shorten it (see
 /// `dead_peer_recv_times_out_within_the_configured_bound` below).
 pub const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Default upper bound on one *attempt* inside the recovery layer: how
+/// long [`chaos::ReliableTransport`] waits for a frame before probing the
+/// sender with a NACK and backing off.  Deliberately much shorter than
+/// [`RECV_TIMEOUT`], which stays the **total** dead-peer budget — the
+/// split keeps retransmit/backoff from silently multiplying dead-peer
+/// detection time (`attempt × retries` can never exceed the budget).
+pub const ATTEMPT_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Typed transport failure carrying rank/peer/step context, so retry
+/// policy and tests match on variants instead of message substrings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// No channel/connection exists between this endpoint and `peer`.
+    NoChannel { rank: usize, peer: usize },
+    /// The peer's endpoint dropped (channel disconnected / socket
+    /// closed) — a permanent failure, never retried.
+    PeerClosed { rank: usize, peer: usize },
+    /// No frame arrived from `peer` within the configured receive
+    /// timeout — the peer is wedged or dead.
+    Timeout { rank: usize, peer: usize, waited: Duration },
+    /// The recovery layer exhausted its retry budget: `retries` NACK
+    /// probes over `waited` never produced data frame `expected_seq` of
+    /// `step` — the enriched dead-peer error of the reliable path.
+    RecoveryExhausted {
+        rank: usize,
+        peer: usize,
+        step: u32,
+        expected_seq: u32,
+        retries: u32,
+        waited: Duration,
+    },
+    /// A NACK asked for a frame the sender's retransmit history no
+    /// longer holds (the peer lags further than the history depth).
+    RetransmitUnavailable { rank: usize, peer: usize, seq: u32 },
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::NoChannel { rank, peer } => {
+                write!(f, "rank {rank}: no channel to rank {peer}")
+            }
+            TransportError::PeerClosed { rank, peer } => {
+                write!(f, "rank {rank}: rank {peer} hung up (closed)")
+            }
+            TransportError::Timeout { rank, peer, waited } => write!(
+                f,
+                "rank {rank}: timed out after {waited:?} waiting for a \
+                 frame from rank {peer} (peer likely failed mid-collective)"
+            ),
+            TransportError::RecoveryExhausted {
+                rank,
+                peer,
+                step,
+                expected_seq,
+                retries,
+                waited,
+            } => write!(
+                f,
+                "rank {rank}: timed out after {waited:?} and {retries} \
+                 retransmit requests waiting for frame seq {expected_seq} \
+                 of step {step} from rank {peer} (retry budget exhausted \
+                 — peer dead or link persistently failing)"
+            ),
+            TransportError::RetransmitUnavailable { rank, peer, seq } => {
+                write!(
+                    f,
+                    "rank {rank}: rank {peer} requested retransmit of \
+                     frame seq {seq}, which is no longer in the history"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
 
 /// Which wire backend a mesh runs on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -70,10 +156,19 @@ pub struct TcpOptions {
     pub nodelay: bool,
     /// Userspace buffer size for the per-connection writer and reader.
     pub buffer_bytes: usize,
-    /// Upper bound on one blocking [`Transport::recv`] before the
-    /// endpoint reports its peer dead.  Default [`RECV_TIMEOUT`] (60 s
-    /// — unchanged from when it was a hardcoded const).
+    /// **Total** budget one blocking [`Transport::recv`] may consume
+    /// before the endpoint reports its peer dead — across the plain
+    /// backends this is the single receive wait; under
+    /// [`chaos::ReliableTransport`] it caps the *sum* of all retry
+    /// attempts.  Default [`RECV_TIMEOUT`] (60 s — unchanged from when
+    /// it was a hardcoded const).
     pub recv_timeout: Duration,
+    /// Per-attempt receive wait of the recovery layer: how long one
+    /// receive attempt blocks before a NACK probe and exponential
+    /// backoff.  Kept separate from `recv_timeout` so backoff cannot
+    /// multiply the dead-peer detection time past the total budget.
+    /// Default [`ATTEMPT_TIMEOUT`].  Ignored by the plain backends.
+    pub attempt_timeout: Duration,
 }
 
 impl Default for TcpOptions {
@@ -82,6 +177,7 @@ impl Default for TcpOptions {
             nodelay: true,
             buffer_bytes: 256 * 1024,
             recv_timeout: RECV_TIMEOUT,
+            attempt_timeout: ATTEMPT_TIMEOUT,
         }
     }
 }
@@ -102,8 +198,70 @@ pub trait Transport: Send {
     /// Receive the next frame from `from` (blocking).
     fn recv(&mut self, from: usize) -> Result<Vec<u8>>;
 
+    /// Receive the next frame from `from`, waiting at most `timeout`.
+    /// `Ok(None)` means the wait elapsed with no frame (the peer may
+    /// still be healthy); hard failures (no channel, peer closed) are
+    /// errors.  The recovery layer uses this to service several links
+    /// round-robin without committing to one blocking wait.
+    fn recv_deadline(
+        &mut self,
+        from: usize,
+        timeout: Duration,
+    ) -> Result<Option<Vec<u8>>>;
+
     /// Which backend this endpoint runs on.
     fn backend(&self) -> TransportBackend;
+
+    /// End-of-step hook.  The plain backends do nothing; the recovery
+    /// layer exchanges FIN markers and services outstanding retransmit
+    /// requests so no peer is left waiting on a frame this endpoint
+    /// dropped on the wire (see [`chaos::ReliableTransport`]).
+    fn drain_step(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Recovery-layer counters, if this endpoint has one.
+    fn recovery_stats(&self) -> Option<RecoveryStats> {
+        None
+    }
+}
+
+impl Transport for Box<dyn Transport> {
+    fn rank(&self) -> usize {
+        (**self).rank()
+    }
+
+    fn n_ranks(&self) -> usize {
+        (**self).n_ranks()
+    }
+
+    fn send(&mut self, to: usize, bytes: &[u8]) -> Result<()> {
+        (**self).send(to, bytes)
+    }
+
+    fn recv(&mut self, from: usize) -> Result<Vec<u8>> {
+        (**self).recv(from)
+    }
+
+    fn recv_deadline(
+        &mut self,
+        from: usize,
+        timeout: Duration,
+    ) -> Result<Option<Vec<u8>>> {
+        (**self).recv_deadline(from, timeout)
+    }
+
+    fn backend(&self) -> TransportBackend {
+        (**self).backend()
+    }
+
+    fn drain_step(&mut self) -> Result<()> {
+        (**self).drain_step()
+    }
+
+    fn recovery_stats(&self) -> Option<RecoveryStats> {
+        (**self).recovery_stats()
+    }
 }
 
 /// Build a full mesh of `n` endpoints on the chosen backend.
@@ -191,37 +349,45 @@ impl Transport for InMemoryTransport {
     }
 
     fn send(&mut self, to: usize, bytes: &[u8]) -> Result<()> {
-        let tx = self
-            .tx
-            .get(to)
-            .and_then(|t| t.as_ref())
-            .ok_or_else(|| Error::msg(format!(
-                "rank {}: no channel to rank {to}",
-                self.rank
-            )))?;
+        let rank = self.rank;
+        let tx = self.tx.get(to).and_then(|t| t.as_ref()).ok_or(
+            TransportError::NoChannel { rank, peer: to },
+        )?;
         tx.send(bytes.to_vec()).map_err(|_| {
-            Error::msg(format!("rank {to} hung up (channel closed)"))
+            Error::Transport(TransportError::PeerClosed { rank, peer: to })
         })
     }
 
     fn recv(&mut self, from: usize) -> Result<Vec<u8>> {
-        let rx = self
-            .rx
-            .get(from)
-            .and_then(|r| r.as_ref())
-            .ok_or_else(|| Error::msg(format!(
-                "rank {}: no channel from rank {from}",
-                self.rank
-            )))?;
-        match rx.recv_timeout(self.timeout) {
-            Ok(bytes) => Ok(bytes),
-            Err(mpsc::RecvTimeoutError::Timeout) => Err(Error::msg(format!(
-                "timed out waiting for a frame from rank {from} \
-                 (peer likely failed mid-collective)"
-            ))),
-            Err(mpsc::RecvTimeoutError::Disconnected) => Err(Error::msg(
-                format!("rank {from} hung up (channel closed)"),
-            )),
+        let waited = self.timeout;
+        match self.recv_deadline(from, waited)? {
+            Some(bytes) => Ok(bytes),
+            None => Err(Error::Transport(TransportError::Timeout {
+                rank: self.rank,
+                peer: from,
+                waited,
+            })),
+        }
+    }
+
+    fn recv_deadline(
+        &mut self,
+        from: usize,
+        timeout: Duration,
+    ) -> Result<Option<Vec<u8>>> {
+        let rank = self.rank;
+        let rx = self.rx.get(from).and_then(|r| r.as_ref()).ok_or(
+            TransportError::NoChannel { rank, peer: from },
+        )?;
+        match rx.recv_timeout(timeout) {
+            Ok(bytes) => Ok(Some(bytes)),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Transport(TransportError::PeerClosed {
+                    rank,
+                    peer: from,
+                }))
+            }
         }
     }
 
@@ -340,14 +506,10 @@ impl Transport for TcpTransport {
     }
 
     fn send(&mut self, to: usize, bytes: &[u8]) -> Result<()> {
-        let w = self
-            .writers
-            .get_mut(to)
-            .and_then(|w| w.as_mut())
-            .ok_or_else(|| Error::msg(format!(
-                "rank {}: no connection to rank {to}",
-                self.rank
-            )))?;
+        let rank = self.rank;
+        let w = self.writers.get_mut(to).and_then(|w| w.as_mut()).ok_or(
+            TransportError::NoChannel { rank, peer: to },
+        )?;
         w.write_all(bytes)?;
         // One frame per send and the peer is waiting on it: flush now.
         w.flush()?;
@@ -355,24 +517,36 @@ impl Transport for TcpTransport {
     }
 
     fn recv(&mut self, from: usize) -> Result<Vec<u8>> {
-        let rx = self
-            .rx
-            .get(from)
-            .and_then(|r| r.as_ref())
-            .ok_or_else(|| Error::msg(format!(
-                "rank {}: no connection from rank {from}",
-                self.rank
-            )))?;
-        match rx.recv_timeout(self.timeout) {
-            Ok(Ok(bytes)) => Ok(bytes),
+        let waited = self.timeout;
+        match self.recv_deadline(from, waited)? {
+            Some(bytes) => Ok(bytes),
+            None => Err(Error::Transport(TransportError::Timeout {
+                rank: self.rank,
+                peer: from,
+                waited,
+            })),
+        }
+    }
+
+    fn recv_deadline(
+        &mut self,
+        from: usize,
+        timeout: Duration,
+    ) -> Result<Option<Vec<u8>>> {
+        let rank = self.rank;
+        let rx = self.rx.get(from).and_then(|r| r.as_ref()).ok_or(
+            TransportError::NoChannel { rank, peer: from },
+        )?;
+        match rx.recv_timeout(timeout) {
+            Ok(Ok(bytes)) => Ok(Some(bytes)),
             Ok(Err(e)) => Err(Error::Io(e)),
-            Err(mpsc::RecvTimeoutError::Timeout) => Err(Error::msg(format!(
-                "timed out waiting for a frame from rank {from} \
-                 (peer likely failed mid-collective)"
-            ))),
-            Err(mpsc::RecvTimeoutError::Disconnected) => Err(Error::msg(
-                format!("connection from rank {from} closed"),
-            )),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Transport(TransportError::PeerClosed {
+                    rank,
+                    peer: from,
+                }))
+            }
         }
     }
 
@@ -526,6 +700,63 @@ mod tests {
         // The timeout became configurable; the default must not move.
         assert_eq!(TcpOptions::default().recv_timeout, RECV_TIMEOUT);
         assert_eq!(RECV_TIMEOUT, Duration::from_secs(60));
+    }
+
+    #[test]
+    fn attempt_timeout_is_split_from_the_total_budget() {
+        // The per-attempt wait is a separate knob: backoff retries can
+        // never stretch dead-peer detection past the total budget.
+        let opts = TcpOptions::default();
+        assert_eq!(opts.attempt_timeout, ATTEMPT_TIMEOUT);
+        assert!(opts.attempt_timeout < opts.recv_timeout);
+    }
+
+    #[test]
+    fn transport_failures_are_typed_variants() {
+        let mut eps = in_memory_mesh_with(2, Duration::from_millis(50));
+        // no channel to an unknown rank (and no self-channel)
+        for bad in [5usize, 0] {
+            match eps[0].send(bad, &[1, 2, 3]) {
+                Err(Error::Transport(TransportError::NoChannel {
+                    rank: 0,
+                    peer,
+                })) => assert_eq!(peer, bad),
+                other => panic!("expected NoChannel, got {other:?}"),
+            }
+        }
+        // silent peer: typed Timeout with rank/peer/waited context
+        match eps[0].recv(1) {
+            Err(Error::Transport(TransportError::Timeout {
+                rank: 0,
+                peer: 1,
+                waited,
+            })) => assert_eq!(waited, Duration::from_millis(50)),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        // dropped peer: typed PeerClosed
+        let ep1 = eps.pop().unwrap();
+        drop(ep1);
+        match eps[0].recv(1) {
+            Err(Error::Transport(TransportError::PeerClosed {
+                rank: 0,
+                peer: 1,
+            })) => {}
+            other => panic!("expected PeerClosed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn recv_deadline_returns_none_on_a_quiet_link() {
+        let mut eps = in_memory_mesh(2);
+        let start = std::time::Instant::now();
+        let got = eps[0].recv_deadline(1, Duration::from_millis(20)).unwrap();
+        assert!(got.is_none());
+        assert!(start.elapsed() < Duration::from_secs(5));
+        // a queued frame comes back immediately
+        let f = ping(PayloadKind::F32Plain, 1, 0, &[1.0]);
+        eps[1].send(0, &f).unwrap();
+        let got = eps[0].recv_deadline(1, Duration::from_secs(5)).unwrap();
+        assert_eq!(got.unwrap(), f);
     }
 
     #[test]

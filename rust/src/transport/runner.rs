@@ -30,7 +30,7 @@
 //! The returned [`CommStats`] ledger the *payload* bytes per GPU with the
 //! same per-phase convention every in-process engine uses (so the
 //! cross-engine equality tests extend to the wire); the full measured
-//! picture — gross bytes including the 25-byte frame overhead, per-phase,
+//! picture — gross bytes including the 29-byte frame overhead, per-phase,
 //! plus frame counts — is in [`TransportStats`], which
 //! [`crate::netsim::collectives::calibrate`] checks against the analytic
 //! volume model.
@@ -63,7 +63,10 @@ use super::frame::{
     self, decode_frame, encode_frame, Frame, FrameError, PayloadKind,
     WirePhase,
 };
-use super::{build_mesh, TcpOptions, Transport, TransportBackend};
+use super::{
+    build_mesh, ChaosScenario, ChaosTransport, RecoveryStats,
+    ReliableTransport, TcpOptions, Transport, TransportBackend,
+};
 
 /// Measured wire traffic of one transported collective step.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -136,6 +139,8 @@ pub struct TransportCollective {
     ranks: Vec<RankSlot>,
     step: u32,
     last: TransportStats,
+    /// Cumulative chaos/recovery ledger (all ranks), refreshed each step.
+    last_recovery: RecoveryStats,
 }
 
 // ---- kind-dispatched compress / encode / decode ----------------------------
@@ -601,6 +606,45 @@ impl TransportCollective {
         group_size: usize,
         tcp: &TcpOptions,
     ) -> Result<Self> {
+        Self::build(backend, n_workers, len, kind, group_size, tcp, None)
+    }
+
+    /// [`Self::with_options`] on an adversarial wire: every endpoint is
+    /// wrapped as collective → [`ReliableTransport`] →
+    /// [`ChaosTransport`] → backend, so the scenario's faults (drop,
+    /// corruption, reordering, stragglers…) are injected under the
+    /// sequence-numbered NACK/retransmit layer and repaired below the
+    /// collective — steps stay bit-identical to a fault-free mesh, and
+    /// the repair work is ledgered in [`Self::recovery_stats`].
+    pub fn with_chaos(
+        backend: TransportBackend,
+        n_workers: usize,
+        len: usize,
+        kind: CompressionKind,
+        group_size: usize,
+        tcp: &TcpOptions,
+        scenario: &ChaosScenario,
+    ) -> Result<Self> {
+        Self::build(
+            backend,
+            n_workers,
+            len,
+            kind,
+            group_size,
+            tcp,
+            Some(scenario),
+        )
+    }
+
+    fn build(
+        backend: TransportBackend,
+        n_workers: usize,
+        len: usize,
+        kind: CompressionKind,
+        group_size: usize,
+        tcp: &TcpOptions,
+        chaos: Option<&ChaosScenario>,
+    ) -> Result<Self> {
         assert!(n_workers > 0);
         let group = group_size.clamp(1, n_workers);
         let l = n_workers.div_ceil(group);
@@ -610,6 +654,18 @@ impl TransportCollective {
         let flat_layout = ChunkLayout::new(len, n_workers);
         let lead_layout = ChunkLayout::new(len, l);
         let mesh = build_mesh(backend, n_workers, tcp)?;
+        let mesh: Vec<Box<dyn Transport>> = match chaos {
+            None => mesh,
+            Some(sc) => mesh
+                .into_iter()
+                .map(|ep| {
+                    Box::new(ReliableTransport::new(
+                        ChaosTransport::new(ep, sc.clone()),
+                        tcp,
+                    )) as Box<dyn Transport>
+                })
+                .collect(),
+        };
         let ranks: Vec<RankSlot> = mesh
             .into_iter()
             .enumerate()
@@ -646,6 +702,7 @@ impl TransportCollective {
             ranks,
             step: 0,
             last: TransportStats::default(),
+            last_recovery: RecoveryStats::default(),
         })
     }
 
@@ -682,6 +739,15 @@ impl TransportCollective {
     /// Measured traffic of the last step (gross bytes + frame counts).
     pub fn last_stats(&self) -> TransportStats {
         self.last
+    }
+
+    /// Cumulative chaos/recovery ledger summed over all ranks (all zeros
+    /// on an unwrapped mesh): injected faults, NACK/retransmit repair
+    /// work, and control traffic.  Counted *below* the collective, so
+    /// [`Self::last_stats`] and the returned [`CommStats`] stay invariant
+    /// under chaos.
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        self.last_recovery
     }
 
     /// Leader `k`'s carried worker-side error (the flat path's worker
@@ -836,8 +902,15 @@ impl TransportCollective {
                             &mut slot.stats,
                         )
                     };
+                    // End-of-step barrier: exchange FIN markers so a
+                    // recovery layer can repair trailing losses before
+                    // anyone re-enters the mesh (no-op on plain meshes).
+                    let res = res.and_then(|()| slot.ep.drain_step());
                     res.unwrap_or_else(|e| {
-                        panic!("rank {rank}: transport collective failed: {e}")
+                        panic!(
+                            "rank {rank}: transport collective failed at \
+                             step {step}: {e}"
+                        )
                     });
                 });
             }
@@ -871,7 +944,7 @@ impl TransportCollective {
                 let input = &inputs[rank];
                 scope.spawn(move || {
                     slot.stats = RankStats::default();
-                    plain_average_rank(
+                    let res = plain_average_rank(
                         step,
                         n,
                         rank,
@@ -881,8 +954,12 @@ impl TransportCollective {
                         &mut slot.out,
                         &mut slot.stats,
                     )
-                    .unwrap_or_else(|e| {
-                        panic!("rank {rank}: transported average failed: {e}")
+                    .and_then(|()| slot.ep.drain_step());
+                    res.unwrap_or_else(|e| {
+                        panic!(
+                            "rank {rank}: transported average failed at \
+                             step {step}: {e}"
+                        )
                     });
                 });
             }
@@ -913,7 +990,11 @@ impl TransportCollective {
         let mut ts = TransportStats::default();
         let mut a2a = 0usize;
         let mut ag = 0usize;
+        let mut rec = RecoveryStats::default();
         for slot in &self.ranks {
+            if let Some(r) = slot.ep.recovery_stats() {
+                rec.merge(&r);
+            }
             ts.gross_alltoall_bytes += slot.stats.gross_a2a;
             ts.gross_allgather_bytes += slot.stats.gross_ag;
             ts.gross_intra_bytes += slot.stats.gross_intra;
@@ -935,6 +1016,7 @@ impl TransportCollective {
         };
         ts.comm = comm;
         self.last = ts;
+        self.last_recovery = rec;
         output.copy_from_slice(&self.ranks[0].out);
         comm
     }
