@@ -10,7 +10,8 @@ use std::path::Path;
 use crate::util::error::{Error, Result};
 
 pub use presets::{
-    SchedulePreset, TopologyPreset, TABLE2_PRESETS, TOPOLOGY_PRESETS,
+    ElasticPreset, SchedulePreset, TopologyPreset, ELASTIC_PRESETS,
+    TABLE2_PRESETS, TOPOLOGY_PRESETS,
 };
 
 /// A parsed `key = value` config file (`#` comments, blank lines ok).

@@ -318,9 +318,113 @@ impl ChaosPreset {
     }
 }
 
+/// One elastic-runner acceptance configuration: the CI multi-process
+/// job (`obadam elastic --spawn M`) and the chaos×elasticity tests read
+/// their world geometry, timeout budget, and convergence tolerance from
+/// here instead of hardcoding them at the call sites.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ElasticPreset {
+    pub name: &'static str,
+    /// Which optimizer the elastic worker replicates.
+    pub mode: crate::transport::ElasticMode,
+    /// Launch world size `M` (survivors re-form at `M−1`).
+    pub world: usize,
+    pub dim: usize,
+    pub steps: usize,
+    /// 1-bit Adam checkpoint cadence (0/1 Adam checkpoints at its
+    /// variance-sync boundaries instead).
+    pub ckpt_every: usize,
+    /// Dead-peer budget per rank, milliseconds.
+    pub recv_timeout_ms: u64,
+    /// Rendezvous quiet window before a partial epoch forms, ms.
+    pub window_ms: u64,
+    /// Convergence tolerance the CI job asserts: survivors' final loss
+    /// must be at most this fraction of the initial loss.
+    pub max_loss_frac: f64,
+}
+
+pub const ELASTIC_PRESETS: &[ElasticPreset] = &[
+    ElasticPreset {
+        name: "ci-onebit-m3",
+        mode: crate::transport::ElasticMode::OneBit { warmup_steps: 5 },
+        world: 3,
+        dim: 256,
+        steps: 18,
+        ckpt_every: 3,
+        recv_timeout_ms: 2000,
+        window_ms: 1000,
+        max_loss_frac: 0.5,
+    },
+    ElasticPreset {
+        name: "ci-zeroone-m3",
+        mode: crate::transport::ElasticMode::ZeroOne { var_sync_base: 2 },
+        world: 3,
+        dim: 256,
+        steps: 18,
+        ckpt_every: 0,
+        recv_timeout_ms: 2000,
+        window_ms: 1000,
+        max_loss_frac: 0.5,
+    },
+];
+
+impl ElasticPreset {
+    pub fn by_name(name: &str) -> Option<&'static ElasticPreset> {
+        ELASTIC_PRESETS.iter().find(|p| p.name == name)
+    }
+
+    /// Materialize worker options rooted at `ckpt_dir`.
+    pub fn options(
+        &self,
+        ckpt_dir: impl Into<std::path::PathBuf>,
+    ) -> crate::transport::ElasticOptions {
+        use std::time::Duration;
+        let mut o = crate::transport::ElasticOptions::new(
+            self.mode, self.dim, self.steps, ckpt_dir,
+        );
+        o.ckpt_every = self.ckpt_every;
+        o.tcp.recv_timeout = Duration::from_millis(self.recv_timeout_ms);
+        o.tcp.attempt_timeout = o.tcp.attempt_timeout.min(o.tcp.recv_timeout);
+        o
+    }
+
+    /// Analytic bound the measured epoch-change time must stay under
+    /// ([`crate::netsim::epoch_change_window_bound`]).
+    pub fn recovery_bound(&self) -> std::time::Duration {
+        crate::netsim::epoch_change_window_bound(
+            std::time::Duration::from_millis(self.recv_timeout_ms),
+            std::time::Duration::from_millis(self.window_ms),
+            self.world,
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn elastic_presets_build_valid_options() {
+        for p in ELASTIC_PRESETS {
+            let o = p.options(std::env::temp_dir());
+            assert!(o.tcp.validate().is_ok(), "{}", p.name);
+            assert_eq!(o.dim, p.dim);
+            assert_eq!(o.steps, p.steps);
+            assert!(p.world >= 2, "{}", p.name);
+            assert!(p.max_loss_frac > 0.0 && p.max_loss_frac < 1.0);
+            // The bound always covers detection + quiet window.
+            let b = p.recovery_bound();
+            assert!(
+                b >= std::time::Duration::from_millis(
+                    p.recv_timeout_ms + p.window_ms
+                ),
+                "{}",
+                p.name
+            );
+        }
+        assert!(ElasticPreset::by_name("ci-onebit-m3").is_some());
+        assert!(ElasticPreset::by_name("nope").is_none());
+    }
 
     #[test]
     fn topology_presets_map_to_collectives() {

@@ -24,11 +24,86 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 use crate::optim::Phase;
-use crate::util::error::{Error, Result};
+use crate::util::error::Result;
 use crate::util::hash::fletcher64;
 
 const MAGIC: &[u8; 4] = b"OBAD";
 const VERSION: u32 = 2;
+
+/// Typed parse failure of a checkpoint file, naming the byte offset at
+/// which the damage was found — the elastic restart path refuses a
+/// truncated or bit-flipped file loudly instead of resuming from
+/// garbage (and the atomic `save` below makes sure the last *good* file
+/// is still on disk when it does).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// File ends before the field starting at `offset`: `need` more
+    /// bytes were required, only `have` remain.
+    Truncated { offset: usize, need: usize, have: usize },
+    /// Fletcher64 trailer (at `offset`) disagrees with the body.
+    ChecksumMismatch { offset: usize, stored: u64, computed: u64 },
+    /// First four bytes are not `"OBAD"`.
+    BadMagic { offset: usize },
+    /// Unknown format version.
+    BadVersion { offset: usize, version: u32 },
+    /// Phase byte is neither warmup nor compression.
+    BadPhase { offset: usize, byte: u8 },
+    /// EC buffer count at `offset` implies more data than the file holds.
+    EcCountOverflow { offset: usize, count: usize },
+    /// EC buffer length at `offset` implies more data than the file holds.
+    EcLenOverflow { offset: usize, len: usize },
+    /// Parse consumed the body but `extra` bytes remain at `offset`.
+    TrailingBytes { offset: usize, extra: usize },
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Truncated { offset, need, have } => write!(
+                f,
+                "checkpoint truncated at offset {offset}: need {need} \
+                 more bytes, have {have}"
+            ),
+            CheckpointError::ChecksumMismatch {
+                offset,
+                stored,
+                computed,
+            } => write!(
+                f,
+                "checkpoint checksum mismatch at offset {offset}: \
+                 stored {stored:#018x}, computed {computed:#018x}"
+            ),
+            CheckpointError::BadMagic { offset } => {
+                write!(f, "bad checkpoint magic at offset {offset}")
+            }
+            CheckpointError::BadVersion { offset, version } => write!(
+                f,
+                "unsupported checkpoint version {version} at offset \
+                 {offset}"
+            ),
+            CheckpointError::BadPhase { offset, byte } => write!(
+                f,
+                "bad checkpoint phase byte {byte} at offset {offset}"
+            ),
+            CheckpointError::EcCountOverflow { offset, count } => write!(
+                f,
+                "checkpoint ec count {count} at offset {offset} exceeds \
+                 the file size"
+            ),
+            CheckpointError::EcLenOverflow { offset, len } => write!(
+                f,
+                "checkpoint ec buffer length {len} at offset {offset} \
+                 exceeds the file size"
+            ),
+            CheckpointError::TrailingBytes { offset, extra } => write!(
+                f,
+                "checkpoint has {extra} trailing bytes at offset {offset}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
 
 /// Serialized training state.
 #[derive(Debug, Clone, PartialEq)]
@@ -54,7 +129,12 @@ fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
 fn read_f32s(data: &[u8], off: &mut usize, n: usize) -> Result<Vec<f32>> {
     let need = n * 4;
     if *off + need > data.len() {
-        return Err(Error::msg("checkpoint truncated"));
+        return Err(CheckpointError::Truncated {
+            offset: *off,
+            need,
+            have: data.len() - *off,
+        }
+        .into());
     }
     let mut out = Vec::with_capacity(n);
     for i in 0..n {
@@ -108,27 +188,42 @@ impl Checkpoint {
     /// Accepts format v1 (no error-feedback section → `ec` empty) and v2.
     pub fn from_bytes(data: &[u8]) -> Result<Checkpoint> {
         if data.len() < 29 {
-            return Err(Error::msg("checkpoint too short"));
+            return Err(CheckpointError::Truncated {
+                offset: data.len(),
+                need: 29 - data.len(),
+                have: 0,
+            }
+            .into());
         }
         let (body, sum_bytes) = data.split_at(data.len() - 8);
         let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
-        if fletcher64(body) != stored {
-            return Err(Error::msg("checkpoint checksum mismatch"));
+        let computed = fletcher64(body);
+        if computed != stored {
+            return Err(CheckpointError::ChecksumMismatch {
+                offset: body.len(),
+                stored,
+                computed,
+            }
+            .into());
         }
         if &body[..4] != MAGIC {
-            return Err(Error::msg("bad checkpoint magic"));
+            return Err(CheckpointError::BadMagic { offset: 0 }.into());
         }
         let version = u32::from_le_bytes(body[4..8].try_into().unwrap());
         if version != 1 && version != VERSION {
-            return Err(Error::msg(format!(
-                "unsupported checkpoint version {version}"
-            )));
+            return Err(
+                CheckpointError::BadVersion { offset: 4, version }.into()
+            );
         }
         let step = u64::from_le_bytes(body[8..16].try_into().unwrap());
         let phase = match body[16] {
             0 => Phase::Warmup,
             1 => Phase::Compression,
-            p => return Err(Error::msg(format!("bad phase byte {p}"))),
+            byte => {
+                return Err(
+                    CheckpointError::BadPhase { offset: 16, byte }.into()
+                )
+            }
         };
         let dim = u64::from_le_bytes(body[17..25].try_into().unwrap()) as usize;
         let mut off = 25usize;
@@ -138,51 +233,80 @@ impl Checkpoint {
         let mut ec = Vec::new();
         if version >= 2 {
             if off + 4 > body.len() {
-                return Err(Error::msg("checkpoint truncated (ec count)"));
+                return Err(CheckpointError::Truncated {
+                    offset: off,
+                    need: 4,
+                    have: body.len() - off,
+                }
+                .into());
             }
             let count = u32::from_le_bytes(
                 body[off..off + 4].try_into().unwrap(),
             ) as usize;
-            off += 4;
             // Every buffer costs ≥ 8 header bytes — a count beyond that
             // is hostile/corrupt; reject before reserving anything.
-            if count > (body.len() - off) / 8 {
-                return Err(Error::msg(
-                    "checkpoint ec count exceeds file size",
-                ));
+            if count > (body.len() - off - 4) / 8 {
+                return Err(CheckpointError::EcCountOverflow {
+                    offset: off,
+                    count,
+                }
+                .into());
             }
+            off += 4;
             ec.reserve(count);
             for _ in 0..count {
                 if off + 8 > body.len() {
-                    return Err(Error::msg(
-                        "checkpoint truncated (ec buffer length)",
-                    ));
+                    return Err(CheckpointError::Truncated {
+                        offset: off,
+                        need: 8,
+                        have: body.len() - off,
+                    }
+                    .into());
                 }
                 let blen = u64::from_le_bytes(
                     body[off..off + 8].try_into().unwrap(),
                 ) as usize;
-                off += 8;
                 // guard the multiply in read_f32s against a hostile length
                 if blen > body.len() / 4 {
-                    return Err(Error::msg(
-                        "checkpoint ec buffer length exceeds file size",
-                    ));
+                    return Err(CheckpointError::EcLenOverflow {
+                        offset: off,
+                        len: blen,
+                    }
+                    .into());
                 }
+                off += 8;
                 ec.push(read_f32s(body, &mut off, blen)?);
             }
         }
         if off != body.len() {
-            return Err(Error::msg("checkpoint has trailing bytes"));
+            return Err(CheckpointError::TrailingBytes {
+                offset: off,
+                extra: body.len() - off,
+            }
+            .into());
         }
         Ok(Checkpoint { step, phase, params, m, v, ec })
     }
 
+    /// Atomic save: the bytes go to `<path>.tmp` first and are renamed
+    /// into place only after a successful write + fsync, so a crash (or
+    /// SIGKILL — the elastic runner's whole premise) mid-save can never
+    /// destroy the last good checkpoint survivors will restore from.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        if let Some(parent) = path.as_ref().parent() {
-            std::fs::create_dir_all(parent)?;
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
         }
-        let mut f = std::fs::File::create(path)?;
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        let mut f = std::fs::File::create(&tmp)?;
         f.write_all(&self.to_bytes())?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)?;
         Ok(())
     }
 
@@ -247,6 +371,79 @@ mod tests {
         let bytes = ck.to_bytes();
         assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 9]).is_err());
         assert!(Checkpoint::from_bytes(&bytes[..10]).is_err());
+    }
+
+    #[test]
+    fn parse_failures_are_typed_and_name_the_offset() {
+        use crate::util::error::Error;
+        let ck = sample(64);
+        let bytes = ck.to_bytes();
+
+        // Truncation inside the params section: the parser reports the
+        // absolute body offset it needed to read at.
+        match Checkpoint::from_bytes(&bytes[..10]) {
+            Err(Error::Checkpoint(CheckpointError::Truncated {
+                offset,
+                ..
+            })) => assert_eq!(offset, 10),
+            other => panic!("want typed truncation, got {other:?}"),
+        }
+
+        // A flipped payload bit fails the fletcher check at the trailer.
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        match Checkpoint::from_bytes(&bad) {
+            Err(Error::Checkpoint(CheckpointError::ChecksumMismatch {
+                offset,
+                stored,
+                computed,
+            })) => {
+                assert_eq!(offset, bytes.len() - 8);
+                assert_ne!(stored, computed);
+            }
+            other => panic!("want checksum mismatch, got {other:?}"),
+        }
+
+        // Cutting the trailer short is a truncation, not a bad checksum.
+        match Checkpoint::from_bytes(&bytes[..20]) {
+            Err(Error::Checkpoint(CheckpointError::Truncated {
+                offset,
+                need,
+                have,
+            })) => {
+                assert_eq!(offset, 20);
+                assert_eq!(need, 9);
+                assert_eq!(have, 0);
+            }
+            other => panic!("want header truncation, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn save_is_atomic_and_never_clobbers_the_last_good_file() {
+        let dir = std::env::temp_dir().join("obadam_ck_atomic_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("latest.ckpt");
+        let good = sample(91);
+        good.save(&path).unwrap();
+        // No staging residue after a successful save.
+        assert!(!dir.join("latest.ckpt.tmp").exists());
+
+        // Simulate a crash mid-save: a half-written staging file is
+        // sitting next to the good checkpoint.  The good file still
+        // loads — the partial write never touched it — and the next
+        // save sweeps the residue away.
+        let garbage = &good.to_bytes()[..40];
+        std::fs::write(dir.join("latest.ckpt.tmp"), garbage).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), good);
+
+        let mut newer = sample(91);
+        newer.step += 1;
+        newer.save(&path).unwrap();
+        assert!(!dir.join("latest.ckpt.tmp").exists());
+        assert_eq!(Checkpoint::load(&path).unwrap(), newer);
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

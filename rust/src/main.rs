@@ -4,9 +4,21 @@
 //!   train    train a workload with a chosen optimizer (the generic driver)
 //!   repro    regenerate a paper table/figure (see `repro list`)
 //!   inspect  list the AOT artifacts in the manifest
+//!   elastic  multi-process elastic runner (spawn driver / worker role)
 //!   help     this text
 
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::Command;
 use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use onebit_adam::config::presets::{ChaosPreset, ElasticPreset};
+use onebit_adam::coordinator::checkpoint::Checkpoint;
+use onebit_adam::transport::elastic;
+use onebit_adam::transport::{Coordinator, ElasticMode, RendezvousOptions};
+use onebit_adam::util::bench::BenchJson;
+use onebit_adam::util::json::Json;
 
 use onebit_adam::coordinator::{
     train, CnnSource, GradSource, LmSource, LrSchedule, OracleSource,
@@ -36,11 +48,19 @@ USAGE:
   obadam repro <experiment|all> [--artifacts DIR] [--out DIR] [--fast]
   obadam repro list
   obadam inspect [--artifacts DIR]
+  obadam elastic --spawn M [--preset ci-onebit-m3|ci-zeroone-m3]
+                 [--dir DIR] [--seed N] [--pace-ms MS] [--no-kill]
+                 [--keep-dir] [--bench-out FILE]
+  obadam elastic --worker --coordinator HOST:PORT --id N --dir DIR
+                 [--preset NAME] [--seed N] [--pace-ms MS]
+                 [--max-epochs N] [--chaos NAME]
+                 [--straggle-at N --straggle-ms MS]
 
 EXAMPLES:
   obadam train --workload lm-tiny --optimizer 1bit-adam --steps 300
   obadam repro fig4a
   obadam repro table1
+  obadam elastic --spawn 3           # SIGKILL one rank mid-run, survive
 ";
 
 fn main() {
@@ -60,6 +80,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("train") => cmd_train(args),
         Some("repro") => cmd_repro(args),
         Some("inspect") => cmd_inspect(args),
+        Some("elastic") => cmd_elastic(args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())
@@ -189,6 +210,404 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(out) = args.get("out") {
         log.write_csv(out)?;
         println!("wrote {out}");
+    }
+    Ok(())
+}
+
+// ---- elastic multi-process runner ------------------------------------------
+
+fn cmd_elastic(args: &Args) -> Result<()> {
+    if args.flag("worker") {
+        elastic_worker(args)
+    } else if args.get("spawn").is_some() {
+        elastic_spawn(args)
+    } else {
+        Err(Error::Config(
+            "elastic needs --spawn M (driver) or --worker (child role)"
+                .into(),
+        ))
+    }
+}
+
+/// Shared between the driver and its children so both sides agree on
+/// the problem and the checkpoint directory byte-for-byte.
+fn elastic_opts_from(
+    args: &Args,
+    dir: &Path,
+) -> Result<(&'static ElasticPreset, elastic::ElasticOptions)> {
+    let name = args.get_or("preset", "ci-onebit-m3");
+    let preset = ElasticPreset::by_name(name).ok_or_else(|| {
+        Error::Config(format!("unknown elastic preset '{name}'"))
+    })?;
+    let mut opts = preset.options(dir.join("ckpt"));
+    opts.seed = args.u64_or("seed", opts.seed)?;
+    opts.pace = Duration::from_millis(args.u64_or("pace-ms", 150)?);
+    Ok((preset, opts))
+}
+
+fn elastic_worker(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(
+        args.get("dir")
+            .ok_or_else(|| Error::Config("--worker needs --dir".into()))?,
+    );
+    let id = args.usize_or("id", 0)?;
+    let coordinator: std::net::SocketAddr = args
+        .get("coordinator")
+        .ok_or_else(|| {
+            Error::Config("--worker needs --coordinator".into())
+        })?
+        .parse()
+        .map_err(|e| {
+            Error::Config(format!("bad --coordinator address: {e}"))
+        })?;
+    let (_preset, mut opts) = elastic_opts_from(args, &dir)?;
+    opts.max_epochs = args.usize_or("max-epochs", opts.max_epochs)?;
+    opts.progress_path = Some(dir.join(format!("progress_{id}")));
+    if let Some(name) = args.get("chaos") {
+        let p = ChaosPreset::by_name(name).ok_or_else(|| {
+            Error::Config(format!("unknown chaos preset '{name}'"))
+        })?;
+        opts.chaos = Some(p.scenario(opts.seed ^ 0x5eed));
+    }
+    if let Some(s) = args.get("straggle-at") {
+        opts.straggle_at_step = Some(s.parse().map_err(|e| {
+            Error::Config(format!("--straggle-at={s} not a usize: {e}"))
+        })?);
+        opts.straggle_for =
+            Duration::from_millis(args.u64_or("straggle-ms", 5000)?);
+    }
+    let report = elastic::run_elastic_worker(coordinator, &opts)?;
+    let path = dir.join(format!("report_{id}.json"));
+    std::fs::write(&path, elastic_report_json(&report).to_string_pretty())?;
+    println!(
+        "worker {id}: rank {} of {} (epoch {}), {} steps, loss {:.4}",
+        report.rank,
+        report.world,
+        report.epoch,
+        report.steps_done,
+        report.final_loss
+    );
+    Ok(())
+}
+
+fn elastic_report_json(r: &elastic::ElasticReport) -> Json {
+    let num = |x: f64| Json::Num(x);
+    let ranks =
+        |v: &[usize]| Json::Arr(v.iter().map(|&x| num(x as f64)).collect());
+    let mut m = BTreeMap::new();
+    m.insert("rank".to_string(), num(r.rank as f64));
+    m.insert("world".to_string(), num(r.world as f64));
+    m.insert("epoch".to_string(), num(r.epoch as f64));
+    m.insert("epochs_joined".to_string(), num(r.epochs_joined as f64));
+    m.insert("steps_done".to_string(), num(r.steps_done as f64));
+    m.insert(
+        "resume_step".to_string(),
+        r.resume_step.map_or(Json::Null, |s| num(s as f64)),
+    );
+    m.insert("departed".to_string(), ranks(&r.departed));
+    m.insert("survivors".to_string(), ranks(&r.survivors));
+    m.insert(
+        "recovery_ms".to_string(),
+        r.recovery_ms.map_or(Json::Null, num),
+    );
+    m.insert("pre_fail_step_ms".to_string(), num(r.pre_fail_step_ms));
+    m.insert(
+        "post_resume_step_ms".to_string(),
+        num(r.post_resume_step_ms),
+    );
+    m.insert("final_loss".to_string(), num(r.final_loss));
+    m.insert(
+        "comm_alltoall_bytes".to_string(),
+        num(r.comm_alltoall_bytes as f64),
+    );
+    m.insert(
+        "comm_allgather_bytes".to_string(),
+        num(r.comm_allgather_bytes as f64),
+    );
+    Json::Obj(m)
+}
+
+/// Children spawned by the driver, killed on drop so a failed run never
+/// leaks orphan processes.
+struct Fleet {
+    children: Vec<Option<std::process::Child>>,
+}
+
+impl Fleet {
+    fn kill(&mut self, id: usize) -> Result<()> {
+        if let Some(c) = &mut self.children[id] {
+            c.kill()?; // SIGKILL on unix
+            c.wait()?;
+        }
+        self.children[id] = None;
+        Ok(())
+    }
+
+    fn wait(&mut self, id: usize) -> Result<std::process::ExitStatus> {
+        let mut c = self.children[id]
+            .take()
+            .ok_or_else(|| Error::msg("worker already reaped"))?;
+        Ok(c.wait()?)
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for c in self.children.iter_mut().flatten() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+fn elastic_spawn(args: &Args) -> Result<()> {
+    let world = args.usize_or("spawn", 3)?;
+    if world < 2 {
+        return Err(Error::Config("--spawn needs at least 2 ranks".into()));
+    }
+    let (dir, ephemeral_dir) = match args.get("dir") {
+        Some(d) => (PathBuf::from(d), false),
+        None => (
+            std::env::temp_dir()
+                .join(format!("obadam_elastic_{}", std::process::id())),
+            true,
+        ),
+    };
+    std::fs::create_dir_all(&dir)?;
+    let (preset, opts) = elastic_opts_from(args, &dir)?;
+    let kill = !args.flag("no-kill");
+    let coordinator = Coordinator::spawn(
+        "127.0.0.1:0",
+        RendezvousOptions {
+            world,
+            min_world: world - 1,
+            window: Duration::from_millis(preset.window_ms),
+            join_timeout: Duration::from_secs(20),
+        },
+    )?;
+    let exe = std::env::current_exe()?;
+    println!(
+        "elastic driver: preset {}, {world} workers over {}, dir {}",
+        preset.name,
+        coordinator.addr(),
+        dir.display()
+    );
+    let mut fleet = Fleet { children: Vec::new() };
+    for id in 0..world {
+        let child = Command::new(&exe)
+            .arg("elastic")
+            .arg("--worker")
+            .args(["--coordinator", &coordinator.addr().to_string()])
+            .args(["--id", &id.to_string()])
+            .args(["--dir", &dir.display().to_string()])
+            .args(["--preset", preset.name])
+            .args(["--seed", &opts.seed.to_string()])
+            .args(["--pace-ms", &opts.pace.as_millis().to_string()])
+            .spawn()?;
+        fleet.children.push(Some(child));
+    }
+
+    // SIGKILL the highest-id worker once it is demonstrably inside the
+    // compression phase (its progress file says so).
+    let victim = world - 1;
+    let mut kill_step = 0usize;
+    if kill {
+        let min_step = match opts.mode {
+            ElasticMode::OneBit { warmup_steps } => warmup_steps + 1,
+            ElasticMode::ZeroOne { .. } => 3,
+        };
+        let progress = dir.join(format!("progress_{victim}"));
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            if Instant::now() > deadline {
+                return Err(Error::msg(
+                    "victim never reached the compression-phase kill window",
+                ));
+            }
+            if let Ok(text) = std::fs::read_to_string(&progress) {
+                let mut it = text.split_whitespace();
+                if let (Some(step), Some("C")) = (it.next(), it.next()) {
+                    if let Ok(s) = step.parse::<usize>() {
+                        if s + 3 >= opts.steps {
+                            return Err(Error::msg(
+                                "victim finished before the kill window",
+                            ));
+                        }
+                        if s >= min_step {
+                            kill_step = s;
+                            break;
+                        }
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        fleet.kill(victim)?;
+        println!(
+            "killed worker {victim} (SIGKILL) after compression step \
+             {kill_step}"
+        );
+    }
+    let t_kill = Instant::now();
+    for id in 0..world {
+        if kill && id == victim {
+            continue;
+        }
+        let status = fleet.wait(id)?;
+        if !status.success() {
+            return Err(Error::msg(format!(
+                "worker {id} exited with {status}"
+            )));
+        }
+    }
+    println!(
+        "survivors finished {:.1}s after the kill",
+        t_kill.elapsed().as_secs_f64()
+    );
+
+    // ---- verify against the in-process reference trajectory.
+    let mut reports: Vec<Json> = Vec::new();
+    for id in 0..world {
+        if kill && id == victim {
+            continue;
+        }
+        let text =
+            std::fs::read_to_string(dir.join(format!("report_{id}.json")))?;
+        reports.push(Json::parse(&text)?);
+    }
+    let live = Checkpoint::load(elastic::latest_path(&opts.ckpt_dir))?;
+    let init_loss =
+        elastic::quad_loss(&elastic::initial_params(opts.seed, opts.dim));
+    let bound_ms = preset.recovery_bound().as_secs_f64() * 1e3;
+    let mut recovery_ms_max = 0.0f64;
+    let mut pre_ms = 0.0f64;
+    let mut post_ms = 0.0f64;
+    let mut resume_step = 0u64;
+
+    let reference = if kill {
+        let mut resume: Option<u64> = None;
+        let mut survivors: Vec<usize> = Vec::new();
+        for r in &reports {
+            if r.usize_of("world")? != world - 1 {
+                return Err(Error::msg(format!(
+                    "survivor re-formed at world {} instead of {}",
+                    r.usize_of("world")?,
+                    world - 1
+                )));
+            }
+            let rs = r.f64_of("resume_step")? as u64;
+            if *resume.get_or_insert(rs) != rs {
+                return Err(Error::msg(
+                    "survivors disagree on the resume step",
+                ));
+            }
+            recovery_ms_max = recovery_ms_max.max(r.f64_of("recovery_ms")?);
+            pre_ms += r.f64_of("pre_fail_step_ms")? / reports.len() as f64;
+            post_ms +=
+                r.f64_of("post_resume_step_ms")? / reports.len() as f64;
+            survivors = r
+                .arr_of("survivors")?
+                .iter()
+                .filter_map(|j| j.as_usize())
+                .collect();
+        }
+        resume_step = resume.unwrap_or(0);
+        if recovery_ms_max > bound_ms {
+            return Err(Error::msg(format!(
+                "recovery took {recovery_ms_max:.0} ms, above the \
+                 {bound_ms:.0} ms epoch-change bound"
+            )));
+        }
+        let ck =
+            Checkpoint::load(elastic::step_path(&opts.ckpt_dir, resume_step))?;
+        elastic::reference_run(
+            world - 1,
+            Some((&ck, world, &survivors)),
+            &opts,
+        )?
+    } else {
+        for r in &reports {
+            pre_ms += r.f64_of("pre_fail_step_ms")? / reports.len() as f64;
+            post_ms +=
+                r.f64_of("post_resume_step_ms")? / reports.len() as f64;
+        }
+        elastic::reference_run(world, None, &opts)?
+    };
+
+    if live != reference.checkpoint {
+        return Err(Error::msg(
+            "live trajectory does not bit-match the reference restore \
+             (params/m/v/EC state differ)",
+        ));
+    }
+    for r in &reports {
+        if r.f64_of("comm_alltoall_bytes")? as usize
+            != reference.comm_alltoall_bytes
+            || r.f64_of("comm_allgather_bytes")? as usize
+                != reference.comm_allgather_bytes
+        {
+            return Err(Error::msg(
+                "survivor comm ledger does not match the reference",
+            ));
+        }
+    }
+    let final_loss = elastic::quad_loss(&live.params);
+    if final_loss > preset.max_loss_frac * init_loss {
+        return Err(Error::msg(format!(
+            "final loss {final_loss:.4} above the convergence tolerance \
+             ({} of initial {init_loss:.4})",
+            preset.max_loss_frac
+        )));
+    }
+    println!(
+        "bit-exact: survivors match the reference restore (params, m, v, \
+         EC, comm); loss {init_loss:.2} -> {final_loss:.4}"
+    );
+
+    // ---- BENCH_elastic.json
+    let num = |x: f64| Json::Num(x);
+    let mut entry = BTreeMap::new();
+    entry.insert(
+        "name".to_string(),
+        Json::Str(format!("elastic_{}", preset.name)),
+    );
+    entry.insert("world".to_string(), num(world as f64));
+    entry.insert("killed".to_string(), Json::Bool(kill));
+    entry.insert("kill_step".to_string(), num(kill_step as f64));
+    entry.insert("resume_step".to_string(), num(resume_step as f64));
+    entry.insert("recovery_ms".to_string(), num(recovery_ms_max));
+    entry.insert("recovery_bound_ms".to_string(), num(bound_ms));
+    entry.insert("pre_fail_step_ms".to_string(), num(pre_ms));
+    entry.insert("post_resume_step_ms".to_string(), num(post_ms));
+    entry.insert("final_loss".to_string(), num(final_loss));
+    entry.insert(
+        "comm_alltoall_bytes".to_string(),
+        num(reference.comm_alltoall_bytes as f64),
+    );
+    entry.insert(
+        "comm_allgather_bytes".to_string(),
+        num(reference.comm_allgather_bytes as f64),
+    );
+    entry.insert("bit_exact".to_string(), Json::Bool(true));
+    let bench_name = args.get_or("bench-out", "BENCH_elastic.json");
+    let bench_path = if bench_name.contains('/') {
+        PathBuf::from(bench_name)
+    } else {
+        BenchJson::root_path(bench_name)
+    };
+    let mut root = match std::fs::read_to_string(&bench_path)
+        .ok()
+        .map(|t| Json::parse(&t))
+    {
+        Some(Ok(Json::Obj(m))) => m,
+        _ => BTreeMap::new(),
+    };
+    root.insert("elastic".to_string(), Json::Arr(vec![Json::Obj(entry)]));
+    std::fs::write(&bench_path, Json::Obj(root).to_string_pretty())?;
+    println!("wrote {}", bench_path.display());
+
+    if ephemeral_dir && !args.flag("keep-dir") {
+        let _ = std::fs::remove_dir_all(&dir);
     }
     Ok(())
 }

@@ -533,11 +533,62 @@ pub fn zeroone_adam_run_gross_total(
         + syncs * plain_step_gross_total(n_ranks, elements)
 }
 
+// ---- elastic re-formation bound --------------------------------------------
+
+/// Analytic upper bound on one elastic epoch change: SIGKILL (or
+/// straggler) to a re-formed `world`-rank mesh with restored state.
+///
+/// The sequence the bound charges, matching
+/// [`crate::transport::elastic::run_elastic_worker`]:
+///
+/// 1. **detection** — the first surviving peer blocked on the dead rank
+///    burns its whole dead-peer budget (`recv_timeout`) before
+///    [`crate::transport::TransportError::RecoveryExhausted`] fires;
+///    dropping its mesh closes every socket, so the remaining
+///    survivors fail within one read (charged under the per-rank term);
+/// 2. **rendezvous** — the coordinator waits one quiet `window` after
+///    the last JOIN before forming a partial epoch;
+/// 3. **re-formation** — mesh dials, HELLO validation, and the
+///    checkpoint reload, charged as a small per-rank constant.
+///
+/// The CLI driver and the chaos×elasticity tests assert measured
+/// recovery time stays under this bound.
+pub fn epoch_change_window_bound(
+    recv_timeout: std::time::Duration,
+    rendezvous_window: std::time::Duration,
+    world: usize,
+) -> std::time::Duration {
+    /// Per-rank charge for the failure cascade, one JOIN/WELCOME
+    /// exchange, one mesh dial + HELLO, and a share of the checkpoint
+    /// reload — generous for loopback, still honest for a LAN.
+    const PER_RANK: std::time::Duration = std::time::Duration::from_millis(250);
+    recv_timeout + rendezvous_window + PER_RANK * (world.max(1) as u32)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     const BERT_LARGE: usize = 340_000_000;
+
+    #[test]
+    fn epoch_change_bound_is_monotone_and_dominated_by_detection() {
+        use std::time::Duration;
+        let rt = Duration::from_secs(2);
+        let w = Duration::from_millis(500);
+        let b = epoch_change_window_bound(rt, w, 4);
+        // Detection + quiet window are always charged in full.
+        assert!(b > rt + w);
+        // Monotone in every knob.
+        assert!(epoch_change_window_bound(rt * 2, w, 4) > b);
+        assert!(epoch_change_window_bound(rt, w * 2, 4) > b);
+        assert!(epoch_change_window_bound(rt, w, 8) > b);
+        // Degenerate world sizes still charge at least one rank.
+        assert_eq!(
+            epoch_change_window_bound(rt, w, 0),
+            epoch_change_window_bound(rt, w, 1)
+        );
+    }
 
     #[test]
     fn single_gpu_is_free() {

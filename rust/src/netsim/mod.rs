@@ -20,6 +20,7 @@ pub mod clock;
 pub mod collectives;
 
 pub use clock::VirtualClock;
+pub use collectives::epoch_change_window_bound;
 
 /// Two-tier cluster network description.
 #[derive(Debug, Clone, PartialEq)]

@@ -34,6 +34,7 @@ pub mod monitor;
 pub mod naive;
 pub mod onebit_adam;
 pub mod oracle;
+pub mod reshard;
 pub mod variance_ablation;
 pub mod zeroone_adam;
 
@@ -47,6 +48,7 @@ pub use momentum::{MomentumSgd, Sgd};
 pub use monitor::VarianceMonitor;
 pub use naive::NaiveCompressedAdam;
 pub use onebit_adam::{OneBitAdam, OneBitAdamConfig};
+pub use reshard::reshard_ec;
 pub use variance_ablation::{LazyVarianceAdam, NBitVarianceAdam};
 pub use zeroone_adam::{ZeroOneAdam, ZeroOneAdamConfig};
 

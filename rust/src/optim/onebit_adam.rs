@@ -270,6 +270,38 @@ impl OneBitAdam {
         opt
     }
 
+    /// Restore from a checkpoint written at a *different* world size:
+    /// the elastic re-formation path.  Params/m/v are replicated and
+    /// restore unchanged; the sharded EC buffers are re-cut by
+    /// [`crate::optim::reshard::reshard_ec`] — survivors (ascending old
+    /// ranks, becoming new ranks `0..survivors.len()`) keep their
+    /// worker errors, departed ranks' errors fold into new rank 0, and
+    /// the server errors are re-chunked position-for-position.  Flat
+    /// topology only (the hierarchical EC layout is per-leader).
+    pub fn from_checkpoint_elastic(
+        n_workers: usize,
+        mut ck: crate::coordinator::checkpoint::Checkpoint,
+        cfg: OneBitAdamConfig,
+        old_workers: usize,
+        survivors: &[usize],
+    ) -> crate::util::error::Result<Self> {
+        if cfg.topology != CommTopology::Flat {
+            return Err(crate::util::error::Error::Config(
+                "elastic restore supports the flat topology only".into(),
+            ));
+        }
+        if !ck.ec.is_empty() {
+            ck.ec = crate::optim::reshard::reshard_ec(
+                &ck.ec,
+                ck.params.len(),
+                old_workers,
+                survivors,
+                n_workers,
+            )?;
+        }
+        Ok(Self::from_checkpoint(n_workers, ck, cfg))
+    }
+
     fn warmup_step(&mut self, grads: &[Vec<f32>], lr: f32) -> CommStats {
         // Full-volume fp32 allreduce — the warmup throughput ceiling.
         // Tree-reduce path: chunk-parallel over threads, pairwise f64

@@ -1,0 +1,207 @@
+//! Re-sharding of the error-feedback (EC) state across world sizes.
+//!
+//! When the elastic runner re-forms an epoch at a different rank count,
+//! every surviving rank restores params/m/v from the last v2 checkpoint
+//! — those are replicated, so the world size is irrelevant — but the EC
+//! buffers are *sharded*: each rank carries a full-length worker error
+//! `δ^(i)` and the server error `δ̄_j` of the chunk it owns, and the
+//! chunk layout itself changes with `n`.  This module is the one pure
+//! function both the live M−1 continuation and a fresh M−1 restore call
+//! on the same checkpoint, which is what makes the two trajectories
+//! bit-exact by construction.
+//!
+//! Invariants preserved (asserted in tests):
+//! * **Error-mass conservation** — the element-wise sum of all worker
+//!   errors is unchanged: departed ranks' `δ` folds into the first
+//!   survivor's, so the compression bias the EC mechanism carries is
+//!   never silently dropped (the paper's convergence argument leans on
+//!   the error sequence staying summable).
+//! * **Server-error content** — the concatenation of server-chunk
+//!   errors over the old layout equals the concatenation over the new
+//!   one; only the cut points move.
+//! * Fresh joiners start with zero worker error, exactly like rank
+//!   `n+1` of a cold start.
+
+use crate::tensor::chunk::ChunkLayout;
+use crate::util::error::{Error, Result};
+
+/// Re-shard a checkpoint's exported EC buffers (flat topology: `old_n`
+/// worker errors of length `dim`, then `old_n` server-chunk errors in
+/// `ChunkLayout::new(dim, old_n)` order) to a new world of `new_n`
+/// ranks, of which the first `survivors.len()` are survivors holding
+/// the ascending previous ranks `survivors[..]` and the rest are fresh
+/// joiners.  Returns the new `2 * new_n` buffers in the same layout.
+pub fn reshard_ec(
+    ec: &[Vec<f32>],
+    dim: usize,
+    old_n: usize,
+    survivors: &[usize],
+    new_n: usize,
+) -> Result<Vec<Vec<f32>>> {
+    if ec.len() != 2 * old_n {
+        return Err(Error::Config(format!(
+            "reshard: expected {} EC buffers for world {old_n}, got {}",
+            2 * old_n,
+            ec.len()
+        )));
+    }
+    if survivors.is_empty() || survivors.len() > new_n {
+        return Err(Error::Config(format!(
+            "reshard: {} survivors cannot seed a world of {new_n}",
+            survivors.len()
+        )));
+    }
+    if survivors.windows(2).any(|w| w[0] >= w[1])
+        || *survivors.last().unwrap() >= old_n
+    {
+        return Err(Error::Config(
+            "reshard: survivors must be ascending previous ranks".into(),
+        ));
+    }
+    let old_layout = ChunkLayout::new(dim, old_n);
+    for (i, buf) in ec.iter().enumerate() {
+        let want =
+            if i < old_n { dim } else { old_layout.size(i - old_n) };
+        if buf.len() != want {
+            return Err(Error::Config(format!(
+                "reshard: EC buffer {i} has length {}, expected {want}",
+                buf.len()
+            )));
+        }
+    }
+
+    // Worker errors: survivors keep theirs (new rank order = ascending
+    // previous rank), departed ranks fold into the first survivor,
+    // joiners start clean.
+    let mut workers: Vec<Vec<f32>> = survivors
+        .iter()
+        .map(|&prev| ec[prev].clone())
+        .collect();
+    for prev in 0..old_n {
+        if !survivors.contains(&prev) {
+            for (acc, &e) in workers[0].iter_mut().zip(ec[prev].iter()) {
+                *acc += e;
+            }
+        }
+    }
+    workers.resize_with(new_n, || vec![0.0f32; dim]);
+
+    // Server errors: re-cut the full-length concatenation by the new
+    // layout — the content is position-indexed, not rank-indexed.
+    let full = old_layout.gather(&ec[old_n..2 * old_n]);
+    let new_layout = ChunkLayout::new(dim, new_n);
+    let mut out = workers;
+    for r in new_layout.ranges() {
+        out.push(full[r].to_vec());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn fake_ec(dim: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let base = Rng::new(seed);
+        let layout = ChunkLayout::new(dim, n);
+        let mut ec: Vec<Vec<f32>> = (0..n)
+            .map(|i| base.fork(i as u64).normal_vec(dim, 0.3))
+            .collect();
+        for j in 0..n {
+            ec.push(
+                base.fork(100 + j as u64).normal_vec(layout.size(j), 0.3),
+            );
+        }
+        ec
+    }
+
+    fn worker_mass(ec: &[Vec<f32>], n: usize, dim: usize) -> Vec<f64> {
+        let mut sum = vec![0.0f64; dim];
+        for w in &ec[..n] {
+            for (s, &e) in sum.iter_mut().zip(w.iter()) {
+                *s += e as f64;
+            }
+        }
+        sum
+    }
+
+    fn server_concat(ec: &[Vec<f32>], n: usize) -> Vec<f32> {
+        ec[n..2 * n].iter().flatten().copied().collect()
+    }
+
+    #[test]
+    fn shrink_conserves_error_mass_and_server_content() {
+        let (dim, old_n) = (101, 4);
+        let ec = fake_ec(dim, old_n, 9);
+        for departed in 0..old_n {
+            let survivors: Vec<usize> =
+                (0..old_n).filter(|&r| r != departed).collect();
+            let new_n = survivors.len();
+            let out =
+                reshard_ec(&ec, dim, old_n, &survivors, new_n).unwrap();
+            assert_eq!(out.len(), 2 * new_n);
+            let layout = ChunkLayout::new(dim, new_n);
+            for (i, buf) in out.iter().enumerate() {
+                let want =
+                    if i < new_n { dim } else { layout.size(i - new_n) };
+                assert_eq!(buf.len(), want, "buffer {i}");
+            }
+            // Mass conservation is exact here: the fold adds each
+            // departed value once, so f64 sums match to tight slack.
+            let before = worker_mass(&ec, old_n, dim);
+            let after = worker_mass(&out, new_n, dim);
+            for (b, a) in before.iter().zip(after.iter()) {
+                assert!((b - a).abs() < 1e-5, "mass moved: {b} vs {a}");
+            }
+            assert_eq!(
+                server_concat(&ec, old_n),
+                server_concat(&out, new_n)
+            );
+            // Survivors' own worker errors are untouched except the
+            // fold target (new rank 0).
+            for (new_r, &prev) in survivors.iter().enumerate().skip(1) {
+                assert_eq!(out[new_r], ec[prev], "survivor {prev}");
+            }
+        }
+    }
+
+    #[test]
+    fn growth_gives_joiners_zero_worker_error() {
+        let (dim, old_n, new_n) = (64, 2, 4);
+        let ec = fake_ec(dim, old_n, 3);
+        let out = reshard_ec(&ec, dim, old_n, &[0, 1], new_n).unwrap();
+        assert_eq!(out.len(), 2 * new_n);
+        assert_eq!(out[0], ec[0]);
+        assert_eq!(out[1], ec[1]);
+        assert!(out[2].iter().all(|&e| e == 0.0));
+        assert!(out[3].iter().all(|&e| e == 0.0));
+        assert_eq!(server_concat(&ec, old_n), server_concat(&out, new_n));
+    }
+
+    #[test]
+    fn identity_reshard_is_a_noop() {
+        let (dim, n) = (37, 3);
+        let ec = fake_ec(dim, n, 11);
+        let out = reshard_ec(&ec, dim, n, &[0, 1, 2], n).unwrap();
+        assert_eq!(out, ec);
+    }
+
+    #[test]
+    fn malformed_inputs_are_typed_config_errors() {
+        let ec = fake_ec(16, 2, 5);
+        // wrong buffer count for the claimed world
+        assert!(reshard_ec(&ec, 16, 3, &[0, 1], 2).is_err());
+        // no survivors
+        assert!(reshard_ec(&ec, 16, 2, &[], 2).is_err());
+        // survivors out of order / out of range
+        assert!(reshard_ec(&ec, 16, 2, &[1, 0], 2).is_err());
+        assert!(reshard_ec(&ec, 16, 2, &[0, 5], 2).is_err());
+        // more survivors than the new world holds
+        assert!(reshard_ec(&ec, 16, 2, &[0, 1], 1).is_err());
+        // wrong buffer length
+        let mut bad = ec.clone();
+        bad[0].pop();
+        assert!(reshard_ec(&bad, 16, 2, &[0, 1], 2).is_err());
+    }
+}

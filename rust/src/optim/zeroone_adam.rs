@@ -248,6 +248,38 @@ impl ZeroOneAdam {
         opt
     }
 
+    /// Elastic restore from a checkpoint written at a different world
+    /// size — same contract as
+    /// [`crate::optim::onebit_adam::OneBitAdam::from_checkpoint_elastic`]:
+    /// replicated params/m/v restore unchanged, the sharded EC buffers
+    /// are re-cut by [`crate::optim::reshard::reshard_ec`].  Because
+    /// elastic checkpoints are taken at [`VarianceSyncSchedule`] sync
+    /// points, a world re-formed through this path re-enters exactly at
+    /// a variance-resync boundary.  Flat topology only.
+    pub fn from_checkpoint_elastic(
+        n_workers: usize,
+        mut ck: crate::coordinator::checkpoint::Checkpoint,
+        cfg: ZeroOneAdamConfig,
+        old_workers: usize,
+        survivors: &[usize],
+    ) -> crate::util::error::Result<Self> {
+        if cfg.topology != CommTopology::Flat {
+            return Err(crate::util::error::Error::Config(
+                "elastic restore supports the flat topology only".into(),
+            ));
+        }
+        if !ck.ec.is_empty() {
+            ck.ec = crate::optim::reshard::reshard_ec(
+                &ck.ec,
+                ck.params.len(),
+                old_workers,
+                survivors,
+                n_workers,
+            )?;
+        }
+        Ok(Self::from_checkpoint(n_workers, ck, cfg))
+    }
+
     /// Sync-point variance resync: one full-precision allreduce of the
     /// raw gradients (over the wire when the collective is transported,
     /// so the fp32 bytes are really measured), one EMA fold into `v`,

@@ -1,0 +1,918 @@
+//! Elastic multi-process training worker: one OS process per rank.
+//!
+//! Each worker runs the full 1-bit Adam (or 0/1 Adam) step loop over the
+//! real wire collectives of [`super::runner`], joined into a mesh by the
+//! [`super::rendezvous`] coordinator.  The headline property is
+//! *rank-failure survival with bit-exact re-formation*:
+//!
+//! 1. a rank dies (SIGKILL, or a straggler blowing the dead-peer budget);
+//! 2. a surviving peer's receive surfaces
+//!    [`super::TransportError::RecoveryExhausted`] (or the socket
+//!    cascade's `PeerClosed`), the survivor drops its mesh — which closes
+//!    every socket and propagates the failure to the remaining peers
+//!    within one read;
+//! 3. survivors re-enter rendezvous, agree on a new epoch at `M−1`
+//!    ranks, reload the last checkpoint, re-shard its error-feedback
+//!    state with [`crate::optim::reshard::reshard_ec`], and continue
+//!    from the last completed sync point.
+//!
+//! Because every numeric path the worker uses is bit-identical to the
+//! in-process engines (the wire collectives are property-tested against
+//! [`crate::comm::plain::allreduce_average`] and
+//! `CompressedAllreduce`, and the tree reduction is thread-count
+//! invariant), the resumed trajectory is *bit-equal* to a fresh `M−1`
+//! run restored from the same checkpoint via
+//! [`OneBitAdam::from_checkpoint_elastic`] /
+//! [`ZeroOneAdam::from_checkpoint_elastic`] — params, `m`, `v`, EC
+//! state, and the per-step [`CommStats`] ledger all match exactly.
+//! `rust/tests/elastic.rs` asserts this end to end, and the `elastic`
+//! CLI subcommand does the same across real processes.
+//!
+//! Checkpoint cadence is deterministic on every rank: 1-bit Adam
+//! checkpoints every `ckpt_every` steps plus the warmup→compression
+//! boundary; 0/1 Adam checkpoints exactly at the
+//! [`VarianceSyncSchedule`] boundaries, so a re-formed (or late-joining)
+//! world always re-enters at a variance-resync step.  Rank 0 gathers
+//! the peers' EC buffers over plain `Reduce`-phase frames and writes
+//! `step_NNNNNN.ckpt` + `latest.ckpt` atomically
+//! ([`Checkpoint::save`]'s tmp-then-rename).
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::comm::CommStats;
+use crate::compress::CompressionKind;
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::optim::backend::{
+    adam_step_auto, momentum_refresh_auto, precond_step_auto, AdamHyper,
+    NativeBackend,
+};
+use crate::optim::freeze::{apply_variance_floor, VarianceSyncSchedule};
+use crate::optim::onebit_adam::{OneBitAdam, OneBitAdamConfig};
+use crate::optim::reshard::reshard_ec;
+use crate::optim::zeroone_adam::{ZeroOneAdam, ZeroOneAdamConfig};
+use crate::optim::{DistOptimizer, Phase};
+use crate::tensor::chunk::ChunkLayout;
+use crate::util::error::{Error, Result};
+use crate::util::par::default_threads;
+use crate::util::prng::Rng;
+
+use super::frame::{
+    decode_f32_into, decode_frame, encode_frame, f32_payload, PayloadKind,
+    WirePhase,
+};
+use super::rendezvous::{self, Membership};
+use super::runner::{
+    closed_form_stats, exchange_compressed, plain_average_rank, ExchangeCtx,
+    RankStats,
+};
+use super::{
+    ChaosScenario, ChaosTransport, ReliableTransport, TcpOptions, Transport,
+};
+
+/// Relative variance floor shared with the optimizer configs' default.
+const V_FLOOR_REL: f32 = 1e-4;
+
+/// Which frozen-variance optimizer the elastic worker replicates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElasticMode {
+    /// 1-bit Adam: `warmup_steps` full-precision Adam steps, then
+    /// 1-bit compressed momentum with frozen variance.
+    OneBit {
+        /// Fixed warmup length (the elastic runner does not support the
+        /// auto-switch policy — the switch step must be a pure function
+        /// of `t` so every process agrees on it without negotiation).
+        warmup_steps: usize,
+    },
+    /// 0/1 Adam: 1-bit from step 0, variance resynced on the
+    /// exponentially-spaced [`VarianceSyncSchedule`].
+    ZeroOne {
+        /// Linear spacing base `k` of the sync schedule.
+        var_sync_base: usize,
+    },
+}
+
+/// Everything a worker needs besides the coordinator address.
+#[derive(Debug, Clone)]
+pub struct ElasticOptions {
+    pub mode: ElasticMode,
+    /// Flat parameter dimension.
+    pub dim: usize,
+    /// Total training steps the job runs for (across all epochs).
+    pub steps: usize,
+    /// Seed for the initial parameters and the synthetic gradients.
+    pub seed: u64,
+    /// Gradient noise scale σ of [`synthetic_grad`].
+    pub noise: f32,
+    /// Learning rate during 1-bit Adam's warmup stage.
+    pub lr_warmup: f32,
+    /// Learning rate everywhere else.
+    pub lr: f32,
+    /// 1-bit Adam checkpoint cadence (0/1 Adam ignores this and uses
+    /// the variance-sync boundaries).
+    pub ckpt_every: usize,
+    /// Shared directory checkpoints are written to and restored from.
+    pub ckpt_dir: PathBuf,
+    pub tcp: TcpOptions,
+    /// Optional adversarial wire injected *under* the recovery layer.
+    pub chaos: Option<ChaosScenario>,
+    /// Rendezvous epochs this worker may join before giving up (so a
+    /// deliberately-failed rank in tests exits instead of rejoining).
+    pub max_epochs: usize,
+    /// Bound on one rendezvous join (connect + wait for WELCOME).
+    pub join_timeout: Duration,
+    /// Test hook: at the start of this step (fires once), stall for
+    /// [`Self::straggle_for`] — long enough to blow the peers'
+    /// dead-peer budget and trigger an epoch change.
+    pub straggle_at_step: Option<usize>,
+    pub straggle_for: Duration,
+    /// After each step, overwrite this file with `"<step> <W|C>\n"` so
+    /// an external driver can time a kill against the training phase.
+    pub progress_path: Option<PathBuf>,
+    /// Sleep this long at the start of every step — gives an external
+    /// kill driver a usable window on a problem that would otherwise
+    /// finish in milliseconds.  Numerically inert.
+    pub pace: Duration,
+}
+
+impl ElasticOptions {
+    pub fn new(
+        mode: ElasticMode,
+        dim: usize,
+        steps: usize,
+        ckpt_dir: impl Into<PathBuf>,
+    ) -> Self {
+        ElasticOptions {
+            mode,
+            dim,
+            steps,
+            seed: 42,
+            noise: 0.1,
+            lr_warmup: 0.02,
+            lr: 0.05,
+            ckpt_every: 4,
+            ckpt_dir: ckpt_dir.into(),
+            tcp: TcpOptions::default(),
+            chaos: None,
+            max_epochs: 4,
+            join_timeout: Duration::from_secs(30),
+            straggle_at_step: None,
+            straggle_for: Duration::ZERO,
+            progress_path: None,
+            pace: Duration::ZERO,
+        }
+    }
+}
+
+/// What one worker did, returned when it finishes (and serialized by the
+/// CLI as `report_<id>.json`).
+#[derive(Debug, Clone)]
+pub struct ElasticReport {
+    /// Final epoch's rank / world / epoch number.
+    pub rank: usize,
+    pub world: usize,
+    pub epoch: u32,
+    /// Rendezvous epochs this worker participated in.
+    pub epochs_joined: usize,
+    /// Steps completed when the worker returned.
+    pub steps_done: usize,
+    /// Checkpoint step the last epoch change resumed from.
+    pub resume_step: Option<u64>,
+    /// Previous-epoch ranks lost at the last epoch change.
+    pub departed: Vec<usize>,
+    /// Previous-epoch ranks that survived it (reshard order).
+    pub survivors: Vec<usize>,
+    /// Wall-clock from failure detection to restored state in the new
+    /// epoch (rendezvous + mesh rebuild + checkpoint reload).
+    pub recovery_ms: Option<f64>,
+    /// Mean step wall-clock in the epoch that hit the failure.
+    pub pre_fail_step_ms: f64,
+    /// Mean step wall-clock in the final epoch.
+    pub post_resume_step_ms: f64,
+    /// `0.5‖params‖²` of the final parameters.
+    pub final_loss: f64,
+    /// Cumulative payload bytes per GPU since the final epoch's
+    /// (re)start point — comparable to the reference run's ledger.
+    pub comm_alltoall_bytes: usize,
+    pub comm_allgather_bytes: usize,
+    /// `latest.ckpt` holding the final state (written by rank 0).
+    pub final_checkpoint: PathBuf,
+}
+
+// ---- deterministic problem -------------------------------------------------
+
+/// Initial parameters every run of a given seed starts from.
+pub fn initial_params(seed: u64, dim: usize) -> Vec<f32> {
+    Rng::new(seed).normal_vec(dim, 0.5)
+}
+
+/// Synthetic quadratic-bowl gradient for `worker` at `step`:
+/// `g = params + σ·η` with `η` drawn from a per-(step, worker) stream.
+/// Identical on every process because the parameters are replicated, so
+/// the in-process reference runs see byte-identical inputs.
+pub fn synthetic_grad(
+    seed: u64,
+    step: usize,
+    worker: usize,
+    params: &[f32],
+    noise: f32,
+) -> Vec<f32> {
+    let eta = Rng::new(seed)
+        .fork(1 + step as u64)
+        .fork(worker as u64)
+        .normal_vec(params.len(), noise);
+    params.iter().zip(eta).map(|(&p, e)| p + e).collect()
+}
+
+/// Loss of the quadratic bowl the synthetic gradients descend.
+pub fn quad_loss(params: &[f32]) -> f64 {
+    0.5 * params.iter().map(|&p| (p as f64) * (p as f64)).sum::<f64>()
+}
+
+/// Learning rate at step `t` (1-bit Adam uses the warmup rate during
+/// its full-precision stage).
+pub fn lr_for(mode: ElasticMode, t: usize, lr_warmup: f32, lr: f32) -> f32 {
+    match mode {
+        ElasticMode::OneBit { warmup_steps } if t < warmup_steps => lr_warmup,
+        _ => lr,
+    }
+}
+
+/// Whether a checkpoint is due after completing `done` of `total` steps.
+/// Pure in its arguments so every rank (and the reference run) agrees.
+fn ckpt_due(
+    mode: ElasticMode,
+    ckpt_every: usize,
+    total: usize,
+    done: usize,
+) -> bool {
+    if done == total {
+        return true;
+    }
+    match mode {
+        ElasticMode::OneBit { warmup_steps } => {
+            (ckpt_every > 0 && done % ckpt_every == 0) || done == warmup_steps
+        }
+        ElasticMode::ZeroOne { var_sync_base } => {
+            // The *next* step is a variance resync, so a world restored
+            // from this checkpoint re-enters exactly at a sync boundary.
+            VarianceSyncSchedule::new(var_sync_base).is_sync(done)
+        }
+    }
+}
+
+/// Ring-convention ledger of one full-precision average (matches
+/// [`crate::comm::plain::allreduce_average`] and the runner).
+fn ring_stats(dim: usize, n: usize) -> CommStats {
+    let bytes = dim * 4;
+    let ring_per_gpu = if n > 1 { 2 * bytes * (n - 1) / n } else { 0 };
+    CommStats {
+        alltoall_bytes_per_gpu: ring_per_gpu / 2,
+        allgather_bytes_per_gpu: ring_per_gpu / 2,
+        uncompressed_bytes: bytes,
+    }
+}
+
+/// Paths rank 0 writes and everyone restores from.
+pub fn latest_path(dir: &std::path::Path) -> PathBuf {
+    dir.join("latest.ckpt")
+}
+
+pub fn step_path(dir: &std::path::Path, step: u64) -> PathBuf {
+    dir.join(format!("step_{step:06}.ckpt"))
+}
+
+// ---- worker state ----------------------------------------------------------
+
+struct WorkerState {
+    t: usize,
+    phase: Phase,
+    params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    /// Full-length worker-side error feedback.
+    worker_err: Vec<f32>,
+    /// Own-chunk server-side error feedback.
+    server_err: Vec<f32>,
+}
+
+fn fresh_state(opts: &ElasticOptions, m: &Membership) -> WorkerState {
+    let layout = ChunkLayout::new(opts.dim, m.world);
+    WorkerState {
+        t: 0,
+        phase: match opts.mode {
+            ElasticMode::OneBit { .. } => Phase::Warmup,
+            ElasticMode::ZeroOne { .. } => Phase::Compression,
+        },
+        params: initial_params(opts.seed, opts.dim),
+        m: vec![0.0; opts.dim],
+        v: vec![0.0; opts.dim],
+        worker_err: vec![0.0; opts.dim],
+        server_err: vec![0.0; layout.size(m.rank)],
+    }
+}
+
+/// Restore from a checkpoint written by the previous epoch, re-sharding
+/// its EC state to this epoch's world size.
+fn restore_state(
+    ck: Checkpoint,
+    m: &Membership,
+    opts: &ElasticOptions,
+) -> Result<WorkerState> {
+    if ck.dim() != opts.dim {
+        return Err(Error::Config(format!(
+            "checkpoint dim {} does not match configured dim {}",
+            ck.dim(),
+            opts.dim
+        )));
+    }
+    let layout = ChunkLayout::new(opts.dim, m.world);
+    let (worker_err, server_err) = if ck.ec.is_empty() {
+        // Warmup-phase (or initial) checkpoint: EC state is zero.
+        (vec![0.0; opts.dim], vec![0.0; layout.size(m.rank)])
+    } else {
+        if ck.ec.len() != 2 * m.prev_world {
+            return Err(Error::Config(format!(
+                "checkpoint carries EC for {} ranks but the previous \
+                 epoch had {} — a world re-formed twice without reaching \
+                 a checkpoint boundary cannot be resumed",
+                ck.ec.len() / 2,
+                m.prev_world
+            )));
+        }
+        let ec =
+            reshard_ec(&ck.ec, opts.dim, m.prev_world, &m.survivors, m.world)?;
+        (ec[m.rank].clone(), ec[m.world + m.rank].clone())
+    };
+    Ok(WorkerState {
+        t: ck.step as usize,
+        phase: ck.phase,
+        params: ck.params,
+        m: ck.m,
+        v: ck.v,
+        worker_err,
+        server_err,
+    })
+}
+
+fn checkpoint_of(st: &WorkerState, ec: Vec<Vec<f32>>) -> Checkpoint {
+    Checkpoint {
+        step: st.t as u64,
+        phase: st.phase,
+        params: st.params.clone(),
+        m: st.m.clone(),
+        v: st.v.clone(),
+        ec,
+    }
+}
+
+// ---- checkpoint exchange ---------------------------------------------------
+
+/// Gather the compression-stage EC buffers on rank 0 and write the
+/// step-tagged + `latest` checkpoints atomically.  Warmup-phase
+/// checkpoints carry no EC (errors are identically zero), so no frames
+/// move.  Every rank calls this at the same `t` — the schedule is a pure
+/// function of the step — so the frame counts always balance.
+fn write_checkpoint(
+    st: &WorkerState,
+    m: &Membership,
+    ep: &mut dyn Transport,
+    opts: &ElasticOptions,
+    tag: u32,
+) -> Result<()> {
+    let with_ec = st.phase == Phase::Compression;
+    if m.rank != 0 {
+        if with_ec {
+            let me = m.rank as u16;
+            for buf in [&st.worker_err, &st.server_err] {
+                let frame = encode_frame(
+                    PayloadKind::F32Plain,
+                    WirePhase::Reduce,
+                    me,
+                    tag,
+                    &f32_payload(buf),
+                );
+                ep.send(0, &frame)?;
+            }
+        }
+        return Ok(());
+    }
+    let ec = if with_ec {
+        let layout = ChunkLayout::new(opts.dim, m.world);
+        let mut workers = vec![st.worker_err.clone()];
+        let mut servers = vec![st.server_err.clone()];
+        for peer in 1..m.world {
+            let mut w = vec![0.0f32; opts.dim];
+            let mut s = vec![0.0f32; layout.size(peer)];
+            for buf in [&mut w, &mut s] {
+                let bytes = ep.recv(peer)?;
+                let f = decode_frame(&bytes).map_err(Error::Frame)?;
+                if f.phase != WirePhase::Reduce
+                    || f.step != tag
+                    || f.rank as usize != peer
+                {
+                    return Err(Error::msg(format!(
+                        "checkpoint gather: unexpected frame from rank \
+                         {peer} (phase {:?}, step {}, rank {})",
+                        f.phase, f.step, f.rank
+                    )));
+                }
+                decode_f32_into(f.payload, buf).map_err(Error::Frame)?;
+            }
+            workers.push(w);
+            servers.push(s);
+        }
+        workers.extend(servers);
+        workers
+    } else {
+        Vec::new()
+    };
+    let ck = checkpoint_of(st, ec);
+    ck.save(step_path(&opts.ckpt_dir, ck.step))?;
+    ck.save(latest_path(&opts.ckpt_dir))?;
+    Ok(())
+}
+
+// ---- the worker ------------------------------------------------------------
+
+fn is_peer_failure(e: &Error) -> bool {
+    matches!(e, Error::Transport(_) | Error::Io(_))
+}
+
+fn mean_ms(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Run one rank of an elastic job to completion: join, train, survive
+/// epoch changes, return the report.  Blocks for the whole job.
+pub fn run_elastic_worker(
+    coordinator: SocketAddr,
+    opts: &ElasticOptions,
+) -> Result<ElasticReport> {
+    opts.tcp.validate()?;
+    if opts.max_epochs == 0 {
+        return Err(Error::Config("max_epochs must be nonzero".into()));
+    }
+    std::fs::create_dir_all(&opts.ckpt_dir)?;
+    let mut straggle_at = opts.straggle_at_step;
+    let mut prev_rank: Option<usize> = None;
+    let mut last_step: u64 = 0;
+    let mut failed_at: Option<Instant> = None;
+    let mut report = ElasticReport {
+        rank: 0,
+        world: 0,
+        epoch: 0,
+        epochs_joined: 0,
+        steps_done: 0,
+        resume_step: None,
+        departed: Vec::new(),
+        survivors: Vec::new(),
+        recovery_ms: None,
+        pre_fail_step_ms: 0.0,
+        post_resume_step_ms: 0.0,
+        final_loss: 0.0,
+        comm_alltoall_bytes: 0,
+        comm_allgather_bytes: 0,
+        final_checkpoint: latest_path(&opts.ckpt_dir),
+    };
+
+    for attempt in 0..opts.max_epochs {
+        let (listener, mesh_addr) = rendezvous::bind_mesh_listener()?;
+        let m = rendezvous::join(
+            coordinator,
+            mesh_addr,
+            prev_rank,
+            last_step,
+            opts.join_timeout,
+        )?;
+        let tcp_ep = rendezvous::connect_mesh(&m, &listener, &opts.tcp)?;
+        let mut ep: Box<dyn Transport> = match &opts.chaos {
+            Some(sc) => Box::new(ReliableTransport::new(
+                ChaosTransport::new(tcp_ep, sc.clone()),
+                &opts.tcp,
+            )),
+            None => Box::new(ReliableTransport::new(tcp_ep, &opts.tcp)),
+        };
+
+        let mut st = if m.epoch == 1 {
+            let st = fresh_state(opts, &m);
+            if m.rank == 0 {
+                // Seed the shared directory so the very first epoch
+                // change always has a restore point.
+                checkpoint_of(&st, Vec::new())
+                    .save(latest_path(&opts.ckpt_dir))?;
+            }
+            st
+        } else {
+            let ck = Checkpoint::load(latest_path(&opts.ckpt_dir))?;
+            let st = restore_state(ck, &m, opts)?;
+            report.resume_step = Some(st.t as u64);
+            report.departed = m.departed.clone();
+            report.survivors = m.survivors.clone();
+            st
+        };
+
+        prev_rank = Some(m.rank);
+        report.rank = m.rank;
+        report.world = m.world;
+        report.epoch = m.epoch;
+        report.epochs_joined = attempt + 1;
+        // The comm ledger restarts at each (re)start point so it is
+        // directly comparable to a reference run from the same point.
+        report.comm_alltoall_bytes = 0;
+        report.comm_allgather_bytes = 0;
+        if let Some(t0) = failed_at.take() {
+            report.recovery_ms = Some(t0.elapsed().as_secs_f64() * 1e3);
+        }
+
+        let mut step_ms: Vec<f64> = Vec::new();
+        match run_epoch(
+            &mut st,
+            &m,
+            ep.as_mut(),
+            opts,
+            &mut straggle_at,
+            &mut report,
+            &mut step_ms,
+        ) {
+            Ok(()) => {
+                report.steps_done = st.t;
+                report.final_loss = quad_loss(&st.params);
+                report.post_resume_step_ms = mean_ms(&step_ms);
+                if report.resume_step.is_none() {
+                    report.pre_fail_step_ms = report.post_resume_step_ms;
+                }
+                return Ok(report);
+            }
+            Err(e) if is_peer_failure(&e) && attempt + 1 < opts.max_epochs => {
+                failed_at = Some(Instant::now());
+                if report.resume_step.is_none() {
+                    report.pre_fail_step_ms = mean_ms(&step_ms);
+                }
+                last_step = st.t as u64;
+                // Dropping the endpoint closes every socket, cascading
+                // the failure to any peer still blocked in a receive.
+                drop(ep);
+                drop(listener);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(Error::msg(format!(
+        "elastic worker gave up after {} epoch(s)",
+        opts.max_epochs
+    )))
+}
+
+/// The step loop of one epoch.  Returns `Ok(())` when the job's step
+/// budget is exhausted; a transport error means a peer died and the
+/// caller should re-enter rendezvous.
+#[allow(clippy::too_many_arguments)]
+fn run_epoch(
+    st: &mut WorkerState,
+    m: &Membership,
+    ep: &mut dyn Transport,
+    opts: &ElasticOptions,
+    straggle_at: &mut Option<usize>,
+    report: &mut ElasticReport,
+    step_ms: &mut Vec<f64>,
+) -> Result<()> {
+    let dim = opts.dim;
+    let n = m.world;
+    let rank = m.rank;
+    let layout = ChunkLayout::new(dim, n);
+    let peers: Vec<usize> = (0..n).collect();
+    let threads = default_threads();
+    let backend = NativeBackend;
+    let hyper = AdamHyper::default();
+    let mut rank_stats = RankStats::default();
+    let mut avg = vec![0.0f32; dim];
+    let mut avg_g = vec![0.0f32; dim];
+    let mut local_m = vec![vec![0.0f32; dim]];
+
+    while st.t < opts.steps {
+        let t = st.t;
+        let started = Instant::now();
+        if !opts.pace.is_zero() {
+            std::thread::sleep(opts.pace);
+        }
+        if *straggle_at == Some(t) {
+            *straggle_at = None;
+            std::thread::sleep(opts.straggle_for);
+        }
+        let grad = synthetic_grad(opts.seed, t, rank, &st.params, opts.noise);
+        let lr = lr_for(opts.mode, t, opts.lr_warmup, opts.lr);
+        // Two collectives can run within one training step (0/1 Adam's
+        // sync steps); give each its own wire step tag.
+        let tag1 = (2 * t + 1) as u32;
+        let tag2 = (2 * t + 2) as u32;
+        let mut comm = CommStats::default();
+
+        match opts.mode {
+            ElasticMode::OneBit { warmup_steps } => {
+                if st.phase == Phase::Warmup && t >= warmup_steps {
+                    // Freeze: reset EC, floor the frozen variance —
+                    // exactly `OneBitAdam::freeze_now`.
+                    st.phase = Phase::Compression;
+                    st.worker_err.iter_mut().for_each(|x| *x = 0.0);
+                    st.server_err.iter_mut().for_each(|x| *x = 0.0);
+                    apply_variance_floor(V_FLOOR_REL, &mut st.v);
+                }
+            }
+            ElasticMode::ZeroOne { var_sync_base } => {
+                if VarianceSyncSchedule::new(var_sync_base).is_sync(t) {
+                    // Full-precision variance resync of the raw
+                    // gradient, exactly `ZeroOneAdam::variance_resync`.
+                    plain_average_rank(
+                        tag1,
+                        n,
+                        rank,
+                        &layout,
+                        ep,
+                        &grad,
+                        &mut avg_g,
+                        &mut rank_stats,
+                    )?;
+                    let beta2 = hyper.beta2;
+                    let omb2 = 1.0 - beta2;
+                    for (vi, &gi) in st.v.iter_mut().zip(avg_g.iter()) {
+                        *vi = beta2.mul_add(*vi, (omb2 * gi) * gi);
+                    }
+                    apply_variance_floor(V_FLOOR_REL, &mut st.v);
+                    comm.merge(ring_stats(dim, n));
+                }
+            }
+        }
+
+        if st.phase == Phase::Warmup {
+            // Full-precision Adam step over the wire.
+            plain_average_rank(
+                tag1,
+                n,
+                rank,
+                &layout,
+                ep,
+                &grad,
+                &mut avg,
+                &mut rank_stats,
+            )?;
+            adam_step_auto(
+                &backend,
+                threads,
+                hyper,
+                &mut st.params,
+                &mut st.m,
+                &mut st.v,
+                &avg,
+                lr,
+            );
+            comm.merge(ring_stats(dim, n));
+        } else {
+            // Error-compensated 1-bit momentum exchange + frozen-
+            // variance preconditioned step.
+            momentum_refresh_auto(
+                &backend,
+                threads,
+                hyper.beta1,
+                &st.m,
+                std::slice::from_ref(&grad),
+                &mut local_m,
+            );
+            let ctx = ExchangeCtx {
+                kind: CompressionKind::OneBit,
+                step: tag2,
+                peers: &peers,
+                me: rank,
+                layout: &layout,
+            };
+            exchange_compressed(
+                &ctx,
+                ep,
+                &local_m[0],
+                &mut st.worker_err,
+                &mut st.server_err,
+                &mut avg,
+                &mut rank_stats,
+            )?;
+            st.m.copy_from_slice(&avg);
+            precond_step_auto(
+                &backend,
+                threads,
+                hyper.eps,
+                &mut st.params,
+                &st.m,
+                &st.v,
+                lr,
+            );
+            comm.merge(closed_form_stats(
+                CompressionKind::OneBit,
+                &layout,
+                dim,
+            ));
+        }
+
+        st.t = t + 1;
+        report.comm_alltoall_bytes += comm.alltoall_bytes_per_gpu;
+        report.comm_allgather_bytes += comm.allgather_bytes_per_gpu;
+
+        if ckpt_due(opts.mode, opts.ckpt_every, opts.steps, st.t) {
+            write_checkpoint(st, m, ep, opts, tag2)?;
+        }
+        ep.drain_step()?;
+        if let Some(p) = &opts.progress_path {
+            let tag = match st.phase {
+                Phase::Warmup => 'W',
+                Phase::Compression => 'C',
+            };
+            let _ = std::fs::write(p, format!("{} {tag}\n", st.t));
+        }
+        step_ms.push(started.elapsed().as_secs_f64() * 1e3);
+    }
+    Ok(())
+}
+
+// ---- in-process reference --------------------------------------------------
+
+/// The in-process optimizer the elastic worker must bit-match.
+pub enum ReferenceOpt {
+    OneBit(OneBitAdam),
+    ZeroOne(ZeroOneAdam),
+}
+
+impl ReferenceOpt {
+    fn step(&mut self, grads: &[Vec<f32>], lr: f32) -> CommStats {
+        match self {
+            ReferenceOpt::OneBit(o) => o.step(grads, lr).comm,
+            ReferenceOpt::ZeroOne(o) => o.step(grads, lr).comm,
+        }
+    }
+
+    fn params(&self) -> &[f32] {
+        match self {
+            ReferenceOpt::OneBit(o) => o.params(),
+            ReferenceOpt::ZeroOne(o) => o.params(),
+        }
+    }
+
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        match self {
+            ReferenceOpt::OneBit(o) => o.to_checkpoint(),
+            ReferenceOpt::ZeroOne(o) => o.to_checkpoint(),
+        }
+    }
+}
+
+/// Result of [`reference_run`]: final state + cumulative comm ledger.
+pub struct ReferenceResult {
+    pub checkpoint: Checkpoint,
+    pub comm_alltoall_bytes: usize,
+    pub comm_allgather_bytes: usize,
+}
+
+/// Run the in-process engine over the same synthetic problem: fresh at
+/// `world` ranks, or restored from `ck` with `survivors` of a previous
+/// `old_world`-rank epoch (the elastic restore path).  The returned
+/// trajectory is the ground truth the multi-process run must bit-match.
+pub fn reference_run(
+    world: usize,
+    from: Option<(&Checkpoint, usize, &[usize])>,
+    opts: &ElasticOptions,
+) -> Result<ReferenceResult> {
+    let mut opt = match opts.mode {
+        ElasticMode::OneBit { warmup_steps } => {
+            let cfg = OneBitAdamConfig {
+                warmup_steps: Some(warmup_steps),
+                ..OneBitAdamConfig::default()
+            };
+            ReferenceOpt::OneBit(match from {
+                Some((ck, old_world, survivors)) => {
+                    OneBitAdam::from_checkpoint_elastic(
+                        world,
+                        ck.clone(),
+                        cfg,
+                        old_world,
+                        survivors,
+                    )?
+                }
+                None => OneBitAdam::new(
+                    world,
+                    initial_params(opts.seed, opts.dim),
+                    cfg,
+                ),
+            })
+        }
+        ElasticMode::ZeroOne { var_sync_base } => {
+            let cfg = ZeroOneAdamConfig {
+                var_sync_base,
+                ..ZeroOneAdamConfig::default()
+            };
+            ReferenceOpt::ZeroOne(match from {
+                Some((ck, old_world, survivors)) => {
+                    ZeroOneAdam::from_checkpoint_elastic(
+                        world,
+                        ck.clone(),
+                        cfg,
+                        old_world,
+                        survivors,
+                    )?
+                }
+                None => ZeroOneAdam::new(
+                    world,
+                    initial_params(opts.seed, opts.dim),
+                    cfg,
+                ),
+            })
+        }
+    };
+    let t0 = match from {
+        Some((ck, _, _)) => ck.step as usize,
+        None => 0,
+    };
+    let mut a2a = 0usize;
+    let mut ag = 0usize;
+    for t in t0..opts.steps {
+        let grads: Vec<Vec<f32>> = (0..world)
+            .map(|r| {
+                synthetic_grad(opts.seed, t, r, opt.params(), opts.noise)
+            })
+            .collect();
+        let comm =
+            opt.step(&grads, lr_for(opts.mode, t, opts.lr_warmup, opts.lr));
+        a2a += comm.alltoall_bytes_per_gpu;
+        ag += comm.allgather_bytes_per_gpu;
+    }
+    Ok(ReferenceResult {
+        checkpoint: opt.to_checkpoint(),
+        comm_alltoall_bytes: a2a,
+        comm_allgather_bytes: ag,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_schedule_is_deterministic_and_mode_aware() {
+        let ob = ElasticMode::OneBit { warmup_steps: 6 };
+        assert!(ckpt_due(ob, 4, 20, 4));
+        assert!(ckpt_due(ob, 4, 20, 6)); // warmup boundary
+        assert!(!ckpt_due(ob, 4, 20, 7));
+        assert!(ckpt_due(ob, 4, 20, 20)); // final step
+        assert!(!ckpt_due(ob, 0, 20, 4)); // cadence disabled
+        let zo = ElasticMode::ZeroOne { var_sync_base: 2 };
+        let sched = VarianceSyncSchedule::new(2);
+        for done in 1..=20 {
+            assert_eq!(
+                ckpt_due(zo, 4, 21, done),
+                sched.is_sync(done),
+                "done={done}"
+            );
+        }
+    }
+
+    #[test]
+    fn synthetic_grads_are_per_worker_streams_of_the_params() {
+        let p = initial_params(7, 32);
+        let g0 = synthetic_grad(7, 3, 0, &p, 0.1);
+        let g1 = synthetic_grad(7, 3, 1, &p, 0.1);
+        assert_ne!(g0, g1);
+        assert_eq!(g0, synthetic_grad(7, 3, 0, &p, 0.1));
+        // Zero noise degenerates to the exact bowl gradient.
+        assert_eq!(synthetic_grad(7, 3, 0, &p, 0.0), p);
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_worlds() {
+        let dim = 16;
+        let ck = Checkpoint {
+            step: 5,
+            phase: Phase::Compression,
+            params: vec![0.0; dim],
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            ec: vec![vec![0.0; dim]; 6], // written by a 3-rank epoch
+        };
+        let m = Membership {
+            epoch: 3,
+            rank: 0,
+            world: 2,
+            prev_world: 4, // but rendezvous says 4 ranks existed
+            departed: vec![2, 3],
+            survivors: vec![0, 1],
+            peers: Vec::new(),
+        };
+        let opts = ElasticOptions::new(
+            ElasticMode::OneBit { warmup_steps: 2 },
+            dim,
+            10,
+            std::env::temp_dir(),
+        );
+        assert!(restore_state(ck, &m, &opts).is_err());
+    }
+}

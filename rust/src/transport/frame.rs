@@ -133,6 +133,11 @@ pub enum WirePhase {
     /// Recovery layer: sender finished its step on this link; the payload
     /// carries the last data sequence number it sent (u32).
     Fin,
+    /// Elastic membership: join/welcome/hello control traffic between
+    /// ranks and the rendezvous coordinator.  The frame's `step` field
+    /// carries the membership **epoch**, so a stale frame from a previous
+    /// mesh generation is rejected by tag, not by luck.
+    Rendezvous,
 }
 
 impl WirePhase {
@@ -145,6 +150,7 @@ impl WirePhase {
             WirePhase::Broadcast => 4,
             WirePhase::Nack => 5,
             WirePhase::Fin => 6,
+            WirePhase::Rendezvous => 7,
         }
     }
 
@@ -157,6 +163,7 @@ impl WirePhase {
             4 => Ok(WirePhase::Broadcast),
             5 => Ok(WirePhase::Nack),
             6 => Ok(WirePhase::Fin),
+            7 => Ok(WirePhase::Rendezvous),
             other => Err(FrameError::BadPhase(other)),
         }
     }
@@ -903,7 +910,7 @@ mod tests {
         }
         assert!(PayloadKind::from_byte(0xFF).is_err());
         assert!(PayloadKind::from_byte(0x31).is_err());
-        for p in 0u8..7 {
+        for p in 0u8..8 {
             assert_eq!(
                 WirePhase::from_byte(p).unwrap().to_byte(),
                 p

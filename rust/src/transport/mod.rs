@@ -30,7 +30,9 @@
 //! bandwidth-capped links bit-identically.
 
 pub mod chaos;
+pub mod elastic;
 pub mod frame;
+pub mod rendezvous;
 pub mod runner;
 
 use std::io::{BufReader, BufWriter, Write};
@@ -42,6 +44,8 @@ use crate::util::error::{Error, Result};
 
 pub use chaos::{ChaosScenario, ChaosTransport, RecoveryStats,
     ReliableTransport};
+pub use elastic::{ElasticMode, ElasticOptions, ElasticReport};
+pub use rendezvous::{Coordinator, Membership, RendezvousOptions};
 pub use runner::{TransportCollective, TransportStats};
 
 /// Default upper bound on one blocking [`Transport::recv`].  Collective
@@ -171,6 +175,25 @@ pub struct TcpOptions {
     pub attempt_timeout: Duration,
 }
 
+impl TcpOptions {
+    /// Reject inconsistent knob combinations before any mesh is built.
+    /// `attempt_timeout > recv_timeout` would let a single recovery-layer
+    /// probe outlive the whole dead-peer budget — the retry loop then
+    /// degenerates to one attempt with a misleading `retries` count, a
+    /// silent misconfiguration until a peer actually dies.
+    pub fn validate(&self) -> Result<()> {
+        if self.attempt_timeout > self.recv_timeout {
+            return Err(Error::Config(format!(
+                "TcpOptions: attempt_timeout ({:?}) exceeds recv_timeout \
+                 ({:?}) — the per-probe wait must fit inside the total \
+                 dead-peer budget",
+                self.attempt_timeout, self.recv_timeout
+            )));
+        }
+        Ok(())
+    }
+}
+
 impl Default for TcpOptions {
     fn default() -> Self {
         TcpOptions {
@@ -270,6 +293,7 @@ pub fn build_mesh(
     n: usize,
     tcp: &TcpOptions,
 ) -> Result<Vec<Box<dyn Transport>>> {
+    tcp.validate()?;
     match backend {
         TransportBackend::InMemory => {
             Ok(in_memory_mesh_with(n, tcp.recv_timeout)
@@ -454,6 +478,52 @@ pub fn tcp_loopback_mesh(
 }
 
 impl TcpTransport {
+    /// Build one rank's endpoint from already-connected peer streams —
+    /// the constructor the elastic rendezvous uses, where each process
+    /// dials real remote addresses instead of loopback-pairing inside
+    /// one process.  `peers` maps peer rank → its full-duplex stream
+    /// (every rank except `rank` itself must appear exactly once).
+    pub fn from_streams(
+        rank: usize,
+        n: usize,
+        peers: Vec<(usize, TcpStream)>,
+        opts: &TcpOptions,
+    ) -> Result<TcpTransport> {
+        opts.validate()?;
+        if peers.len() != n.saturating_sub(1) {
+            return Err(Error::Config(format!(
+                "rank {rank}: mesh needs {} peer streams, got {}",
+                n.saturating_sub(1),
+                peers.len()
+            )));
+        }
+        let cap = opts.buffer_bytes.max(frame::FRAME_OVERHEAD);
+        let mut ep = TcpTransport {
+            rank,
+            n,
+            writers: (0..n).map(|_| None).collect(),
+            raw: (0..n).map(|_| None).collect(),
+            rx: (0..n).map(|_| None).collect(),
+            readers: (0..n).map(|_| None).collect(),
+            timeout: opts.recv_timeout,
+        };
+        for (peer, stream) in peers {
+            if peer == rank || peer >= n {
+                return Err(Error::Config(format!(
+                    "rank {rank}: invalid peer rank {peer} in mesh of {n}"
+                )));
+            }
+            if ep.raw[peer].is_some() {
+                return Err(Error::Config(format!(
+                    "rank {rank}: duplicate stream for peer {peer}"
+                )));
+            }
+            stream.set_nodelay(opts.nodelay)?;
+            ep.install_peer(peer, stream, cap)?;
+        }
+        Ok(ep)
+    }
+
     /// Wire up the stream to `peer`: buffered writer for sends, plus the
     /// receive thread that drains incoming frames into a queue.
     fn install_peer(
@@ -709,6 +779,38 @@ mod tests {
         let opts = TcpOptions::default();
         assert_eq!(opts.attempt_timeout, ATTEMPT_TIMEOUT);
         assert!(opts.attempt_timeout < opts.recv_timeout);
+    }
+
+    #[test]
+    fn attempt_timeout_exceeding_total_budget_is_a_typed_config_error() {
+        // Regression: a per-probe wait longer than the total dead-peer
+        // budget used to be accepted silently and degenerate the retry
+        // loop to one attempt.  Now it is rejected at construction.
+        let bad = TcpOptions {
+            recv_timeout: Duration::from_millis(100),
+            attempt_timeout: Duration::from_millis(500),
+            ..TcpOptions::default()
+        };
+        match bad.validate() {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("attempt_timeout"), "{msg}")
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        for backend in [TransportBackend::InMemory, TransportBackend::Tcp] {
+            assert!(
+                build_mesh(backend, 2, &bad).is_err(),
+                "{backend:?}: build_mesh must reject invalid options"
+            );
+        }
+        // equal budgets are legal (one full-length attempt)
+        let edge = TcpOptions {
+            recv_timeout: Duration::from_millis(100),
+            attempt_timeout: Duration::from_millis(100),
+            ..TcpOptions::default()
+        };
+        assert!(edge.validate().is_ok());
+        assert!(TcpOptions::default().validate().is_ok());
     }
 
     #[test]

@@ -1,0 +1,685 @@
+//! Elastic rendezvous: how separate OS processes discover each other,
+//! agree on a **membership epoch**, and build the real-TCP mesh from
+//! exchanged addresses instead of in-process loopback pairing.
+//!
+//! The protocol is three control messages over the existing v2 frame
+//! codec ([`PayloadKind::Control`] + [`WirePhase::Rendezvous`], epoch in
+//! the frame's `step` field):
+//!
+//! * **JOIN** — a rank connects to the coordinator and announces the
+//!   address of its own mesh listener, plus the rank it held in the
+//!   previous epoch (if any) and the last step it completed.
+//! * **WELCOME** — once the coordinator decides an epoch is complete it
+//!   answers every pending member on its join connection: the new world
+//!   size, the member's new rank, the previous world size, which
+//!   previous-epoch ranks departed, and the full roster of mesh
+//!   addresses.  Survivors are ordered by their previous rank (so the
+//!   EC re-shard in [`crate::optim::reshard`] is deterministic) and
+//!   fresh joiners are appended in arrival order.
+//! * **HELLO** — mesh build: each rank dials every *lower* rank's
+//!   listener and identifies itself with a HELLO carrying its rank and
+//!   the epoch.  The acceptor rejects HELLOs from any other epoch, so a
+//!   stale dialer from a dead mesh generation cannot splice into the
+//!   new one; every epoch runs on entirely fresh sockets.
+//!
+//! Epoch formation rule: epoch 1 forms when all `world` expected ranks
+//! have joined.  Later epochs form either when every member of the last
+//! epoch (or more — late joiners ride along) is back, or when at least
+//! `min_world` members are pending and no new JOIN has arrived for a
+//! quiet `window` — a SIGKILLed rank never rejoins, so survivors form
+//! the M−1 epoch after one window.  That window is the rendezvous term
+//! of the bounded epoch-change window modeled by
+//! [`crate::netsim::epoch_change_window_bound`].
+
+use std::io::Write;
+use std::net::{
+    Ipv4Addr, SocketAddr, SocketAddrV4, TcpListener, TcpStream,
+};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::util::error::{Error, Result};
+
+use super::frame::{self, PayloadKind, WirePhase};
+use super::{TcpOptions, TcpTransport};
+
+/// Frame `rank` tag used before a rank is assigned (JOIN) and by the
+/// coordinator itself (WELCOME).
+const NO_RANK: u16 = 0xFFFF;
+
+/// Payload tag bytes of the three rendezvous messages.
+const TAG_JOIN: u8 = 0x01;
+const TAG_WELCOME: u8 = 0x02;
+const TAG_HELLO: u8 = 0x03;
+
+/// Poll slice of the coordinator accept loop and the mesh accept loop.
+const POLL: Duration = Duration::from_millis(2);
+
+/// Retry backoff while dialing a listener that is not up yet.
+const DIAL_BACKOFF: Duration = Duration::from_millis(20);
+
+/// Coordinator policy knobs.
+#[derive(Debug, Clone)]
+pub struct RendezvousOptions {
+    /// Ranks epoch 1 waits for.
+    pub world: usize,
+    /// Fewest ranks a later epoch may form with.
+    pub min_world: usize,
+    /// Quiet period after the last JOIN before a partial (`< last
+    /// world`) epoch forms — the time budget a slow survivor has to
+    /// rejoin before being counted out.
+    pub window: Duration,
+    /// Read/write timeout on one coordinator connection.
+    pub join_timeout: Duration,
+}
+
+impl RendezvousOptions {
+    /// Defaults for an initial world of `world`: later epochs may shrink
+    /// by one (but never below one rank), 2 s quiet window, 10 s per
+    /// connection.
+    pub fn new(world: usize) -> Self {
+        RendezvousOptions {
+            world,
+            min_world: world.saturating_sub(1).max(1),
+            window: Duration::from_secs(2),
+            join_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// What one rank learns from a WELCOME: its place in the new epoch and
+/// everything needed to build the mesh and re-shard optimizer state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Membership {
+    /// Monotonic epoch number, starting at 1.
+    pub epoch: u32,
+    /// This rank's position in the new epoch.
+    pub rank: usize,
+    /// Ranks in the new epoch.
+    pub world: usize,
+    /// World size of the previous epoch (0 for epoch 1).
+    pub prev_world: usize,
+    /// Previous-epoch ranks that did not rejoin (ascending).
+    pub departed: Vec<usize>,
+    /// Previous-epoch ranks that did rejoin (ascending) — new rank `i <
+    /// survivors.len()` is the member that held `survivors[i]`, exactly
+    /// the order [`crate::optim::reshard::reshard_ec`] expects.
+    pub survivors: Vec<usize>,
+    /// Mesh listener of every rank, indexed by new rank.
+    pub peers: Vec<SocketAddrV4>,
+}
+
+// ---- wire codecs -----------------------------------------------------------
+
+fn push_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_addr(buf: &mut Vec<u8>, addr: SocketAddrV4) {
+    buf.extend_from_slice(&addr.ip().octets());
+    push_u16(buf, addr.port());
+}
+
+/// Bounds-checked little-endian reads over a payload cursor.
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(data: &'a [u8]) -> Self {
+        Cursor { data, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.data.len());
+        let end = end.ok_or_else(|| {
+            Error::msg("rendezvous payload truncated")
+        })?;
+        let s = &self.data[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn addr(&mut self) -> Result<SocketAddrV4> {
+        let ip = self.take(4)?;
+        let port = self.u16()?;
+        Ok(SocketAddrV4::new(
+            Ipv4Addr::new(ip[0], ip[1], ip[2], ip[3]),
+            port,
+        ))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos == self.data.len() {
+            Ok(())
+        } else {
+            Err(Error::msg("rendezvous payload has trailing bytes"))
+        }
+    }
+}
+
+/// Read one rendezvous-phase frame off a blocking stream, returning
+/// `(epoch, sender rank, payload)`.
+fn read_rendezvous(stream: &mut TcpStream) -> Result<(u32, u16, Vec<u8>)> {
+    let bytes = frame::read_frame(stream)?
+        .ok_or_else(|| Error::msg("rendezvous peer closed"))?;
+    let f = frame::decode_frame(&bytes)?;
+    if f.kind != PayloadKind::Control || f.phase != WirePhase::Rendezvous {
+        return Err(Error::msg("unexpected frame during rendezvous"));
+    }
+    Ok((f.step, f.rank, f.payload.to_vec()))
+}
+
+fn write_rendezvous(
+    stream: &mut TcpStream,
+    epoch: u32,
+    rank: u16,
+    payload: &[u8],
+) -> Result<()> {
+    let f = frame::encode_frame(
+        PayloadKind::Control,
+        WirePhase::Rendezvous,
+        rank,
+        epoch,
+        payload,
+    );
+    stream.write_all(&f)?;
+    stream.flush()?;
+    Ok(())
+}
+
+// ---- coordinator -----------------------------------------------------------
+
+/// One rank waiting for the next epoch.
+struct Pending {
+    stream: TcpStream,
+    prev_rank: Option<usize>,
+    mesh_addr: SocketAddrV4,
+}
+
+/// The rendezvous coordinator: a background listener thread that
+/// collects JOINs and answers each complete epoch with WELCOMEs.  It
+/// holds no optimizer state — crash-restarting it only delays the next
+/// re-formation.
+pub struct Coordinator {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Bind `bind` (e.g. `"127.0.0.1:0"`) and start serving epochs.
+    pub fn spawn(bind: &str, opts: RendezvousOptions) -> Result<Coordinator> {
+        if opts.world == 0 || opts.min_world == 0 {
+            return Err(Error::Config(
+                "rendezvous world sizes must be nonzero".into(),
+            ));
+        }
+        if opts.min_world > opts.world {
+            return Err(Error::Config(format!(
+                "rendezvous min_world {} exceeds world {}",
+                opts.min_world, opts.world
+            )));
+        }
+        let listener = TcpListener::bind(bind)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("obtw-rendezvous".into())
+            .spawn(move || serve(listener, opts, flag))
+            .map_err(Error::Io)?;
+        Ok(Coordinator { addr, stop, handle: Some(handle) })
+    }
+
+    /// The address ranks pass as `--coordinator`.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The coordinator loop: accept JOINs, decide epochs, send WELCOMEs.
+fn serve(listener: TcpListener, opts: RendezvousOptions, stop: Arc<AtomicBool>) {
+    let mut epoch: u32 = 0;
+    let mut last_world = opts.world;
+    let mut pending: Vec<Pending> = Vec::new();
+    let mut last_join = Instant::now();
+    while !stop.load(Ordering::SeqCst) {
+        // Drain the accept queue.
+        loop {
+            match listener.accept() {
+                Ok((mut stream, _)) => {
+                    if let Ok(p) = read_join(&mut stream, opts.join_timeout) {
+                        // A rank that rejoins twice (crash between JOIN
+                        // and WELCOME) supersedes its older entry.
+                        if let Some(prev) = p.prev_rank {
+                            pending.retain(|q| q.prev_rank != Some(prev));
+                        }
+                        pending.push(p);
+                        last_join = Instant::now();
+                    }
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    break
+                }
+                Err(_) => break,
+            }
+        }
+        let target = if epoch == 0 { opts.world } else { last_world };
+        // Later epochs need at least one survivor of the previous one —
+        // a parked fresh joiner alone must never form a rogue epoch
+        // while the original mesh is still healthy.
+        let anchored = epoch == 0
+            || pending.iter().any(|p| p.prev_rank.is_some());
+        let full = pending.len() >= target;
+        let partial = epoch > 0
+            && pending.len() >= opts.min_world
+            && last_join.elapsed() >= opts.window;
+        if (full || partial) && anchored && !pending.is_empty() {
+            epoch += 1;
+            let members = std::mem::take(&mut pending);
+            last_world =
+                form_epoch(epoch, last_world, members, epoch == 1);
+        }
+        std::thread::sleep(POLL);
+    }
+}
+
+/// Read one JOIN off a fresh coordinator connection.
+fn read_join(stream: &mut TcpStream, timeout: Duration) -> Result<Pending> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let (_, rank, payload) = read_rendezvous(stream)?;
+    if rank != NO_RANK {
+        return Err(Error::msg("JOIN must not carry a rank"));
+    }
+    let mut c = Cursor::new(&payload);
+    if c.u8()? != TAG_JOIN {
+        return Err(Error::msg("expected JOIN"));
+    }
+    let has_prev = c.u8()? != 0;
+    let prev_rank = c.u16()?;
+    let _last_step = c.u64()?;
+    let mesh_addr = c.addr()?;
+    c.done()?;
+    Ok(Pending {
+        stream: stream.try_clone()?,
+        prev_rank: has_prev.then_some(prev_rank as usize),
+        mesh_addr,
+    })
+}
+
+/// Assign ranks and send every member its WELCOME.  Returns the new
+/// world size.  Survivors sorted by previous rank come first — the
+/// deterministic order the EC re-shard keys off — then fresh joiners in
+/// arrival order.
+fn form_epoch(
+    epoch: u32,
+    prev_world: usize,
+    mut members: Vec<Pending>,
+    first: bool,
+) -> usize {
+    members.sort_by_key(|p| match p.prev_rank {
+        Some(r) => (0, r),
+        None => (1, usize::MAX),
+    });
+    let world = members.len();
+    let prev_world = if first { 0 } else { prev_world };
+    let survivors: Vec<usize> =
+        members.iter().filter_map(|p| p.prev_rank).collect();
+    let departed: Vec<usize> = (0..prev_world)
+        .filter(|r| !survivors.contains(r))
+        .collect();
+    let mut roster = Vec::new();
+    for p in &members {
+        push_u16(
+            &mut roster,
+            p.prev_rank.map_or(NO_RANK, |r| r as u16),
+        );
+        push_addr(&mut roster, p.mesh_addr);
+    }
+    for (rank, p) in members.iter_mut().enumerate() {
+        let mut payload = vec![TAG_WELCOME];
+        push_u16(&mut payload, world as u16);
+        push_u16(&mut payload, rank as u16);
+        push_u16(&mut payload, prev_world as u16);
+        push_u16(&mut payload, departed.len() as u16);
+        for &d in &departed {
+            push_u16(&mut payload, d as u16);
+        }
+        payload.extend_from_slice(&roster);
+        // A member that died between JOIN and WELCOME fails here; its
+        // peers will fail the mesh build and re-enter rendezvous.
+        let _ = write_rendezvous(&mut p.stream, epoch, NO_RANK, &payload);
+    }
+    world
+}
+
+// ---- client side -----------------------------------------------------------
+
+/// Announce this rank to the coordinator and block until the next epoch
+/// forms.  `mesh_addr` is the caller's own (already-bound) mesh
+/// listener; `prev_rank` is the rank held in the previous epoch, `None`
+/// for a fresh joiner; `last_step` is informational (logged by the
+/// operator, not consumed by the protocol).  `timeout` bounds the whole
+/// wait: connect retries + the coordinator's quiet window.
+pub fn join(
+    coordinator: SocketAddr,
+    mesh_addr: SocketAddrV4,
+    prev_rank: Option<usize>,
+    last_step: u64,
+    timeout: Duration,
+) -> Result<Membership> {
+    let deadline = Instant::now() + timeout;
+    let mut stream = loop {
+        match TcpStream::connect_timeout(
+            &coordinator,
+            DIAL_BACKOFF.max(Duration::from_millis(100)),
+        ) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(Error::Io(e));
+                }
+                std::thread::sleep(DIAL_BACKOFF);
+            }
+        }
+    };
+    stream.set_nodelay(true)?;
+    let mut payload = vec![TAG_JOIN];
+    payload.push(u8::from(prev_rank.is_some()));
+    push_u16(&mut payload, prev_rank.unwrap_or(0) as u16);
+    payload.extend_from_slice(&last_step.to_le_bytes());
+    push_addr(&mut payload, mesh_addr);
+    write_rendezvous(&mut stream, 0, NO_RANK, &payload)?;
+    let remaining = deadline.saturating_duration_since(Instant::now());
+    stream.set_read_timeout(Some(remaining.max(POLL)))?;
+    let (epoch, _, payload) = read_rendezvous(&mut stream)?;
+    parse_welcome(epoch, &payload)
+}
+
+fn parse_welcome(epoch: u32, payload: &[u8]) -> Result<Membership> {
+    let mut c = Cursor::new(payload);
+    if c.u8()? != TAG_WELCOME {
+        return Err(Error::msg("expected WELCOME"));
+    }
+    let world = c.u16()? as usize;
+    let rank = c.u16()? as usize;
+    let prev_world = c.u16()? as usize;
+    let n_departed = c.u16()? as usize;
+    let mut departed = Vec::with_capacity(n_departed);
+    for _ in 0..n_departed {
+        departed.push(c.u16()? as usize);
+    }
+    let mut survivors = Vec::new();
+    let mut peers = Vec::with_capacity(world);
+    for _ in 0..world {
+        let prev = c.u16()?;
+        if prev != NO_RANK {
+            survivors.push(prev as usize);
+        }
+        peers.push(c.addr()?);
+    }
+    c.done()?;
+    if rank >= world || epoch == 0 {
+        return Err(Error::msg("malformed WELCOME"));
+    }
+    Ok(Membership {
+        epoch,
+        rank,
+        world,
+        prev_world,
+        departed,
+        survivors,
+        peers,
+    })
+}
+
+/// Build this epoch's full-duplex mesh from the WELCOME roster: dial
+/// every lower rank's listener (identifying with an epoch-tagged HELLO),
+/// accept one validated HELLO from every higher rank, then assemble the
+/// streams into a [`TcpTransport`] endpoint.  A HELLO from any other
+/// epoch is dropped — a stale dialer from a dead mesh generation cannot
+/// splice into the new one.
+pub fn connect_mesh(
+    m: &Membership,
+    listener: &TcpListener,
+    opts: &TcpOptions,
+) -> Result<TcpTransport> {
+    let deadline = Instant::now() + opts.recv_timeout;
+    let mut streams: Vec<(usize, TcpStream)> =
+        Vec::with_capacity(m.world.saturating_sub(1));
+    // Dial the lower ranks.
+    for peer in 0..m.rank {
+        let addr = SocketAddr::V4(m.peers[peer]);
+        let mut stream = loop {
+            match TcpStream::connect_timeout(&addr, DIAL_BACKOFF.max(POLL)) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(Error::Io(e));
+                    }
+                    std::thread::sleep(DIAL_BACKOFF);
+                }
+            }
+        };
+        stream.set_nodelay(true)?;
+        write_rendezvous(
+            &mut stream,
+            m.epoch,
+            m.rank as u16,
+            &[TAG_HELLO],
+        )?;
+        streams.push((peer, stream));
+    }
+    // Accept the higher ranks.
+    listener.set_nonblocking(true)?;
+    let mut missing: Vec<bool> = (0..m.world).map(|r| r > m.rank).collect();
+    while missing.iter().any(|&w| w) {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                stream.set_nonblocking(false)?;
+                stream.set_read_timeout(Some(opts.recv_timeout))?;
+                match read_rendezvous(&mut stream) {
+                    Ok((epoch, rank, payload))
+                        if epoch == m.epoch
+                            && payload == [TAG_HELLO]
+                            && (rank as usize) < m.world
+                            && (rank as usize) > m.rank
+                            && missing[rank as usize] =>
+                    {
+                        stream.set_read_timeout(None)?;
+                        missing[rank as usize] = false;
+                        streams.push((rank as usize, stream));
+                    }
+                    // Stale epoch / malformed hello: drop the stream.
+                    _ => {}
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(Error::msg(
+                        "mesh build timed out waiting for peer HELLOs",
+                    ));
+                }
+                std::thread::sleep(POLL);
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    TcpTransport::from_streams(m.rank, m.world, streams, opts)
+}
+
+/// Bind a fresh mesh listener for one epoch attempt.  Bound *before*
+/// [`join`] so the JOIN can carry a live address.
+pub fn bind_mesh_listener() -> Result<(TcpListener, SocketAddrV4)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = match listener.local_addr()? {
+        SocketAddr::V4(a) => a,
+        SocketAddr::V6(_) => {
+            return Err(Error::Config(
+                "rendezvous mesh requires an IPv4 listener".into(),
+            ))
+        }
+    };
+    Ok((listener, addr))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::frame::decode_frame;
+    use crate::transport::Transport;
+
+    fn quick_opts(world: usize, window_ms: u64) -> RendezvousOptions {
+        RendezvousOptions {
+            world,
+            min_world: world.saturating_sub(1).max(1),
+            window: Duration::from_millis(window_ms),
+            join_timeout: Duration::from_secs(5),
+        }
+    }
+
+    fn join_fresh(
+        coord: SocketAddr,
+    ) -> (Membership, TcpListener) {
+        let (listener, addr) = bind_mesh_listener().unwrap();
+        let m =
+            join(coord, addr, None, 0, Duration::from_secs(10)).unwrap();
+        (m, listener)
+    }
+
+    #[test]
+    fn epoch_one_forms_when_all_ranks_join() {
+        let coord =
+            Coordinator::spawn("127.0.0.1:0", quick_opts(3, 100)).unwrap();
+        let addr = coord.addr();
+        let handles: Vec<_> = (0..3)
+            .map(|_| std::thread::spawn(move || join_fresh(addr).0))
+            .collect();
+        let mut members: Vec<Membership> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        members.sort_by_key(|m| m.rank);
+        let ranks: Vec<usize> = members.iter().map(|m| m.rank).collect();
+        assert_eq!(ranks, vec![0, 1, 2]);
+        for m in &members {
+            assert_eq!(m.epoch, 1);
+            assert_eq!(m.world, 3);
+            assert_eq!(m.prev_world, 0);
+            assert!(m.departed.is_empty());
+            assert!(m.survivors.is_empty());
+            assert_eq!(m.peers, members[0].peers);
+        }
+    }
+
+    #[test]
+    fn survivors_reform_at_m_minus_one_after_the_quiet_window() {
+        let coord =
+            Coordinator::spawn("127.0.0.1:0", quick_opts(3, 100)).unwrap();
+        let addr = coord.addr();
+        let handles: Vec<_> = (0..3)
+            .map(|_| std::thread::spawn(move || join_fresh(addr).0))
+            .collect();
+        let first: Vec<Membership> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // Ranks 1 and 2 of epoch 1 rejoin; rank 0 is "dead".
+        let survivors: Vec<usize> = first
+            .iter()
+            .map(|m| m.rank)
+            .filter(|&r| r != 0)
+            .collect();
+        let handles: Vec<_> = survivors
+            .into_iter()
+            .map(|prev| {
+                std::thread::spawn(move || {
+                    let (_, mesh) = bind_mesh_listener().unwrap();
+                    join(
+                        addr,
+                        mesh,
+                        Some(prev),
+                        7,
+                        Duration::from_secs(10),
+                    )
+                    .unwrap()
+                })
+            })
+            .collect();
+        let mut second: Vec<Membership> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        second.sort_by_key(|m| m.rank);
+        for m in &second {
+            assert_eq!(m.epoch, 2);
+            assert_eq!(m.world, 2);
+            assert_eq!(m.prev_world, 3);
+            assert_eq!(m.departed, vec![0]);
+            assert_eq!(m.survivors, vec![1, 2]);
+        }
+        // Survivor order: previous rank 1 → new rank 0, 2 → 1.
+        assert_eq!(second[0].rank, 0);
+        assert_eq!(second[1].rank, 1);
+    }
+
+    #[test]
+    fn rendezvous_mesh_carries_frames_between_processes_worth_of_ranks() {
+        let coord =
+            Coordinator::spawn("127.0.0.1:0", quick_opts(2, 100)).unwrap();
+        let addr = coord.addr();
+        let worker = |tag: f32| {
+            move || {
+                let (m, listener) = join_fresh(addr);
+                let opts = TcpOptions {
+                    recv_timeout: Duration::from_secs(10),
+                    ..TcpOptions::default()
+                };
+                let mut ep = connect_mesh(&m, &listener, &opts).unwrap();
+                let peer = 1 - m.rank;
+                let payload = frame::f32_payload(&[tag + m.rank as f32]);
+                let f = frame::encode_frame(
+                    PayloadKind::F32Plain,
+                    WirePhase::AllToAll,
+                    m.rank as u16,
+                    m.epoch,
+                    &payload,
+                );
+                ep.send(peer, &f).unwrap();
+                let bytes = ep.recv(peer).unwrap();
+                let got = decode_frame(&bytes).unwrap();
+                assert_eq!(got.rank as usize, peer);
+                assert_eq!(got.step, m.epoch);
+                m.rank
+            }
+        };
+        let a = std::thread::spawn(worker(10.0));
+        let b = std::thread::spawn(worker(10.0));
+        let mut ranks = vec![a.join().unwrap(), b.join().unwrap()];
+        ranks.sort_unstable();
+        assert_eq!(ranks, vec![0, 1]);
+    }
+}

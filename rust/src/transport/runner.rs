@@ -95,14 +95,17 @@ impl TransportStats {
 }
 
 /// Per-rank counters, written by that rank's thread during a step.
+/// `pub(crate)` so the elastic per-process engine
+/// ([`super::elastic`]) can reuse the exchange routines below and read
+/// the same ledger.
 #[derive(Debug, Clone, Copy, Default)]
-struct RankStats {
-    payload_a2a: usize,
-    payload_ag: usize,
-    gross_a2a: usize,
-    gross_ag: usize,
-    gross_intra: usize,
-    frames: usize,
+pub(crate) struct RankStats {
+    pub(crate) payload_a2a: usize,
+    pub(crate) payload_ag: usize,
+    pub(crate) gross_a2a: usize,
+    pub(crate) gross_ag: usize,
+    pub(crate) gross_intra: usize,
+    pub(crate) frames: usize,
 }
 
 /// One rank's persistent half of the mesh: its endpoint, its carried EC
@@ -221,18 +224,18 @@ fn recv_frame(ep: &mut dyn Transport, from: usize) -> Result<Vec<u8>> {
 /// Peer set of one compressed exchange: `peers` are the participating
 /// global ranks in ascending order, `me` indexes into them, `layout`
 /// chunks the tensor `peers.len()` ways.
-struct ExchangeCtx<'a> {
-    kind: CompressionKind,
-    step: u32,
-    peers: &'a [usize],
-    me: usize,
-    layout: &'a ChunkLayout,
+pub(crate) struct ExchangeCtx<'a> {
+    pub(crate) kind: CompressionKind,
+    pub(crate) step: u32,
+    pub(crate) peers: &'a [usize],
+    pub(crate) me: usize,
+    pub(crate) layout: &'a ChunkLayout,
 }
 
 /// One rank's run of the Figure-3 compressed allreduce over the wire —
 /// the transported twin of `CompressedAllreduce::allreduce_reference`,
 /// same f32 ops in the same order.
-fn exchange_compressed(
+pub(crate) fn exchange_compressed(
     ctx: &ExchangeCtx<'_>,
     ep: &mut dyn Transport,
     input: &[f32],
@@ -1025,7 +1028,7 @@ impl TransportCollective {
 /// The Arena closed form: per-GPU payload volume as a pure function of
 /// (layout, kind) — what every in-process engine reports, derived from
 /// the one shared [`crate::comm::chunk_wire_volume`] scan.
-fn closed_form_stats(
+pub(crate) fn closed_form_stats(
     kind: CompressionKind,
     layout: &ChunkLayout,
     len: usize,
@@ -1040,7 +1043,7 @@ fn closed_form_stats(
 
 /// One rank's run of the transported warmup average.
 #[allow(clippy::too_many_arguments)]
-fn plain_average_rank(
+pub(crate) fn plain_average_rank(
     step: u32,
     n: usize,
     rank: usize,

@@ -12,6 +12,8 @@ pub enum Error {
     Config(String),
     #[error("wire frame error: {0}")]
     Frame(#[from] crate::transport::frame::FrameError),
+    #[error("checkpoint error: {0}")]
+    Checkpoint(#[from] crate::coordinator::checkpoint::CheckpointError),
     #[error("transport error: {0}")]
     Transport(#[from] crate::transport::TransportError),
     #[error("{0}")]

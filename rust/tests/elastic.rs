@@ -1,0 +1,225 @@
+//! Elastic-runner integration tier: rank-failure survival with
+//! bit-exact `M−1` re-formation, over real TCP meshes formed by the
+//! rendezvous coordinator.
+//!
+//! Workers here are threads (one real `TcpTransport` endpoint each) so
+//! the tier stays hermetic; the separate-PID version of the same
+//! acceptance — real processes, a real SIGKILL — is the CI job driving
+//! `obadam elastic --spawn M`.
+
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use onebit_adam::coordinator::checkpoint::Checkpoint;
+use onebit_adam::netsim::epoch_change_window_bound;
+use onebit_adam::optim::freeze::VarianceSyncSchedule;
+use onebit_adam::transport::elastic::{
+    latest_path, reference_run, run_elastic_worker, step_path, ElasticMode,
+    ElasticOptions, ElasticReport,
+};
+use onebit_adam::transport::{ChaosScenario, Coordinator, RendezvousOptions};
+use onebit_adam::util::error::Error;
+
+const DIM: usize = 96;
+const STEPS: usize = 10;
+const RECV_TIMEOUT: Duration = Duration::from_millis(1200);
+const WINDOW: Duration = Duration::from_millis(400);
+const STRAGGLE: Duration = Duration::from_millis(3000);
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("obadam_elastic_test_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn base_opts(mode: ElasticMode, dir: &Path) -> ElasticOptions {
+    let mut o = ElasticOptions::new(mode, DIM, STEPS, dir.join("ckpt"));
+    o.ckpt_every = 2;
+    o.noise = 0.05;
+    o.tcp.recv_timeout = RECV_TIMEOUT;
+    // Short probe interval: the 1.2 s dead-peer budget then holds four
+    // NACK rounds (60/180/420/900 ms), so chaos losses recover well
+    // inside it instead of spuriously exhausting the budget, while a
+    // genuinely dead rank is still detected within `recv_timeout`.
+    o.tcp.attempt_timeout = Duration::from_millis(60);
+    o.join_timeout = Duration::from_secs(10);
+    o
+}
+
+fn coordinator(world: usize) -> Coordinator {
+    Coordinator::spawn(
+        "127.0.0.1:0",
+        RendezvousOptions {
+            world,
+            min_world: world - 1,
+            window: WINDOW,
+            join_timeout: Duration::from_secs(10),
+        },
+    )
+    .expect("coordinator")
+}
+
+fn launch(
+    coord: SocketAddr,
+    workers: Vec<ElasticOptions>,
+) -> Vec<Result<ElasticReport, Error>> {
+    let handles: Vec<_> = workers
+        .into_iter()
+        .map(|o| std::thread::spawn(move || run_elastic_worker(coord, &o)))
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+}
+
+#[test]
+fn failure_free_run_bit_matches_the_in_process_engine() {
+    let dir = test_dir("clean");
+    let mode = ElasticMode::OneBit { warmup_steps: 3 };
+    let coord = coordinator(2);
+    let opts = base_opts(mode, &dir);
+    let mut workers = vec![opts.clone(), opts.clone()];
+    for w in &mut workers {
+        w.max_epochs = 1;
+    }
+    let results = launch(coord.addr(), workers);
+    for r in &results {
+        let rep = r.as_ref().expect("worker failed");
+        assert_eq!(rep.epoch, 1);
+        assert_eq!(rep.world, 2);
+        assert_eq!(rep.steps_done, STEPS);
+    }
+    let live = Checkpoint::load(latest_path(&opts.ckpt_dir)).unwrap();
+    let reference = reference_run(2, None, &opts).unwrap();
+    assert_eq!(live, reference.checkpoint);
+    for r in &results {
+        let rep = r.as_ref().unwrap();
+        assert_eq!(rep.comm_alltoall_bytes, reference.comm_alltoall_bytes);
+        assert_eq!(rep.comm_allgather_bytes, reference.comm_allgather_bytes);
+    }
+    drop(coord);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Chaos × elasticity: under a lossy wire, a straggler rank pushed past
+/// the dead-peer budget forces an epoch change; the survivors re-form
+/// at `M−1` and their resumed trajectory bit-matches a fresh `M−1` run
+/// restored from the same checkpoint.
+#[test]
+fn chaos_straggler_epoch_change_bit_matches_fresh_m1_restore() {
+    let dir = test_dir("chaos");
+    let mode = ElasticMode::OneBit { warmup_steps: 3 };
+    let coord = coordinator(3);
+    let opts = base_opts(mode, &dir);
+    let mut workers = Vec::new();
+    for id in 0..3usize {
+        let mut w = opts.clone();
+        w.chaos = Some(ChaosScenario::lossy(7 + id as u64));
+        if id == 2 {
+            // The victim: stall at step 5 until everyone's dead-peer
+            // budget has burned, then fail terminally (max_epochs 1 is
+            // the thread-world analog of a SIGKILL).
+            w.straggle_at_step = Some(5);
+            w.straggle_for = STRAGGLE;
+            w.max_epochs = 1;
+        } else {
+            w.max_epochs = 3;
+        }
+        workers.push(w);
+    }
+    let mut results = launch(coord.addr(), workers);
+    let victim = results.pop().unwrap();
+    assert!(victim.is_err(), "the straggler must not survive");
+
+    let bound = epoch_change_window_bound(RECV_TIMEOUT, WINDOW, 3);
+    let mut survivors_prev_ranks = Vec::new();
+    for r in &results {
+        let rep = r.as_ref().expect("survivor failed");
+        assert_eq!(rep.world, 2, "survivors must re-form at M-1");
+        assert_eq!(rep.epoch, 2);
+        assert_eq!(rep.epochs_joined, 2);
+        assert_eq!(rep.steps_done, STEPS);
+        // Straggle hits at step 5; the last completed checkpoint is the
+        // compression-phase one at step 4.
+        assert_eq!(rep.resume_step, Some(4));
+        assert_eq!(rep.departed.len(), 1);
+        let rec = rep.recovery_ms.expect("survivor must record recovery");
+        assert!(
+            rec <= bound.as_secs_f64() * 1e3,
+            "recovery {rec:.0} ms above the {:.0} ms bound",
+            bound.as_secs_f64() * 1e3
+        );
+        survivors_prev_ranks = rep.survivors.clone();
+    }
+    assert_eq!(survivors_prev_ranks.len(), 2);
+
+    // The resumed trajectory must bit-match a fresh M−1 engine restored
+    // from the same checkpoint: params, m, v, EC state, and comm.
+    let ck = Checkpoint::load(step_path(&opts.ckpt_dir, 4)).unwrap();
+    assert_eq!(ck.ec.len(), 6, "compression checkpoint carries 2n EC");
+    let reference =
+        reference_run(2, Some((&ck, 3, &survivors_prev_ranks)), &opts)
+            .unwrap();
+    let live = Checkpoint::load(latest_path(&opts.ckpt_dir)).unwrap();
+    assert_eq!(live, reference.checkpoint);
+    for r in &results {
+        let rep = r.as_ref().unwrap();
+        assert_eq!(rep.comm_alltoall_bytes, reference.comm_alltoall_bytes);
+        assert_eq!(rep.comm_allgather_bytes, reference.comm_allgather_bytes);
+    }
+    drop(coord);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// 0/1 Adam re-entry lands exactly on a variance-resync boundary: the
+/// checkpoint cadence *is* the sync schedule, so the re-formed world's
+/// first step is a sync step, and the trajectory still bit-matches the
+/// in-process restore.
+#[test]
+fn zeroone_recovery_resumes_at_a_variance_sync_boundary() {
+    let dir = test_dir("zeroone");
+    let mode = ElasticMode::ZeroOne { var_sync_base: 1 };
+    let coord = coordinator(3);
+    let opts = base_opts(mode, &dir);
+    let mut workers = Vec::new();
+    for id in 0..3usize {
+        let mut w = opts.clone();
+        if id == 2 {
+            w.straggle_at_step = Some(5);
+            w.straggle_for = STRAGGLE;
+            w.max_epochs = 1;
+        } else {
+            w.max_epochs = 3;
+        }
+        workers.push(w);
+    }
+    let mut results = launch(coord.addr(), workers);
+    let victim = results.pop().unwrap();
+    assert!(victim.is_err());
+
+    let sched = VarianceSyncSchedule::new(1);
+    let mut survivors_prev_ranks = Vec::new();
+    let mut resume = 0u64;
+    for r in &results {
+        let rep = r.as_ref().expect("survivor failed");
+        assert_eq!(rep.world, 2);
+        assert_eq!(rep.epoch, 2);
+        resume = rep.resume_step.expect("survivor must resume");
+        assert!(
+            sched.is_sync(resume as usize),
+            "resume step {resume} is not a variance-sync boundary"
+        );
+        survivors_prev_ranks = rep.survivors.clone();
+    }
+    // Straggle at 5 with sync checkpoints at 1, 2, 4: resume from 4.
+    assert_eq!(resume, 4);
+
+    let ck = Checkpoint::load(step_path(&opts.ckpt_dir, resume)).unwrap();
+    let reference =
+        reference_run(2, Some((&ck, 3, &survivors_prev_ranks)), &opts)
+            .unwrap();
+    let live = Checkpoint::load(latest_path(&opts.ckpt_dir)).unwrap();
+    assert_eq!(live, reference.checkpoint);
+    drop(coord);
+    let _ = std::fs::remove_dir_all(&dir);
+}
