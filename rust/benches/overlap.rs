@@ -1,0 +1,262 @@
+//! Overlapped-step pipeline bench: the bucketed schedule
+//! ([`onebit_adam::comm::overlap::OverlapPipeline`]) running the full
+//! 1-bit Adam compression step at the acceptance point of 8 workers ×
+//! 1M elements — overlapped vs synchronous on the *same* bucketization
+//! and fixed codec assignment, so the two runs are bit-identical and
+//! the time delta is pure scheduling.
+//!
+//! Three contracts are asserted right here, not on a dashboard:
+//!
+//! 1. **bit-identity** — params, per-step `CommStats`, and the carried
+//!    EC state of the overlapped trajectory equal the synchronous one;
+//! 2. **the 0.9× regression gate** — overlapped median step time ≤
+//!!   0.9 × the synchronous (compute + comm) median (full mode only;
+//!    single-sample smoke timings stay informational);
+//! 3. **ledger reconciliation** — the merged step `CommStats` equals
+//!    the per-bucket sum reported by the pipeline.
+//!
+//! Results land in the repo-root `BENCH_overlap.json`, including the
+//! per-bucket codec decisions and measured wire volumes plus the
+//! `netsim::collectives::overlapped_step_time` analytic twin's
+//! prediction (`OBADAM_BENCH_SMOKE=1` runs single-sample smoke passes
+//! in CI).
+
+use onebit_adam::comm::overlap::{
+    BucketCodecPolicy, LinkEstimate, OverlapConfig, OverlapPipeline,
+};
+use onebit_adam::comm::{CommStats, CommTopology};
+use onebit_adam::compress::CompressionKind;
+use onebit_adam::netsim::collectives::overlapped_step_time;
+use onebit_adam::netsim::NetworkModel;
+use onebit_adam::optim::{DistOptimizer, OneBitAdam, OneBitAdamConfig};
+use onebit_adam::util::bench::{black_box, smoke_mode, BenchJson, Bencher};
+use onebit_adam::util::prng::Rng;
+
+const WORKERS: usize = 8;
+const ELEMENTS: usize = 1 << 20;
+const N_BUCKETS: usize = 8;
+
+fn codec_width(kind: CompressionKind) -> f64 {
+    match kind {
+        CompressionKind::None => 32.0,
+        CompressionKind::NBit(b) => b as f64,
+        CompressionKind::OneBit => 1.0,
+    }
+}
+
+fn codec_name(kind: CompressionKind) -> String {
+    match kind {
+        CompressionKind::None => "fp32".to_string(),
+        CompressionKind::NBit(b) => format!("{b}bit"),
+        CompressionKind::OneBit => "1bit".to_string(),
+    }
+}
+
+fn optimizer(overlapped: bool) -> OneBitAdam {
+    let cfg = OneBitAdamConfig {
+        warmup_steps: Some(0),
+        compression: CompressionKind::OneBit,
+        topology: CommTopology::Flat,
+        overlap: Some(OverlapConfig {
+            n_buckets: N_BUCKETS,
+            policy: BucketCodecPolicy::Fixed,
+            overlapped,
+        }),
+        ..Default::default()
+    };
+    OneBitAdam::new(WORKERS, vec![0.1; ELEMENTS], cfg)
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut json = BenchJson::new_in("overlap", "BENCH_overlap.json");
+    let smoke = smoke_mode();
+
+    let base = Rng::new(47);
+    let grad_sets: Vec<Vec<Vec<f32>>> = (0..3)
+        .map(|s| {
+            (0..WORKERS)
+                .map(|i| {
+                    base.fork((s * WORKERS + i) as u64)
+                        .normal_vec(ELEMENTS, 1.0)
+                })
+                .collect()
+        })
+        .collect();
+
+    // ---- bit-identity: overlapped trajectory == synchronous ----------------
+    let mut ovl = optimizer(true);
+    let mut syn = optimizer(false);
+    let check_steps = if smoke { 2 } else { 4 };
+    for step in 0..check_steps {
+        let grads = &grad_sets[step % grad_sets.len()];
+        let so = ovl.step(grads, 1e-3);
+        let ss = syn.step(grads, 1e-3);
+        assert_eq!(
+            so.comm, ss.comm,
+            "step {step}: overlapped CommStats diverged"
+        );
+        assert_eq!(
+            ovl.params(),
+            syn.params(),
+            "step {step}: overlapped params diverged"
+        );
+        // the merged step ledger is exactly the per-bucket sum
+        let mut sum = CommStats::default();
+        for s in ovl.overlap_pipeline().unwrap().bucket_stats() {
+            sum.merge(*s);
+        }
+        assert_eq!(so.comm, sum, "step {step}: bucket ledger drifted");
+    }
+    assert_eq!(
+        ovl.overlap_pipeline().unwrap().export_errors(),
+        syn.overlap_pipeline().unwrap().export_errors(),
+        "EC state diverged between schedules"
+    );
+    println!(
+        "bit-identity: {check_steps} overlapped steps == synchronous \
+         (params, CommStats, EC state)"
+    );
+
+    // ---- step-time: overlapped vs synchronous ------------------------------
+    let grads = &grad_sets[0];
+    let r_syn = b.run(
+        &format!(
+            "onebit_step_synchronous w={WORKERS} n={ELEMENTS} nb={N_BUCKETS}"
+        ),
+        || {
+            black_box(syn.step(grads, 1e-3));
+        },
+    );
+    let r_ovl = b.run(
+        &format!(
+            "onebit_step_overlapped w={WORKERS} n={ELEMENTS} nb={N_BUCKETS}"
+        ),
+        || {
+            black_box(ovl.step(grads, 1e-3));
+        },
+    );
+    println!("{}", r_syn.report());
+    println!("{}", r_ovl.report());
+
+    // Comm-only leg: the same bucketed collectives with a trivial
+    // produce (staging copy), synchronous schedule — isolates the
+    // compress + exchange cost so the compute share can be derived.
+    let cfg = OverlapConfig {
+        n_buckets: N_BUCKETS,
+        policy: BucketCodecPolicy::Fixed,
+        overlapped: false,
+    };
+    let mut pipe = OverlapPipeline::build(
+        &cfg,
+        CommTopology::Flat,
+        WORKERS,
+        ELEMENTS,
+        CompressionKind::OneBit,
+        None,
+    );
+    let mut out = vec![0.0f32; ELEMENTS];
+    let r_comm = b.run(
+        &format!("bucketed_allreduce_only w={WORKERS} n={ELEMENTS}"),
+        || {
+            black_box(pipe.allreduce(grads, &mut out));
+        },
+    );
+    println!("{}", r_comm.report());
+
+    let t_syn = r_syn.median_ns();
+    let t_ovl = r_ovl.median_ns();
+    let t_comm = r_comm.median_ns().min(t_syn);
+    let t_compute = (t_syn - t_comm).max(0.0);
+    let ratio = t_ovl / t_syn;
+
+    // Analytic twin: uniform buckets through the two-stage pipeline
+    // recurrence — the modeled floor the measured overlap approaches.
+    let nb = N_BUCKETS;
+    let uniform = |total: f64| -> Vec<f64> {
+        (0..nb).map(|_| total / nb as f64).collect()
+    };
+    let twin = overlapped_step_time(&uniform(t_compute), &uniform(t_comm));
+    let ideal = t_compute.max(t_comm);
+    println!(
+        "overlap: {ratio:.3}x of synchronous (twin predicts \
+         {:.3}x, ideal max(compute, comm) floor {:.3}x)",
+        twin / t_syn,
+        ideal / t_syn
+    );
+
+    // The regression gate (full mode: smoke's single sample is noise).
+    if !smoke {
+        assert!(
+            ratio <= 0.9,
+            "overlapped step not ≤ 0.9x synchronous: {t_ovl:.0} ns vs \
+             {t_syn:.0} ns ({ratio:.3}x)"
+        );
+    }
+
+    // ---- ledger: per-bucket codec decisions + measured volumes -------------
+    let pipeline = ovl.overlap_pipeline().unwrap();
+    let mut extras: Vec<(String, f64)> = vec![
+        ("n_buckets".to_string(), nb as f64),
+        ("ratio_vs_synchronous".to_string(), ratio),
+        ("synchronous_median_ns".to_string(), t_syn),
+        ("comm_only_median_ns".to_string(), t_comm),
+        ("compute_share_ns".to_string(), t_compute),
+        ("netsim_twin_predicted_ns".to_string(), twin),
+        ("ideal_overlap_floor_ns".to_string(), ideal),
+    ];
+    for (k, (kind, stats)) in pipeline
+        .kinds()
+        .iter()
+        .zip(pipeline.bucket_stats().iter())
+        .enumerate()
+    {
+        println!(
+            "  bucket {k}: {} ({} payload B/gpu)",
+            codec_name(*kind),
+            stats.total_per_gpu()
+        );
+        extras.push((format!("bucket_{k}_codec_bits"), codec_width(*kind)));
+        extras.push((
+            format!("bucket_{k}_payload_bytes_per_gpu"),
+            stats.total_per_gpu() as f64,
+        ));
+    }
+    let borrowed: Vec<(&str, f64)> =
+        extras.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    json.push_with(&r_ovl, &borrowed);
+    json.push(&r_syn);
+    json.push(&r_comm);
+
+    // ---- adaptive policy: decisions on a modeled slow link -----------------
+    // No timing — just record what the policy picks at this bucket size
+    // on the paper's Ethernet cluster vs a fat link, so the ledger shows
+    // the codec choice moving with bandwidth.
+    for (label, net) in [
+        ("ethernet", NetworkModel::ethernet()),
+        ("infiniband", NetworkModel::infiniband()),
+    ] {
+        let est = LinkEstimate::from_netsim(&net);
+        let cfg = OverlapConfig {
+            n_buckets: N_BUCKETS,
+            policy: BucketCodecPolicy::Adaptive(est),
+            overlapped: true,
+        };
+        let p = OverlapPipeline::build(
+            &cfg,
+            CommTopology::Flat,
+            WORKERS,
+            ELEMENTS,
+            CompressionKind::OneBit,
+            None,
+        );
+        let names: Vec<String> =
+            p.kinds().iter().map(|k| codec_name(*k)).collect();
+        println!(
+            "adaptive policy on {label}: buckets -> [{}]",
+            names.join(", ")
+        );
+    }
+
+    json.flush();
+}

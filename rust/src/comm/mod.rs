@@ -33,15 +33,28 @@
 //! [`hierarchy::Collective::build_with_transport`]).  All engines on all
 //! axes are property-tested bit-equal, so convergence results are
 //! engine-, topology-, and transport-invariant.
+//!
+//! The *schedule* is a fourth axis ([`overlap::OverlapPipeline`]): the
+//! flat tensor is cut into buckets — one collective, and one EC state,
+//! per bucket — and a dedicated comm thread overlaps bucket `k`'s
+//! compress + exchange with the compute producing bucket `k+1`,
+//! optionally picking fp32 / n-bit / 1-bit per bucket from a link-speed
+//! estimate ([`overlap::BucketCodecPolicy`]).  For a fixed codec
+//! assignment the overlapped schedule is property-tested bit-identical
+//! to the synchronous one.
 
 pub mod compressed;
 pub mod fabric;
 pub mod hierarchy;
+pub mod overlap;
 pub mod plain;
 
 pub use compressed::{AllreducePath, CompressedAllreduce};
 pub use fabric::ThreadedFabric;
 pub use hierarchy::{Collective, CommTopology, HierarchicalAllreduce};
+pub use overlap::{
+    BucketCodecPolicy, LinkEstimate, OverlapConfig, OverlapPipeline,
+};
 pub use plain::{allreduce_average, allreduce_average_path, PlainPath};
 
 /// Bytes that crossed the (simulated) wire during one collective, split by

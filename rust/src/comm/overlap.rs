@@ -1,0 +1,799 @@
+//! Overlapped step pipeline with adaptive per-bucket compression.
+//!
+//! The legacy compression step is strictly sequential: refresh the whole
+//! fused momentum, run one whole-tensor compressed allreduce, then apply
+//! the whole preconditioned update.  On a real cluster the backward pass
+//! produces gradients bucket by bucket, and DDP-style runners compress
+//! and ship bucket `k` while the compute that produces bucket `k+1` is
+//! still running — step time approaches `max(compute, comm)` instead of
+//! `compute + comm`.
+//!
+//! [`OverlapPipeline`] reproduces that schedule: the flat tensor is cut
+//! into [`ChunkLayout`] buckets, each bucket owns its own
+//! [`Collective`] (so error-feedback state stays per-bucket and every
+//! topology/transport combination works unchanged), and in overlapped
+//! mode a dedicated comm thread drains a double-buffered bucket queue
+//! while the caller's `produce` closure fills the next bucket.  The
+//! overlapped schedule is **bit-identical** to the synchronous one for a
+//! fixed codec assignment: buckets are disjoint element ranges, each
+//! bucket's collective runs exactly once per step in bucket order on a
+//! single comm thread, and the per-bucket [`CommStats`] merge in bucket
+//! order — property-tested below and at the optimizer level.
+//!
+//! The codec axis is [`BucketCodecPolicy`]: `Fixed` keeps the
+//! optimizer's configured [`CompressionKind`] on every bucket;
+//! `Adaptive` picks fp32 / n-bit / 1-bit per bucket by minimizing a
+//! latency + wire + codec cost model against a [`LinkEstimate`] —
+//! calibrated analytically from a [`NetworkModel`]
+//! ([`LinkEstimate::from_netsim`]) or measured with a short probe over a
+//! live transport mesh ([`LinkEstimate::probe`]).  The assignment is a
+//! pure function of (policy, bucket sizes, worker count), so it is
+//! deterministic and identical on every "rank" by construction.
+
+use std::ops::Range;
+use std::sync::mpsc::{channel, sync_channel};
+
+use crate::comm::{chunk_wire_volume, Collective, CommStats, CommTopology};
+use crate::compress::CompressionKind;
+use crate::netsim::NetworkModel;
+use crate::tensor::chunk::ChunkLayout;
+use crate::transport::{TransportBackend, TransportCollective};
+use crate::util::error::Result;
+
+/// A scalar α–β picture of the bottleneck link, as seen by one rank:
+/// per-message latency plus a single effective bandwidth.  Deliberately
+/// coarse — it only has to rank codecs per bucket, not predict wall
+/// clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkEstimate {
+    /// Effective payload bandwidth, bytes/s.
+    pub bandwidth_bps: f64,
+    /// Per-message latency, seconds.
+    pub latency_s: f64,
+}
+
+/// Codec-side memory bandwidth assumed by the cost model, bytes/s —
+/// the packing/EC passes stream the bucket through memory, so their
+/// cost scales with the *uncompressed* bucket size regardless of how
+/// few bytes hit the wire.
+const CODEC_BW: f64 = 20e9;
+
+/// Streaming passes over the uncompressed bucket each codec costs
+/// (compensate + pack + unpack for 1-bit; quantize + dequantize for
+/// n-bit; one copy for the fp32 pass-through).
+fn codec_passes(kind: CompressionKind) -> f64 {
+    match kind {
+        CompressionKind::None => 1.0,
+        CompressionKind::NBit(_) => 2.5,
+        CompressionKind::OneBit => 3.0,
+    }
+}
+
+/// Codec candidates the adaptive policy ranks, highest precision first —
+/// ties in modeled time go to the earlier (higher-precision) entry.
+pub const CODEC_CANDIDATES: &[CompressionKind] = &[
+    CompressionKind::None,
+    CompressionKind::NBit(8),
+    CompressionKind::NBit(4),
+    CompressionKind::OneBit,
+];
+
+impl LinkEstimate {
+    /// Calibrate from a [`NetworkModel`]: the inter-node NIC is the
+    /// bottleneck tier of both paper clusters.
+    pub fn from_netsim(net: &NetworkModel) -> Self {
+        LinkEstimate {
+            bandwidth_bps: net.eff_internode_bw(),
+            latency_s: net.internode_lat,
+        }
+    }
+
+    /// Measure the live wire with two short full-precision rounds over a
+    /// scratch [`TransportCollective`] mesh: many-hop tiny rounds
+    /// isolate per-message latency, one large round isolates bandwidth
+    /// (gross bytes from the transport ledger over elapsed time).
+    /// Coarse by design — the result only parameterizes
+    /// [`BucketCodecPolicy::decide`].
+    pub fn probe(backend: TransportBackend, n_workers: usize) -> Result<Self> {
+        use std::time::Instant;
+        let n = n_workers.max(2);
+        const TINY: usize = 16;
+        const LARGE: usize = 64 * 1024;
+        const ROUNDS: usize = 8;
+
+        let mut small =
+            TransportCollective::new(backend, n, TINY, CompressionKind::None)?;
+        let inputs: Vec<Vec<f32>> =
+            (0..n).map(|r| vec![r as f32; TINY]).collect();
+        let mut out = vec![0.0f32; TINY];
+        small.plain_average(&inputs, &mut out); // warm the mesh
+        let t0 = Instant::now();
+        for _ in 0..ROUNDS {
+            small.plain_average(&inputs, &mut out);
+        }
+        let per_round = t0.elapsed().as_secs_f64() / ROUNDS as f64;
+        // A plain ring is 2(n−1) message hops on the critical path.
+        let latency_s = (per_round / (2 * (n - 1)) as f64).max(1e-9);
+
+        let mut big =
+            TransportCollective::new(backend, n, LARGE, CompressionKind::None)?;
+        let inputs: Vec<Vec<f32>> =
+            (0..n).map(|r| vec![r as f32; LARGE]).collect();
+        let mut out = vec![0.0f32; LARGE];
+        big.plain_average(&inputs, &mut out);
+        let t0 = Instant::now();
+        big.plain_average(&inputs, &mut out);
+        let elapsed = t0.elapsed().as_secs_f64();
+        let gross = big.last_stats().gross_total() as f64;
+        let bandwidth_bps = (gross / (elapsed - per_round).max(1e-9)).max(1e3);
+        Ok(LinkEstimate { bandwidth_bps, latency_s })
+    }
+
+    /// Modeled time to exchange one bucket with `kind`: two latency
+    /// terms (scatter + gather phase) + per-GPU wire bytes over the link
+    /// + the codec's streaming passes over the uncompressed bucket.
+    /// Wire bytes follow the engines' shared chunk convention
+    /// ([`chunk_wire_volume`]): all-to-all `total − min`, all-gather
+    /// `max`, over an `n_workers`-way chunking of the bucket.
+    pub fn bucket_time(
+        &self,
+        kind: CompressionKind,
+        bucket_len: usize,
+        n_workers: usize,
+    ) -> f64 {
+        let wire = if n_workers > 1 && bucket_len > 0 {
+            let layout = ChunkLayout::new(bucket_len, n_workers);
+            let (total, min, max) = chunk_wire_volume(kind, &layout);
+            (total - min) + max
+        } else {
+            0
+        };
+        2.0 * self.latency_s
+            + wire as f64 / self.bandwidth_bps
+            + codec_passes(kind) * (bucket_len * 4) as f64 / CODEC_BW
+    }
+}
+
+/// Per-bucket codec choice.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BucketCodecPolicy {
+    /// Every bucket uses the optimizer's configured kind — the
+    /// bit-identity / degeneration path.
+    Fixed,
+    /// Per-bucket argmin of [`LinkEstimate::bucket_time`] over
+    /// [`CODEC_CANDIDATES`].
+    Adaptive(LinkEstimate),
+}
+
+impl BucketCodecPolicy {
+    /// The codec for a bucket of `bucket_len` elements exchanged by
+    /// `n_workers` ranks.  Pure and deterministic: same inputs, same
+    /// choice, on every rank.
+    pub fn decide(
+        &self,
+        configured: CompressionKind,
+        bucket_len: usize,
+        n_workers: usize,
+    ) -> CompressionKind {
+        match self {
+            BucketCodecPolicy::Fixed => configured,
+            BucketCodecPolicy::Adaptive(link) => {
+                if bucket_len == 0 || n_workers <= 1 {
+                    // Nothing crosses a wire: keep full precision.
+                    return CompressionKind::None;
+                }
+                let mut best = CompressionKind::None;
+                let mut best_t = f64::INFINITY;
+                for &kind in CODEC_CANDIDATES {
+                    let t = link.bucket_time(kind, bucket_len, n_workers);
+                    if t < best_t {
+                        best_t = t;
+                        best = kind;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+/// Overlap pipeline configuration, carried by the optimizer configs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverlapConfig {
+    /// Buckets the flat tensor is cut into ([`ChunkLayout`] sizing:
+    /// sizes differ by at most one).  Clamped to `[1, len]`.
+    pub n_buckets: usize,
+    pub policy: BucketCodecPolicy,
+    /// `true` → the comm thread overlaps bucket `k`'s exchange with the
+    /// production of bucket `k+1`; `false` → the synchronous reference
+    /// schedule (same bucketed structure, same trajectory, no thread).
+    pub overlapped: bool,
+}
+
+impl Default for OverlapConfig {
+    fn default() -> Self {
+        OverlapConfig {
+            n_buckets: 4,
+            policy: BucketCodecPolicy::Fixed,
+            overlapped: true,
+        }
+    }
+}
+
+/// In-flight bucket cap of the comm queue: one bucket on the wire plus
+/// one staged behind it, so `produce` runs at most two buckets ahead —
+/// the classic double buffer.
+const QUEUE_DEPTH: usize = 1;
+
+/// Bucketed allreduce pipeline: one [`Collective`] per bucket (own EC
+/// state, any topology, any transport), a `produce → exchange → consume`
+/// step schedule, and an optional comm thread that overlaps the exchange
+/// with production.  See the module docs for the identity argument.
+pub struct OverlapPipeline {
+    n_workers: usize,
+    len: usize,
+    layout: ChunkLayout,
+    overlapped: bool,
+    kinds: Vec<CompressionKind>,
+    collectives: Vec<Collective>,
+    /// bucket → worker → staging buffer (exact bucket size).
+    inputs: Vec<Vec<Vec<f32>>>,
+    /// bucket → averaged output buffer.
+    outputs: Vec<Vec<f32>>,
+    /// Last step's per-bucket ledger (bench/diagnostic).
+    bucket_stats: Vec<CommStats>,
+}
+
+impl OverlapPipeline {
+    /// Cut `len` into buckets and build one collective per bucket.  The
+    /// codec assignment is decided here, once — it must not change
+    /// step-to-step or the EC state would be reinterpreted.
+    ///
+    /// Panics if a transport mesh cannot be built (same contract as
+    /// [`Collective::build_with_transport`]).
+    pub fn build(
+        cfg: &OverlapConfig,
+        topology: CommTopology,
+        n_workers: usize,
+        len: usize,
+        kind: CompressionKind,
+        transport: Option<TransportBackend>,
+    ) -> Self {
+        let nb = cfg.n_buckets.max(1).min(len.max(1));
+        let layout = ChunkLayout::new(len, nb);
+        let kinds: Vec<CompressionKind> = (0..nb)
+            .map(|k| cfg.policy.decide(kind, layout.size(k), n_workers))
+            .collect();
+        let collectives: Vec<Collective> = (0..nb)
+            .map(|k| {
+                Collective::build_with_transport(
+                    topology,
+                    n_workers,
+                    layout.size(k),
+                    kinds[k],
+                    transport,
+                )
+            })
+            .collect();
+        let inputs = (0..nb)
+            .map(|k| (0..n_workers).map(|_| vec![0.0f32; layout.size(k)]).collect())
+            .collect();
+        let outputs = (0..nb).map(|k| vec![0.0f32; layout.size(k)]).collect();
+        OverlapPipeline {
+            n_workers,
+            len,
+            layout,
+            overlapped: cfg.overlapped,
+            kinds,
+            collectives,
+            inputs,
+            outputs,
+            bucket_stats: vec![CommStats::default(); nb],
+        }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.layout.n
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    pub fn overlapped(&self) -> bool {
+        self.overlapped
+    }
+
+    /// Element range of bucket `k`.
+    pub fn bucket_range(&self, k: usize) -> Range<usize> {
+        self.layout.range(k)
+    }
+
+    /// The decided per-bucket codecs (bench ledger / diagnostics).
+    pub fn kinds(&self) -> &[CompressionKind] {
+        &self.kinds
+    }
+
+    /// Last step's per-bucket wire ledger, bucket order.
+    pub fn bucket_stats(&self) -> &[CommStats] {
+        &self.bucket_stats
+    }
+
+    /// One pipelined step.  `produce(k, range, bufs)` fills the
+    /// per-worker staging buffers for bucket `k` (each pre-sized to the
+    /// bucket length); `consume(k, range, avg, stats)` applies the
+    /// averaged bucket.  Buckets are produced in ascending `k`; consume
+    /// observes them in the same order (the comm thread is FIFO), so the
+    /// two schedules are the same function of the inputs.
+    pub fn step<P, C>(&mut self, mut produce: P, mut consume: C) -> CommStats
+    where
+        P: FnMut(usize, Range<usize>, &mut [Vec<f32>]),
+        C: FnMut(usize, Range<usize>, &[f32], CommStats),
+    {
+        let nb = self.layout.n;
+        let mut total = CommStats::default();
+        if !self.overlapped {
+            for k in 0..nb {
+                produce(k, self.layout.range(k), &mut self.inputs[k]);
+                let stats = self.collectives[k]
+                    .allreduce(&self.inputs[k], &mut self.outputs[k]);
+                consume(k, self.layout.range(k), &self.outputs[k], stats);
+                self.bucket_stats[k] = stats;
+                total.merge(stats);
+            }
+            return total;
+        }
+
+        // Overlapped schedule: a single comm thread owns the collectives
+        // for the duration of the step and drains a bounded queue; the
+        // main thread produces bucket k+1 while bucket k is on the wire,
+        // and opportunistically consumes finished buckets between
+        // produces.  Buffers travel through the channels by value
+        // (std::mem::take / restore), so there is no shared mutable
+        // state: bit-identity with the synchronous schedule is by
+        // construction, not by locking.
+        let layout = &self.layout;
+        let collectives = &mut self.collectives;
+        let inputs = &mut self.inputs;
+        let outputs = &mut self.outputs;
+        let bucket_stats = &mut self.bucket_stats;
+        std::thread::scope(|scope| {
+            type Job = (usize, Vec<Vec<f32>>, Vec<f32>);
+            type Done = (usize, Vec<Vec<f32>>, Vec<f32>, CommStats);
+            let (work_tx, work_rx) = sync_channel::<Job>(QUEUE_DEPTH);
+            let (done_tx, done_rx) = channel::<Done>();
+            scope.spawn(move || {
+                for (k, bufs, mut out) in work_rx {
+                    let stats = collectives[k].allreduce(&bufs, &mut out);
+                    if done_tx.send((k, bufs, out, stats)).is_err() {
+                        return;
+                    }
+                }
+            });
+            let mut consumed = 0usize;
+            for k in 0..nb {
+                let mut bufs = std::mem::take(&mut inputs[k]);
+                produce(k, layout.range(k), &mut bufs);
+                let out = std::mem::take(&mut outputs[k]);
+                work_tx.send((k, bufs, out)).expect("comm thread alive");
+                // Consume whatever already finished — keeps the consume
+                // side overlapped with production too.
+                while let Ok((j, bufs_j, out_j, stats)) = done_rx.try_recv() {
+                    consume(j, layout.range(j), &out_j, stats);
+                    inputs[j] = bufs_j;
+                    outputs[j] = out_j;
+                    bucket_stats[j] = stats;
+                    total.merge(stats);
+                    consumed += 1;
+                }
+            }
+            drop(work_tx); // comm thread exits after draining the queue
+            while consumed < nb {
+                let (j, bufs_j, out_j, stats) =
+                    done_rx.recv().expect("comm thread alive");
+                consume(j, layout.range(j), &out_j, stats);
+                inputs[j] = bufs_j;
+                outputs[j] = out_j;
+                bucket_stats[j] = stats;
+                total.merge(stats);
+                consumed += 1;
+            }
+        });
+        total
+    }
+
+    /// Whole-tensor convenience wrapper over [`Self::step`]: slice the
+    /// full per-worker tensors into buckets, exchange, reassemble.
+    pub fn allreduce(
+        &mut self,
+        inputs: &[Vec<f32>],
+        output: &mut [f32],
+    ) -> CommStats {
+        assert_eq!(inputs.len(), self.n_workers);
+        assert_eq!(output.len(), self.len);
+        self.step(
+            |_k, r, bufs| {
+                for (i, b) in bufs.iter_mut().enumerate() {
+                    b.copy_from_slice(&inputs[i][r.clone()]);
+                }
+            },
+            |_k, r, avg, _stats| output[r].copy_from_slice(avg),
+        )
+    }
+
+    /// Zero every bucket's carried EC state (warmup→compression
+    /// boundary).
+    pub fn reset_errors(&mut self) {
+        for c in &mut self.collectives {
+            c.reset_errors();
+        }
+    }
+
+    /// Snapshot the carried EC state: bucket 0's export, then bucket
+    /// 1's, … — each bucket contributes its collective's own layout
+    /// (worker/leader errors then server-chunk errors).
+    pub fn export_errors(&self) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        for c in &self.collectives {
+            out.extend(c.export_errors());
+        }
+        out
+    }
+
+    /// Restore a state exported by [`Self::export_errors`].
+    /// All-or-nothing: every bucket's shape is validated against this
+    /// pipeline's own export layout *before* any state is touched, so a
+    /// mismatch anywhere (even in the last bucket) leaves the pre-call
+    /// state intact and returns `false`.
+    pub fn import_errors(&mut self, bufs: &[Vec<f32>]) -> bool {
+        let shapes: Vec<Vec<usize>> = self
+            .collectives
+            .iter()
+            .map(|c| c.export_errors().iter().map(|b| b.len()).collect())
+            .collect();
+        if shapes.iter().map(|s| s.len()).sum::<usize>() != bufs.len() {
+            return false;
+        }
+        let mut off = 0usize;
+        for shape in &shapes {
+            for (i, &l) in shape.iter().enumerate() {
+                if bufs[off + i].len() != l {
+                    return false;
+                }
+            }
+            off += shape.len();
+        }
+        let mut off = 0usize;
+        for (c, shape) in self.collectives.iter_mut().zip(&shapes) {
+            let ok = c.import_errors(&bufs[off..off + shape.len()]);
+            debug_assert!(ok, "shape-validated import must succeed");
+            if !ok {
+                return false;
+            }
+            off += shape.len();
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn gen_inputs(seed: u64, n: usize, len: usize) -> Vec<Vec<f32>> {
+        let base = Rng::new(seed);
+        (0..n).map(|i| base.fork(i as u64).normal_vec(len, 1.0)).collect()
+    }
+
+    #[test]
+    fn overlapped_matches_synchronous_bit_for_bit() {
+        // The tentpole identity: same bucketed structure, overlapped vs
+        // synchronous schedule — params out, per-step CommStats, and the
+        // carried EC state must all be bit-equal, across topologies and
+        // the wire.
+        let cases: &[(usize, usize, usize, CommTopology,
+                      Option<TransportBackend>)] = &[
+            (1, 64, 2, CommTopology::Flat, None),
+            (2, 0, 3, CommTopology::Flat, None),
+            (3, 5, 4, CommTopology::Flat, None),
+            (4, 257, 3, CommTopology::Flat, None),
+            (4, 1024, 7, CommTopology::Hierarchical { group_size: 2 }, None),
+            (4, 512, 3, CommTopology::HierarchicalPipelined { group_size: 2 },
+             None),
+            (3, 300, 4, CommTopology::Flat,
+             Some(TransportBackend::InMemory)),
+            (4, 256, 2, CommTopology::Hierarchical { group_size: 2 },
+             Some(TransportBackend::InMemory)),
+        ];
+        for &(n, len, nb, topology, transport) in cases {
+            let cfg_sync = OverlapConfig {
+                n_buckets: nb,
+                policy: BucketCodecPolicy::Fixed,
+                overlapped: false,
+            };
+            let cfg_over = OverlapConfig { overlapped: true, ..cfg_sync.clone() };
+            let mut a = OverlapPipeline::build(
+                &cfg_sync, topology, n, len, CompressionKind::OneBit,
+                transport,
+            );
+            let mut b = OverlapPipeline::build(
+                &cfg_over, topology, n, len, CompressionKind::OneBit,
+                transport,
+            );
+            assert!(!a.overlapped() && b.overlapped());
+            let mut out_a = vec![0.0f32; len];
+            let mut out_b = vec![0.0f32; len];
+            for step in 0..4 {
+                let inputs = gen_inputs(step + 100 * n as u64, n, len);
+                let sa = a.allreduce(&inputs, &mut out_a);
+                let sb = b.allreduce(&inputs, &mut out_b);
+                assert_eq!(out_a, out_b, "n={n} len={len} nb={nb} \
+                           {topology:?} {transport:?} step={step}");
+                assert_eq!(sa, sb, "stats n={n} len={len} nb={nb}");
+                assert_eq!(a.bucket_stats(), b.bucket_stats());
+                assert_eq!(a.export_errors(), b.export_errors(),
+                           "EC n={n} len={len} nb={nb} step={step}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_bucket_fixed_degenerates_to_legacy_collective() {
+        // n_buckets=1 + Fixed builds exactly the legacy whole-tensor
+        // collective, so outputs, stats, and EC evolution are the legacy
+        // path's, bit for bit — overlapped or not.
+        let (n, len) = (3usize, 301usize);
+        let mut legacy = Collective::build(
+            CommTopology::Flat, n, len, CompressionKind::OneBit,
+        );
+        let cfg = OverlapConfig {
+            n_buckets: 1,
+            policy: BucketCodecPolicy::Fixed,
+            overlapped: true,
+        };
+        let mut pipe = OverlapPipeline::build(
+            &cfg, CommTopology::Flat, n, len, CompressionKind::OneBit, None,
+        );
+        assert_eq!(pipe.n_buckets(), 1);
+        assert_eq!(pipe.kinds(), &[CompressionKind::OneBit]);
+        let mut out_l = vec![0.0f32; len];
+        let mut out_p = vec![0.0f32; len];
+        for step in 0..5 {
+            let inputs = gen_inputs(7 + step, n, len);
+            let sl = legacy.allreduce(&inputs, &mut out_l);
+            let sp = pipe.allreduce(&inputs, &mut out_p);
+            assert_eq!(out_l, out_p, "step={step}");
+            assert_eq!(sl, sp, "step={step}");
+            assert_eq!(legacy.export_errors(), pipe.export_errors());
+        }
+    }
+
+    #[test]
+    fn bucket_queue_is_bounded() {
+        // The double buffer: produce may run at most QUEUE_DEPTH + 1
+        // buckets ahead of consume (one staged, one on the wire).
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let produced = AtomicUsize::new(0);
+        let consumed = AtomicUsize::new(0);
+        let (n, len, nb) = (2usize, 4096usize, 8usize);
+        let cfg = OverlapConfig {
+            n_buckets: nb,
+            policy: BucketCodecPolicy::Fixed,
+            overlapped: true,
+        };
+        let mut pipe = OverlapPipeline::build(
+            &cfg, CommTopology::Flat, n, len, CompressionKind::OneBit, None,
+        );
+        let inputs = gen_inputs(5, n, len);
+        let mut max_ahead = 0usize;
+        pipe.step(
+            |_k, r, bufs| {
+                for (i, b) in bufs.iter_mut().enumerate() {
+                    b.copy_from_slice(&inputs[i][r.clone()]);
+                }
+                let p = produced.fetch_add(1, Ordering::SeqCst) + 1;
+                let c = consumed.load(Ordering::SeqCst);
+                max_ahead = max_ahead.max(p - c);
+            },
+            |_k, _r, _avg, _s| {
+                consumed.fetch_add(1, Ordering::SeqCst);
+            },
+        );
+        assert_eq!(produced.load(Ordering::SeqCst), nb);
+        assert_eq!(consumed.load(Ordering::SeqCst), nb);
+        // produce k can start while k−1 is queued and k−2 is on the wire.
+        assert!(max_ahead <= QUEUE_DEPTH + 2, "max_ahead={max_ahead}");
+    }
+
+    #[test]
+    fn export_import_roundtrip_and_mismatch() {
+        let (n, len, nb) = (3usize, 200usize, 4usize);
+        let cfg = OverlapConfig {
+            n_buckets: nb,
+            policy: BucketCodecPolicy::Fixed,
+            overlapped: false,
+        };
+        let build = || {
+            OverlapPipeline::build(
+                &cfg, CommTopology::Flat, n, len, CompressionKind::OneBit,
+                None,
+            )
+        };
+        let mut a = build();
+        let mut out = vec![0.0f32; len];
+        for step in 0..3 {
+            a.allreduce(&gen_inputs(step, n, len), &mut out);
+        }
+        let ec = a.export_errors();
+        assert!(ec.iter().any(|b| b.iter().any(|&e| e != 0.0)));
+        let mut b = build();
+        assert!(b.import_errors(&ec), "shape-matched import must succeed");
+        let mut out_b = vec![0.0f32; len];
+        let inputs = gen_inputs(99, n, len);
+        let sa = a.allreduce(&inputs, &mut out);
+        let sb = b.allreduce(&inputs, &mut out_b);
+        assert_eq!(out, out_b);
+        assert_eq!(sa, sb);
+        // Wrong buffer count → false, state untouched.
+        let mut c = build();
+        let before = c.export_errors();
+        assert!(!c.import_errors(&ec[..ec.len() - 1]));
+        assert_eq!(c.export_errors(), before);
+        // Same bucket/buffer count but a later bucket's length differs
+        // (len 198 vs 200 over 4 buckets: sizes 50,50,49,49 vs
+        // 50,50,50,50 — buckets 0 and 1 match, bucket 2 doesn't): the
+        // all-or-nothing import must reject WITHOUT touching any bucket,
+        // including the shape-compatible early ones.
+        let mut e = OverlapPipeline::build(
+            &cfg, CommTopology::Flat, n, 198, CompressionKind::OneBit, None,
+        );
+        let mut out_e = vec![0.0f32; 198];
+        e.allreduce(&gen_inputs(1, n, 198), &mut out_e);
+        let foreign = e.export_errors();
+        assert_eq!(foreign.len(), ec.len(), "same bucket/buffer arity");
+        let mut d = build();
+        let mut out_d = vec![0.0f32; len];
+        d.allreduce(&gen_inputs(2, n, len), &mut out_d);
+        let before_d = d.export_errors();
+        assert!(!d.import_errors(&foreign));
+        assert_eq!(d.export_errors(), before_d, "partial import leaked");
+    }
+
+    #[test]
+    fn adaptive_policy_is_deterministic_and_sane() {
+        // Fast link + tiny bucket → keep fp32 (codec passes dominate);
+        // slow link + big bucket → 1-bit (wire dominates); and the
+        // decision is a pure function (two builds agree).
+        let fast = LinkEstimate { bandwidth_bps: 1e12, latency_s: 1e-6 };
+        let slow = LinkEstimate { bandwidth_bps: 1e8, latency_s: 1e-3 };
+        let pol_fast = BucketCodecPolicy::Adaptive(fast);
+        let pol_slow = BucketCodecPolicy::Adaptive(slow);
+        assert_eq!(
+            pol_fast.decide(CompressionKind::OneBit, 256, 8),
+            CompressionKind::None,
+        );
+        assert_eq!(
+            pol_slow.decide(CompressionKind::OneBit, 1 << 20, 8),
+            CompressionKind::OneBit,
+        );
+        // Single worker or empty bucket: nothing crosses a wire.
+        assert_eq!(
+            pol_slow.decide(CompressionKind::OneBit, 1 << 20, 1),
+            CompressionKind::None,
+        );
+        assert_eq!(
+            pol_slow.decide(CompressionKind::OneBit, 0, 8),
+            CompressionKind::None,
+        );
+        // Fixed passes the configured kind through untouched.
+        assert_eq!(
+            BucketCodecPolicy::Fixed.decide(CompressionKind::NBit(4), 10, 4),
+            CompressionKind::NBit(4),
+        );
+        // Determinism across builds: identical assignments.
+        let cfg = OverlapConfig {
+            n_buckets: 6,
+            policy: pol_slow,
+            overlapped: false,
+        };
+        let a = OverlapPipeline::build(
+            &cfg, CommTopology::Flat, 4, 10_000, CompressionKind::OneBit,
+            None,
+        );
+        let b = OverlapPipeline::build(
+            &cfg, CommTopology::Flat, 4, 10_000, CompressionKind::OneBit,
+            None,
+        );
+        assert_eq!(a.kinds(), b.kinds());
+    }
+
+    #[test]
+    fn slower_links_never_pick_wider_codecs() {
+        // Monotonicity: as the link slows down, the chosen codec's
+        // per-element wire width must not increase.
+        let bits = |k: CompressionKind| match k {
+            CompressionKind::None => 32u32,
+            CompressionKind::NBit(b) => b,
+            CompressionKind::OneBit => 1,
+        };
+        for &len in &[1024usize, 65_536, 1 << 20] {
+            // Sweep the link from slow to fast: the chosen width must be
+            // non-decreasing (a faster link can afford more precision,
+            // never less).  The model makes this exact: candidate times
+            // are lines in 1/bandwidth with slope = wire bytes, so the
+            // argmin walks the lower envelope monotonically.
+            let mut prev = 0u32;
+            for &bw in &[1e6, 1e8, 1e9, 1e10, 1e12] {
+                let link =
+                    LinkEstimate { bandwidth_bps: bw, latency_s: 50e-6 };
+                let k = BucketCodecPolicy::Adaptive(link)
+                    .decide(CompressionKind::OneBit, len, 8);
+                let b = bits(k);
+                assert!(
+                    b >= prev,
+                    "len={len} bw={bw}: width {b} shrank from {prev}"
+                );
+                prev = b;
+            }
+            // The extremes of the sweep actually bottom out / top out.
+            assert_eq!(prev, 32, "len={len}: fastest link must pick fp32");
+        }
+    }
+
+    #[test]
+    fn from_netsim_and_probe_produce_usable_estimates() {
+        let eth = LinkEstimate::from_netsim(&NetworkModel::ethernet());
+        assert!((eth.bandwidth_bps - 4.1e9 / 8.0).abs() < 1.0);
+        assert!((eth.latency_s - 50e-6).abs() < 1e-12);
+        let probed =
+            LinkEstimate::probe(TransportBackend::InMemory, 2).unwrap();
+        assert!(probed.bandwidth_bps > 0.0 && probed.bandwidth_bps.is_finite());
+        assert!(probed.latency_s > 0.0 && probed.latency_s.is_finite());
+        // An in-memory "link" must rank as fast enough that the policy
+        // still yields *some* candidate (sanity, not a perf assertion).
+        let k = BucketCodecPolicy::Adaptive(probed)
+            .decide(CompressionKind::OneBit, 4096, 4);
+        assert!(CODEC_CANDIDATES.contains(&k));
+    }
+
+    #[test]
+    fn adaptive_buckets_exchange_correctly_end_to_end() {
+        // A mixed assignment (fp32 head buckets via a mid-speed link is
+        // not guaranteed — so force mixing by hand-checking whatever the
+        // policy picked still averages correctly within EC tolerance).
+        let (n, len, nb) = (4usize, 8192usize, 4usize);
+        let link = LinkEstimate { bandwidth_bps: 2e9, latency_s: 10e-6 };
+        let cfg = OverlapConfig {
+            n_buckets: nb,
+            policy: BucketCodecPolicy::Adaptive(link),
+            overlapped: true,
+        };
+        let mut pipe = OverlapPipeline::build(
+            &cfg, CommTopology::Flat, n, len, CompressionKind::OneBit, None,
+        );
+        let inputs = gen_inputs(3, n, len);
+        let mut exact = vec![0.0f32; len];
+        crate::comm::plain::allreduce_average(&inputs, &mut exact);
+        let mut out = vec![0.0f32; len];
+        let stats = pipe.allreduce(&inputs, &mut out);
+        assert_eq!(stats.uncompressed_bytes, len * 4);
+        // 1-bit buckets carry EC noise; fp32 buckets are near-exact.
+        for (k, &kind) in pipe.kinds().iter().enumerate() {
+            let r = pipe.bucket_range(k);
+            if kind == CompressionKind::None {
+                for i in r {
+                    assert!((out[i] - exact[i]).abs() < 1e-5, "i={i}");
+                }
+            }
+        }
+    }
+}

@@ -102,9 +102,14 @@ pub fn allreduce_average_path(
     } else {
         0
     };
+    // Split the ring volume between the reduce-scatter (alltoall) and
+    // allgather halves without losing the odd byte: the two fields must
+    // sum back to `ring_per_gpu` exactly (the netsim calibration contract
+    // is byte-exact, and `ring_per_gpu/2` twice drops a byte whenever the
+    // ring total is odd, e.g. n=4 × 10 B → 15).
     CommStats {
         alltoall_bytes_per_gpu: ring_per_gpu / 2,
-        allgather_bytes_per_gpu: ring_per_gpu / 2,
+        allgather_bytes_per_gpu: ring_per_gpu - ring_per_gpu / 2,
         uncompressed_bytes: bytes,
     }
 }
@@ -263,6 +268,32 @@ mod tests {
             4,
         );
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn odd_ring_volume_split_loses_no_byte() {
+        // Regression for the truncating double-halving: n=3 workers ×
+        // len=1 gives ring = ⌊2·4·2/3⌋ = 5 B (odd), which the old
+        // `ring/2 + ring/2` split reported as 2+2=4.  The halves must
+        // sum back to the ring total exactly — sweep all n × len.
+        let inputs: Vec<Vec<f32>> = (0..3).map(|_| vec![0.0f32; 1]).collect();
+        let mut out = vec![0.0f32; 1];
+        let stats = allreduce_average(&inputs, &mut out);
+        assert_eq!(stats.total_per_gpu(), 5, "odd ring total preserved");
+        for n in 1..=8usize {
+            for len in 0..64usize {
+                let inputs: Vec<Vec<f32>> =
+                    (0..n).map(|_| vec![0.0f32; len]).collect();
+                let mut out = vec![0.0f32; len];
+                let s = allreduce_average(&inputs, &mut out);
+                let ring = if n > 1 { 2 * (len * 4) * (n - 1) / n } else { 0 };
+                assert_eq!(
+                    s.alltoall_bytes_per_gpu + s.allgather_bytes_per_gpu,
+                    ring,
+                    "n={n} len={len}: split must sum to the ring total"
+                );
+            }
+        }
     }
 
     #[test]

@@ -216,6 +216,74 @@ impl ZeroOnePreset {
     }
 }
 
+/// An overlapped-step schedule shape for the bucketed pipeline
+/// ([`crate::comm::overlap::OverlapPipeline`]), const-friendly: bucket
+/// count plus the codec-policy source.  `adaptive_net = None` keeps the
+/// optimizer's configured compression on every bucket (the
+/// bit-identity-to-synchronous configuration); `Some(name)` calibrates
+/// a [`crate::comm::overlap::BucketCodecPolicy::Adaptive`] link
+/// estimate from the named [`crate::netsim::NetworkModel`] preset, so
+/// the per-bucket fp32/n-bit/1-bit choice tracks the modeled cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OverlapPreset {
+    pub name: &'static str,
+    /// Buckets the flat tensor is cut into (clamped to the tensor
+    /// length at build time; 1 degenerates to the whole-tensor path).
+    pub n_buckets: usize,
+    /// Netsim model the adaptive policy calibrates from
+    /// (`"ethernet"` | `"infiniband"`); `None` = fixed codec.
+    pub adaptive_net: Option<&'static str>,
+}
+
+/// Overlap shapes for the paper's two clusters plus the fixed-codec
+/// reference configuration the property tests and the bench's
+/// bit-identity gate run on.
+pub const OVERLAP_PRESETS: &[OverlapPreset] = &[
+    OverlapPreset {
+        name: "overlap-fixed-8",
+        n_buckets: 8,
+        adaptive_net: None,
+    },
+    OverlapPreset {
+        name: "overlap-adaptive-ethernet",
+        n_buckets: 8,
+        adaptive_net: Some("ethernet"),
+    },
+    OverlapPreset {
+        name: "overlap-adaptive-infiniband",
+        n_buckets: 8,
+        adaptive_net: Some("infiniband"),
+    },
+];
+
+impl OverlapPreset {
+    pub fn by_name(name: &str) -> Option<&'static OverlapPreset> {
+        OVERLAP_PRESETS.iter().find(|p| p.name == name)
+    }
+
+    /// Ready-to-use [`crate::comm::overlap::OverlapConfig`] — drop it
+    /// into [`crate::optim::onebit_adam::OneBitAdamConfig::overlap`] or
+    /// [`ZeroOneAdamConfig::overlap`].
+    pub fn config(&self) -> crate::comm::overlap::OverlapConfig {
+        use crate::comm::overlap::{
+            BucketCodecPolicy, LinkEstimate, OverlapConfig,
+        };
+        let policy = match self.adaptive_net {
+            None => BucketCodecPolicy::Fixed,
+            Some(net) => {
+                let model = match net {
+                    "infiniband" => crate::netsim::NetworkModel::infiniband(),
+                    // Unknown names fall back to the paper's Ethernet
+                    // cluster rather than panicking in a preset table.
+                    _ => crate::netsim::NetworkModel::ethernet(),
+                };
+                BucketCodecPolicy::Adaptive(LinkEstimate::from_netsim(&model))
+            }
+        };
+        OverlapConfig { n_buckets: self.n_buckets, policy, overlapped: true }
+    }
+}
+
 /// A named adversarial-network shape for the chaos transport
 /// ([`crate::transport::ChaosScenario`]), const-friendly: scalar
 /// probabilities + microsecond delays, turned into a runtime scenario
@@ -504,6 +572,75 @@ mod tests {
         let grads = vec![vec![0.5f32; 32], vec![-0.5f32; 32]];
         let stats = opt.step(&grads, 1e-3);
         assert_eq!(stats.phase, crate::optim::Phase::Compression);
+    }
+
+    #[test]
+    fn overlap_presets_build_configs_and_drive_an_optimizer() {
+        use crate::comm::overlap::BucketCodecPolicy;
+        for p in OVERLAP_PRESETS {
+            let cfg = p.config();
+            assert_eq!(cfg.n_buckets, p.n_buckets, "{}", p.name);
+            assert!(cfg.overlapped, "{}", p.name);
+            match (p.adaptive_net, cfg.policy) {
+                (None, BucketCodecPolicy::Fixed) => {}
+                (Some(_), BucketCodecPolicy::Adaptive(est)) => {
+                    assert!(est.bandwidth_bps > 0.0, "{}", p.name);
+                    assert!(est.latency_s > 0.0, "{}", p.name);
+                }
+                other => panic!("{}: policy mismatch {other:?}", p.name),
+            }
+        }
+        assert!(OverlapPreset::by_name("overlap-fixed-8").is_some());
+        assert!(OverlapPreset::by_name("nope").is_none());
+        // the infiniband link is faster than ethernet, so its estimate
+        // must carry more bandwidth
+        let eth = OverlapPreset::by_name("overlap-adaptive-ethernet")
+            .unwrap()
+            .config();
+        let ib = OverlapPreset::by_name("overlap-adaptive-infiniband")
+            .unwrap()
+            .config();
+        match (eth.policy, ib.policy) {
+            (
+                BucketCodecPolicy::Adaptive(e),
+                BucketCodecPolicy::Adaptive(i),
+            ) => assert!(i.bandwidth_bps > e.bandwidth_bps),
+            _ => panic!("adaptive presets must be adaptive"),
+        }
+        // a preset-built config actually drives a working optimizer,
+        // and its overlapped schedule is bit-identical to the
+        // synchronous schedule of the SAME bucketization (bucket
+        // boundaries change chunk-local compression scales, so the
+        // identity contract is overlapped-vs-sync, not vs whole-tensor)
+        use crate::optim::onebit_adam::{OneBitAdam, OneBitAdamConfig};
+        use crate::optim::DistOptimizer;
+        use crate::util::prng::Rng;
+        let d = 96usize;
+        let preset_cfg =
+            OverlapPreset::by_name("overlap-fixed-8").unwrap().config();
+        let mut sync_cfg = preset_cfg.clone();
+        sync_cfg.overlapped = false;
+        let over = OneBitAdamConfig {
+            warmup_steps: Some(2),
+            overlap: Some(preset_cfg),
+            ..Default::default()
+        };
+        let base = OneBitAdamConfig {
+            warmup_steps: Some(2),
+            overlap: Some(sync_cfg),
+            ..Default::default()
+        };
+        let mut a = OneBitAdam::new(2, vec![0.2; d], over);
+        let mut b = OneBitAdam::new(2, vec![0.2; d], base);
+        let mut rng = Rng::new(53);
+        for _ in 0..6 {
+            let grads: Vec<Vec<f32>> =
+                (0..2).map(|_| rng.normal_vec(d, 1.0)).collect();
+            let sa = a.step(&grads, 1e-3);
+            let sb = b.step(&grads, 1e-3);
+            assert_eq!(a.params(), b.params());
+            assert_eq!(sa.comm, sb.comm);
+        }
     }
 
     #[test]

@@ -251,6 +251,46 @@ pub fn momentum_refresh_auto(
     }
 }
 
+/// Per-bucket variant of [`momentum_refresh_auto`] for the overlap
+/// pipeline ([`crate::comm::overlap::OverlapPipeline`]): refresh ONE
+/// worker's momentum over ONE bucket's sub-slices.  Sequential on
+/// purpose — the pipeline's concurrency is the comm thread, and the
+/// kernels are elementwise, so any slicing is bit-identical to the
+/// whole-tensor call.
+pub fn momentum_refresh_slice(
+    backend: &dyn MathBackend,
+    beta1: f32,
+    m: &[f32],
+    g: &[f32],
+    out: &mut [f32],
+) {
+    if backend.elementwise_native() {
+        kernels::momentum_refresh_fused(beta1, m, g, out);
+    } else {
+        out.copy_from_slice(m);
+        backend.momentum_update(beta1, out, g).expect("momentum backend");
+    }
+}
+
+/// Per-bucket variant of [`precond_step_auto`] for the overlap pipeline
+/// (same sequential-by-design contract as [`momentum_refresh_slice`]).
+pub fn precond_step_slice(
+    backend: &dyn MathBackend,
+    eps: f32,
+    p: &mut [f32],
+    m: &[f32],
+    v_frozen: &[f32],
+    lr: f32,
+) {
+    if backend.elementwise_native() {
+        kernels::precond_step_fused(eps, p, m, v_frozen, lr);
+    } else {
+        backend
+            .precond_step(eps, p, m, v_frozen, lr)
+            .expect("precond backend");
+    }
+}
+
 /// Compression-stage preconditioned update dispatch:
 /// `p ← p − lr·m/(√v + ε)` against the frozen variance — block-parallel
 /// fused kernels for native elementwise backends (bit-identical split),

@@ -77,6 +77,10 @@ impl DistOptimizer for LocalSgd {
         }
         self.t += 1;
         let mut comm = CommStats::default();
+        // Non-averaging steps move zero bytes, but still count the full
+        // fp32 gradient in `uncompressed_bytes`: that field is the
+        // what-synchronous-SGD-would-have-sent baseline, so over a run
+        // `reduction_vs_fp32` shows the tau-fold saving rather than 1.0.
         comm.uncompressed_bytes = d * 4;
         if self.t % self.tau == 0 {
             // averaging round: params (+ momentum) allreduce
@@ -88,9 +92,10 @@ impl DistOptimizer for LocalSgd {
             if self.beta > 0.0 {
                 let mut avg_m = vec![0.0f32; d];
                 let stats_m = allreduce_average(&self.m, &mut avg_m);
-                comm.alltoall_bytes_per_gpu += stats_m.alltoall_bytes_per_gpu;
-                comm.allgather_bytes_per_gpu +=
-                    stats_m.allgather_bytes_per_gpu;
+                // Merge all three fields: dropping the momentum round's
+                // `uncompressed_bytes` undercounted the fp32 baseline by
+                // the whole momentum tensor every averaging round.
+                comm.merge(stats_m);
                 for m in self.m.iter_mut() {
                     m.copy_from_slice(&avg_m);
                 }
@@ -143,6 +148,59 @@ mod tests {
         }
         // 2 averaging rounds of a 400-byte tensor: ring 2*(1/2)*400 = 400 B
         assert_eq!(total, 2 * 400);
+    }
+
+    #[test]
+    fn momentum_round_counts_full_fp32_baseline() {
+        // Regression: the momentum allreduce's `uncompressed_bytes` was
+        // dropped from the merged ledger, undercounting the fp32
+        // baseline by the whole momentum tensor on every averaging
+        // round.  With tau=2 and beta>0, the averaging step moves two
+        // d-sized tensors (params + momentum), so its baseline must be
+        // 2·d·4 and its wire volume two fp32 rings.
+        let d = 100usize;
+        let n = 2usize;
+        let mut opt = LocalSgd::new(n, vec![0.0; d], 2, 0.9);
+        let grads = vec![vec![1.0f32; d], vec![1.0f32; d]];
+        let s1 = opt.step(&grads, 0.01); // local step
+        assert_eq!(s1.comm.total_per_gpu(), 0, "local step: no wire traffic");
+        assert_eq!(
+            s1.comm.uncompressed_bytes,
+            d * 4,
+            "local step still accrues the sync-SGD fp32 baseline"
+        );
+        let s2 = opt.step(&grads, 0.01); // averaging round
+        let ring = 2 * (d * 4) * (n - 1) / n;
+        assert_eq!(
+            s2.comm.total_per_gpu(),
+            2 * ring,
+            "params + momentum rings"
+        );
+        assert_eq!(
+            s2.comm.uncompressed_bytes,
+            2 * d * 4,
+            "baseline must include the momentum tensor"
+        );
+    }
+
+    #[test]
+    fn run_level_reduction_shows_tau_fold_saving() {
+        // The run-level ledger semantics the per-step fields encode:
+        // beta=0, tau=4 → wire volume is 1/tau of what synchronous SGD
+        // would send, so reduction_vs_fp32 over the run ≈ 2·tau (the
+        // factor 2 is uncompressed-vs-ring per-GPU accounting).
+        let d = 100usize;
+        let mut opt = LocalSgd::new(2, vec![0.0; d], 4, 0.0);
+        let grads = vec![vec![1.0f32; d], vec![1.0f32; d]];
+        let mut run = CommStats::default();
+        for _ in 0..8 {
+            run.merge(opt.step(&grads, 0.01).comm);
+        }
+        assert_eq!(run.uncompressed_bytes, 8 * d * 4);
+        let ring = 2 * (d * 4) * (2 - 1) / 2;
+        assert_eq!(run.total_per_gpu(), 2 * ring, "two averaging rounds");
+        let red = run.reduction_vs_fp32();
+        assert!((red - 8.0).abs() < 1e-9, "2·tau = 8, got {red}");
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! 3. every worker applies
 //!    `x_{t+1} = x_t − γ · m̄_t / (√v_{T_w} + ε)` (line 13).
 
+use crate::comm::overlap::{OverlapConfig, OverlapPipeline};
 use crate::comm::plain::{allreduce_average_path, PlainPath};
 use crate::comm::{Collective, CommStats, CommTopology};
 use crate::compress::CompressionKind;
@@ -64,6 +65,17 @@ pub struct OneBitAdamConfig {
     /// backends are bit-identical to the in-process engines, so the
     /// training trajectory is transport-invariant (tested below).
     pub transport: Option<TransportBackend>,
+    /// Overlapped step pipeline for the compression stage
+    /// ([`crate::comm::overlap`]).  `None` (default) keeps the legacy
+    /// whole-tensor sequence; `Some(cfg)` cuts the tensor into buckets
+    /// — momentum refresh, compressed exchange, and preconditioned
+    /// update run per bucket, with the exchange of bucket `k`
+    /// overlapping the refresh of bucket `k+1` on a comm thread when
+    /// `cfg.overlapped`.  For a fixed codec assignment the trajectory
+    /// is bit-identical to the synchronous schedule of the same
+    /// bucketed structure (tested below); the adaptive policy may pick
+    /// a different codec per bucket from a link estimate.
+    pub overlap: Option<OverlapConfig>,
 }
 
 impl Default for OneBitAdamConfig {
@@ -77,6 +89,7 @@ impl Default for OneBitAdamConfig {
             v_floor_rel: 1e-4,
             topology: CommTopology::Flat,
             transport: None,
+            overlap: None,
         }
     }
 }
@@ -94,8 +107,13 @@ pub struct OneBitAdam {
     /// fixed-length or monitor-gated auto switch).
     freeze: FreezePolicy,
     /// Compression-stage collective, topology-dispatched (flat or
-    /// hierarchical per `cfg.topology`).
+    /// hierarchical per `cfg.topology`).  Unused (and built without a
+    /// transport mesh) when `pipeline` is active — the pipeline owns
+    /// one collective per bucket instead.
     car: Collective,
+    /// Bucketed overlap pipeline (`cfg.overlap`), which replaces `car`
+    /// for the compression stage when present.
+    pipeline: Option<OverlapPipeline>,
     phase: Phase,
     /// Step index; `switch_step` records T_w once frozen.
     pub t: usize,
@@ -131,18 +149,32 @@ impl OneBitAdam {
                 cfg.min_warmup_steps,
             ),
         );
-        OneBitAdam {
-            n: n_workers,
-            params: init,
-            m: vec![0.0; d],
-            v: vec![0.0; d],
-            car: Collective::build_with_transport(
+        let pipeline = cfg.overlap.as_ref().map(|oc| {
+            OverlapPipeline::build(
+                oc,
                 cfg.topology,
                 n_workers,
                 d,
                 cfg.compression,
                 cfg.transport,
+            )
+        });
+        OneBitAdam {
+            n: n_workers,
+            params: init,
+            m: vec![0.0; d],
+            v: vec![0.0; d],
+            // With the pipeline active the whole-tensor collective is
+            // never exchanged through, so don't build a second (per-rank
+            // threaded) transport mesh for it.
+            car: Collective::build_with_transport(
+                cfg.topology,
+                n_workers,
+                d,
+                cfg.compression,
+                if cfg.overlap.is_some() { None } else { cfg.transport },
             ),
+            pipeline,
             cfg,
             backend,
             freeze,
@@ -222,7 +254,38 @@ impl OneBitAdam {
         self.phase = Phase::Compression;
         self.switch_step = Some(self.t);
         self.car.reset_errors();
+        if let Some(p) = &mut self.pipeline {
+            p.reset_errors();
+        }
         freeze::apply_variance_floor(self.cfg.v_floor_rel, &mut self.v);
+    }
+
+    /// The overlap pipeline, when `cfg.overlap` selected one
+    /// (diagnostics / bench ledger).
+    pub fn overlap_pipeline(&self) -> Option<&OverlapPipeline> {
+        self.pipeline.as_ref()
+    }
+
+    /// Carried EC state of whichever engine owns the compression stage.
+    fn export_ec(&self) -> Vec<Vec<f32>> {
+        match &self.pipeline {
+            Some(p) => p.export_errors(),
+            None => self.car.export_errors(),
+        }
+    }
+
+    fn import_ec(&mut self, bufs: &[Vec<f32>]) -> bool {
+        match &mut self.pipeline {
+            Some(p) => p.import_errors(bufs),
+            None => self.car.import_errors(bufs),
+        }
+    }
+
+    fn reset_ec(&mut self) {
+        self.car.reset_errors();
+        if let Some(p) = &mut self.pipeline {
+            p.reset_errors();
+        }
     }
 
     /// Export the training state: params, momentum, variance, phase —
@@ -237,7 +300,7 @@ impl OneBitAdam {
             m: self.m.clone(),
             v: self.v.clone(),
             ec: if self.phase == Phase::Compression {
-                self.car.export_errors()
+                self.export_ec()
             } else {
                 Vec::new() // warmup carries no EC state (all zeros)
             },
@@ -261,10 +324,10 @@ impl OneBitAdam {
         if ck.phase == Phase::Compression {
             opt.phase = Phase::Compression;
             opt.switch_step = Some(opt.t);
-            if !ck.ec.is_empty() && !opt.car.import_errors(&ck.ec) {
-                // shape mismatch (different topology/worker count than
-                // the saving run): fall back to fresh error state
-                opt.car.reset_errors();
+            if !ck.ec.is_empty() && !opt.import_ec(&ck.ec) {
+                // shape mismatch (different topology/worker count/bucket
+                // layout than the saving run): fall back to fresh errors
+                opt.reset_ec();
             }
         }
         opt
@@ -288,6 +351,14 @@ impl OneBitAdam {
         if cfg.topology != CommTopology::Flat {
             return Err(crate::util::error::Error::Config(
                 "elastic restore supports the flat topology only".into(),
+            ));
+        }
+        if cfg.overlap.is_some() {
+            // reshard_ec re-cuts the whole-tensor flat EC layout; the
+            // pipeline's per-bucket EC state needs its own resharder.
+            return Err(crate::util::error::Error::Config(
+                "elastic restore does not support the overlap pipeline"
+                    .into(),
             ));
         }
         if !ck.ec.is_empty() {
@@ -328,6 +399,9 @@ impl OneBitAdam {
     }
 
     fn compression_step(&mut self, grads: &[Vec<f32>], lr: f32) -> CommStats {
+        if self.pipeline.is_some() {
+            return self.compression_step_overlapped(grads, lr);
+        }
         // Line 6: every worker refreshes the shared momentum with its own
         // gradient — the fused per-worker kernel dispatch shared with
         // `ZeroOneAdam` (`optim::backend::momentum_refresh_auto`).
@@ -352,6 +426,55 @@ impl OneBitAdam {
             &self.v,
             lr,
         );
+        comm
+    }
+
+    /// Algorithm 1's compression step on the bucketed pipeline: lines
+    /// 6–13 run per bucket — refresh of bucket `k+1` overlaps the
+    /// exchange of bucket `k` when the pipeline is overlapped.  All
+    /// three stages are elementwise over disjoint element ranges, so
+    /// bucketing (and the overlap) cannot change the math; the momentum
+    /// commit (`m ← m̄`) happens after the full step exactly like the
+    /// whole-tensor sequence, since `produce` reads `m` of the
+    /// *previous* step only.
+    fn compression_step_overlapped(
+        &mut self,
+        grads: &[Vec<f32>],
+        lr: f32,
+    ) -> CommStats {
+        let pipeline = self.pipeline.as_mut().expect("pipeline present");
+        let backend = self.backend.as_ref();
+        let beta1 = self.cfg.hyper.beta1;
+        let eps = self.cfg.hyper.eps;
+        let m = &self.m;
+        let v = &self.v;
+        let params = &mut self.params;
+        let avg = &mut self.avg;
+        let comm = pipeline.step(
+            |_k, r, bufs| {
+                for (g, buf) in grads.iter().zip(bufs.iter_mut()) {
+                    crate::optim::backend::momentum_refresh_slice(
+                        backend,
+                        beta1,
+                        &m[r.clone()],
+                        &g[r.clone()],
+                        buf,
+                    );
+                }
+            },
+            |_k, r, bucket_avg, _stats| {
+                avg[r.clone()].copy_from_slice(bucket_avg);
+                crate::optim::backend::precond_step_slice(
+                    backend,
+                    eps,
+                    &mut params[r.clone()],
+                    bucket_avg,
+                    &v[r],
+                    lr,
+                );
+            },
+        );
+        self.m.copy_from_slice(&self.avg);
         comm
     }
 }
@@ -868,6 +991,149 @@ mod tests {
         let f1 = quad_value(opt.params(), &h);
         assert!(f1 < f0 * 0.05, "f0={f0} f1={f1}");
         assert_eq!(opt.phase(), Phase::Compression);
+    }
+
+    #[test]
+    fn overlapped_pipeline_matches_synchronous_trajectory() {
+        // The tentpole invariant at the optimizer level: the overlapped
+        // schedule must reproduce the synchronous schedule of the same
+        // bucketed structure bit for bit — params, momentum, per-step
+        // CommStats, and the carried EC state — across topologies and
+        // over the wire.
+        use crate::comm::overlap::BucketCodecPolicy;
+        let cases: &[(CommTopology, Option<TransportBackend>, usize)] = &[
+            (CommTopology::Flat, None, 4),
+            (CommTopology::Hierarchical { group_size: 2 }, None, 3),
+            (CommTopology::Flat, Some(TransportBackend::InMemory), 2),
+        ];
+        for &(topology, transport, nb) in cases {
+            let overlap = |overlapped| OneBitAdamConfig {
+                warmup_steps: Some(3),
+                topology,
+                transport,
+                overlap: Some(crate::comm::overlap::OverlapConfig {
+                    n_buckets: nb,
+                    policy: BucketCodecPolicy::Fixed,
+                    overlapped,
+                }),
+                ..Default::default()
+            };
+            let d = 420;
+            let mut sync = OneBitAdam::new(4, vec![0.3; d], overlap(false));
+            let mut over = OneBitAdam::new(4, vec![0.3; d], overlap(true));
+            assert_eq!(over.overlap_pipeline().unwrap().n_buckets(), nb);
+            let mut rng = Rng::new(21);
+            for step in 0..12 {
+                let grads: Vec<Vec<f32>> =
+                    (0..4).map(|_| rng.normal_vec(d, 1.0)).collect();
+                let ss = sync.step(&grads, 1e-3);
+                let so = over.step(&grads, 1e-3);
+                assert_eq!(ss.comm, so.comm,
+                           "{topology:?} {transport:?} step={step}");
+                assert_eq!(sync.params(), over.params(),
+                           "{topology:?} {transport:?} step={step}");
+            }
+            assert_eq!(sync.momentum(), over.momentum());
+            assert_eq!(
+                sync.overlap_pipeline().unwrap().export_errors(),
+                over.overlap_pipeline().unwrap().export_errors(),
+            );
+        }
+    }
+
+    #[test]
+    fn one_bucket_overlap_matches_legacy_whole_tensor_path() {
+        // n_buckets = 1 + Fixed degenerates to exactly the legacy
+        // whole-tensor collective: identical trajectory AND identical
+        // per-step wire ledger, so the pipeline is a strict superset of
+        // the old code path.
+        let d = 300;
+        let cfg_legacy = OneBitAdamConfig {
+            warmup_steps: Some(4),
+            ..Default::default()
+        };
+        let cfg_pipe = OneBitAdamConfig {
+            warmup_steps: Some(4),
+            overlap: Some(crate::comm::overlap::OverlapConfig {
+                n_buckets: 1,
+                policy: crate::comm::overlap::BucketCodecPolicy::Fixed,
+                overlapped: true,
+            }),
+            ..Default::default()
+        };
+        let mut a = OneBitAdam::new(3, vec![0.2; d], cfg_legacy);
+        let mut b = OneBitAdam::new(3, vec![0.2; d], cfg_pipe);
+        let mut rng = Rng::new(17);
+        for step in 0..15 {
+            let grads: Vec<Vec<f32>> =
+                (0..3).map(|_| rng.normal_vec(d, 1.0)).collect();
+            let sa = a.step(&grads, 1e-3);
+            let sb = b.step(&grads, 1e-3);
+            assert_eq!(sa.comm, sb.comm, "step={step}");
+            assert_eq!(a.params(), b.params(), "step={step}");
+        }
+        assert_eq!(a.momentum(), b.momentum());
+        assert_eq!(
+            a.collective().export_errors(),
+            b.overlap_pipeline().unwrap().export_errors(),
+        );
+    }
+
+    #[test]
+    fn overlap_checkpoint_resume_is_exact() {
+        // Checkpoint/restore carries the per-bucket EC state through the
+        // pipeline: original and restored runs stay bit-identical.
+        let d = 256;
+        let cfg = OneBitAdamConfig {
+            warmup_steps: Some(5),
+            overlap: Some(crate::comm::overlap::OverlapConfig {
+                n_buckets: 3,
+                policy: crate::comm::overlap::BucketCodecPolicy::Fixed,
+                overlapped: true,
+            }),
+            ..Default::default()
+        };
+        let mut opt = OneBitAdam::new(2, vec![0.5; d], cfg.clone());
+        let mut grad_rng = Rng::new(41);
+        for _ in 0..20 {
+            let g: Vec<Vec<f32>> =
+                (0..2).map(|_| grad_rng.normal_vec(d, 1.0)).collect();
+            opt.step(&g, 1e-3);
+        }
+        let ck = opt.to_checkpoint();
+        assert!(!ck.ec.is_empty(), "pipeline checkpoint carries EC state");
+        let mut resumed = OneBitAdam::from_checkpoint(2, ck, cfg);
+        assert_eq!(resumed.phase(), Phase::Compression);
+        let mut fork_rng = Rng::new(43);
+        for _ in 0..8 {
+            let g: Vec<Vec<f32>> =
+                (0..2).map(|_| fork_rng.normal_vec(d, 1.0)).collect();
+            opt.step(&g, 1e-3);
+            resumed.step(&g, 1e-3);
+        }
+        assert_eq!(opt.params(), resumed.params());
+        assert_eq!(opt.momentum(), resumed.momentum());
+    }
+
+    #[test]
+    fn elastic_restore_rejects_overlap_pipeline() {
+        let d = 64;
+        let cfg = OneBitAdamConfig {
+            warmup_steps: Some(2),
+            overlap: Some(crate::comm::overlap::OverlapConfig::default()),
+            ..Default::default()
+        };
+        let mut opt = OneBitAdam::new(3, vec![0.1; d], cfg.clone());
+        let mut rng = Rng::new(1);
+        for _ in 0..5 {
+            let g: Vec<Vec<f32>> =
+                (0..3).map(|_| rng.normal_vec(d, 1.0)).collect();
+            opt.step(&g, 1e-3);
+        }
+        let ck = opt.to_checkpoint();
+        let err =
+            OneBitAdam::from_checkpoint_elastic(2, ck, cfg, 3, &[0, 2]);
+        assert!(err.is_err(), "per-bucket EC state cannot be resharded");
     }
 
     #[test]

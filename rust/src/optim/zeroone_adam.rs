@@ -46,12 +46,13 @@
 //! optimizer with an LR warmup the way every schedule in
 //! [`crate::config::presets`] already does.
 
+use crate::comm::overlap::{OverlapConfig, OverlapPipeline};
 use crate::comm::plain::{allreduce_average_path, PlainPath};
 use crate::comm::{AllreducePath, Collective, CommStats, CommTopology};
 use crate::compress::CompressionKind;
 use crate::optim::backend::{
-    momentum_refresh_auto, precond_step_auto, AdamHyper, MathBackend,
-    NativeBackend,
+    momentum_refresh_auto, momentum_refresh_slice, precond_step_auto,
+    precond_step_slice, AdamHyper, MathBackend, NativeBackend,
 };
 use crate::optim::freeze::{self, VarianceSyncSchedule};
 use crate::optim::{DistOptimizer, Phase, StepStats};
@@ -86,6 +87,14 @@ pub struct ZeroOneAdamConfig {
     /// are bit-identical, so the trajectory is transport-invariant
     /// (tested below).
     pub transport: Option<TransportBackend>,
+    /// Overlapped step pipeline for the per-step compressed momentum
+    /// exchange — same contract as
+    /// [`crate::optim::onebit_adam::OneBitAdamConfig::overlap`].  The
+    /// sync-point fp32 variance resync stays whole-tensor (it is O(log
+    /// T) rare); with a transport selected it then runs on the
+    /// in-process plain engine, which is property-tested bit-identical
+    /// to the wire one, so the trajectory is unchanged.
+    pub overlap: Option<OverlapConfig>,
 }
 
 impl Default for ZeroOneAdamConfig {
@@ -97,6 +106,7 @@ impl Default for ZeroOneAdamConfig {
             v_floor_rel: 1e-4,
             topology: CommTopology::Flat,
             transport: None,
+            overlap: None,
         }
     }
 }
@@ -114,7 +124,12 @@ pub struct ZeroOneAdam {
     /// The variance-update policy (pure function of the step index).
     schedule: VarianceSyncSchedule,
     /// Compressed momentum collective, topology/transport-dispatched.
+    /// Unused for the exchange (and built without a transport mesh)
+    /// when `pipeline` is active.
     car: Collective,
+    /// Bucketed overlap pipeline (`cfg.overlap`), which replaces `car`
+    /// for the momentum exchange when present.
+    pipeline: Option<OverlapPipeline>,
     /// Step index (no phases — compression runs from step 0).
     pub t: usize,
     /// Fan-out for the elementwise stages (resolved once).
@@ -142,6 +157,16 @@ impl ZeroOneAdam {
         backend: Box<dyn MathBackend>,
     ) -> Self {
         let d = init.len();
+        let pipeline = cfg.overlap.as_ref().map(|oc| {
+            OverlapPipeline::build(
+                oc,
+                cfg.topology,
+                n_workers,
+                d,
+                cfg.compression,
+                cfg.transport,
+            )
+        });
         ZeroOneAdam {
             n: n_workers,
             params: init,
@@ -153,8 +178,9 @@ impl ZeroOneAdam {
                 n_workers,
                 d,
                 cfg.compression,
-                cfg.transport,
+                if cfg.overlap.is_some() { None } else { cfg.transport },
             ),
+            pipeline,
             cfg,
             backend,
             t: 0,
@@ -200,6 +226,34 @@ impl ZeroOneAdam {
         &self.car
     }
 
+    /// The overlap pipeline, when `cfg.overlap` selected one
+    /// (diagnostics / bench ledger).
+    pub fn overlap_pipeline(&self) -> Option<&OverlapPipeline> {
+        self.pipeline.as_ref()
+    }
+
+    /// Carried EC state of whichever engine owns the momentum exchange.
+    fn export_ec(&self) -> Vec<Vec<f32>> {
+        match &self.pipeline {
+            Some(p) => p.export_errors(),
+            None => self.car.export_errors(),
+        }
+    }
+
+    fn import_ec(&mut self, bufs: &[Vec<f32>]) -> bool {
+        match &mut self.pipeline {
+            Some(p) => p.import_errors(bufs),
+            None => self.car.import_errors(bufs),
+        }
+    }
+
+    fn reset_ec(&mut self) {
+        self.car.reset_errors();
+        if let Some(p) = &mut self.pipeline {
+            p.reset_errors();
+        }
+    }
+
     /// Select the compressed-allreduce engine (bench/diagnostic use; the
     /// engines are bit-identical, so this never changes a trajectory).
     pub fn set_allreduce_path(&mut self, path: AllreducePath) {
@@ -226,7 +280,7 @@ impl ZeroOneAdam {
             params: self.params.clone(),
             m: self.m.clone(),
             v: self.v.clone(),
-            ec: self.car.export_errors(),
+            ec: self.export_ec(),
         }
     }
 
@@ -242,8 +296,8 @@ impl ZeroOneAdam {
         opt.m = ck.m;
         opt.v = ck.v;
         opt.t = ck.step as usize;
-        if !ck.ec.is_empty() && !opt.car.import_errors(&ck.ec) {
-            opt.car.reset_errors();
+        if !ck.ec.is_empty() && !opt.import_ec(&ck.ec) {
+            opt.reset_ec();
         }
         opt
     }
@@ -266,6 +320,14 @@ impl ZeroOneAdam {
         if cfg.topology != CommTopology::Flat {
             return Err(crate::util::error::Error::Config(
                 "elastic restore supports the flat topology only".into(),
+            ));
+        }
+        if cfg.overlap.is_some() {
+            // reshard_ec re-cuts the whole-tensor flat EC layout; the
+            // pipeline's per-bucket EC state needs its own resharder.
+            return Err(crate::util::error::Error::Config(
+                "elastic restore does not support the overlap pipeline"
+                    .into(),
             ));
         }
         if !ck.ec.is_empty() {
@@ -308,6 +370,52 @@ impl ZeroOneAdam {
         freeze::apply_variance_floor(self.cfg.v_floor_rel, &mut self.v);
         comm
     }
+
+    /// The per-step 1-bit policy on the bucketed pipeline (same
+    /// identity argument as
+    /// [`crate::optim::onebit_adam::OneBitAdam`]'s overlapped step:
+    /// all three stages are elementwise over disjoint bucket ranges,
+    /// and `produce` only reads the previous step's committed `m`).
+    fn momentum_exchange_overlapped(
+        &mut self,
+        grads: &[Vec<f32>],
+        lr: f32,
+    ) -> CommStats {
+        let pipeline = self.pipeline.as_mut().expect("pipeline present");
+        let backend = self.backend.as_ref();
+        let beta1 = self.cfg.hyper.beta1;
+        let eps = self.cfg.hyper.eps;
+        let m = &self.m;
+        let v = &self.v;
+        let params = &mut self.params;
+        let avg = &mut self.avg;
+        let comm = pipeline.step(
+            |_k, r, bufs| {
+                for (g, buf) in grads.iter().zip(bufs.iter_mut()) {
+                    momentum_refresh_slice(
+                        backend,
+                        beta1,
+                        &m[r.clone()],
+                        &g[r.clone()],
+                        buf,
+                    );
+                }
+            },
+            |_k, r, bucket_avg, _stats| {
+                avg[r.clone()].copy_from_slice(bucket_avg);
+                precond_step_slice(
+                    backend,
+                    eps,
+                    &mut params[r.clone()],
+                    bucket_avg,
+                    &v[r],
+                    lr,
+                );
+            },
+        );
+        self.m.copy_from_slice(&self.avg);
+        comm
+    }
 }
 
 impl DistOptimizer for ZeroOneAdam {
@@ -339,25 +447,29 @@ impl DistOptimizer for ZeroOneAdam {
             CommStats::default()
         };
         // 1-bit policy: EC-compressed momentum consensus, every step.
-        momentum_refresh_auto(
-            self.backend.as_ref(),
-            self.threads,
-            self.cfg.hyper.beta1,
-            &self.m,
-            grads,
-            &mut self.local_m,
-        );
-        comm.merge(self.car.allreduce(&self.local_m, &mut self.avg));
-        self.m.copy_from_slice(&self.avg);
-        precond_step_auto(
-            self.backend.as_ref(),
-            self.threads,
-            self.cfg.hyper.eps,
-            &mut self.params,
-            &self.m,
-            &self.v,
-            lr,
-        );
+        if self.pipeline.is_some() {
+            comm.merge(self.momentum_exchange_overlapped(grads, lr));
+        } else {
+            momentum_refresh_auto(
+                self.backend.as_ref(),
+                self.threads,
+                self.cfg.hyper.beta1,
+                &self.m,
+                grads,
+                &mut self.local_m,
+            );
+            comm.merge(self.car.allreduce(&self.local_m, &mut self.avg));
+            self.m.copy_from_slice(&self.avg);
+            precond_step_auto(
+                self.backend.as_ref(),
+                self.threads,
+                self.cfg.hyper.eps,
+                &mut self.params,
+                &self.m,
+                &self.v,
+                lr,
+            );
+        }
         self.t += 1;
         StepStats { comm, phase: Phase::Compression }
     }
@@ -385,7 +497,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let d = 10_000;
         let mut opt = ZeroOneAdam::new(4, vec![0.5; d], Default::default());
-        let fp32_ring_per_gpu = 2 * ((2 * (d * 4) * 3 / 4) / 2);
+        let fp32_ring_per_gpu = 2 * (d * 4) * 3 / 4;
         let mut per_step = Vec::new();
         for t in 0..6 {
             let grads = rand_grads(&mut rng, 4, d);
@@ -661,5 +773,139 @@ mod tests {
         };
         assert_eq!(mk(CompressionKind::OneBit).name(), "01-adam");
         assert_eq!(mk(CompressionKind::None).name(), "01-adam-32");
+    }
+
+    #[test]
+    fn overlapped_pipeline_matches_synchronous_trajectory() {
+        // The tentpole invariant for 0/1 Adam: the overlapped schedule
+        // must reproduce the synchronous schedule of the same bucketed
+        // structure bit for bit — including across variance-sync
+        // boundaries, where the fp32 resync stays whole-tensor while
+        // the momentum exchange runs per-bucket.
+        use crate::comm::overlap::{BucketCodecPolicy, OverlapConfig};
+        for (topology, transport, n_buckets) in [
+            (CommTopology::Flat, None, 4usize),
+            (CommTopology::Hierarchical { group_size: 2 }, None, 3),
+            (CommTopology::Flat, Some(TransportBackend::InMemory), 2),
+        ] {
+            let cfg = |overlapped| ZeroOneAdamConfig {
+                topology,
+                transport,
+                overlap: Some(OverlapConfig {
+                    n_buckets,
+                    policy: BucketCodecPolicy::Fixed,
+                    overlapped,
+                }),
+                ..Default::default()
+            };
+            let d = 420;
+            let mut a = ZeroOneAdam::new(4, vec![0.25; d], cfg(false));
+            let mut b = ZeroOneAdam::new(4, vec![0.25; d], cfg(true));
+            assert_eq!(b.overlap_pipeline().unwrap().n_buckets(), n_buckets);
+            let mut rng = Rng::new(41);
+            for step in 0..12 {
+                let grads = rand_grads(&mut rng, 4, d);
+                let sa = a.step(&grads, 1e-3);
+                let sb = b.step(&grads, 1e-3);
+                assert_eq!(
+                    a.params(),
+                    b.params(),
+                    "{topology:?} nb={n_buckets} step={step}"
+                );
+                assert_eq!(
+                    sa.comm, sb.comm,
+                    "{topology:?} nb={n_buckets} step={step}"
+                );
+            }
+            assert_eq!(a.momentum(), b.momentum());
+            assert_eq!(a.variance(), b.variance());
+            assert_eq!(
+                a.overlap_pipeline().unwrap().export_errors(),
+                b.overlap_pipeline().unwrap().export_errors(),
+                "{topology:?} nb={n_buckets}"
+            );
+        }
+    }
+
+    #[test]
+    fn one_bucket_overlap_matches_legacy_whole_tensor_path() {
+        // n_buckets = 1 + Fixed degenerates to exactly the legacy
+        // whole-tensor collective: identical trajectory AND identical
+        // per-step wire ledger (a single bucket shares the legacy chunk
+        // layout, so even the compression scales line up bit for bit).
+        use crate::comm::overlap::{BucketCodecPolicy, OverlapConfig};
+        let d = 300;
+        let cfg_pipe = ZeroOneAdamConfig {
+            overlap: Some(OverlapConfig {
+                n_buckets: 1,
+                policy: BucketCodecPolicy::Fixed,
+                overlapped: true,
+            }),
+            ..Default::default()
+        };
+        let mut a = ZeroOneAdam::new(3, vec![0.2; d], Default::default());
+        let mut b = ZeroOneAdam::new(3, vec![0.2; d], cfg_pipe);
+        let mut rng = Rng::new(17);
+        for step in 0..15 {
+            let grads = rand_grads(&mut rng, 3, d);
+            let sa = a.step(&grads, 1e-3);
+            let sb = b.step(&grads, 1e-3);
+            assert_eq!(a.params(), b.params(), "step={step}");
+            assert_eq!(sa.comm, sb.comm, "step={step}");
+        }
+        assert_eq!(
+            a.collective().export_errors(),
+            b.overlap_pipeline().unwrap().export_errors()
+        );
+    }
+
+    #[test]
+    fn overlap_checkpoint_resume_is_exact() {
+        // EC state of the per-bucket collectives round-trips through the
+        // v2 checkpoint and resumes the exact trajectory.
+        use crate::comm::overlap::OverlapConfig;
+        let d = 256;
+        let cfg = ZeroOneAdamConfig {
+            overlap: Some(OverlapConfig { n_buckets: 3, ..Default::default() }),
+            ..Default::default()
+        };
+        let mut opt = ZeroOneAdam::new(3, vec![0.4; d], cfg.clone());
+        let mut rng = Rng::new(42);
+        for _ in 0..9 {
+            let g = rand_grads(&mut rng, 3, d);
+            opt.step(&g, 1e-3);
+        }
+        let ck = opt.to_checkpoint();
+        let mut resumed = ZeroOneAdam::from_checkpoint(3, ck, cfg);
+        for _ in 0..7 {
+            let g = rand_grads(&mut rng, 3, d);
+            let a = opt.step(&g, 1e-3);
+            let b = resumed.step(&g, 1e-3);
+            assert_eq!(opt.params(), resumed.params());
+            assert_eq!(a.comm, b.comm);
+        }
+        assert_eq!(
+            opt.overlap_pipeline().unwrap().export_errors(),
+            resumed.overlap_pipeline().unwrap().export_errors()
+        );
+    }
+
+    #[test]
+    fn elastic_restore_rejects_overlap_pipeline() {
+        use crate::comm::overlap::OverlapConfig;
+        let d = 64;
+        let cfg = ZeroOneAdamConfig {
+            overlap: Some(OverlapConfig::default()),
+            ..Default::default()
+        };
+        let mut opt = ZeroOneAdam::new(4, vec![0.1; d], cfg.clone());
+        let mut rng = Rng::new(43);
+        for _ in 0..4 {
+            let g = rand_grads(&mut rng, 4, d);
+            opt.step(&g, 1e-3);
+        }
+        let ck = opt.to_checkpoint();
+        assert!(ZeroOneAdam::from_checkpoint_elastic(3, ck, cfg, 4, &[0, 1, 2])
+            .is_err());
     }
 }

@@ -267,9 +267,11 @@ fn ckpt_due(
 fn ring_stats(dim: usize, n: usize) -> CommStats {
     let bytes = dim * 4;
     let ring_per_gpu = if n > 1 { 2 * bytes * (n - 1) / n } else { 0 };
+    // Odd ring totals keep every byte in the split (same convention as
+    // the plain engines — the fields must sum back to `ring_per_gpu`).
     CommStats {
         alltoall_bytes_per_gpu: ring_per_gpu / 2,
-        allgather_bytes_per_gpu: ring_per_gpu / 2,
+        allgather_bytes_per_gpu: ring_per_gpu - ring_per_gpu / 2,
         uncompressed_bytes: bytes,
     }
 }

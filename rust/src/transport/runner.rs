@@ -974,9 +974,12 @@ impl TransportCollective {
         let bytes = self.len * 4;
         let ring_per_gpu =
             if n > 1 { 2 * bytes * (n - 1) / n } else { 0 };
+        // Odd ring totals must not lose a byte in the split (same fix as
+        // the in-process plain engine; the equality property test keeps
+        // the two in lockstep).
         let comm = CommStats {
             alltoall_bytes_per_gpu: ring_per_gpu / 2,
-            allgather_bytes_per_gpu: ring_per_gpu / 2,
+            allgather_bytes_per_gpu: ring_per_gpu - ring_per_gpu / 2,
             uncompressed_bytes: bytes,
         };
         self.last.comm = comm;

@@ -1,0 +1,254 @@
+//! Ledger property tests: every `CommStats` producer must satisfy
+//! `alltoall + allgather == modeled ring / chunk-scan total`, so drift
+//! like the odd-byte ring split (`comm/plain.rs`) or the dropped
+//! momentum-round baseline (`optim/local_sgd.rs`) cannot silently
+//! recur.  The models here are written as independent arithmetic — the
+//! ring total `2·(len·4)·(n−1)/n` and the chunk-scan convention
+//! "all-to-all sends every chunk but one's own (`total − min`),
+//! all-gather broadcasts the largest owned chunk (`max`)" — and checked
+//! byte-exactly against what the engines actually return.
+
+use onebit_adam::comm::overlap::{OverlapConfig, OverlapPipeline};
+use onebit_adam::comm::plain::allreduce_average;
+use onebit_adam::comm::{chunk_wire_volume, Collective, CommTopology};
+use onebit_adam::compress::CompressionKind;
+use onebit_adam::optim::{DistOptimizer, LocalSgd};
+use onebit_adam::tensor::chunk::ChunkLayout;
+use onebit_adam::transport::{TransportBackend, TransportCollective};
+use onebit_adam::util::prng::Rng;
+
+/// Per-GPU payload of an fp32 ring allreduce — the plain engines'
+/// contract.
+fn ring_total(n: usize, len: usize) -> usize {
+    if n > 1 {
+        2 * (len * 4) * (n - 1) / n
+    } else {
+        0
+    }
+}
+
+/// Per-GPU (alltoall, allgather) payload of a compressed collective
+/// over `n` chunks — the chunk-scan contract shared by every
+/// compressed engine.
+fn chunk_model(
+    kind: CompressionKind,
+    n: usize,
+    len: usize,
+) -> (usize, usize) {
+    let layout = ChunkLayout::new(len, n);
+    let (total, min, max) = chunk_wire_volume(kind, &layout);
+    (total - min, max)
+}
+
+fn rand_inputs(seed: u64, n: usize, len: usize) -> Vec<Vec<f32>> {
+    let base = Rng::new(seed);
+    (0..n)
+        .map(|i| base.fork(i as u64).normal_vec(len, 1.0))
+        .collect()
+}
+
+/// The length sweep: every small length (where the odd-byte and
+/// short-chunk corner cases live) plus a stride across the full
+/// 0..=4096 range.
+fn length_sweep() -> Vec<usize> {
+    let mut lens: Vec<usize> = (0..=130).collect();
+    lens.extend((131..4096).step_by(89));
+    lens.push(4095);
+    lens.push(4096);
+    lens
+}
+
+#[test]
+fn plain_split_sums_to_the_ring_total_everywhere() {
+    for n in 1..=8usize {
+        for len in length_sweep() {
+            let inputs: Vec<Vec<f32>> =
+                (0..n).map(|_| vec![0.5f32; len]).collect();
+            let mut out = vec![0.0f32; len];
+            let s = allreduce_average(&inputs, &mut out);
+            assert_eq!(
+                s.total_per_gpu(),
+                ring_total(n, len),
+                "plain n={n} len={len}"
+            );
+            assert_eq!(s.uncompressed_bytes, len * 4);
+        }
+    }
+}
+
+#[test]
+fn flat_compressed_stats_match_the_chunk_scan_model() {
+    for kind in [
+        CompressionKind::None,
+        CompressionKind::OneBit,
+        CompressionKind::NBit(8),
+        CompressionKind::NBit(4),
+    ] {
+        for n in 1..=8usize {
+            for len in length_sweep() {
+                let mut car =
+                    Collective::build(CommTopology::Flat, n, len, kind);
+                let inputs = rand_inputs(7, n, len);
+                let mut out = vec![0.0f32; len];
+                let s = car.allreduce(&inputs, &mut out);
+                let (a2a, ag) = chunk_model(kind, n, len);
+                assert_eq!(
+                    (s.alltoall_bytes_per_gpu, s.allgather_bytes_per_gpu),
+                    (a2a, ag),
+                    "{kind:?} n={n} len={len}"
+                );
+                assert_eq!(s.uncompressed_bytes, len * 4);
+            }
+        }
+    }
+}
+
+#[test]
+fn hierarchical_stats_are_the_leader_count_chunk_scan() {
+    // Stage 2 runs the flat collective over L = ⌈n/g⌉ leaders, so the
+    // reported wire volume is the chunk model at the *leader* count.
+    let kind = CompressionKind::OneBit;
+    for n in 1..=8usize {
+        for g in 1..=4usize {
+            for len in [0usize, 1, 5, 63, 64, 257, 1024, 4096] {
+                let mut car = Collective::build(
+                    CommTopology::Hierarchical { group_size: g },
+                    n,
+                    len,
+                    kind,
+                );
+                let inputs = rand_inputs(11, n, len);
+                let mut out = vec![0.0f32; len];
+                let s = car.allreduce(&inputs, &mut out);
+                let leaders = n.div_ceil(g.clamp(1, n.max(1)));
+                let (a2a, ag) = chunk_model(kind, leaders, len);
+                assert_eq!(
+                    (s.alltoall_bytes_per_gpu, s.allgather_bytes_per_gpu),
+                    (a2a, ag),
+                    "n={n} g={g} len={len}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn transported_stats_match_the_in_process_ledger() {
+    // The runner computes its ledger independently (closed form over
+    // the frames it actually sends); it must agree with the chunk-scan
+    // and ring models byte-exactly.  Smaller grid — each config spins
+    // up a rank-per-thread mesh.
+    for kind in [CompressionKind::None, CompressionKind::OneBit] {
+        for (n, len) in [
+            (1usize, 64usize),
+            (2, 0),
+            (2, 1),
+            (3, 65),
+            (4, 10),
+            (5, 1001),
+            (8, 4097),
+        ] {
+            let mut wire =
+                TransportCollective::new(TransportBackend::InMemory, n, len, kind)
+                    .expect("in-memory mesh");
+            let inputs = rand_inputs(13, n, len);
+            let mut out = vec![0.0f32; len];
+            let s = wire.allreduce(&inputs, &mut out);
+            let (a2a, ag) = chunk_model(kind, n, len);
+            assert_eq!(
+                (s.alltoall_bytes_per_gpu, s.allgather_bytes_per_gpu),
+                (a2a, ag),
+                "compressed {kind:?} n={n} len={len}"
+            );
+            let p = wire.plain_average(&inputs, &mut out);
+            assert_eq!(
+                p.total_per_gpu(),
+                ring_total(n, len),
+                "plain {kind:?} n={n} len={len}"
+            );
+        }
+    }
+}
+
+#[test]
+fn overlap_pipeline_ledger_is_the_per_bucket_sum() {
+    // The new producer: a bucketed step's merged CommStats must equal
+    // the chunk model summed over its buckets (each bucket is its own
+    // collective over its own sub-layout).
+    let kind = CompressionKind::OneBit;
+    for n in [1usize, 2, 4, 8] {
+        for len in [0usize, 1, 64, 257, 1000, 4096] {
+            for nb in [1usize, 3, 4] {
+                let cfg = OverlapConfig { n_buckets: nb, ..Default::default() };
+                let mut pipe = OverlapPipeline::build(
+                    &cfg,
+                    CommTopology::Flat,
+                    n,
+                    len,
+                    kind,
+                    None,
+                );
+                let inputs = rand_inputs(17, n, len);
+                let mut out = vec![0.0f32; len];
+                let s = pipe.allreduce(&inputs, &mut out);
+                let buckets = ChunkLayout::new(len, nb.max(1).min(len.max(1)));
+                let (mut a2a, mut ag, mut unc) = (0usize, 0usize, 0usize);
+                for k in 0..buckets.n {
+                    let (a, g) = chunk_model(kind, n, buckets.size(k));
+                    a2a += a;
+                    ag += g;
+                    unc += buckets.size(k) * 4;
+                }
+                assert_eq!(
+                    (s.alltoall_bytes_per_gpu, s.allgather_bytes_per_gpu),
+                    (a2a, ag),
+                    "n={n} len={len} nb={nb}"
+                );
+                assert_eq!(s.uncompressed_bytes, unc);
+                assert_eq!(unc, len * 4, "buckets must tile the tensor");
+            }
+        }
+    }
+}
+
+#[test]
+fn local_sgd_ledger_matches_the_tau_round_model() {
+    // tau−1 silent steps (zero wire bytes, full fp32 baseline), then an
+    // averaging round that moves one plain ring — or two, with the
+    // momentum variant, whose uncompressed baseline must also double
+    // (the PR's LocalSgd ledger bugfix).
+    let (n, d, tau) = (4usize, 999usize, 4usize);
+    for beta in [0.0f32, 0.9] {
+        let mut opt = LocalSgd::new(n, vec![0.2; d], tau, beta);
+        let mut rng = Rng::new(23);
+        for t in 1..=3 * tau {
+            let grads: Vec<Vec<f32>> =
+                (0..n).map(|_| rng.normal_vec(d, 1.0)).collect();
+            let s = opt.step(&grads, 1e-2).comm;
+            let rounds = if beta > 0.0 { 2 } else { 1 };
+            if t % tau == 0 {
+                assert_eq!(
+                    s.total_per_gpu(),
+                    rounds * ring_total(n, d),
+                    "beta={beta} t={t}: averaging round"
+                );
+                assert_eq!(
+                    s.uncompressed_bytes,
+                    rounds * d * 4,
+                    "beta={beta} t={t}: fp32 baseline counts every round"
+                );
+            } else {
+                assert_eq!(
+                    s.total_per_gpu(),
+                    0,
+                    "beta={beta} t={t}: local step moves no bytes"
+                );
+                assert_eq!(
+                    s.uncompressed_bytes,
+                    d * 4,
+                    "beta={beta} t={t}: baseline still accrues"
+                );
+            }
+        }
+    }
+}
