@@ -1,0 +1,117 @@
+//! Tracing-overhead bench: the subsystem's core promise is that it
+//! disappears when off.  Two contracts are asserted here, not on a
+//! dashboard:
+//!
+//! 1. **disabled cost < 1% of step time** — a disarmed span is one
+//!    relaxed atomic load and a branch; measured per call and scaled by
+//!    the number of instrumentation points an instrumented 1-bit Adam
+//!    compression step actually crosses (counted from a live capture,
+//!    with a 4× safety margin for the gate checks that record nothing).
+//! 2. **enabled delta** (full mode only; smoke's single sample is
+//!    noise) — recording into the ring keeps the step within 15% of
+//!    the untraced step.
+//!
+//! Results land in the repo-root `BENCH_trace.json`
+//! (`OBADAM_BENCH_SMOKE=1` runs single-sample smoke passes in CI).
+
+use onebit_adam::optim::{DistOptimizer, OneBitAdam, OneBitAdamConfig};
+use onebit_adam::trace::{self, SpanKind};
+use onebit_adam::util::bench::{black_box, smoke_mode, BenchJson, Bencher};
+use onebit_adam::util::prng::Rng;
+
+const WORKERS: usize = 8;
+const ELEMENTS: usize = 1 << 16;
+const CALLS: usize = 4096;
+
+fn main() {
+    let b = Bencher::from_env();
+    let mut json = BenchJson::new_in("trace_overhead", "BENCH_trace.json");
+    let smoke = smoke_mode();
+
+    // ---- the disarmed instrumentation point --------------------------------
+    assert!(!trace::is_enabled(), "bench must start with tracing off");
+    let r_off_call = b.run("disabled_span_x4096", || {
+        for i in 0..CALLS {
+            black_box(trace::span_aux(SpanKind::Compress, i as u64));
+        }
+    });
+    println!("{}", r_off_call.report());
+    let per_call_ns = r_off_call.median_ns() / CALLS as f64;
+
+    // ---- the step it must not perturb --------------------------------------
+    let cfg = OneBitAdamConfig {
+        warmup_steps: Some(0),
+        ..Default::default()
+    };
+    let mut opt = OneBitAdam::new(WORKERS, vec![0.1; ELEMENTS], cfg);
+    let base = Rng::new(47);
+    let grads: Vec<Vec<f32>> = (0..WORKERS)
+        .map(|i| base.fork(i as u64).normal_vec(ELEMENTS, 1.0))
+        .collect();
+    let r_untraced = b.run(
+        &format!("onebit_step_untraced w={WORKERS} n={ELEMENTS}"),
+        || {
+            black_box(opt.step(&grads, 1e-3));
+        },
+    );
+    println!("{}", r_untraced.report());
+
+    // Count the instrumentation points one compression step crosses.
+    trace::enable_with_capacity(1 << 16);
+    opt.step(&grads, 1e-3);
+    let events_per_step = trace::take().len();
+    trace::clear();
+    assert!(events_per_step > 0, "step produced no trace events");
+
+    // ---- the recording step -------------------------------------------------
+    trace::enable_with_capacity(1 << 16);
+    let r_traced = b.run(
+        &format!("onebit_step_traced w={WORKERS} n={ELEMENTS}"),
+        || {
+            black_box(opt.step(&grads, 1e-3));
+        },
+    );
+    trace::disable();
+    trace::clear();
+    println!("{}", r_traced.report());
+
+    // ---- contracts ----------------------------------------------------------
+    // 4×: every span is ~2 gate checks (open + drop) and instrumented
+    // code paths also check gates that record nothing this step.
+    let disabled_step_ns = 4.0 * events_per_step as f64 * per_call_ns;
+    let step_ns = r_untraced.median_ns();
+    let overhead_fraction = disabled_step_ns / step_ns;
+    println!(
+        "disabled: {per_call_ns:.2} ns/call x {events_per_step} points \
+         (x4 margin) = {disabled_step_ns:.0} ns \
+         = {:.4}% of the {step_ns:.0} ns step",
+        overhead_fraction * 100.0
+    );
+    assert!(
+        overhead_fraction < 0.01,
+        "disabled tracing costs {:.3}% of step time (budget 1%)",
+        overhead_fraction * 100.0
+    );
+    let enabled_ratio = r_traced.median_ns() / step_ns;
+    println!("enabled: {enabled_ratio:.3}x of the untraced step");
+    if !smoke {
+        assert!(
+            enabled_ratio <= 1.15,
+            "recording perturbs the step by {:.1}% (budget 15%)",
+            (enabled_ratio - 1.0) * 100.0
+        );
+    }
+
+    json.push_with(
+        &r_untraced,
+        &[
+            ("disabled_per_call_ns", per_call_ns),
+            ("events_per_step", events_per_step as f64),
+            ("disabled_overhead_fraction", overhead_fraction),
+            ("enabled_ratio", enabled_ratio),
+        ],
+    );
+    json.push(&r_off_call);
+    json.push(&r_traced);
+    json.flush();
+}

@@ -42,6 +42,7 @@ use crate::compress::onebit::{onebit_compensate, onebit_compress_ec};
 use crate::compress::pack;
 use crate::compress::CompressionKind;
 use crate::tensor::chunk::ChunkLayout;
+use crate::trace::{self, SpanKind};
 use crate::util::par::{default_threads, par_tasks, PAR_MIN_LEN};
 
 use super::CommStats;
@@ -658,6 +659,7 @@ impl CompressedAllreduce {
         let w = word_off[n]; // words per worker (>= 1 since len > 0)
 
         // ---- Phase 1: per-worker fused compress into the wire arena.
+        let sp = trace::span_aux(SpanKind::Compress, n as u64);
         if threads <= 1 || n == 1 {
             split_workers_onebit(
                 w,
@@ -689,6 +691,8 @@ impl CompressedAllreduce {
         }
 
         // ---- Phase 2+3: per-chunk vote-average, EC-recompress, decode.
+        drop(sp);
+        let sp = trace::span_aux(SpanKind::ServerReduce, n as u64);
         let wire_words: &[u32] = wire_words;
         let worker_scales: &[f32] = worker_scales;
         let inv = 1.0 / n as f32;
@@ -743,6 +747,7 @@ impl CompressedAllreduce {
                 )
             });
         }
+        drop(sp);
     }
 
     /// 1-bit kind, chunk-streamed: stage A fixes every worker's scale with

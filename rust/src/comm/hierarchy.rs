@@ -44,6 +44,7 @@ use crate::compress::CompressionKind;
 use crate::kernels::reduce::{
     tree_scaled_average_into, tree_sum_into, REDUCE_BLK,
 };
+use crate::trace::{self, SpanKind};
 use crate::transport::{TransportBackend, TransportCollective};
 use crate::util::par::{default_threads, par_tasks, PAR_MIN_LEN};
 
@@ -307,7 +308,15 @@ impl HierarchicalAllreduce {
                 self.leaders.step_stats()
             }
             _ => {
-                self.reduce_nodes(&views);
+                {
+                    // The intra-node tier: stage-1 member→leader reduce
+                    // (stage 3's broadcast is the shared output write).
+                    let _sp = trace::span_aux(
+                        SpanKind::Broadcast,
+                        self.groups.len() as u64,
+                    );
+                    self.reduce_nodes(&views);
+                }
                 self.leaders.allreduce(&self.node_means, output)
             }
         }

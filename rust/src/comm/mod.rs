@@ -102,10 +102,19 @@ impl CommStats {
     /// run more than one collective (0/1 Adam's per-step compressed
     /// momentum exchange plus its sync-point full-precision variance
     /// resync) and must report their combined wire volume.
+    ///
+    /// Destructured exhaustively (no `..`) so a field added to
+    /// [`CommStats`] is a compile error here rather than a silently
+    /// dropped byte count.
     pub fn merge(&mut self, other: CommStats) {
-        self.alltoall_bytes_per_gpu += other.alltoall_bytes_per_gpu;
-        self.allgather_bytes_per_gpu += other.allgather_bytes_per_gpu;
-        self.uncompressed_bytes += other.uncompressed_bytes;
+        let CommStats {
+            alltoall_bytes_per_gpu,
+            allgather_bytes_per_gpu,
+            uncompressed_bytes,
+        } = other;
+        self.alltoall_bytes_per_gpu += alltoall_bytes_per_gpu;
+        self.allgather_bytes_per_gpu += allgather_bytes_per_gpu;
+        self.uncompressed_bytes += uncompressed_bytes;
     }
 
     /// Volume reduction vs fp32 allreduce (ring: ~2x payload per GPU).

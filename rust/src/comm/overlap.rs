@@ -37,6 +37,7 @@ use crate::comm::{chunk_wire_volume, Collective, CommStats, CommTopology};
 use crate::compress::CompressionKind;
 use crate::netsim::NetworkModel;
 use crate::tensor::chunk::ChunkLayout;
+use crate::trace::{self, SpanKind};
 use crate::transport::{TransportBackend, TransportCollective};
 use crate::util::error::Result;
 
@@ -342,9 +343,20 @@ impl OverlapPipeline {
         let mut total = CommStats::default();
         if !self.overlapped {
             for k in 0..nb {
-                produce(k, self.layout.range(k), &mut self.inputs[k]);
-                let stats = self.collectives[k]
-                    .allreduce(&self.inputs[k], &mut self.outputs[k]);
+                {
+                    let _sp =
+                        trace::span_aux(SpanKind::BucketCompute, k as u64);
+                    produce(k, self.layout.range(k), &mut self.inputs[k]);
+                }
+                let stats = {
+                    let _sp = trace::span_aux(SpanKind::BucketComm, k as u64);
+                    self.collectives[k]
+                        .allreduce(&self.inputs[k], &mut self.outputs[k])
+                };
+                trace::counter(
+                    SpanKind::WireBytes,
+                    stats.total_per_gpu() as u64,
+                );
                 consume(k, self.layout.range(k), &self.outputs[k], stats);
                 self.bucket_stats[k] = stats;
                 total.merge(stats);
@@ -365,14 +377,27 @@ impl OverlapPipeline {
         let inputs = &mut self.inputs;
         let outputs = &mut self.outputs;
         let bucket_stats = &mut self.bucket_stats;
+        let rank = trace::current_rank();
         std::thread::scope(|scope| {
             type Job = (usize, Vec<Vec<f32>>, Vec<f32>);
             type Done = (usize, Vec<Vec<f32>>, Vec<f32>, CommStats);
             let (work_tx, work_rx) = sync_channel::<Job>(QUEUE_DEPTH);
             let (done_tx, done_rx) = channel::<Done>();
             scope.spawn(move || {
+                // Same rank track as the spawner, comm lane; the ring
+                // drains to the collector when this scoped thread exits.
+                trace::set_rank(rank as usize);
+                trace::set_lane(trace::LANE_COMM);
                 for (k, bufs, mut out) in work_rx {
-                    let stats = collectives[k].allreduce(&bufs, &mut out);
+                    let stats = {
+                        let _sp =
+                            trace::span_aux(SpanKind::BucketComm, k as u64);
+                        collectives[k].allreduce(&bufs, &mut out)
+                    };
+                    trace::counter(
+                        SpanKind::WireBytes,
+                        stats.total_per_gpu() as u64,
+                    );
                     if done_tx.send((k, bufs, out, stats)).is_err() {
                         return;
                     }
@@ -381,7 +406,11 @@ impl OverlapPipeline {
             let mut consumed = 0usize;
             for k in 0..nb {
                 let mut bufs = std::mem::take(&mut inputs[k]);
-                produce(k, layout.range(k), &mut bufs);
+                {
+                    let _sp =
+                        trace::span_aux(SpanKind::BucketCompute, k as u64);
+                    produce(k, layout.range(k), &mut bufs);
+                }
                 let out = std::mem::take(&mut outputs[k]);
                 work_tx.send((k, bufs, out)).expect("comm thread alive");
                 // Consume whatever already finished — keeps the consume

@@ -194,6 +194,33 @@ mod tests {
     }
 
     #[test]
+    fn every_record_carries_a_nonzero_wall_time() {
+        // `train` is the single RunLog producer in the crate (the repro
+        // figures and the CLI all route through it), so this pins the
+        // wall_time ledger for every producer: each record must carry a
+        // measured monotonic-clock duration, not the 0.0 default.
+        let oracle = QuadraticOracle::new(16, 2, 0.5, 2.0, 0.05, 3);
+        let mut src = OracleSource::quadratic(oracle, vec![1.0; 16]);
+        let mut opt = OptimizerKind::OneBitAdam.build(2, vec![1.0; 16], Some(5));
+        let opts = TrainOptions {
+            steps: 25,
+            schedule: LrSchedule::Constant(0.05),
+            timing: None,
+            log_every: 0,
+        };
+        let log = train(opt.as_mut(), &mut src, &opts).unwrap();
+        assert_eq!(log.records.len(), 25);
+        for r in &log.records {
+            assert!(
+                r.wall_time > 0.0,
+                "step {} has wall_time {}",
+                r.step,
+                r.wall_time
+            );
+        }
+    }
+
+    #[test]
     fn timing_model_charges_more_for_warmup_phase() {
         let tm = TimingModel {
             net: NetworkModel::ethernet(),

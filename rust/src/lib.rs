@@ -32,6 +32,7 @@ pub mod optim;
 pub mod repro;
 pub mod runtime;
 pub mod tensor;
+pub mod trace;
 pub mod transport;
 pub mod util;
 

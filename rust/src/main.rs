@@ -5,6 +5,7 @@
 //!   repro    regenerate a paper table/figure (see `repro list`)
 //!   inspect  list the AOT artifacts in the manifest
 //!   elastic  multi-process elastic runner (spawn driver / worker role)
+//!   trace    run the tracing preset, emit Chrome-trace JSON + reports
 //!   help     this text
 
 use std::collections::BTreeMap;
@@ -13,10 +14,15 @@ use std::process::Command;
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
+use onebit_adam::comm::overlap::OverlapConfig;
+use onebit_adam::compress::CompressionKind;
 use onebit_adam::config::presets::{ChaosPreset, ElasticPreset};
 use onebit_adam::coordinator::checkpoint::Checkpoint;
 use onebit_adam::transport::elastic;
-use onebit_adam::transport::{Coordinator, ElasticMode, RendezvousOptions};
+use onebit_adam::transport::{
+    ChaosScenario, Coordinator, ElasticMode, RendezvousOptions, TcpOptions,
+    TransportBackend, TransportCollective,
+};
 use onebit_adam::util::bench::BenchJson;
 use onebit_adam::util::json::Json;
 
@@ -24,11 +30,17 @@ use onebit_adam::coordinator::{
     train, CnnSource, GradSource, LmSource, LrSchedule, OracleSource,
     TimingModel, TrainOptions,
 };
-use onebit_adam::netsim::{ComputeModel, NetworkModel};
+use onebit_adam::netsim::{
+    epoch_change_window_bound, ComputeModel, NetworkModel,
+};
 use onebit_adam::optim::oracle::QuadraticOracle;
-use onebit_adam::optim::OptimizerKind;
+use onebit_adam::optim::{
+    DistOptimizer, OneBitAdam, OneBitAdamConfig, OptimizerKind, ZeroOneAdam,
+    ZeroOneAdamConfig,
+};
 use onebit_adam::repro;
 use onebit_adam::runtime::Runtime;
+use onebit_adam::trace::{self, analysis, SpanKind};
 use onebit_adam::util::cli::Args;
 use onebit_adam::util::error::{Error, Result};
 use onebit_adam::util::prng::Rng;
@@ -55,12 +67,15 @@ USAGE:
                  [--preset NAME] [--seed N] [--pace-ms MS]
                  [--max-epochs N] [--chaos NAME]
                  [--straggle-at N --straggle-ms MS]
+  obadam trace [--out trace.json] [--bin FILE]
+               [--workers N] [--dim N] [--steps N] [--seed N]
 
 EXAMPLES:
   obadam train --workload lm-tiny --optimizer 1bit-adam --steps 300
   obadam repro fig4a
   obadam repro table1
   obadam elastic --spawn 3           # SIGKILL one rank mid-run, survive
+  obadam trace --out results/trace.json   # open in Perfetto
 ";
 
 fn main() {
@@ -81,6 +96,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("repro") => cmd_repro(args),
         Some("inspect") => cmd_inspect(args),
         Some("elastic") => cmd_elastic(args),
+        Some("trace") => cmd_trace(args),
         Some("help") | None => {
             println!("{USAGE}");
             Ok(())
@@ -210,6 +226,256 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(out) = args.get("out") {
         log.write_csv(out)?;
         println!("wrote {out}");
+    }
+    Ok(())
+}
+
+// ---- tracing preset --------------------------------------------------------
+
+/// `obadam trace`: arm the span recorder and run the observability
+/// preset — an overlapped transported 1-bit Adam run, a fault-injected
+/// chaos exchange, a 0/1 Adam variance-resync run, and an elastic
+/// straggler recovery — then emit the capture as Chrome-trace JSON
+/// (load in Perfetto or chrome://tracing) and print the summary,
+/// overlap-bubble, straggler, and recovery tables.  The emitted file is
+/// re-parsed and checked: all 18 span kinds present, one `WireSend`
+/// track per transport rank, recovery under the epoch-change bound.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let out = args.get_or("out", "trace.json").to_string();
+    let workers = args.usize_or("workers", 8)?;
+    let dim = args.usize_or("dim", 2048)?;
+    let steps = args.usize_or("steps", 4)?;
+    let seed = args.u64_or("seed", 11)?;
+    if workers < 2 || steps < 2 || dim == 0 {
+        return Err(Error::Config(
+            "trace needs --workers >= 2, --steps >= 2, --dim >= 1".into(),
+        ));
+    }
+    trace::enable_with_capacity(1 << 16);
+
+    // Leg 1: the paper's pipeline — one warmup step, then compressed
+    // steps over the in-memory wire with the bucketed overlap scheduler.
+    println!(
+        "leg 1: overlapped transported 1-bit Adam ({workers} ranks, \
+         dim {dim}, {steps} steps)"
+    );
+    {
+        let mut opt = OneBitAdam::new(
+            workers,
+            Rng::new(seed).normal_vec(dim, 0.05),
+            OneBitAdamConfig {
+                warmup_steps: Some(1),
+                transport: Some(TransportBackend::InMemory),
+                overlap: Some(OverlapConfig::default()),
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::new(seed ^ 1);
+        for _ in 0..steps {
+            let grads: Vec<Vec<f32>> =
+                (0..workers).map(|_| rng.normal_vec(dim, 0.1)).collect();
+            opt.step(&grads, 1e-3);
+        }
+    }
+
+    // Leg 2: chaos transport — injected drops/corruptions and the
+    // NACK/retransmit repair path leave their instant markers.
+    println!("leg 2: chaos transport (4 ranks, injected faults)");
+    {
+        let len = 777;
+        let tcp = TcpOptions {
+            attempt_timeout: Duration::from_millis(250),
+            recv_timeout: Duration::from_secs(20),
+            ..TcpOptions::default()
+        };
+        let mut car = TransportCollective::with_chaos(
+            TransportBackend::InMemory,
+            4,
+            len,
+            CompressionKind::OneBit,
+            1,
+            &tcp,
+            &ChaosScenario::acceptance(seed ^ 0xC0FFEE),
+        )?;
+        let mut reduced = vec![0.0f32; len];
+        let base = Rng::new(seed ^ 2);
+        for step in 0..3u64 {
+            let inputs: Vec<Vec<f32>> = (0..4)
+                .map(|w| base.fork(step * 100 + w).normal_vec(len, 1.0))
+                .collect();
+            car.allreduce(&inputs, &mut reduced);
+        }
+    }
+
+    // Leg 3: 0/1 Adam past its first few variance sync points.
+    println!("leg 3: 0/1 Adam variance-resync run (2 ranks, 6 steps)");
+    {
+        let mut opt =
+            ZeroOneAdam::new(2, vec![1.0; 64], ZeroOneAdamConfig::default());
+        let mut rng = Rng::new(seed ^ 3);
+        for _ in 0..6 {
+            let grads: Vec<Vec<f32>> =
+                (0..2).map(|_| rng.normal_vec(64, 0.1)).collect();
+            opt.step(&grads, 1e-3);
+        }
+    }
+
+    // Leg 4: elastic straggler — the highest rank stalls past the
+    // receive timeout; the survivors re-rendezvous at M−1 and restore.
+    println!("leg 4: elastic straggler recovery (3 ranks, victim rank 2)");
+    let recv_timeout = Duration::from_millis(1200);
+    let window = Duration::from_millis(400);
+    {
+        let dir = std::env::temp_dir()
+            .join(format!("obadam_trace_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let coordinator = Coordinator::spawn(
+            "127.0.0.1:0",
+            RendezvousOptions {
+                world: 3,
+                min_world: 2,
+                window,
+                join_timeout: Duration::from_secs(10),
+            },
+        )?;
+        let mut opts = elastic::ElasticOptions::new(
+            ElasticMode::OneBit { warmup_steps: 3 },
+            96,
+            10,
+            dir.join("ckpt"),
+        );
+        opts.ckpt_every = 2;
+        opts.noise = 0.05;
+        opts.tcp.recv_timeout = recv_timeout;
+        opts.tcp.attempt_timeout = Duration::from_millis(60);
+        opts.join_timeout = Duration::from_secs(10);
+        let addr = coordinator.addr();
+        let handles: Vec<_> = (0..3usize)
+            .map(|id| {
+                let mut o = opts.clone();
+                if id == 2 {
+                    // Victim is the highest rank, so the survivors keep
+                    // their ranks across the M−1 re-formation.
+                    o.straggle_at_step = Some(5);
+                    o.straggle_for = Duration::from_millis(3000);
+                    o.max_epochs = 1;
+                } else {
+                    o.max_epochs = 3;
+                }
+                std::thread::spawn(move || {
+                    elastic::run_elastic_worker(addr, &o)
+                })
+            })
+            .collect();
+        let survivors = handles
+            .into_iter()
+            .map(|h| h.join())
+            .filter(|r| matches!(r, Ok(Ok(_))))
+            .count();
+        if survivors < 2 {
+            return Err(Error::msg(
+                "elastic leg: fewer than 2 survivors re-formed",
+            ));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    trace::disable();
+    let tr = trace::take();
+    println!();
+    println!(
+        "capture: {} events, {} span kinds, {} overwritten",
+        tr.len(),
+        tr.kinds_present().len(),
+        trace::dropped()
+    );
+    println!("{}", tr.summary_table().render());
+
+    let overlaps = analysis::overlap_report(&tr, trace::DRIVER_RANK);
+    if overlaps.is_empty() {
+        return Err(Error::msg("no pipelined steps in the capture"));
+    }
+    println!("overlap accounting (driver pipeline, per bucketed step):");
+    println!("{}", analysis::overlap_table(&overlaps).render());
+
+    println!("straggler attribution (recv-wait by peer):");
+    println!("{}", analysis::straggler_report(&tr).to_table().render());
+
+    let bound = epoch_change_window_bound(recv_timeout, window, 3);
+    println!(
+        "recovery timelines (epoch-change bound {:.0} ms):",
+        bound.as_secs_f64() * 1e3
+    );
+    let recoveries = analysis::recovery_report(&tr);
+    if recoveries.len() < 2 {
+        return Err(Error::msg(
+            "expected a recovery timeline from both survivors",
+        ));
+    }
+    for r in &recoveries {
+        println!("{}", r.to_table().render());
+        if !r.within_bound(bound) {
+            return Err(Error::msg(format!(
+                "rank {} recovered in {:.1} ms, above the bound",
+                r.rank,
+                r.total_ns() as f64 / 1e6
+            )));
+        }
+    }
+
+    tr.write_chrome(&out)?;
+    println!(
+        "wrote {out} ({} events; open in Perfetto or chrome://tracing)",
+        tr.len()
+    );
+    if let Some(bin) = args.get("bin") {
+        std::fs::write(bin, tr.to_binary())?;
+        println!("wrote {bin} (compact binary dump)");
+    }
+    validate_trace_json(&out, workers as u32)?;
+    println!(
+        "validated: all {} span kinds present, wire tracks for ranks \
+         0..{workers}",
+        SpanKind::ALL.len()
+    );
+    Ok(())
+}
+
+/// Re-parse the emitted Chrome JSON and check the acceptance surface:
+/// a well-formed trace-event envelope, at least one event for every
+/// span kind in the taxonomy, and a `WireSend` track for every
+/// transport rank of the overlapped leg.
+fn validate_trace_json(path: &str, world: u32) -> Result<()> {
+    let j = Json::parse(&std::fs::read_to_string(path)?)?;
+    let events = j.arr_of("traceEvents")?;
+    let mut names: std::collections::BTreeSet<String> =
+        std::collections::BTreeSet::new();
+    let mut wire_pids: std::collections::BTreeSet<u32> =
+        std::collections::BTreeSet::new();
+    for e in events {
+        if e.str_of("ph")? == "M" {
+            continue; // metadata: process/thread naming
+        }
+        let name = e.str_of("name")?;
+        names.insert(name.to_string());
+        if name == SpanKind::WireSend.name() {
+            wire_pids.insert(e.f64_of("pid")? as u32);
+        }
+    }
+    for kind in SpanKind::ALL {
+        if !names.contains(kind.name()) {
+            return Err(Error::msg(format!(
+                "emitted trace has no {} events",
+                kind.name()
+            )));
+        }
+    }
+    for rank in 0..world {
+        if !wire_pids.contains(&rank) {
+            return Err(Error::msg(format!(
+                "emitted trace has no WireSend track for rank {rank}"
+            )));
+        }
     }
     Ok(())
 }

@@ -2,13 +2,16 @@
 //! (§7.1 volume claim), step-time breakdowns (Table 1 shape), and CSV
 //! emission for the figure harness.
 
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::path::Path;
 
 use crate::optim::Phase;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
 
 /// One recorded training step.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StepRecord {
     pub step: usize,
     pub loss: f32,
@@ -23,7 +26,7 @@ pub struct StepRecord {
 }
 
 /// Loss-curve + volume ledger for one run.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct RunLog {
     pub name: String,
     pub records: Vec<StepRecord>,
@@ -114,10 +117,7 @@ impl RunLog {
                 r.step,
                 r.loss,
                 r.lr,
-                match r.phase {
-                    Phase::Warmup => "warmup",
-                    Phase::Compression => "compression",
-                },
+                phase_str(r.phase),
                 r.comm_bytes,
                 r.sim_time,
                 r.wall_time
@@ -131,6 +131,76 @@ impl RunLog {
             std::fs::create_dir_all(parent)?;
         }
         std::fs::write(path, self.to_csv())
+    }
+
+    /// Machine-readable sibling of [`RunLog::to_csv`] in the same
+    /// hand-rolled [`Json`] family as the `BENCH_*.json` artifacts.
+    pub fn to_json(&self) -> Json {
+        let records = self
+            .records
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("step".into(), Json::Num(r.step as f64));
+                m.insert("loss".into(), Json::Num(r.loss as f64));
+                m.insert("lr".into(), Json::Num(r.lr as f64));
+                m.insert(
+                    "phase".into(),
+                    Json::Str(phase_str(r.phase).into()),
+                );
+                m.insert(
+                    "comm_bytes".into(),
+                    Json::Num(r.comm_bytes as f64),
+                );
+                m.insert("sim_time".into(), Json::Num(r.sim_time));
+                m.insert("wall_time".into(), Json::Num(r.wall_time));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("name".into(), Json::Str(self.name.clone()));
+        top.insert("records".into(), Json::Arr(records));
+        Json::Obj(top)
+    }
+
+    /// Inverse of [`RunLog::to_json`] (f32 fields survive the f64 JSON
+    /// detour bit-exactly: f32→f64 widening is lossless).
+    pub fn from_json(j: &Json) -> Result<RunLog> {
+        let mut log = RunLog::new(j.str_of("name")?);
+        for r in j.arr_of("records")? {
+            log.push(StepRecord {
+                step: r.usize_of("step")?,
+                loss: r.f64_of("loss")? as f32,
+                lr: r.f64_of("lr")? as f32,
+                phase: phase_parse(r.str_of("phase")?)?,
+                comm_bytes: r.usize_of("comm_bytes")?,
+                sim_time: r.f64_of("sim_time")?,
+                wall_time: r.f64_of("wall_time")?,
+            });
+        }
+        Ok(log)
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+}
+
+fn phase_str(p: Phase) -> &'static str {
+    match p {
+        Phase::Warmup => "warmup",
+        Phase::Compression => "compression",
+    }
+}
+
+fn phase_parse(s: &str) -> Result<Phase> {
+    match s {
+        "warmup" => Ok(Phase::Warmup),
+        "compression" => Ok(Phase::Compression),
+        other => Err(Error::Config(format!("unknown phase '{other}'"))),
     }
 }
 
@@ -295,5 +365,77 @@ mod tests {
         let s = t.render();
         assert!(s.contains("a  bb") || s.contains("a   bb"));
         assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn empty_table_renders_header_and_rule_only() {
+        let t = Table::new(&["metric", "value"]);
+        let s = t.render();
+        assert_eq!(s.lines().count(), 2);
+        assert!(s.lines().next().unwrap().contains("metric"));
+        assert!(s.lines().nth(1).unwrap().chars().all(|c| c == '-'
+            || c == ' '));
+    }
+
+    #[test]
+    fn steps_to_loss_with_smoothing_wider_than_the_log() {
+        let mut log = RunLog::new("x");
+        for t in 0..3 {
+            log.push(rec(t, 0.0, Phase::Warmup, 0));
+        }
+        // The window never fills, so even an already-met target reports
+        // no crossing rather than a spurious early step.
+        assert_eq!(log.steps_to_loss(1.0, 10), None);
+        assert_eq!(log.steps_to_loss(1.0, 3), Some(2));
+    }
+
+    #[test]
+    fn volume_reduction_degenerate_ledgers() {
+        let empty = RunLog::new("empty");
+        let mut full = RunLog::new("full");
+        full.push(rec(0, 1.0, Phase::Compression, 64));
+        // Empty baseline: 0 bytes saved over 64 → ratio 0, not a panic.
+        assert_eq!(full.volume_reduction_vs(&empty), 0.0);
+        // Empty self: infinite reduction by convention.
+        assert_eq!(empty.volume_reduction_vs(&full), f64::INFINITY);
+    }
+
+    #[test]
+    fn csv_with_zero_records_is_header_only() {
+        let log = RunLog::new("x");
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 1);
+        assert!(csv.starts_with("step,loss"));
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let mut log = RunLog::new("roundtrip");
+        log.push(rec(0, 5.25, Phase::Warmup, 1600));
+        log.push(StepRecord {
+            step: 1,
+            loss: 0.1,
+            lr: 3.4e-4,
+            phase: Phase::Compression,
+            comm_bytes: 104,
+            sim_time: 0.125,
+            wall_time: 1.75e-3,
+        });
+        let text = log.to_json().to_string_pretty();
+        let back = RunLog::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, log);
+
+        let empty = RunLog::new("empty");
+        let text = empty.to_json().to_string_pretty();
+        let back = RunLog::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, empty);
+
+        let bad = Json::parse(
+            r#"{"name": "x", "records": [{"step": 0, "loss": 1,
+                "lr": 1, "phase": "neither", "comm_bytes": 0,
+                "sim_time": 0, "wall_time": 0}]}"#,
+        )
+        .unwrap();
+        assert!(RunLog::from_json(&bad).is_err());
     }
 }

@@ -27,6 +27,7 @@ use crate::optim::backend::{AdamHyper, MathBackend, NativeBackend};
 use crate::optim::freeze::{self, FreezePolicy};
 use crate::optim::monitor::VarianceMonitor;
 use crate::optim::{DistOptimizer, Phase, StepStats};
+use crate::trace::{self, SpanKind};
 use crate::transport::TransportBackend;
 use crate::util::par::default_threads;
 
@@ -385,6 +386,7 @@ impl OneBitAdam {
         );
         // Fused Adam update, block-parallel over contiguous sub-slices
         // when the math is native elementwise (bit-identical split).
+        let _sp = trace::span(SpanKind::AdamKernel);
         crate::optim::backend::adam_step_auto(
             self.backend.as_ref(),
             self.threads,
@@ -405,18 +407,22 @@ impl OneBitAdam {
         // Line 6: every worker refreshes the shared momentum with its own
         // gradient — the fused per-worker kernel dispatch shared with
         // `ZeroOneAdam` (`optim::backend::momentum_refresh_auto`).
-        crate::optim::backend::momentum_refresh_auto(
-            self.backend.as_ref(),
-            self.threads,
-            self.cfg.hyper.beta1,
-            &self.m,
-            grads,
-            &mut self.local_m,
-        );
+        {
+            let _sp = trace::span(SpanKind::AdamKernel);
+            crate::optim::backend::momentum_refresh_auto(
+                self.backend.as_ref(),
+                self.threads,
+                self.cfg.hyper.beta1,
+                &self.m,
+                grads,
+                &mut self.local_m,
+            );
+        }
         // Lines 7–11: compressed allreduce of the fused momenta.
         let comm = self.car.allreduce(&self.local_m, &mut self.avg);
         self.m.copy_from_slice(&self.avg);
         // Line 13: preconditioned update against the frozen variance.
+        let _sp = trace::span(SpanKind::AdamKernel);
         crate::optim::backend::precond_step_auto(
             self.backend.as_ref(),
             self.threads,
@@ -498,6 +504,7 @@ impl DistOptimizer for OneBitAdam {
 
     fn step(&mut self, grads: &[Vec<f32>], lr: f32) -> StepStats {
         assert_eq!(grads.len(), self.n);
+        let _step_sp = trace::span_aux(SpanKind::Step, self.t as u64);
         // Fixed-length warmup is checked *before* a step runs (so
         // `warmup_steps = w` means exactly `w` Adam steps); the
         // auto-switch criterion is evaluated after each warmup step once

@@ -56,6 +56,7 @@ use crate::optim::backend::{
 };
 use crate::optim::freeze::{self, VarianceSyncSchedule};
 use crate::optim::{DistOptimizer, Phase, StepStats};
+use crate::trace::{self, SpanKind};
 use crate::transport::TransportBackend;
 use crate::util::par::default_threads;
 
@@ -347,6 +348,7 @@ impl ZeroOneAdam {
     /// so the fp32 bytes are really measured), one EMA fold into `v`,
     /// floor re-applied.  Returns the resync's wire ledger.
     fn variance_resync(&mut self, grads: &[Vec<f32>]) -> CommStats {
+        let _sp = trace::span_aux(SpanKind::VarianceResync, self.t as u64);
         let comm = match &mut self.car {
             Collective::Transported(t) => {
                 t.plain_average(grads, &mut self.avg_g)
@@ -437,6 +439,7 @@ impl DistOptimizer for ZeroOneAdam {
 
     fn step(&mut self, grads: &[Vec<f32>], lr: f32) -> StepStats {
         assert_eq!(grads.len(), self.n);
+        let _step_sp = trace::span_aux(SpanKind::Step, self.t as u64);
         // Variance policy first: a sync step folds this step's
         // synchronized gradient into `v` *before* the parameter update
         // uses it (matching Adam's v_t-then-update order; crucial at
@@ -450,16 +453,20 @@ impl DistOptimizer for ZeroOneAdam {
         if self.pipeline.is_some() {
             comm.merge(self.momentum_exchange_overlapped(grads, lr));
         } else {
-            momentum_refresh_auto(
-                self.backend.as_ref(),
-                self.threads,
-                self.cfg.hyper.beta1,
-                &self.m,
-                grads,
-                &mut self.local_m,
-            );
+            {
+                let _sp = trace::span(SpanKind::AdamKernel);
+                momentum_refresh_auto(
+                    self.backend.as_ref(),
+                    self.threads,
+                    self.cfg.hyper.beta1,
+                    &self.m,
+                    grads,
+                    &mut self.local_m,
+                );
+            }
             comm.merge(self.car.allreduce(&self.local_m, &mut self.avg));
             self.m.copy_from_slice(&self.avg);
+            let _sp = trace::span(SpanKind::AdamKernel);
             precond_step_auto(
                 self.backend.as_ref(),
                 self.threads,

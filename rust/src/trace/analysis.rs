@@ -1,0 +1,487 @@
+//! Trace analysis: turn a captured [`Trace`] into the three reports the
+//! paper's accounting argument needs, each reconciled against its
+//! analytic twin in `netsim`:
+//!
+//! * **overlap** — per-step comm-bubble fraction from the per-bucket
+//!   `BucketCompute`/`BucketComm` spans, with the modeled step time
+//!   recomputed through [`overlapped_step_time`]'s recurrence from the
+//!   *measured* per-bucket durations;
+//! * **straggler** — which peer's `WireRecv` gates the barrier;
+//! * **recovery** — failure → rendezvous → restore timeline, checked
+//!   against [`epoch_change_window_bound`]
+//!   (crate::netsim::epoch_change_window_bound).
+//!
+//! [`overlapped_step_time`]: crate::netsim::collectives::overlapped_step_time
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use super::sink::Trace;
+use super::SpanKind;
+use crate::metrics::Table;
+use crate::netsim::collectives::overlapped_step_time;
+
+// ---- overlap ---------------------------------------------------------------
+
+/// One pipeline step's overlap accounting, reconstructed from per-bucket
+/// spans.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepOverlap {
+    /// Ordinal of the `Step` span this was carved from (per rank).
+    pub step_index: usize,
+    /// Rank the spans belong to.
+    pub rank: u32,
+    /// Per-bucket compute durations, bucket order.
+    pub compute_ns: Vec<u64>,
+    /// Per-bucket comm durations, bucket order.
+    pub comm_ns: Vec<u64>,
+    /// First bucket-compute start → last bucket-comm end.
+    pub measured_ns: u64,
+}
+
+impl StepOverlap {
+    /// Modeled step time: the [`overlapped_step_time`] recurrence
+    /// evaluated on the **measured** per-bucket durations.  The live
+    /// schedule can only be slower (channel hand-off, queue depth), so
+    /// `measured_ns` is lower-bounded by this, up to clock jitter.
+    pub fn modeled_ns(&self) -> f64 {
+        let compute: Vec<f64> =
+            self.compute_ns.iter().map(|&n| n as f64).collect();
+        let comm: Vec<f64> = self.comm_ns.iter().map(|&n| n as f64).collect();
+        overlapped_step_time(&compute, &comm)
+    }
+
+    /// Fully serialized schedule: Σ compute + Σ comm.
+    pub fn serial_ns(&self) -> u64 {
+        self.compute_ns.iter().sum::<u64>() + self.comm_ns.iter().sum::<u64>()
+    }
+
+    /// Time the step spent not computing (waiting on comm): the
+    /// comm bubble.  Zero when comm hides entirely under compute.
+    pub fn bubble_ns(&self) -> u64 {
+        self.measured_ns
+            .saturating_sub(self.compute_ns.iter().sum::<u64>())
+    }
+
+    /// Bubble as a fraction of the measured step, in `[0, 1]`.
+    pub fn bubble_fraction(&self) -> f64 {
+        if self.measured_ns == 0 {
+            return 0.0;
+        }
+        self.bubble_ns() as f64 / self.measured_ns as f64
+    }
+
+    /// The bubble fraction the recurrence predicts from the same
+    /// per-bucket durations — the reconciliation target for
+    /// [`bubble_fraction`](Self::bubble_fraction).
+    pub fn modeled_bubble_fraction(&self) -> f64 {
+        let modeled = self.modeled_ns();
+        if modeled <= 0.0 {
+            return 0.0;
+        }
+        let compute: f64 = self.compute_ns.iter().sum::<u64>() as f64;
+        ((modeled - compute) / modeled).max(0.0)
+    }
+
+    /// How much of the possible overlap the schedule realized:
+    /// `(serial − measured) / (serial − modeled)`, clamped to `[0, 1]`;
+    /// 1 when the modeled schedule leaves nothing to hide.
+    pub fn overlap_efficiency(&self) -> f64 {
+        let serial = self.serial_ns() as f64;
+        let ideal_saving = serial - self.modeled_ns();
+        if ideal_saving <= 0.0 {
+            return 1.0;
+        }
+        let real_saving = serial - self.measured_ns as f64;
+        (real_saving / ideal_saving).clamp(0.0, 1.0)
+    }
+}
+
+/// Carve per-step overlap records for `rank` out of a trace.
+///
+/// Each `Step` span on the rank's main lane frames one step; the
+/// `BucketCompute` spans inside it (main lane) and `BucketComm` spans
+/// (any lane — the comm thread on the overlapped path, the main lane on
+/// the sync path) are matched up by their bucket-index `aux`.  Steps
+/// whose bucket sets don't line up (truncated ring) are skipped.
+pub fn overlap_report(trace: &Trace, rank: u32) -> Vec<StepOverlap> {
+    let steps: Vec<&super::Event> = trace
+        .spans(SpanKind::Step)
+        .filter(|e| e.rank == rank && e.lane == super::LANE_MAIN)
+        .collect();
+    let mut out = Vec::new();
+    for (step_index, step) in steps.iter().enumerate() {
+        let window = |e: &&super::Event| {
+            e.rank == rank && e.t0_ns >= step.t0_ns && e.t1_ns <= step.t1_ns
+        };
+        let mut compute: BTreeMap<u64, u64> = BTreeMap::new();
+        for e in trace.spans(SpanKind::BucketCompute).filter(window) {
+            compute.insert(e.aux, e.dur_ns());
+        }
+        let mut comm: BTreeMap<u64, u64> = BTreeMap::new();
+        for e in trace.spans(SpanKind::BucketComm).filter(window) {
+            comm.insert(e.aux, e.dur_ns());
+        }
+        if compute.is_empty()
+            || compute.len() != comm.len()
+            || !compute.keys().eq(comm.keys())
+        {
+            continue;
+        }
+        let first_start = trace
+            .spans(SpanKind::BucketCompute)
+            .filter(window)
+            .map(|e| e.t0_ns)
+            .min()
+            .unwrap();
+        let last_end = trace
+            .spans(SpanKind::BucketComm)
+            .filter(window)
+            .map(|e| e.t1_ns)
+            .max()
+            .unwrap();
+        out.push(StepOverlap {
+            step_index,
+            rank,
+            compute_ns: compute.into_values().collect(),
+            comm_ns: comm.into_values().collect(),
+            measured_ns: last_end.saturating_sub(first_start),
+        });
+    }
+    out
+}
+
+/// Render a per-step overlap table (one row per step).
+pub fn overlap_table(steps: &[StepOverlap]) -> Table {
+    let mut t = Table::new(&[
+        "step",
+        "buckets",
+        "measured ms",
+        "modeled ms",
+        "serial ms",
+        "bubble %",
+        "overlap eff",
+    ]);
+    for s in steps {
+        t.row(&[
+            s.step_index.to_string(),
+            s.compute_ns.len().to_string(),
+            format!("{:.3}", s.measured_ns as f64 / 1e6),
+            format!("{:.3}", s.modeled_ns() / 1e6),
+            format!("{:.3}", s.serial_ns() as f64 / 1e6),
+            format!("{:.1}", 100.0 * s.bubble_fraction()),
+            format!("{:.2}", s.overlap_efficiency()),
+        ]);
+    }
+    t
+}
+
+// ---- straggler -------------------------------------------------------------
+
+/// Which peer's `WireRecv` gates the barrier: per-peer receive-wait
+/// totals aggregated across every rank's `WireRecv` spans (the span
+/// `aux` carries the peer being waited on).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StragglerReport {
+    /// Total nanoseconds every rank spent blocked receiving from each
+    /// peer.
+    pub wait_ns_by_peer: BTreeMap<u32, u64>,
+}
+
+impl StragglerReport {
+    /// The peer the fleet waited on the longest, if any receives were
+    /// traced.
+    pub fn straggler(&self) -> Option<u32> {
+        self.wait_ns_by_peer
+            .iter()
+            .max_by_key(|(peer, ns)| (**ns, u32::MAX - **peer))
+            .map(|(peer, _)| *peer)
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&["peer", "recv-wait ms", "gates barrier"]);
+        let straggler = self.straggler();
+        for (peer, ns) in &self.wait_ns_by_peer {
+            t.row(&[
+                peer.to_string(),
+                format!("{:.3}", *ns as f64 / 1e6),
+                if Some(*peer) == straggler { "*" } else { "" }.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+pub fn straggler_report(trace: &Trace) -> StragglerReport {
+    let mut wait_ns_by_peer: BTreeMap<u32, u64> = BTreeMap::new();
+    for e in trace.spans(SpanKind::WireRecv) {
+        *wait_ns_by_peer.entry(e.aux as u32).or_insert(0) += e.dur_ns();
+    }
+    StragglerReport { wait_ns_by_peer }
+}
+
+// ---- recovery --------------------------------------------------------------
+
+/// Failure → re-rendezvous → state-restore timeline for one surviving
+/// rank, carved from `PeerFailure` / `RendezvousEpoch` /
+/// `CheckpointRestore` events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryReport {
+    pub rank: u32,
+    /// When the rank observed the peer failure (trace clock, ns).
+    pub failure_ns: u64,
+    /// Re-rendezvous span (join + mesh dial) start/end.
+    pub rendezvous_start_ns: u64,
+    pub rendezvous_end_ns: u64,
+    /// End of checkpoint restore (equals `rendezvous_end_ns` when the
+    /// epoch restarted without reloading state).
+    pub restore_end_ns: u64,
+}
+
+impl RecoveryReport {
+    /// Failure detection → rendezvous begins.
+    pub fn detection_ns(&self) -> u64 {
+        self.rendezvous_start_ns.saturating_sub(self.failure_ns)
+    }
+
+    pub fn rendezvous_ns(&self) -> u64 {
+        self.rendezvous_end_ns
+            .saturating_sub(self.rendezvous_start_ns)
+    }
+
+    pub fn restore_ns(&self) -> u64 {
+        self.restore_end_ns.saturating_sub(self.rendezvous_end_ns)
+    }
+
+    /// Full recovery window: failure observed → state restored.
+    pub fn total_ns(&self) -> u64 {
+        self.restore_end_ns.saturating_sub(self.failure_ns)
+    }
+
+    /// Check the measured window against the analytic
+    /// [`epoch_change_window_bound`](crate::netsim::epoch_change_window_bound).
+    pub fn within_bound(&self, bound: Duration) -> bool {
+        Duration::from_nanos(self.total_ns()) <= bound
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(&["rank", "phase", "ms"]);
+        for (phase, ns) in [
+            ("detection", self.detection_ns()),
+            ("rendezvous", self.rendezvous_ns()),
+            ("restore", self.restore_ns()),
+            ("total", self.total_ns()),
+        ] {
+            t.row(&[
+                self.rank.to_string(),
+                phase.to_string(),
+                format!("{:.1}", ns as f64 / 1e6),
+            ]);
+        }
+        t
+    }
+}
+
+/// Recovery timeline for each rank that both observed a `PeerFailure`
+/// and completed a subsequent `RendezvousEpoch`.
+pub fn recovery_report(trace: &Trace) -> Vec<RecoveryReport> {
+    let mut out = Vec::new();
+    for rank in trace.ranks_with(SpanKind::PeerFailure) {
+        let failure_ns = match trace
+            .instants(SpanKind::PeerFailure)
+            .filter(|e| e.rank == rank)
+            .map(|e| e.t0_ns)
+            .min()
+        {
+            Some(t) => t,
+            None => continue,
+        };
+        let rendezvous = match trace
+            .spans(SpanKind::RendezvousEpoch)
+            .filter(|e| e.rank == rank && e.t0_ns >= failure_ns)
+            .min_by_key(|e| e.t0_ns)
+        {
+            Some(e) => e,
+            None => continue,
+        };
+        let restore_end_ns = trace
+            .spans(SpanKind::CheckpointRestore)
+            .filter(|e| e.rank == rank && e.t1_ns >= rendezvous.t1_ns)
+            .map(|e| e.t1_ns)
+            .min()
+            .unwrap_or(rendezvous.t1_ns);
+        out.push(RecoveryReport {
+            rank,
+            failure_ns,
+            rendezvous_start_ns: rendezvous.t0_ns,
+            rendezvous_end_ns: rendezvous.t1_ns,
+            restore_end_ns,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Event, EventPhase, LANE_COMM, LANE_MAIN};
+
+    fn span(
+        kind: SpanKind,
+        rank: u32,
+        lane: u32,
+        t0: u64,
+        t1: u64,
+        aux: u64,
+    ) -> Event {
+        Event {
+            kind,
+            ph: EventPhase::Span,
+            t0_ns: t0,
+            t1_ns: t1,
+            rank,
+            lane,
+            aux,
+        }
+    }
+
+    fn instant(kind: SpanKind, rank: u32, t0: u64, aux: u64) -> Event {
+        Event {
+            kind,
+            ph: EventPhase::Instant,
+            t0_ns: t0,
+            t1_ns: t0,
+            rank,
+            lane: LANE_MAIN,
+            aux,
+        }
+    }
+
+    /// A hand-built 3-bucket pipeline step; the modeled time must equal
+    /// the `overlapped_step_time` recurrence run on the same durations,
+    /// exactly.
+    #[test]
+    fn overlap_report_matches_the_recurrence_exactly() {
+        // compute: 100, 50, 50   comm: 80, 120, 40
+        // recurrence: fc=100, comm ends 180; fc=150, comm ends 300;
+        //             fc=200, comm ends 340.
+        let events = vec![
+            span(SpanKind::Step, 0, LANE_MAIN, 0, 400, 0),
+            span(SpanKind::BucketCompute, 0, LANE_MAIN, 0, 100, 0),
+            span(SpanKind::BucketCompute, 0, LANE_MAIN, 100, 150, 1),
+            span(SpanKind::BucketCompute, 0, LANE_MAIN, 150, 200, 2),
+            span(SpanKind::BucketComm, 0, LANE_COMM, 100, 180, 0),
+            span(SpanKind::BucketComm, 0, LANE_COMM, 180, 300, 1),
+            span(SpanKind::BucketComm, 0, LANE_COMM, 300, 340, 2),
+        ];
+        let trace = Trace { events };
+        let steps = overlap_report(&trace, 0);
+        assert_eq!(steps.len(), 1);
+        let s = &steps[0];
+        assert_eq!(s.compute_ns, vec![100, 50, 50]);
+        assert_eq!(s.comm_ns, vec![80, 120, 40]);
+        assert_eq!(s.measured_ns, 340);
+        let modeled =
+            overlapped_step_time(&[100.0, 50.0, 50.0], &[80.0, 120.0, 40.0]);
+        assert_eq!(s.modeled_ns(), modeled);
+        assert_eq!(modeled, 340.0);
+        // bubble: 340 measured − 200 compute = 140.
+        assert_eq!(s.bubble_ns(), 140);
+        assert!((s.bubble_fraction() - 140.0 / 340.0).abs() < 1e-12);
+        assert!(
+            (s.bubble_fraction() - s.modeled_bubble_fraction()).abs() < 1e-12
+        );
+        // schedule achieved the recurrence exactly → efficiency 1.
+        assert!((s.overlap_efficiency() - 1.0).abs() < 1e-12);
+        assert_eq!(s.serial_ns(), 440);
+        assert_eq!(overlap_table(&steps).render().lines().count(), 3);
+    }
+
+    #[test]
+    fn overlap_report_skips_truncated_steps_and_single_bucket_is_serial() {
+        let events = vec![
+            // Step 0: bucket 1's comm span lost to ring overwrite.
+            span(SpanKind::Step, 0, LANE_MAIN, 0, 300, 0),
+            span(SpanKind::BucketCompute, 0, LANE_MAIN, 0, 100, 0),
+            span(SpanKind::BucketCompute, 0, LANE_MAIN, 100, 200, 1),
+            span(SpanKind::BucketComm, 0, LANE_COMM, 100, 200, 0),
+            // Step 1: one bucket, sync path (comm on the main lane).
+            span(SpanKind::Step, 0, LANE_MAIN, 300, 700, 0),
+            span(SpanKind::BucketCompute, 0, LANE_MAIN, 300, 450, 0),
+            span(SpanKind::BucketComm, 0, LANE_MAIN, 450, 650, 0),
+        ];
+        let trace = Trace { events };
+        let steps = overlap_report(&trace, 0);
+        assert_eq!(steps.len(), 1, "the truncated step must be skipped");
+        let s = &steps[0];
+        assert_eq!(s.step_index, 1);
+        assert_eq!(s.measured_ns, 350);
+        // single bucket → recurrence degenerates to the serial sum.
+        assert_eq!(s.modeled_ns(), 350.0);
+        assert_eq!(s.serial_ns(), 350);
+        assert!((s.overlap_efficiency() - 1.0).abs() < 1e-12);
+        assert!(overlap_report(&trace, 7).is_empty());
+    }
+
+    #[test]
+    fn straggler_is_the_peer_with_the_largest_recv_wait() {
+        let events = vec![
+            span(SpanKind::WireRecv, 0, LANE_MAIN, 0, 50, 2),
+            span(SpanKind::WireRecv, 1, LANE_MAIN, 0, 300, 2),
+            span(SpanKind::WireRecv, 2, LANE_MAIN, 0, 40, 1),
+            span(SpanKind::WireRecv, 0, LANE_MAIN, 60, 100, 1),
+        ];
+        let r = straggler_report(&Trace { events });
+        assert_eq!(r.wait_ns_by_peer.get(&2), Some(&350));
+        assert_eq!(r.wait_ns_by_peer.get(&1), Some(&80));
+        assert_eq!(r.straggler(), Some(2));
+        assert!(r.to_table().render().contains('*'));
+        assert_eq!(straggler_report(&Trace::default()).straggler(), None);
+    }
+
+    #[test]
+    fn recovery_report_breaks_down_the_window_and_checks_the_bound() {
+        let ms = |v: u64| v * 1_000_000;
+        let events = vec![
+            // Rank 0's healthy first epoch, before the failure: must be
+            // ignored when picking the post-failure rendezvous.
+            span(SpanKind::RendezvousEpoch, 0, LANE_MAIN, 0, ms(10), 1),
+            instant(SpanKind::PeerFailure, 0, ms(100), 2),
+            span(
+                SpanKind::RendezvousEpoch,
+                0,
+                LANE_MAIN,
+                ms(150),
+                ms(400),
+                2,
+            ),
+            span(
+                SpanKind::CheckpointRestore,
+                0,
+                LANE_MAIN,
+                ms(400),
+                ms(450),
+                0,
+            ),
+            // Rank 1 saw the failure but never rejoined: no report.
+            instant(SpanKind::PeerFailure, 1, ms(100), 2),
+        ];
+        let reports = recovery_report(&Trace { events });
+        assert_eq!(reports.len(), 1);
+        let r = &reports[0];
+        assert_eq!(r.rank, 0);
+        assert_eq!(r.detection_ns(), ms(50));
+        assert_eq!(r.rendezvous_ns(), ms(250));
+        assert_eq!(r.restore_ns(), ms(50));
+        assert_eq!(r.total_ns(), ms(350));
+        let bound = crate::netsim::epoch_change_window_bound(
+            Duration::from_millis(200),
+            Duration::from_millis(100),
+            3,
+        );
+        // 200 + 100 + 3·250 = 1050 ms ≥ 350 ms.
+        assert!(r.within_bound(bound));
+        assert!(!r.within_bound(Duration::from_millis(349)));
+        assert_eq!(r.to_table().render().lines().count(), 6);
+    }
+}

@@ -1,0 +1,517 @@
+//! Low-overhead distributed tracing: per-thread ring-buffer span
+//! recording, Chrome-trace export, a unified stats registry, and the
+//! overlap/straggler/recovery analyzers.
+//!
+//! The paper's whole argument is a time-and-bytes accounting claim —
+//! Table 1 reports that the backward allreduce is up to 94% of step
+//! time, and §7.1 claims ~5× less wire volume under 1-bit compression.
+//! Every span kind here maps onto a row of that accounting:
+//!
+//! | span kind          | Table 1 / paper stage                         |
+//! |--------------------|-----------------------------------------------|
+//! | `Compress`         | backward: EC 1-bit compress (Algorithm 1 l.7) |
+//! | `PackVote`         | backward allreduce: sign-word vote-average    |
+//! | `WireSend`         | backward allreduce: scatter/gather send       |
+//! | `WireRecv`         | backward allreduce: blocking receive          |
+//! | `ServerReduce`     | backward allreduce: server EC re-compress     |
+//! | `Broadcast`        | backward allreduce: gather decode / intra-node|
+//! |                    | broadcast (hierarchy stage 3)                 |
+//! | `AdamKernel`       | "step": fused Adam / momentum / precond update|
+//! | `VarianceResync`   | 0/1 Adam sync point (fp32 variance allreduce) |
+//! | `CheckpointWrite`  | fault tolerance: atomic v2 checkpoint write   |
+//! | `CheckpointRestore`| fault tolerance: reload + EC reshard          |
+//! | `NackRetransmit`   | recovery layer: NACK sent / retransmit served |
+//! | `RendezvousEpoch`  | elastic: join → WELCOME → mesh rebuild        |
+//! | `PeerFailure`      | elastic: dead-peer budget exhausted (instant) |
+//! | `ChaosFault`       | injected wire fault (instant)                 |
+//! | `Step`             | one whole optimizer step (analysis anchor)    |
+//! | `BucketCompute`    | overlap pipeline: produce bucket k (compute)  |
+//! | `BucketComm`       | overlap pipeline: exchange bucket k (comm)    |
+//! | `WireBytes`        | counter track: payload bytes this collective  |
+//!
+//! Recording is built to disappear when off: every instrumentation
+//! point costs one relaxed atomic load and a branch
+//! ([`is_enabled`]), bench-asserted < 1% of step time by
+//! `benches/trace_overhead.rs`.  When on, each thread appends fixed-size
+//! [`Event`]s to its own fixed-capacity overwrite-oldest ring — no
+//! locks, and no heap allocation after the ring's one-time init (unit
+//! tests assert both under the counting allocator).  Rings drain into a
+//! global collector when their thread exits (scoped rank/comm threads)
+//! or on [`take`], which merges everything into a [`sink::Trace`] for
+//! Chrome-trace export ([`sink::Trace::to_chrome_string`]) and the
+//! [`analysis`] reports.
+
+pub mod analysis;
+pub mod registry;
+pub mod sink;
+
+pub use registry::StatsRegistry;
+pub use sink::Trace;
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+/// What a recorded stage *is* — see the module table for the mapping to
+/// the paper's accounting rows.
+#[repr(u8)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanKind {
+    Compress = 0,
+    PackVote,
+    WireSend,
+    WireRecv,
+    ServerReduce,
+    Broadcast,
+    AdamKernel,
+    VarianceResync,
+    CheckpointWrite,
+    CheckpointRestore,
+    NackRetransmit,
+    RendezvousEpoch,
+    PeerFailure,
+    ChaosFault,
+    Step,
+    BucketCompute,
+    BucketComm,
+    WireBytes,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 18] = [
+        SpanKind::Compress,
+        SpanKind::PackVote,
+        SpanKind::WireSend,
+        SpanKind::WireRecv,
+        SpanKind::ServerReduce,
+        SpanKind::Broadcast,
+        SpanKind::AdamKernel,
+        SpanKind::VarianceResync,
+        SpanKind::CheckpointWrite,
+        SpanKind::CheckpointRestore,
+        SpanKind::NackRetransmit,
+        SpanKind::RendezvousEpoch,
+        SpanKind::PeerFailure,
+        SpanKind::ChaosFault,
+        SpanKind::Step,
+        SpanKind::BucketCompute,
+        SpanKind::BucketComm,
+        SpanKind::WireBytes,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Compress => "Compress",
+            SpanKind::PackVote => "PackVote",
+            SpanKind::WireSend => "WireSend",
+            SpanKind::WireRecv => "WireRecv",
+            SpanKind::ServerReduce => "ServerReduce",
+            SpanKind::Broadcast => "Broadcast",
+            SpanKind::AdamKernel => "AdamKernel",
+            SpanKind::VarianceResync => "VarianceResync",
+            SpanKind::CheckpointWrite => "CheckpointWrite",
+            SpanKind::CheckpointRestore => "CheckpointRestore",
+            SpanKind::NackRetransmit => "NackRetransmit",
+            SpanKind::RendezvousEpoch => "RendezvousEpoch",
+            SpanKind::PeerFailure => "PeerFailure",
+            SpanKind::ChaosFault => "ChaosFault",
+            SpanKind::Step => "Step",
+            SpanKind::BucketCompute => "BucketCompute",
+            SpanKind::BucketComm => "BucketComm",
+            SpanKind::WireBytes => "WireBytes",
+        }
+    }
+
+    /// Chrome-trace category (Perfetto's track filter).
+    pub fn category(self) -> &'static str {
+        match self {
+            SpanKind::Compress
+            | SpanKind::PackVote
+            | SpanKind::ServerReduce
+            | SpanKind::Broadcast => "comm",
+            SpanKind::WireSend | SpanKind::WireRecv => "wire",
+            SpanKind::AdamKernel | SpanKind::VarianceResync => "optim",
+            SpanKind::CheckpointWrite
+            | SpanKind::CheckpointRestore
+            | SpanKind::NackRetransmit
+            | SpanKind::RendezvousEpoch
+            | SpanKind::PeerFailure
+            | SpanKind::ChaosFault => "recovery",
+            SpanKind::Step
+            | SpanKind::BucketCompute
+            | SpanKind::BucketComm => "sched",
+            SpanKind::WireBytes => "counter",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
+        Self::ALL.get(v as usize).copied()
+    }
+
+    pub fn parse(name: &str) -> Option<SpanKind> {
+        Self::ALL.iter().copied().find(|k| k.name() == name)
+    }
+}
+
+/// Duration span, point marker, or counter sample.
+#[repr(u8)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum EventPhase {
+    /// `[t0, t1]` duration span (Chrome `"X"`).
+    Span = 0,
+    /// Point-in-time marker at `t0` (Chrome `"i"`).
+    Instant,
+    /// Counter sample at `t0` with value `aux` (Chrome `"C"`).
+    Counter,
+}
+
+impl EventPhase {
+    pub fn from_u8(v: u8) -> Option<EventPhase> {
+        match v {
+            0 => Some(EventPhase::Span),
+            1 => Some(EventPhase::Instant),
+            2 => Some(EventPhase::Counter),
+            _ => None,
+        }
+    }
+}
+
+/// The lane a thread records into — Chrome's `tid` within a rank's
+/// process track.
+pub const LANE_MAIN: u32 = 0;
+/// The overlap pipeline's dedicated comm thread.
+pub const LANE_COMM: u32 = 1;
+
+/// Rank tag of threads that never called [`set_rank`] — the SPMD
+/// driver / coordinator thread.
+pub const DRIVER_RANK: u32 = u32::MAX;
+
+/// One recorded event — fixed-size and `Copy`, so the hot-path ring
+/// write is a plain store.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub kind: SpanKind,
+    pub ph: EventPhase,
+    /// Start (ns since the process trace epoch).
+    pub t0_ns: u64,
+    /// End; equals `t0_ns` for instants and counters.
+    pub t1_ns: u64,
+    /// Recording rank ([`DRIVER_RANK`] for untagged threads).
+    pub rank: u32,
+    /// Recording lane ([`LANE_MAIN`] / [`LANE_COMM`]).
+    pub lane: u32,
+    /// Kind-specific payload: bucket index, peer rank, byte count,
+    /// epoch number, counter value.
+    pub aux: u64,
+}
+
+impl Event {
+    pub fn dur_ns(&self) -> u64 {
+        self.t1_ns - self.t0_ns
+    }
+}
+
+/// Default per-thread ring capacity (events).  At 56 B/event this is
+/// ~3.5 MiB per recording thread.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_CAPACITY);
+static DROPPED: AtomicUsize = AtomicUsize::new(0);
+static COLLECTED: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The single gate every instrumentation point checks.  Relaxed load:
+/// recording is advisory — a span racing an `enable`/`disable` edge may
+/// be missed, never torn.
+#[inline(always)]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Start recording with the default per-thread ring capacity.
+pub fn enable() {
+    enable_with_capacity(DEFAULT_CAPACITY);
+}
+
+/// Start recording; each thread's ring holds `capacity` events and
+/// overwrites its oldest beyond that.
+pub fn enable_with_capacity(capacity: usize) {
+    // Pin the epoch before the gate opens so every recorded timestamp
+    // shares one time base.
+    let _ = EPOCH.get_or_init(Instant::now);
+    CAPACITY.store(capacity.max(16), Ordering::Relaxed);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording.  Already-buffered events stay until [`take`] or
+/// [`clear`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Tag the current thread's events with a rank (the Chrome `pid`).
+pub fn set_rank(rank: usize) {
+    LOCAL.with(|l| l.borrow_mut().ring.rank = rank as u32);
+}
+
+/// Tag the current thread's events with a lane (the Chrome `tid`).
+pub fn set_lane(lane: u32) {
+    LOCAL.with(|l| l.borrow_mut().ring.lane = lane);
+}
+
+/// The current thread's rank tag ([`DRIVER_RANK`] if never set) — lets
+/// a helper thread (the overlap comm thread) adopt its spawner's rank.
+pub fn current_rank() -> u32 {
+    LOCAL.with(|l| l.borrow().ring.rank)
+}
+
+/// Events overwritten (ring overflow) across all threads so far.
+pub fn dropped() -> usize {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+// ---- per-thread ring -------------------------------------------------------
+
+struct Ring {
+    buf: Vec<Event>,
+    /// Next write slot once the ring is full.
+    head: usize,
+    dropped: usize,
+    rank: u32,
+    lane: u32,
+}
+
+impl Ring {
+    const fn new() -> Ring {
+        Ring {
+            buf: Vec::new(),
+            head: 0,
+            dropped: 0,
+            rank: DRIVER_RANK,
+            lane: LANE_MAIN,
+        }
+    }
+
+    #[inline]
+    fn record(&mut self, mut ev: Event) {
+        ev.rank = self.rank;
+        ev.lane = self.lane;
+        let cap = self.buf.capacity();
+        if cap == 0 {
+            // One-time init: the only allocation this ring ever makes.
+            self.buf.reserve_exact(CAPACITY.load(Ordering::Relaxed));
+        }
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.buf.len();
+            self.dropped += 1;
+        }
+    }
+
+    /// Move the buffered events out in record order.
+    fn drain(&mut self) -> Vec<Event> {
+        let head = std::mem::take(&mut self.head);
+        let mut out = std::mem::take(&mut self.buf);
+        out.rotate_left(head);
+        if self.dropped > 0 {
+            DROPPED.fetch_add(self.dropped, Ordering::Relaxed);
+            self.dropped = 0;
+        }
+        out
+    }
+}
+
+/// Wrapper whose `Drop` hands the thread's ring to the global
+/// collector — scoped rank/comm threads flush themselves on exit.
+struct LocalRing {
+    ring: Ring,
+}
+
+impl Drop for LocalRing {
+    fn drop(&mut self) {
+        let events = self.ring.drain();
+        if !events.is_empty() {
+            collected().extend(events);
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalRing> =
+        const { RefCell::new(LocalRing { ring: Ring::new() }) };
+}
+
+fn collected() -> std::sync::MutexGuard<'static, Vec<Event>> {
+    COLLECTED.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[inline]
+fn record(ev: Event) {
+    LOCAL.with(|l| l.borrow_mut().ring.record(ev));
+}
+
+// ---- recording API ---------------------------------------------------------
+
+/// RAII duration span: records `[construction, drop]` when tracing is
+/// enabled, does nothing (one atomic load) when it is not.
+#[must_use = "a span records its duration when dropped"]
+pub struct Span {
+    kind: SpanKind,
+    aux: u64,
+    t0_ns: u64,
+    armed: bool,
+}
+
+impl Span {
+    /// Attach/overwrite the kind-specific payload before the span ends.
+    #[inline]
+    pub fn set_aux(&mut self, aux: u64) {
+        self.aux = aux;
+    }
+}
+
+impl Drop for Span {
+    #[inline]
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        record(Event {
+            kind: self.kind,
+            ph: EventPhase::Span,
+            t0_ns: self.t0_ns,
+            t1_ns: now_ns(),
+            rank: 0,
+            lane: 0,
+            aux: self.aux,
+        });
+    }
+}
+
+/// Open a duration span of `kind` (no payload).
+#[inline]
+pub fn span(kind: SpanKind) -> Span {
+    span_aux(kind, 0)
+}
+
+/// Open a duration span of `kind` carrying `aux` (bucket index, peer
+/// rank, byte count — see [`Event::aux`]).
+#[inline]
+pub fn span_aux(kind: SpanKind, aux: u64) -> Span {
+    if !is_enabled() {
+        return Span { kind, aux, t0_ns: 0, armed: false };
+    }
+    Span { kind, aux, t0_ns: now_ns(), armed: true }
+}
+
+/// Record a point-in-time marker.
+#[inline]
+pub fn instant(kind: SpanKind, aux: u64) {
+    if !is_enabled() {
+        return;
+    }
+    let t = now_ns();
+    record(Event {
+        kind,
+        ph: EventPhase::Instant,
+        t0_ns: t,
+        t1_ns: t,
+        rank: 0,
+        lane: 0,
+        aux,
+    });
+}
+
+/// Record a counter sample (Chrome counter track, e.g. bytes on wire).
+#[inline]
+pub fn counter(kind: SpanKind, value: u64) {
+    if !is_enabled() {
+        return;
+    }
+    let t = now_ns();
+    record(Event {
+        kind,
+        ph: EventPhase::Counter,
+        t0_ns: t,
+        t1_ns: t,
+        rank: 0,
+        lane: 0,
+        aux: value,
+    });
+}
+
+// ---- collection ------------------------------------------------------------
+
+/// Drain the current thread's ring into the global collector without
+/// waiting for thread exit.
+pub fn flush_thread() {
+    let events = LOCAL.with(|l| l.borrow_mut().ring.drain());
+    if !events.is_empty() {
+        collected().extend(events);
+    }
+}
+
+/// Collect everything recorded so far (this thread + every thread that
+/// has exited) into a [`Trace`], sorted by (rank, lane, start time).
+/// Threads still alive elsewhere keep their un-drained rings — capture
+/// after scoped work has joined.
+pub fn take() -> Trace {
+    flush_thread();
+    let mut events = std::mem::take(&mut *collected());
+    events.sort_by_key(|e| (e.rank, e.lane, e.t0_ns, e.t1_ns));
+    Trace { events }
+}
+
+/// Drop everything recorded so far (current thread + collector) and
+/// reset the overflow counter.
+pub fn clear() {
+    let _ = LOCAL.with(|l| l.borrow_mut().ring.drain());
+    collected().clear();
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+// Tests that *record* (enable the global gate, capture, assert on
+// allocation counts) live in `tests/trace.rs`: the gate is
+// process-global, and flipping it inside the lib test binary would race
+// the comm/optim suites' own zero-allocation assertions running on
+// sibling harness threads.  Only gate-free tests belong here.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_kind_tables_are_consistent() {
+        for (i, k) in SpanKind::ALL.iter().enumerate() {
+            assert_eq!(SpanKind::from_u8(i as u8), Some(*k));
+            assert_eq!(SpanKind::parse(k.name()), Some(*k));
+            assert!(!k.category().is_empty());
+        }
+        assert_eq!(SpanKind::from_u8(SpanKind::ALL.len() as u8), None);
+        assert_eq!(SpanKind::parse("NotAKind"), None);
+        for ph in [EventPhase::Span, EventPhase::Instant, EventPhase::Counter]
+        {
+            assert_eq!(EventPhase::from_u8(ph as u8), Some(ph));
+        }
+        assert_eq!(EventPhase::from_u8(3), None);
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        // Unit-scope sanity only (no gate flip): a span constructed
+        // while disabled must not arm.
+        if is_enabled() {
+            return; // another process-level consumer owns the gate
+        }
+        let s = span_aux(SpanKind::Compress, 7);
+        assert!(!s.armed);
+        drop(s);
+    }
+}

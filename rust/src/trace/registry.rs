@@ -1,0 +1,335 @@
+//! Unified stats registry: one named-counter/gauge store subsuming the
+//! scattered per-layer ledgers ([`CommStats`], [`TransportStats`],
+//! [`RecoveryStats`]) with a single reconciliation point against the
+//! `netsim` closed-form volume models.
+//!
+//! Every `record_*` ingester destructures its source struct
+//! exhaustively (no `..`), so adding a field to any ledger is a compile
+//! error here until the registry learns about it — the same
+//! force-the-update pattern the ledger `merge` impls use.
+
+use std::collections::BTreeMap;
+
+use crate::comm::CommStats;
+use crate::compress::CompressionKind;
+use crate::netsim::collectives::compressed_step_payload_per_gpu;
+use crate::transport::chaos::RecoveryStats;
+use crate::transport::runner::TransportStats;
+use crate::util::json::Json;
+
+/// Named monotone counters (u64, additive on merge) plus gauges (f64,
+/// last-write-wins).  Keys are `scope.metric` by convention.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StatsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl StatsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Counter value (0 when never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn counters(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Fold another registry in: counters add, gauges last-write-wins.
+    pub fn merge(&mut self, other: &StatsRegistry) {
+        let StatsRegistry { counters, gauges } = other;
+        for (k, v) in counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+    }
+
+    // ---- ledger ingestion (exhaustive destructuring, no `..`) -------------
+
+    /// Ingest one collective's payload ledger under `scope`.
+    pub fn record_comm(&mut self, scope: &str, s: &CommStats) {
+        let CommStats {
+            alltoall_bytes_per_gpu,
+            allgather_bytes_per_gpu,
+            uncompressed_bytes,
+        } = *s;
+        self.add(
+            &format!("{scope}.alltoall_bytes_per_gpu"),
+            alltoall_bytes_per_gpu as u64,
+        );
+        self.add(
+            &format!("{scope}.allgather_bytes_per_gpu"),
+            allgather_bytes_per_gpu as u64,
+        );
+        self.add(
+            &format!("{scope}.uncompressed_bytes"),
+            uncompressed_bytes as u64,
+        );
+    }
+
+    /// Ingest one transported step's measured wire ledger under `scope`.
+    pub fn record_transport(&mut self, scope: &str, s: &TransportStats) {
+        let TransportStats {
+            comm,
+            gross_alltoall_bytes,
+            gross_allgather_bytes,
+            gross_intra_bytes,
+            frames_sent,
+        } = *s;
+        self.record_comm(scope, &comm);
+        self.add(
+            &format!("{scope}.gross_alltoall_bytes"),
+            gross_alltoall_bytes as u64,
+        );
+        self.add(
+            &format!("{scope}.gross_allgather_bytes"),
+            gross_allgather_bytes as u64,
+        );
+        self.add(
+            &format!("{scope}.gross_intra_bytes"),
+            gross_intra_bytes as u64,
+        );
+        self.add(&format!("{scope}.frames_sent"), frames_sent as u64);
+    }
+
+    /// Ingest a chaos/recovery ledger under `scope`.
+    pub fn record_recovery(&mut self, scope: &str, s: &RecoveryStats) {
+        let RecoveryStats {
+            frames_injected,
+            injected_drops,
+            injected_corruptions,
+            injected_reorders,
+            injected_delays,
+            forced_clean,
+            checksum_failures,
+            gaps_detected,
+            nacks_sent,
+            retransmits_served,
+            retransmit_bytes,
+            duplicates_discarded,
+            control_frames,
+            control_bytes,
+            nack_misses,
+        } = *s;
+        for (metric, v) in [
+            ("frames_injected", frames_injected),
+            ("injected_drops", injected_drops),
+            ("injected_corruptions", injected_corruptions),
+            ("injected_reorders", injected_reorders),
+            ("injected_delays", injected_delays),
+            ("forced_clean", forced_clean),
+            ("checksum_failures", checksum_failures),
+            ("gaps_detected", gaps_detected),
+            ("nacks_sent", nacks_sent),
+            ("retransmits_served", retransmits_served),
+            ("retransmit_bytes", retransmit_bytes),
+            ("duplicates_discarded", duplicates_discarded),
+            ("control_frames", control_frames),
+            ("control_bytes", control_bytes),
+            ("nack_misses", nack_misses),
+        ] {
+            self.add(&format!("{scope}.{metric}"), v);
+        }
+    }
+
+    // ---- reconciliation ----------------------------------------------------
+
+    /// Measured per-GPU payload bytes recorded under `scope` (the
+    /// `record_comm` convention).
+    pub fn payload_per_gpu(&self, scope: &str) -> u64 {
+        self.counter(&format!("{scope}.alltoall_bytes_per_gpu"))
+            + self.counter(&format!("{scope}.allgather_bytes_per_gpu"))
+    }
+
+    /// The single reconciliation point against the netsim closed-form
+    /// volume models: the measured per-GPU payload under `scope` must
+    /// equal `expected_per_gpu` **exactly** (the models are byte-exact
+    /// twins, not approximations).
+    pub fn reconcile_payload(
+        &self,
+        scope: &str,
+        expected_per_gpu: usize,
+    ) -> std::result::Result<(), String> {
+        let measured = self.payload_per_gpu(scope);
+        if measured == expected_per_gpu as u64 {
+            Ok(())
+        } else {
+            Err(format!(
+                "{scope}: measured {measured} payload bytes/GPU, netsim \
+                 closed form predicts {expected_per_gpu}"
+            ))
+        }
+    }
+
+    /// Reconcile a flat compressed-collective scope over `steps` steps
+    /// against [`compressed_step_payload_per_gpu`]
+    /// (crate::netsim::collectives).
+    pub fn reconcile_compressed_steps(
+        &self,
+        scope: &str,
+        kind: CompressionKind,
+        n_gpus: usize,
+        elements: usize,
+        steps: usize,
+    ) -> std::result::Result<(), String> {
+        let per_step = compressed_step_payload_per_gpu(kind, n_gpus, elements);
+        self.reconcile_payload(scope, steps * per_step)
+    }
+
+    // ---- rendering ---------------------------------------------------------
+
+    pub fn to_table(&self) -> crate::metrics::Table {
+        let mut t = crate::metrics::Table::new(&["metric", "value"]);
+        for (k, v) in &self.counters {
+            t.row(&[k.clone(), v.to_string()]);
+        }
+        for (k, v) in &self.gauges {
+            t.row(&[k.clone(), format!("{v:.3}")]);
+        }
+        t
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (k, v) in &self.counters {
+            counters.insert(k.clone(), Json::Num(*v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, v) in &self.gauges {
+            gauges.insert(k.clone(), Json::Num(*v));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("counters".to_string(), Json::Obj(counters));
+        root.insert("gauges".to_string(), Json::Obj(gauges));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn counters_add_and_gauges_overwrite() {
+        let mut r = StatsRegistry::new();
+        r.add("x.bytes", 3);
+        r.add("x.bytes", 4);
+        r.set_gauge("x.frac", 0.5);
+        r.set_gauge("x.frac", 0.75);
+        assert_eq!(r.counter("x.bytes"), 7);
+        assert_eq!(r.counter("never"), 0);
+        assert_eq!(r.gauge("x.frac"), Some(0.75));
+        assert_eq!(r.gauge("never"), None);
+
+        let mut other = StatsRegistry::new();
+        other.add("x.bytes", 1);
+        other.set_gauge("x.frac", 0.25);
+        r.merge(&other);
+        assert_eq!(r.counter("x.bytes"), 8);
+        assert_eq!(r.gauge("x.frac"), Some(0.25));
+    }
+
+    #[test]
+    fn ingests_every_ledger_field() {
+        let comm = CommStats {
+            alltoall_bytes_per_gpu: 10,
+            allgather_bytes_per_gpu: 20,
+            uncompressed_bytes: 400,
+        };
+        let ts = TransportStats {
+            comm,
+            gross_alltoall_bytes: 111,
+            gross_allgather_bytes: 222,
+            gross_intra_bytes: 333,
+            frames_sent: 12,
+        };
+        let rec = RecoveryStats {
+            nacks_sent: 42,
+            retransmit_bytes: 999,
+            ..RecoveryStats::default()
+        };
+        let mut r = StatsRegistry::new();
+        r.record_comm("car", &comm);
+        r.record_transport("wire", &ts);
+        r.record_recovery("chaos", &rec);
+        assert_eq!(r.counter("car.alltoall_bytes_per_gpu"), 10);
+        assert_eq!(r.counter("wire.allgather_bytes_per_gpu"), 20);
+        assert_eq!(r.counter("wire.gross_intra_bytes"), 333);
+        assert_eq!(r.counter("wire.frames_sent"), 12);
+        assert_eq!(r.counter("chaos.nacks_sent"), 42);
+        assert_eq!(r.counter("chaos.retransmit_bytes"), 999);
+        assert_eq!(r.payload_per_gpu("wire"), 30);
+        let table = r.to_table().render();
+        assert!(table.contains("chaos.retransmit_bytes"));
+        let j = r.to_json();
+        assert_eq!(
+            j.req("counters")
+                .unwrap()
+                .f64_of("car.uncompressed_bytes")
+                .unwrap(),
+            400.0
+        );
+    }
+
+    #[test]
+    fn reconciles_against_the_netsim_closed_form() {
+        // Feed the registry the in-process engine's own per-step ledger
+        // for a few steps; the closed form must agree byte-exactly.
+        let (n, len, steps) = (4usize, 1031usize, 3usize);
+        let mut car = crate::comm::CompressedAllreduce::new(
+            n,
+            len,
+            CompressionKind::OneBit,
+        );
+        let base = Rng::new(5);
+        let inputs: Vec<Vec<f32>> =
+            (0..n).map(|i| base.fork(i as u64).normal_vec(len, 1.0)).collect();
+        let mut out = vec![0.0f32; len];
+        let mut reg = StatsRegistry::new();
+        for _ in 0..steps {
+            let s = car.allreduce(&inputs, &mut out);
+            reg.record_comm("car", &s);
+        }
+        reg.reconcile_compressed_steps(
+            "car",
+            CompressionKind::OneBit,
+            n,
+            len,
+            steps,
+        )
+        .expect("measured ledger must match the closed form");
+        // And the failure path reports, not panics.
+        assert!(reg
+            .reconcile_compressed_steps(
+                "car",
+                CompressionKind::OneBit,
+                n,
+                len,
+                steps + 1,
+            )
+            .is_err());
+    }
+}

@@ -1,0 +1,415 @@
+//! Trace sinks: merge collected events into Chrome-trace-format JSON
+//! (loadable in `chrome://tracing` / Perfetto) or a compact fixed-width
+//! binary dump (for tests and archival).
+//!
+//! Chrome mapping: one *process* track per rank (`pid` = rank, with the
+//! untagged driver thread shown as its own process), one *thread* track
+//! per lane (`tid`), `"X"` complete events for spans, `"i"` instants,
+//! and `"C"` counter samples for the bytes-on-wire track.  Timestamps
+//! are microseconds since the process trace epoch, as the format
+//! requires.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+use super::{Event, EventPhase, SpanKind, DRIVER_RANK, LANE_COMM, LANE_MAIN};
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Chrome `pid` used for the untagged SPMD driver / coordinator thread
+/// (`u32::MAX` itself would render as a meaningless huge number).
+const DRIVER_PID: u64 = 1_000_000;
+
+const BINARY_MAGIC: &[u8; 4] = b"OBTR";
+const BINARY_VERSION: u32 = 1;
+/// Bytes per event record in the binary dump.
+const BINARY_RECORD: usize = 1 + 1 + 4 + 4 + 8 + 8 + 8;
+
+/// A captured set of events (see [`super::take`]).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub events: Vec<Event>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Duration spans of `kind`, in collection order.
+    pub fn spans(&self, kind: SpanKind) -> impl Iterator<Item = &Event> {
+        self.events
+            .iter()
+            .filter(move |e| e.kind == kind && e.ph == EventPhase::Span)
+    }
+
+    /// Instant markers of `kind`.
+    pub fn instants(&self, kind: SpanKind) -> impl Iterator<Item = &Event> {
+        self.events
+            .iter()
+            .filter(move |e| e.kind == kind && e.ph == EventPhase::Instant)
+    }
+
+    /// Every span kind with at least one event of any phase.
+    pub fn kinds_present(&self) -> BTreeSet<SpanKind> {
+        self.events.iter().map(|e| e.kind).collect()
+    }
+
+    /// Every rank that recorded at least one event (the driver's
+    /// untagged rank included, as [`DRIVER_RANK`]).
+    pub fn ranks(&self) -> BTreeSet<u32> {
+        self.events.iter().map(|e| e.rank).collect()
+    }
+
+    /// Ranks that recorded at least one event of `kind`.
+    pub fn ranks_with(&self, kind: SpanKind) -> BTreeSet<u32> {
+        self.events
+            .iter()
+            .filter(|e| e.kind == kind)
+            .map(|e| e.rank)
+            .collect()
+    }
+
+    /// Total recorded duration of `kind` in nanoseconds.
+    pub fn total_ns(&self, kind: SpanKind) -> u64 {
+        self.spans(kind).map(Event::dur_ns).sum()
+    }
+
+    // ---- Chrome trace format ----------------------------------------------
+
+    /// The trace as a Chrome-trace-format JSON value:
+    /// `{"traceEvents": [...], "displayTimeUnit": "ms"}`.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events: Vec<Json> = Vec::with_capacity(self.events.len() + 8);
+        // Metadata: name the per-rank process tracks and per-lane
+        // threads so Perfetto shows "rank 3 / comm" instead of bare
+        // numbers.
+        let mut tracks: BTreeSet<(u64, u64)> = BTreeSet::new();
+        for e in &self.events {
+            tracks.insert((chrome_pid(e.rank), e.lane as u64));
+        }
+        for &(pid, tid) in &tracks {
+            let pname = if pid == DRIVER_PID {
+                "driver".to_string()
+            } else {
+                format!("rank {pid}")
+            };
+            events.push(metadata_event("process_name", pid, tid, &pname));
+            let tname = match tid as u32 {
+                LANE_MAIN => "main".to_string(),
+                LANE_COMM => "comm".to_string(),
+                other => format!("lane {other}"),
+            };
+            events.push(metadata_event("thread_name", pid, tid, &tname));
+        }
+        for e in &self.events {
+            events.push(chrome_event(e));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("traceEvents".to_string(), Json::Arr(events));
+        root.insert(
+            "displayTimeUnit".to_string(),
+            Json::Str("ms".to_string()),
+        );
+        Json::Obj(root)
+    }
+
+    pub fn to_chrome_string(&self) -> String {
+        self.to_chrome_json().to_string_pretty() + "\n"
+    }
+
+    /// Write the Chrome-trace JSON to `path` (parent dirs created).
+    pub fn write_chrome(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_chrome_string())
+    }
+
+    // ---- compact binary dump ----------------------------------------------
+
+    /// Fixed-width little-endian dump: `"OBTR"`, version, count, then
+    /// one 34-byte record per event.  Round-trips via
+    /// [`Trace::from_binary`].
+    pub fn to_binary(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(16 + self.events.len() * BINARY_RECORD);
+        out.extend_from_slice(BINARY_MAGIC);
+        out.extend_from_slice(&BINARY_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.events.len() as u64).to_le_bytes());
+        for e in &self.events {
+            out.push(e.kind as u8);
+            out.push(e.ph as u8);
+            out.extend_from_slice(&e.rank.to_le_bytes());
+            out.extend_from_slice(&e.lane.to_le_bytes());
+            out.extend_from_slice(&e.t0_ns.to_le_bytes());
+            out.extend_from_slice(&e.t1_ns.to_le_bytes());
+            out.extend_from_slice(&e.aux.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_binary(bytes: &[u8]) -> Result<Trace> {
+        let bad = |what: &str| Error::Config(format!("trace dump: {what}"));
+        if bytes.len() < 16 || &bytes[0..4] != BINARY_MAGIC {
+            return Err(bad("missing OBTR header"));
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != BINARY_VERSION {
+            return Err(bad(&format!("unsupported version {version}")));
+        }
+        let count =
+            u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let body = &bytes[16..];
+        if body.len() != count * BINARY_RECORD {
+            return Err(bad(&format!(
+                "expected {} record bytes, found {}",
+                count * BINARY_RECORD,
+                body.len()
+            )));
+        }
+        let mut events = Vec::with_capacity(count);
+        for rec in body.chunks_exact(BINARY_RECORD) {
+            let kind = SpanKind::from_u8(rec[0])
+                .ok_or_else(|| bad(&format!("bad span kind {}", rec[0])))?;
+            let ph = EventPhase::from_u8(rec[1])
+                .ok_or_else(|| bad(&format!("bad phase {}", rec[1])))?;
+            events.push(Event {
+                kind,
+                ph,
+                rank: u32::from_le_bytes(rec[2..6].try_into().unwrap()),
+                lane: u32::from_le_bytes(rec[6..10].try_into().unwrap()),
+                t0_ns: u64::from_le_bytes(rec[10..18].try_into().unwrap()),
+                t1_ns: u64::from_le_bytes(rec[18..26].try_into().unwrap()),
+                aux: u64::from_le_bytes(rec[26..34].try_into().unwrap()),
+            });
+        }
+        Ok(Trace { events })
+    }
+
+    /// Per-kind summary table: event count, total and mean span time,
+    /// and the aux sum (bytes for the wire kinds).
+    pub fn summary_table(&self) -> crate::metrics::Table {
+        let mut t = crate::metrics::Table::new(&[
+            "span kind", "events", "total ms", "mean µs", "aux sum",
+        ]);
+        for kind in SpanKind::ALL {
+            let n = self
+                .events
+                .iter()
+                .filter(|e| e.kind == kind)
+                .count();
+            if n == 0 {
+                continue;
+            }
+            let total_ns = self.total_ns(kind);
+            let spans = self.spans(kind).count();
+            let mean_us = if spans > 0 {
+                total_ns as f64 / spans as f64 / 1e3
+            } else {
+                0.0
+            };
+            let aux: u64 = self
+                .events
+                .iter()
+                .filter(|e| e.kind == kind)
+                .map(|e| e.aux)
+                .sum();
+            t.row(&[
+                kind.name().to_string(),
+                n.to_string(),
+                format!("{:.3}", total_ns as f64 / 1e6),
+                format!("{mean_us:.1}"),
+                aux.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+fn chrome_pid(rank: u32) -> u64 {
+    if rank == DRIVER_RANK {
+        DRIVER_PID
+    } else {
+        rank as u64
+    }
+}
+
+fn metadata_event(name: &str, pid: u64, tid: u64, value: &str) -> Json {
+    let mut args = BTreeMap::new();
+    args.insert("name".to_string(), Json::Str(value.to_string()));
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("ph".to_string(), Json::Str("M".to_string()));
+    m.insert("pid".to_string(), Json::Num(pid as f64));
+    m.insert("tid".to_string(), Json::Num(tid as f64));
+    m.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(m)
+}
+
+fn chrome_event(e: &Event) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(e.kind.name().to_string()));
+    m.insert("cat".to_string(), Json::Str(e.kind.category().to_string()));
+    m.insert("pid".to_string(), Json::Num(chrome_pid(e.rank) as f64));
+    m.insert("tid".to_string(), Json::Num(e.lane as f64));
+    m.insert("ts".to_string(), Json::Num(e.t0_ns as f64 / 1e3));
+    match e.ph {
+        EventPhase::Span => {
+            m.insert("ph".to_string(), Json::Str("X".to_string()));
+            m.insert(
+                "dur".to_string(),
+                Json::Num(e.dur_ns() as f64 / 1e3),
+            );
+            let mut args = BTreeMap::new();
+            args.insert("aux".to_string(), Json::Num(e.aux as f64));
+            m.insert("args".to_string(), Json::Obj(args));
+        }
+        EventPhase::Instant => {
+            m.insert("ph".to_string(), Json::Str("i".to_string()));
+            m.insert("s".to_string(), Json::Str("t".to_string()));
+            let mut args = BTreeMap::new();
+            args.insert("aux".to_string(), Json::Num(e.aux as f64));
+            m.insert("args".to_string(), Json::Obj(args));
+        }
+        EventPhase::Counter => {
+            m.insert("ph".to_string(), Json::Str("C".to_string()));
+            let mut args = BTreeMap::new();
+            args.insert("bytes".to_string(), Json::Num(e.aux as f64));
+            m.insert("args".to_string(), Json::Obj(args));
+        }
+    }
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(
+        kind: SpanKind,
+        ph: EventPhase,
+        rank: u32,
+        t0: u64,
+        t1: u64,
+        aux: u64,
+    ) -> Event {
+        Event { kind, ph, t0_ns: t0, t1_ns: t1, rank, lane: LANE_MAIN, aux }
+    }
+
+    fn sample() -> Trace {
+        Trace {
+            events: vec![
+                ev(SpanKind::Compress, EventPhase::Span, 0, 1_000, 5_000, 3),
+                ev(SpanKind::WireSend, EventPhase::Span, 1, 2_000, 4_000, 64),
+                ev(
+                    SpanKind::ChaosFault,
+                    EventPhase::Instant,
+                    1,
+                    2_500,
+                    2_500,
+                    1,
+                ),
+                ev(
+                    SpanKind::WireBytes,
+                    EventPhase::Counter,
+                    DRIVER_RANK,
+                    6_000,
+                    6_000,
+                    4096,
+                ),
+            ],
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip_is_exact() {
+        let tr = sample();
+        let bytes = tr.to_binary();
+        let back = Trace::from_binary(&bytes).unwrap();
+        assert_eq!(back, tr);
+        // Truncation and corruption are detected, not misparsed.
+        assert!(Trace::from_binary(&bytes[..bytes.len() - 1]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Trace::from_binary(&bad).is_err());
+        let mut bad_kind = bytes;
+        bad_kind[16] = 250;
+        assert!(Trace::from_binary(&bad_kind).is_err());
+    }
+
+    #[test]
+    fn chrome_json_parses_and_maps_phases() {
+        let tr = sample();
+        let j = Json::parse(&tr.to_chrome_string()).unwrap();
+        let evs = j.arr_of("traceEvents").unwrap();
+        // 3 tracks × 2 metadata records + 4 events.
+        assert_eq!(evs.len(), 10);
+        let span = evs
+            .iter()
+            .find(|e| e.str_of("name") == Ok("Compress"))
+            .unwrap();
+        assert_eq!(span.str_of("ph").unwrap(), "X");
+        assert_eq!(span.f64_of("ts").unwrap(), 1.0);
+        assert_eq!(span.f64_of("dur").unwrap(), 4.0);
+        assert_eq!(span.f64_of("pid").unwrap(), 0.0);
+        let inst = evs
+            .iter()
+            .find(|e| e.str_of("name") == Ok("ChaosFault"))
+            .unwrap();
+        assert_eq!(inst.str_of("ph").unwrap(), "i");
+        let ctr = evs
+            .iter()
+            .find(|e| e.str_of("name") == Ok("WireBytes"))
+            .unwrap();
+        assert_eq!(ctr.str_of("ph").unwrap(), "C");
+        assert_eq!(
+            ctr.req("args").unwrap().f64_of("bytes").unwrap(),
+            4096.0
+        );
+        // The driver rank renders as its own named process.
+        let meta = evs
+            .iter()
+            .find(|e| {
+                e.str_of("ph") == Ok("M")
+                    && e.str_of("name") == Ok("process_name")
+                    && e.req("args").unwrap().str_of("name") == Ok("driver")
+            })
+            .expect("driver process metadata");
+        assert_eq!(meta.f64_of("pid").unwrap(), DRIVER_PID as f64);
+    }
+
+    #[test]
+    fn queries_cover_kinds_ranks_totals() {
+        let tr = sample();
+        assert_eq!(tr.len(), 4);
+        assert!(tr.kinds_present().contains(&SpanKind::WireSend));
+        assert_eq!(tr.ranks().len(), 3);
+        assert_eq!(
+            tr.ranks_with(SpanKind::WireSend),
+            [1u32].into_iter().collect()
+        );
+        assert_eq!(tr.total_ns(SpanKind::Compress), 4_000);
+        assert_eq!(tr.spans(SpanKind::Compress).count(), 1);
+        assert_eq!(tr.instants(SpanKind::ChaosFault).count(), 1);
+        let table = tr.summary_table().render();
+        assert!(table.contains("Compress"));
+        assert!(table.contains("WireBytes"));
+    }
+
+    #[test]
+    fn empty_trace_renders_and_roundtrips() {
+        let tr = Trace::default();
+        assert!(tr.is_empty());
+        let back = Trace::from_binary(&tr.to_binary()).unwrap();
+        assert!(back.is_empty());
+        let j = Json::parse(&tr.to_chrome_string()).unwrap();
+        assert_eq!(j.arr_of("traceEvents").unwrap().len(), 0);
+    }
+}

@@ -46,11 +46,20 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+use crate::trace::{self, SpanKind};
 use crate::util::error::{Error, Result};
 use crate::util::prng::Rng;
 
 use super::frame::{self, PayloadKind, WirePhase};
 use super::{TcpOptions, Transport, TransportBackend, TransportError};
+
+/// [`SpanKind::ChaosFault`] instant `aux` payloads: which fault fired.
+pub const FAULT_AUX_DROP: u64 = 1;
+pub const FAULT_AUX_CORRUPT: u64 = 2;
+pub const FAULT_AUX_REORDER: u64 = 3;
+/// [`SpanKind::NackRetransmit`] instant `aux` payloads.
+pub const NACK_AUX_SENT: u64 = 1;
+pub const NACK_AUX_SERVED: u64 = 2;
 
 /// Bounded retransmit history per link (frames).  A collective step puts
 /// at most a handful of frames on each link, so 64 spans many steps.
@@ -301,23 +310,42 @@ pub struct RecoveryStats {
 
 impl RecoveryStats {
     /// Fieldwise accumulate (used to merge the chaos and reliable layers
-    /// and to aggregate across ranks).
+    /// and to aggregate across ranks).  Destructured exhaustively (no
+    /// `..`) so a field added to [`RecoveryStats`] is a compile error
+    /// here rather than a silently dropped counter.
     pub fn merge(&mut self, o: &RecoveryStats) {
-        self.frames_injected += o.frames_injected;
-        self.injected_drops += o.injected_drops;
-        self.injected_corruptions += o.injected_corruptions;
-        self.injected_reorders += o.injected_reorders;
-        self.injected_delays += o.injected_delays;
-        self.forced_clean += o.forced_clean;
-        self.checksum_failures += o.checksum_failures;
-        self.gaps_detected += o.gaps_detected;
-        self.nacks_sent += o.nacks_sent;
-        self.retransmits_served += o.retransmits_served;
-        self.retransmit_bytes += o.retransmit_bytes;
-        self.duplicates_discarded += o.duplicates_discarded;
-        self.control_frames += o.control_frames;
-        self.control_bytes += o.control_bytes;
-        self.nack_misses += o.nack_misses;
+        let RecoveryStats {
+            frames_injected,
+            injected_drops,
+            injected_corruptions,
+            injected_reorders,
+            injected_delays,
+            forced_clean,
+            checksum_failures,
+            gaps_detected,
+            nacks_sent,
+            retransmits_served,
+            retransmit_bytes,
+            duplicates_discarded,
+            control_frames,
+            control_bytes,
+            nack_misses,
+        } = *o;
+        self.frames_injected += frames_injected;
+        self.injected_drops += injected_drops;
+        self.injected_corruptions += injected_corruptions;
+        self.injected_reorders += injected_reorders;
+        self.injected_delays += injected_delays;
+        self.forced_clean += forced_clean;
+        self.checksum_failures += checksum_failures;
+        self.gaps_detected += gaps_detected;
+        self.nacks_sent += nacks_sent;
+        self.retransmits_served += retransmits_served;
+        self.retransmit_bytes += retransmit_bytes;
+        self.duplicates_discarded += duplicates_discarded;
+        self.control_frames += control_frames;
+        self.control_bytes += control_bytes;
+        self.nack_misses += nack_misses;
     }
 
     /// Total faults the schedule injected.
@@ -445,11 +473,13 @@ impl<T: Transport> Transport for ChaosTransport<T> {
             Fault::Drop => {
                 self.consecutive[to] += 1;
                 self.stats.injected_drops += 1;
+                trace::instant(SpanKind::ChaosFault, FAULT_AUX_DROP);
                 Ok(())
             }
             Fault::Corrupt => {
                 self.consecutive[to] += 1;
                 self.stats.injected_corruptions += 1;
+                trace::instant(SpanKind::ChaosFault, FAULT_AUX_CORRUPT);
                 let mut c = bytes.to_vec();
                 corrupt_framing_safe(&mut c, &mut rng);
                 self.inner.send(to, &c)?;
@@ -459,6 +489,7 @@ impl<T: Transport> Transport for ChaosTransport<T> {
                 self.consecutive[to] = 0;
                 if self.held[to].is_none() {
                     self.stats.injected_reorders += 1;
+                    trace::instant(SpanKind::ChaosFault, FAULT_AUX_REORDER);
                     self.held[to] = Some(bytes.to_vec());
                     Ok(())
                 } else {
@@ -600,6 +631,7 @@ impl<T: Transport> ReliableTransport<T> {
         self.stats.nacks_sent += 1;
         self.stats.control_frames += 1;
         self.stats.control_bytes += f.len() as u64;
+        trace::instant(SpanKind::NackRetransmit, NACK_AUX_SENT);
         self.inner.send(to, &f)
     }
 
@@ -624,6 +656,7 @@ impl<T: Transport> ReliableTransport<T> {
         for b in replay {
             self.stats.retransmits_served += 1;
             self.stats.retransmit_bytes += b.len() as u64;
+            trace::instant(SpanKind::NackRetransmit, NACK_AUX_SERVED);
             self.inner.send(to, &b)?;
         }
         Ok(())

@@ -54,6 +54,7 @@ use crate::optim::reshard::reshard_ec;
 use crate::optim::zeroone_adam::{ZeroOneAdam, ZeroOneAdamConfig};
 use crate::optim::{DistOptimizer, Phase};
 use crate::tensor::chunk::ChunkLayout;
+use crate::trace::{self, SpanKind};
 use crate::util::error::{Error, Result};
 use crate::util::par::default_threads;
 use crate::util::prng::Rng;
@@ -383,6 +384,7 @@ fn write_checkpoint(
     opts: &ElasticOptions,
     tag: u32,
 ) -> Result<()> {
+    let _sp = trace::span_aux(SpanKind::CheckpointWrite, st.t as u64);
     let with_ec = st.phase == Phase::Compression;
     if m.rank != 0 {
         if with_ec {
@@ -484,6 +486,7 @@ pub fn run_elastic_worker(
     };
 
     for attempt in 0..opts.max_epochs {
+        let mut rdv_sp = trace::span(SpanKind::RendezvousEpoch);
         let (listener, mesh_addr) = rendezvous::bind_mesh_listener()?;
         let m = rendezvous::join(
             coordinator,
@@ -493,6 +496,9 @@ pub fn run_elastic_worker(
             opts.join_timeout,
         )?;
         let tcp_ep = rendezvous::connect_mesh(&m, &listener, &opts.tcp)?;
+        trace::set_rank(m.rank);
+        rdv_sp.set_aux(m.epoch as u64);
+        drop(rdv_sp);
         let mut ep: Box<dyn Transport> = match &opts.chaos {
             Some(sc) => Box::new(ReliableTransport::new(
                 ChaosTransport::new(tcp_ep, sc.clone()),
@@ -511,6 +517,7 @@ pub fn run_elastic_worker(
             }
             st
         } else {
+            let _sp = trace::span_aux(SpanKind::CheckpointRestore, m.epoch as u64);
             let ck = Checkpoint::load(latest_path(&opts.ckpt_dir))?;
             let st = restore_state(ck, &m, opts)?;
             report.resume_step = Some(st.t as u64);
@@ -552,6 +559,7 @@ pub fn run_elastic_worker(
                 return Ok(report);
             }
             Err(e) if is_peer_failure(&e) && attempt + 1 < opts.max_epochs => {
+                trace::instant(SpanKind::PeerFailure, m.epoch as u64);
                 failed_at = Some(Instant::now());
                 if report.resume_step.is_none() {
                     report.pre_fail_step_ms = mean_ms(&step_ms);
@@ -607,6 +615,7 @@ fn run_epoch(
             *straggle_at = None;
             std::thread::sleep(opts.straggle_for);
         }
+        let _step_sp = trace::span_aux(SpanKind::Step, t as u64);
         let grad = synthetic_grad(opts.seed, t, rank, &st.params, opts.noise);
         let lr = lr_for(opts.mode, t, opts.lr_warmup, opts.lr);
         // Two collectives can run within one training step (0/1 Adam's
@@ -630,6 +639,8 @@ fn run_epoch(
                 if VarianceSyncSchedule::new(var_sync_base).is_sync(t) {
                     // Full-precision variance resync of the raw
                     // gradient, exactly `ZeroOneAdam::variance_resync`.
+                    let _sp =
+                        trace::span_aux(SpanKind::VarianceResync, t as u64);
                     plain_average_rank(
                         tag1,
                         n,
@@ -663,16 +674,19 @@ fn run_epoch(
                 &mut avg,
                 &mut rank_stats,
             )?;
-            adam_step_auto(
-                &backend,
-                threads,
-                hyper,
-                &mut st.params,
-                &mut st.m,
-                &mut st.v,
-                &avg,
-                lr,
-            );
+            {
+                let _sp = trace::span(SpanKind::AdamKernel);
+                adam_step_auto(
+                    &backend,
+                    threads,
+                    hyper,
+                    &mut st.params,
+                    &mut st.m,
+                    &mut st.v,
+                    &avg,
+                    lr,
+                );
+            }
             comm.merge(ring_stats(dim, n));
         } else {
             // Error-compensated 1-bit momentum exchange + frozen-
@@ -702,15 +716,18 @@ fn run_epoch(
                 &mut rank_stats,
             )?;
             st.m.copy_from_slice(&avg);
-            precond_step_auto(
-                &backend,
-                threads,
-                hyper.eps,
-                &mut st.params,
-                &st.m,
-                &st.v,
-                lr,
-            );
+            {
+                let _sp = trace::span(SpanKind::AdamKernel);
+                precond_step_auto(
+                    &backend,
+                    threads,
+                    hyper.eps,
+                    &mut st.params,
+                    &st.m,
+                    &st.v,
+                    lr,
+                );
+            }
             comm.merge(closed_form_stats(
                 CompressionKind::OneBit,
                 &layout,

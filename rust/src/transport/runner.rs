@@ -57,6 +57,7 @@ use crate::kernels::reduce::{
     tree_average_into, tree_scaled_average_into, tree_sum_into, REDUCE_BLK,
 };
 use crate::tensor::chunk::ChunkLayout;
+use crate::trace::{self, SpanKind};
 use crate::util::error::Result;
 
 use super::frame::{
@@ -91,6 +92,24 @@ impl TransportStats {
         self.gross_alltoall_bytes
             + self.gross_allgather_bytes
             + self.gross_intra_bytes
+    }
+
+    /// Fieldwise accumulate across steps or runs.  Destructured
+    /// exhaustively (no `..`) so a field added to [`TransportStats`] is
+    /// a compile error here rather than a silently dropped byte count.
+    pub fn merge(&mut self, other: &TransportStats) {
+        let TransportStats {
+            comm,
+            gross_alltoall_bytes,
+            gross_allgather_bytes,
+            gross_intra_bytes,
+            frames_sent,
+        } = *other;
+        self.comm.merge(comm);
+        self.gross_alltoall_bytes += gross_alltoall_bytes;
+        self.gross_allgather_bytes += gross_allgather_bytes;
+        self.gross_intra_bytes += gross_intra_bytes;
+        self.frames_sent += frames_sent;
     }
 }
 
@@ -253,9 +272,12 @@ pub(crate) fn exchange_compressed(
     // ---- Phase 1: EC-compress the full tensor, scatter per-chunk frames.
     let mut comp = vec![0.0f32; len];
     let mut quant = vec![0.0f32; len];
-    let scale =
-        compress_kind(ctx.kind, input, worker_err, &mut comp, &mut quant);
+    let scale = {
+        let _sp = trace::span_aux(SpanKind::Compress, len as u64);
+        compress_kind(ctx.kind, input, worker_err, &mut comp, &mut quant)
+    };
     let mut own_frame: Option<Vec<u8>> = None;
+    let mut send_sp = trace::span(SpanKind::WireSend);
     for (j, &peer) in ctx.peers.iter().enumerate() {
         let r = ctx.layout.range(j);
         let payload = encode_chunk(ctx.kind, &quant[r], scale);
@@ -275,32 +297,46 @@ pub(crate) fn exchange_compressed(
             ep.send(peer, &fbytes)?;
         }
     }
+    send_sp.set_aux(st.gross_a2a as u64);
+    drop(send_sp);
 
     // ---- Phase 2: serve the owned chunk — decode each worker's frame in
     // rank order, average, EC-recompress with the server error.
     let clen = ctx.layout.size(me);
     let mut avg = vec![0.0f32; clen];
     let mut dec = vec![0.0f32; clen];
-    for (i, &peer) in ctx.peers.iter().enumerate() {
-        let bytes = if i == me {
-            own_frame.take().expect("own phase-1 frame")
-        } else {
-            recv_frame(ep, peer)?
-        };
-        let f = decode_frame(&bytes)?;
-        decode_chunk(ctx.kind, &f, WirePhase::AllToAll, ctx.step, &mut dec)?;
-        for k in 0..clen {
-            avg[k] += dec[k];
+    {
+        let _sp = trace::span_aux(SpanKind::PackVote, clen as u64);
+        for (i, &peer) in ctx.peers.iter().enumerate() {
+            let bytes = if i == me {
+                own_frame.take().expect("own phase-1 frame")
+            } else {
+                let _rv = trace::span_aux(SpanKind::WireRecv, peer as u64);
+                recv_frame(ep, peer)?
+            };
+            let f = decode_frame(&bytes)?;
+            decode_chunk(
+                ctx.kind,
+                &f,
+                WirePhase::AllToAll,
+                ctx.step,
+                &mut dec,
+            )?;
+            for k in 0..clen {
+                avg[k] += dec[k];
+            }
         }
-    }
-    let inv = 1.0 / n_p as f32;
-    for a in avg.iter_mut() {
-        *a *= inv;
+        let inv = 1.0 / n_p as f32;
+        for a in avg.iter_mut() {
+            *a *= inv;
+        }
     }
     let mut scomp = vec![0.0f32; clen];
     let mut squant = vec![0.0f32; clen];
-    let sscale =
-        compress_kind(ctx.kind, &avg, server_err, &mut scomp, &mut squant);
+    let sscale = {
+        let _sp = trace::span_aux(SpanKind::ServerReduce, clen as u64);
+        compress_kind(ctx.kind, &avg, server_err, &mut scomp, &mut squant)
+    };
     let spayload = encode_chunk(ctx.kind, &squant, sscale);
     // Unique-payload convention: the gathered chunk is ledgered once (a
     // ring gather sends it once); the mesh duplication shows up only in
@@ -313,6 +349,7 @@ pub(crate) fn exchange_compressed(
         ctx.step,
         &spayload,
     );
+    let mut send_sp = trace::span(SpanKind::WireSend);
     for (j, &peer) in ctx.peers.iter().enumerate() {
         if j != me {
             st.gross_ag += sbytes.len();
@@ -320,12 +357,16 @@ pub(crate) fn exchange_compressed(
             ep.send(peer, &sbytes)?;
         }
     }
+    send_sp.set_aux(st.gross_ag as u64);
+    drop(send_sp);
 
     // ---- Phase 3: reconstruct the full tensor from the gathered chunks.
+    let _sp = trace::span_aux(SpanKind::Broadcast, len as u64);
     for (j, &peer) in ctx.peers.iter().enumerate() {
         let bytes = if j == me {
             sbytes.clone()
         } else {
+            let _rv = trace::span_aux(SpanKind::WireRecv, peer as u64);
             recv_frame(ep, peer)?
         };
         let f = decode_frame(&bytes)?;
@@ -363,8 +404,14 @@ fn member_rank(
     );
     st.gross_intra += fbytes.len();
     st.frames += 1;
-    ep.send(leader, &fbytes)?;
-    let bytes = recv_frame(ep, leader)?;
+    {
+        let _sp = trace::span_aux(SpanKind::WireSend, fbytes.len() as u64);
+        ep.send(leader, &fbytes)?;
+    }
+    let bytes = {
+        let _sp = trace::span_aux(SpanKind::WireRecv, leader as u64);
+        recv_frame(ep, leader)?
+    };
     let f = decode_frame(&bytes)?;
     decode_chunk(CompressionKind::None, &f, WirePhase::Broadcast, step, out)
 }
@@ -852,6 +899,7 @@ impl TransportCollective {
                 let flat_peers = &flat_peers;
                 let leader_ranks = &leader_ranks;
                 scope.spawn(move || {
+                    trace::set_rank(rank);
                     slot.stats = RankStats::default();
                     let node = rank / group;
                     let leader = groups[node].start;
@@ -946,6 +994,7 @@ impl TransportCollective {
             for (rank, slot) in self.ranks.iter_mut().enumerate() {
                 let input = &inputs[rank];
                 scope.spawn(move || {
+                    trace::set_rank(rank);
                     slot.stats = RankStats::default();
                     let res = plain_average_rank(
                         step,

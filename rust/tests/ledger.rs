@@ -10,11 +10,15 @@
 
 use onebit_adam::comm::overlap::{OverlapConfig, OverlapPipeline};
 use onebit_adam::comm::plain::allreduce_average;
-use onebit_adam::comm::{chunk_wire_volume, Collective, CommTopology};
+use onebit_adam::comm::{
+    chunk_wire_volume, Collective, CommStats, CommTopology,
+};
 use onebit_adam::compress::CompressionKind;
 use onebit_adam::optim::{DistOptimizer, LocalSgd};
 use onebit_adam::tensor::chunk::ChunkLayout;
-use onebit_adam::transport::{TransportBackend, TransportCollective};
+use onebit_adam::transport::{
+    RecoveryStats, TransportBackend, TransportCollective, TransportStats,
+};
 use onebit_adam::util::prng::Rng;
 
 /// Per-GPU payload of an fp32 ring allreduce — the plain engines'
@@ -250,5 +254,107 @@ fn local_sgd_ledger_matches_the_tau_round_model() {
                 );
             }
         }
+    }
+}
+
+/// A randomized `RecoveryStats` with every field nonzero (so a merge
+/// impl that drops a field cannot pass by luck).
+fn rand_recovery(rng: &mut Rng) -> RecoveryStats {
+    RecoveryStats {
+        frames_injected: 1 + rng.below(1000),
+        injected_drops: 1 + rng.below(1000),
+        injected_corruptions: 1 + rng.below(1000),
+        injected_reorders: 1 + rng.below(1000),
+        injected_delays: 1 + rng.below(1000),
+        forced_clean: 1 + rng.below(1000),
+        checksum_failures: 1 + rng.below(1000),
+        gaps_detected: 1 + rng.below(1000),
+        nacks_sent: 1 + rng.below(1000),
+        retransmits_served: 1 + rng.below(1000),
+        retransmit_bytes: 1 + rng.below(1000),
+        duplicates_discarded: 1 + rng.below(1000),
+        control_frames: 1 + rng.below(1000),
+        control_bytes: 1 + rng.below(1000),
+        nack_misses: 1 + rng.below(1000),
+    }
+}
+
+fn rand_comm(rng: &mut Rng) -> CommStats {
+    CommStats {
+        alltoall_bytes_per_gpu: 1 + rng.below(1000) as usize,
+        allgather_bytes_per_gpu: 1 + rng.below(1000) as usize,
+        uncompressed_bytes: 1 + rng.below(1000) as usize,
+    }
+}
+
+fn rand_transport(rng: &mut Rng) -> TransportStats {
+    TransportStats {
+        comm: rand_comm(rng),
+        gross_alltoall_bytes: 1 + rng.below(1000) as usize,
+        gross_allgather_bytes: 1 + rng.below(1000) as usize,
+        gross_intra_bytes: 1 + rng.below(1000) as usize,
+        frames_sent: 1 + rng.below(1000) as usize,
+    }
+}
+
+/// Merge must be exactly fieldwise addition for every ledger — checked
+/// over randomized stats with all fields nonzero, both orders, plus the
+/// identity (merging a default changes nothing).
+#[test]
+fn ledger_merges_are_fieldwise_addition_over_randomized_stats() {
+    let mut rng = Rng::new(0x1ed6e5);
+    for _ in 0..25 {
+        // CommStats.
+        let (a, b) = (rand_comm(&mut rng), rand_comm(&mut rng));
+        let mut ab = a;
+        ab.merge(b);
+        let mut ba = b;
+        ba.merge(a);
+        assert_eq!(ab, ba, "CommStats merge must commute");
+        assert_eq!(
+            ab.total_per_gpu(),
+            a.total_per_gpu() + b.total_per_gpu()
+        );
+        assert_eq!(
+            ab.uncompressed_bytes,
+            a.uncompressed_bytes + b.uncompressed_bytes
+        );
+        let mut id = a;
+        id.merge(CommStats::default());
+        assert_eq!(id, a, "merging a default CommStats is the identity");
+
+        // TransportStats.
+        let (a, b) = (rand_transport(&mut rng), rand_transport(&mut rng));
+        let mut ab = a;
+        ab.merge(&b);
+        let mut ba = b;
+        ba.merge(&a);
+        assert_eq!(ab, ba, "TransportStats merge must commute");
+        assert_eq!(ab.gross_total(), a.gross_total() + b.gross_total());
+        assert_eq!(ab.frames_sent, a.frames_sent + b.frames_sent);
+        assert_eq!(
+            ab.comm.total_per_gpu(),
+            a.comm.total_per_gpu() + b.comm.total_per_gpu()
+        );
+        let mut id = a;
+        id.merge(&TransportStats::default());
+        assert_eq!(id, a, "merging a default TransportStats is the identity");
+
+        // RecoveryStats.
+        let (a, b) = (rand_recovery(&mut rng), rand_recovery(&mut rng));
+        let mut ab = a;
+        ab.merge(&b);
+        let mut ba = b;
+        ba.merge(&a);
+        assert_eq!(ab, ba, "RecoveryStats merge must commute");
+        assert_eq!(
+            ab.injected_faults(),
+            a.injected_faults() + b.injected_faults()
+        );
+        assert_eq!(ab.nack_misses, a.nack_misses + b.nack_misses);
+        assert_eq!(ab.control_bytes, a.control_bytes + b.control_bytes);
+        let mut id = a;
+        id.merge(&RecoveryStats::default());
+        assert_eq!(id, a, "merging a default RecoveryStats is the identity");
     }
 }

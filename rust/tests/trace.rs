@@ -1,0 +1,386 @@
+//! Trace-subsystem integration tier.
+//!
+//! These tests live in their own binary (not `src/trace/` unit tests)
+//! because the recording gate is **process-global**: flipping it inside
+//! the lib test binary would race the comm/optim suites'
+//! zero-allocation assertions running on sibling harness threads.
+//! Here the binary owns the gate, installs its own counting global
+//! allocator (the lib's is `cfg(test)`-only and absent in integration
+//! builds), and serializes every recording test behind one local mutex.
+
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use onebit_adam::comm::overlap::OverlapConfig;
+use onebit_adam::compress::CompressionKind;
+use onebit_adam::netsim::collectives::overlapped_step_time;
+use onebit_adam::netsim::epoch_change_window_bound;
+use onebit_adam::optim::onebit_adam::{OneBitAdam, OneBitAdamConfig};
+use onebit_adam::optim::DistOptimizer;
+use onebit_adam::trace::{self, analysis, SpanKind, Trace};
+use onebit_adam::transport::chaos::{
+    FAULT_AUX_CORRUPT, FAULT_AUX_DROP, NACK_AUX_SENT, NACK_AUX_SERVED,
+};
+use onebit_adam::transport::elastic::{
+    run_elastic_worker, ElasticMode, ElasticOptions, ElasticReport,
+};
+use onebit_adam::transport::{
+    ChaosScenario, Coordinator, RendezvousOptions, TcpOptions,
+    TransportBackend, TransportCollective,
+};
+use onebit_adam::util::alloc_track::{
+    current_thread_allocs, CountingAllocator,
+};
+use onebit_adam::util::error::Error;
+use onebit_adam::util::json::Json;
+use onebit_adam::util::prng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// One recording test at a time: the gate, the collector, and the
+/// overflow counter are process-global.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    let g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    trace::clear();
+    g
+}
+
+fn stop_and_take() -> Trace {
+    trace::disable();
+    trace::take()
+}
+
+#[test]
+fn ring_overwrites_oldest_and_drains_on_thread_exit() {
+    let _g = gate();
+    trace::enable_with_capacity(16);
+    // A fresh thread gets a fresh ring sized by the current capacity
+    // (the harness may reuse this test's own thread across tests), and
+    // its ring must drain into the collector when the thread exits.
+    std::thread::spawn(|| {
+        trace::set_rank(5);
+        for i in 0..40u64 {
+            trace::instant(SpanKind::ChaosFault, i);
+        }
+    })
+    .join()
+    .unwrap();
+    let tr = stop_and_take();
+    let auxes: Vec<u64> =
+        tr.instants(SpanKind::ChaosFault).map(|e| e.aux).collect();
+    // 40 recorded into a 16-slot ring: survivors are the newest 16 in
+    // record order, and the 24 overwrites are accounted.
+    assert_eq!(auxes, (24..40).collect::<Vec<u64>>());
+    assert_eq!(trace::dropped(), 24);
+    assert_eq!(tr.ranks_with(SpanKind::ChaosFault), [5].into());
+    trace::clear();
+}
+
+#[test]
+fn recording_hot_path_does_not_allocate() {
+    let _g = gate();
+    trace::enable_with_capacity(8192);
+    // Pay the ring's one-time reserve (and the epoch init) before the
+    // measured region.
+    trace::instant(SpanKind::ChaosFault, 0);
+    let before = current_thread_allocs();
+    for i in 0..2000u64 {
+        let mut sp = trace::span_aux(SpanKind::Compress, i);
+        sp.set_aux(i + 1);
+        drop(sp);
+        trace::instant(SpanKind::NackRetransmit, i);
+        trace::counter(SpanKind::WireBytes, i);
+    }
+    let after = current_thread_allocs();
+    assert_eq!(after, before, "hot-path recording allocated");
+    let tr = stop_and_take();
+    assert_eq!(tr.spans(SpanKind::Compress).count(), 2000);
+    trace::clear();
+}
+
+/// The flagship acceptance run: 8 ranks, transported compressed
+/// collectives, overlapped bucket pipeline.  One capture must cover
+/// every wire-path span kind with a per-rank track, reconcile the
+/// trace-derived overlap bubble against the netsim recurrence, and
+/// round-trip through both export formats.
+#[test]
+fn transported_overlapped_run_covers_kinds_and_reconciles_overlap() {
+    let _g = gate();
+    trace::enable_with_capacity(1 << 15);
+    let workers = 8;
+    let dim = 2048;
+    let steps = 4;
+    let mut opt = OneBitAdam::new(
+        workers,
+        Rng::new(11).normal_vec(dim, 0.05),
+        OneBitAdamConfig {
+            warmup_steps: Some(1),
+            transport: Some(TransportBackend::InMemory),
+            overlap: Some(OverlapConfig::default()),
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(12);
+    for _ in 0..steps {
+        let grads: Vec<Vec<f32>> =
+            (0..workers).map(|_| rng.normal_vec(dim, 0.1)).collect();
+        opt.step(&grads, 1e-3);
+    }
+    let tr = stop_and_take();
+
+    // Kind coverage: every stage of the compressed exchange, the
+    // pipeline scheduler, and the optimizer kernel left spans.
+    let kinds = tr.kinds_present();
+    for kind in [
+        SpanKind::Compress,
+        SpanKind::PackVote,
+        SpanKind::WireSend,
+        SpanKind::WireRecv,
+        SpanKind::ServerReduce,
+        SpanKind::Broadcast,
+        SpanKind::AdamKernel,
+        SpanKind::Step,
+        SpanKind::BucketCompute,
+        SpanKind::BucketComm,
+        SpanKind::WireBytes,
+    ] {
+        assert!(kinds.contains(&kind), "no {} events", kind.name());
+    }
+    // Per-rank tracks: all 8 transport ranks recorded the wire stages.
+    let all_ranks: std::collections::BTreeSet<u32> = (0..8).collect();
+    for kind in [SpanKind::WireSend, SpanKind::WireRecv, SpanKind::Compress]
+    {
+        assert_eq!(
+            tr.ranks_with(kind),
+            all_ranks,
+            "missing rank tracks for {}",
+            kind.name()
+        );
+    }
+
+    // Overlap reconciliation: the driver's bucket spans, fed through
+    // the same recurrence netsim uses, must bound the measured window.
+    let reports = analysis::overlap_report(&tr, trace::DRIVER_RANK);
+    // warmup step 0 has no buckets; compression steps 1..4 do.
+    assert_eq!(reports.len(), steps - 1, "one report per pipelined step");
+    for r in &reports {
+        assert_eq!(r.compute_ns.len(), 4, "default bucket count");
+        let compute: Vec<f64> =
+            r.compute_ns.iter().map(|&x| x as f64).collect();
+        let comm: Vec<f64> = r.comm_ns.iter().map(|&x| x as f64).collect();
+        let model = overlapped_step_time(&compute, &comm);
+        assert_eq!(model, r.modeled_ns(), "report must use the netsim model");
+        assert!(
+            r.measured_ns as f64 >= model * 0.999,
+            "measured window {} ns beat the recurrence bound {} ns",
+            r.measured_ns,
+            model
+        );
+        for frac in [
+            r.bubble_fraction(),
+            r.modeled_bubble_fraction(),
+            r.overlap_efficiency(),
+        ] {
+            assert!((0.0..=1.0).contains(&frac), "fraction {frac}");
+        }
+    }
+    assert!(!analysis::overlap_table(&reports).render().is_empty());
+
+    // Straggler attribution: WireRecv waits attribute to a real peer.
+    let stragglers = analysis::straggler_report(&tr);
+    let worst = stragglers.straggler().expect("recv waits were recorded");
+    assert!(worst < workers as u32, "straggler {worst} is not a rank");
+
+    // Chrome export parses and keeps one span per instrumented stage;
+    // the binary dump round-trips exactly.
+    let chrome = Json::parse(&tr.to_chrome_string()).unwrap();
+    let events = chrome.arr_of("traceEvents").unwrap();
+    assert!(events.len() >= tr.len());
+    for name in ["Compress", "WireSend", "BucketComm", "Step"] {
+        assert!(
+            events.iter().any(|e| {
+                e.str_of("name").map(|n| n == name).unwrap_or(false)
+            }),
+            "chrome JSON lost {name}"
+        );
+    }
+    assert_eq!(Trace::from_binary(&tr.to_binary()).unwrap(), tr);
+    trace::clear();
+}
+
+#[test]
+fn chaos_faults_and_nack_recovery_leave_instant_markers() {
+    let _g = gate();
+    trace::enable_with_capacity(1 << 15);
+    let scenario = ChaosScenario::acceptance(0xC0FFEE);
+    let workers = 4;
+    let len = 777;
+    let tcp = TcpOptions {
+        attempt_timeout: Duration::from_millis(250),
+        recv_timeout: Duration::from_secs(20),
+        ..TcpOptions::default()
+    };
+    let mut car = TransportCollective::with_chaos(
+        TransportBackend::InMemory,
+        workers,
+        len,
+        CompressionKind::OneBit,
+        1,
+        &tcp,
+        &scenario,
+    )
+    .unwrap();
+    let mut out = vec![0.0f32; len];
+    let base = Rng::new(41_000);
+    for step in 0..3u64 {
+        let inputs: Vec<Vec<f32>> = (0..workers)
+            .map(|w| {
+                base.fork(step * 100 + w as u64).normal_vec(len, 1.0)
+            })
+            .collect();
+        car.allreduce(&inputs, &mut out);
+    }
+    let rec = car.recovery_stats();
+    let tr = stop_and_take();
+
+    // Every injected drop/corruption left an instant at its injection
+    // site, tagged with the fault class.
+    let count = |aux: u64| {
+        tr.instants(SpanKind::ChaosFault)
+            .filter(|e| e.aux == aux)
+            .count() as u64
+    };
+    assert!(rec.injected_drops > 0, "scenario injected nothing: {rec:?}");
+    assert_eq!(count(FAULT_AUX_DROP), rec.injected_drops);
+    assert_eq!(count(FAULT_AUX_CORRUPT), rec.injected_corruptions);
+    // Recovery markers: drops force NACK probes and replayed frames.
+    let nack = |aux: u64| {
+        tr.instants(SpanKind::NackRetransmit)
+            .filter(|e| e.aux == aux)
+            .count() as u64
+    };
+    assert!(rec.retransmits_served > 0, "no repair work: {rec:?}");
+    assert!(nack(NACK_AUX_SENT) > 0, "no NACK-sent markers");
+    assert_eq!(nack(NACK_AUX_SERVED), rec.retransmits_served);
+    trace::clear();
+}
+
+// ---- elastic recovery timeline ---------------------------------------------
+
+const DIM: usize = 96;
+const STEPS: usize = 10;
+const RECV_TIMEOUT: Duration = Duration::from_millis(1200);
+const WINDOW: Duration = Duration::from_millis(400);
+const STRAGGLE: Duration = Duration::from_millis(3000);
+
+fn test_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("obadam_trace_test_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn base_opts(mode: ElasticMode, dir: &Path) -> ElasticOptions {
+    let mut o = ElasticOptions::new(mode, DIM, STEPS, dir.join("ckpt"));
+    o.ckpt_every = 2;
+    o.noise = 0.05;
+    o.tcp.recv_timeout = RECV_TIMEOUT;
+    o.tcp.attempt_timeout = Duration::from_millis(60);
+    o.join_timeout = Duration::from_secs(10);
+    o
+}
+
+fn launch(
+    coord: SocketAddr,
+    workers: Vec<ElasticOptions>,
+) -> Vec<Result<ElasticReport, Error>> {
+    let handles: Vec<_> = workers
+        .into_iter()
+        .map(|o| std::thread::spawn(move || run_elastic_worker(coord, &o)))
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+}
+
+/// Failure → rendezvous → restore timeline: the survivors' measured
+/// recovery windows, read straight off the trace, must sit under the
+/// netsim closed-form epoch-change bound.
+#[test]
+fn elastic_recovery_window_reconciles_with_the_netsim_bound() {
+    let _g = gate();
+    trace::enable_with_capacity(1 << 14);
+    let dir = test_dir("recovery");
+    let coord = Coordinator::spawn(
+        "127.0.0.1:0",
+        RendezvousOptions {
+            world: 3,
+            min_world: 2,
+            window: WINDOW,
+            join_timeout: Duration::from_secs(10),
+        },
+    )
+    .expect("coordinator");
+    let opts = base_opts(ElasticMode::OneBit { warmup_steps: 3 }, &dir);
+    let mut workers = Vec::new();
+    for id in 0..3usize {
+        let mut w = opts.clone();
+        if id == 2 {
+            // The victim is the highest rank, so the survivors keep
+            // their ranks across the M−1 re-formation and the per-rank
+            // timeline in the trace stays contiguous.
+            w.straggle_at_step = Some(5);
+            w.straggle_for = STRAGGLE;
+            w.max_epochs = 1;
+        } else {
+            w.max_epochs = 3;
+        }
+        workers.push(w);
+    }
+    let mut results = launch(coord.addr(), workers);
+    let victim = results.pop().unwrap();
+    assert!(victim.is_err(), "the straggler must not survive");
+    for r in &results {
+        assert_eq!(r.as_ref().expect("survivor failed").world, 2);
+    }
+    let tr = stop_and_take();
+
+    for kind in [
+        SpanKind::RendezvousEpoch,
+        SpanKind::CheckpointWrite,
+        SpanKind::CheckpointRestore,
+        SpanKind::Step,
+    ] {
+        assert!(
+            tr.kinds_present().contains(&kind),
+            "no {} events",
+            kind.name()
+        );
+    }
+    assert!(tr.instants(SpanKind::PeerFailure).count() >= 2);
+
+    let bound = epoch_change_window_bound(RECV_TIMEOUT, WINDOW, 3);
+    let reports = analysis::recovery_report(&tr);
+    // One timeline per survivor; the victim never re-rendezvoused, so
+    // it contributes no report.
+    assert_eq!(reports.len(), 2, "reports: {reports:?}");
+    for r in &reports {
+        assert!(r.rank < 2, "victim rank {} in the report", r.rank);
+        assert!(r.rendezvous_ns() > 0, "empty rendezvous: {r:?}");
+        assert!(r.total_ns() > 0);
+        assert!(
+            r.within_bound(bound),
+            "rank {} recovered in {:.1} ms, bound {:.1} ms",
+            r.rank,
+            r.total_ns() as f64 / 1e6,
+            bound.as_secs_f64() * 1e3,
+        );
+        assert!(!r.to_table().render().is_empty());
+    }
+    drop(coord);
+    let _ = std::fs::remove_dir_all(&dir);
+    trace::clear();
+}
