@@ -1,0 +1,469 @@
+//! A lightweight Rust lexer for the first-party lint passes.
+//!
+//! Deliberately not a parser: the passes match token *sequences*, which
+//! is enough to enforce the repo invariants while staying dependency-free
+//! (no `syn`, consistent with the crate's no-deps design).  The one job a
+//! regex scanner cannot do — and the reason this module exists — is
+//! opacity: the contents of string literals and the interiors of comments
+//! are single tokens here, so a seeded-violation fixture embedded in a
+//! test's raw string can never trip a pass over the real tree.
+//!
+//! Handles the Rust surface the codebase uses: line and (nested) block
+//! comments, string / raw-string / byte-string / char literals, lifetimes
+//! vs char literals, raw identifiers, numeric literals with suffixes, and
+//! the `..` rest-pattern punctuation (lexed as one token so the
+//! `ledger-exhaustive` pass can match it directly).  Non-ASCII bytes only
+//! occur inside comments and strings in this crate; outside those the
+//! lexer skips them byte-wise rather than splitting a code point.
+
+/// What a [`Token`] is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokenKind {
+    /// Identifier or keyword (`unsafe`, `Vec`, `r#raw`).
+    Ident,
+    /// Numeric literal, suffix included (`0.0f32`, `1_000`, `0x1F`).
+    Num,
+    /// String literal of any flavor, quotes included.
+    Str,
+    /// Char or byte-char literal.
+    CharLit,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// One punctuation token; `..` is a single two-char token.
+    Punct,
+    /// `// ...` to end of line (doc comments included).
+    LineComment,
+    /// `/* ... */`, nesting respected (doc comments included).
+    BlockComment,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    pub fn is_comment(&self) -> bool {
+        matches!(
+            self.kind,
+            TokenKind::LineComment | TokenKind::BlockComment
+        )
+    }
+
+    /// Comment text with the `//` / `/*` furniture stripped.
+    pub fn comment_body(&self) -> &str {
+        self.text
+            .trim_start_matches('/')
+            .trim_start_matches('*')
+            .trim_start_matches('!')
+            .trim()
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_continue(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lex `src` into a token stream.  Never fails: unterminated literals
+/// extend to end of input (the real compiler rejects them later; the
+/// linter still sees a usable stream).
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer { b: src.as_bytes(), src, i: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    src: &'a str,
+    i: usize,
+    line: u32,
+    out: Vec<Token>,
+}
+
+impl Lexer<'_> {
+    fn run(mut self) -> Vec<Token> {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b' ' | b'\t' | b'\r' => self.i += 1,
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
+                b'r' | b'b' if self.string_ish() => {}
+                c if is_ident_start(c) => self.ident(),
+                b'"' => self.plain_string(),
+                b'\'' => self.quote(),
+                c if c.is_ascii_digit() => self.number(),
+                b'.' if self.peek(1) == Some(b'.') => {
+                    self.push(TokenKind::Punct, self.i, self.i + 2);
+                    self.i += 2;
+                }
+                c if c.is_ascii() => {
+                    self.push(TokenKind::Punct, self.i, self.i + 1);
+                    self.i += 1;
+                }
+                // Non-ASCII outside strings/comments: skip the byte.
+                _ => self.i += 1,
+            }
+        }
+        self.out
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.b.get(self.i + ahead).copied()
+    }
+
+    fn push(&mut self, kind: TokenKind, start: usize, end: usize) {
+        let end = end.min(self.src.len());
+        self.out.push(Token {
+            kind,
+            text: self.src[start..end].to_string(),
+            line: self.line,
+        });
+    }
+
+    /// Count newlines in `[start, end)` into the line counter *after*
+    /// a multi-line token was pushed at its starting line.
+    fn advance_lines(&mut self, start: usize, end: usize) {
+        for &c in &self.b[start..end.min(self.b.len())] {
+            if c == b'\n' {
+                self.line += 1;
+            }
+        }
+    }
+
+    fn ident(&mut self) {
+        let start = self.i;
+        let mut e = self.i;
+        while self.b.get(e).copied().is_some_and(is_ident_continue) {
+            e += 1;
+        }
+        self.push(TokenKind::Ident, start, e);
+        self.i = e;
+    }
+
+    fn line_comment(&mut self) {
+        let start = self.i;
+        while self.i < self.b.len() && self.b[self.i] != b'\n' {
+            self.i += 1;
+        }
+        self.push(TokenKind::LineComment, start, self.i);
+    }
+
+    fn block_comment(&mut self) {
+        let start = self.i;
+        self.i += 2;
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            if self.b[self.i] == b'/' && self.peek(1) == Some(b'*') {
+                depth += 1;
+                self.i += 2;
+            } else if self.b[self.i] == b'*' && self.peek(1) == Some(b'/')
+            {
+                depth -= 1;
+                self.i += 2;
+            } else {
+                self.i += 1;
+            }
+        }
+        self.push(TokenKind::BlockComment, start, self.i);
+        self.advance_lines(start, self.i);
+    }
+
+    /// Try the `r"`/`r#"`/`b"`/`br"`/`b'`/`r#ident` forms rooted at an
+    /// `r` or `b`; returns false (consuming nothing) if this is just an
+    /// identifier starting with those letters.
+    fn string_ish(&mut self) -> bool {
+        let start = self.i;
+        let mut j = self.i;
+        if self.b[j] == b'b' && self.b.get(j + 1) == Some(&b'r') {
+            j += 2;
+        } else {
+            j += 1;
+        }
+        let raw = self.b[start] == b'r' || j - start == 2;
+        match self.b.get(j) {
+            Some(&b'#') if raw => {
+                let mut h = j;
+                while self.b.get(h) == Some(&b'#') {
+                    h += 1;
+                }
+                if self.b.get(h) == Some(&b'"') {
+                    self.raw_string(start, h - j);
+                    return true;
+                }
+                // `r#ident`: emit the raw identifier without `r#`.
+                if self.b[start] == b'r'
+                    && j == start + 1
+                    && h == j + 1
+                    && self.b.get(h).copied().is_some_and(is_ident_start)
+                {
+                    let id_start = h;
+                    let mut e = h;
+                    while self
+                        .b
+                        .get(e)
+                        .copied()
+                        .is_some_and(is_ident_continue)
+                    {
+                        e += 1;
+                    }
+                    self.push(TokenKind::Ident, id_start, e);
+                    self.i = e;
+                    return true;
+                }
+                false
+            }
+            Some(&b'"') => {
+                if raw && j - start >= 1 && self.b[start] != b'b' {
+                    // r"..."
+                    self.raw_string(start, 0);
+                } else if raw && j - start == 2 {
+                    // br"..."
+                    self.raw_string(start, 0);
+                } else {
+                    // b"..." with escapes
+                    self.i = j;
+                    self.plain_string_from(start);
+                }
+                true
+            }
+            Some(&b'\'') if self.b[start] == b'b' && j == start + 1 => {
+                // b'x' byte-char literal
+                self.i = j + 1;
+                let mut e = self.i;
+                while e < self.b.len() && self.b[e] != b'\'' {
+                    if self.b[e] == b'\\' {
+                        e += 1;
+                    }
+                    e += 1;
+                }
+                e = (e + 1).min(self.b.len());
+                self.push(TokenKind::CharLit, start, e);
+                self.advance_lines(start, e);
+                self.i = e;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// `r"..."` / `r#"..."#` / `br#"..."#` with `hashes` trailing `#`s;
+    /// `self.i` still points at the leading `r`/`b`.
+    fn raw_string(&mut self, start: usize, hashes: usize) {
+        // Find the opening quote.
+        let mut q = start;
+        while self.b[q] != b'"' {
+            q += 1;
+        }
+        let mut e = q + 1;
+        'scan: while e < self.b.len() {
+            if self.b[e] == b'"' {
+                let mut k = 0;
+                while k < hashes {
+                    if self.b.get(e + 1 + k) != Some(&b'#') {
+                        e += 1;
+                        continue 'scan;
+                    }
+                    k += 1;
+                }
+                e += 1 + hashes;
+                break;
+            }
+            e += 1;
+        }
+        self.push(TokenKind::Str, start, e);
+        self.advance_lines(start, e);
+        self.i = e;
+    }
+
+    fn plain_string(&mut self) {
+        let start = self.i;
+        self.plain_string_from(start);
+    }
+
+    /// Escaped string body starting at the quote at `self.i`; the token
+    /// starts at `start` (which may include a `b` prefix).
+    fn plain_string_from(&mut self, start: usize) {
+        let mut e = self.i + 1;
+        while e < self.b.len() && self.b[e] != b'"' {
+            if self.b[e] == b'\\' {
+                e += 1;
+            }
+            e += 1;
+        }
+        e = (e + 1).min(self.b.len());
+        self.push(TokenKind::Str, start, e);
+        self.advance_lines(start, e);
+        self.i = e;
+    }
+
+    /// `'` — lifetime or char literal.
+    fn quote(&mut self) {
+        let start = self.i;
+        if self.peek(1).is_some_and(is_ident_start) {
+            let mut e = start + 2;
+            while self.b.get(e).copied().is_some_and(is_ident_continue) {
+                e += 1;
+            }
+            if self.b.get(e) == Some(&b'\'') {
+                // 'a' — a char literal after all.
+                self.push(TokenKind::CharLit, start, e + 1);
+                self.i = e + 1;
+            } else {
+                self.push(TokenKind::Lifetime, start, e);
+                self.i = e;
+            }
+            return;
+        }
+        let mut e = start + 1;
+        while e < self.b.len() && self.b[e] != b'\'' {
+            if self.b[e] == b'\\' {
+                e += 1;
+            }
+            e += 1;
+        }
+        e = (e + 1).min(self.b.len());
+        self.push(TokenKind::CharLit, start, e);
+        self.i = e;
+    }
+
+    fn number(&mut self) {
+        let start = self.i;
+        let mut e = self.i;
+        while self.b.get(e).copied().is_some_and(is_ident_continue) {
+            e += 1;
+        }
+        // Fraction: `.` followed by a digit, or a trailing `.` that is
+        // not the start of a `..` range.
+        if self.b.get(e) == Some(&b'.') {
+            if self.b.get(e + 1).is_some_and(|b| b.is_ascii_digit()) {
+                e += 1;
+                while self.b.get(e).copied().is_some_and(is_ident_continue)
+                {
+                    e += 1;
+                }
+            } else if self.b.get(e + 1) != Some(&b'.') {
+                e += 1;
+            }
+        }
+        // Signed exponent (`1e-3`): the sign right after an e/E.
+        while e > start
+            && matches!(self.b.get(e - 1), Some(&b'e') | Some(&b'E'))
+            && matches!(self.b.get(e), Some(&b'+') | Some(&b'-'))
+        {
+            e += 1;
+            while self.b.get(e).copied().is_some_and(is_ident_continue) {
+                e += 1;
+            }
+        }
+        self.push(TokenKind::Num, start, e);
+        self.i = e;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokenKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        let t = kinds("let x = a.b();");
+        let texts: Vec<&str> =
+            t.iter().map(|(_, s)| s.as_str()).collect();
+        assert_eq!(
+            texts,
+            ["let", "x", "=", "a", ".", "b", "(", ")", ";"]
+        );
+        assert_eq!(t[0].0, TokenKind::Ident);
+        assert_eq!(t[2].0, TokenKind::Punct);
+    }
+
+    #[test]
+    fn string_contents_are_opaque() {
+        let t = lex(r#"let s = "Vec::new() // lint: hot-path";"#);
+        assert!(t.iter().all(|tok| tok.text != "Vec"));
+        assert_eq!(
+            t.iter().filter(|tok| tok.kind == TokenKind::Str).count(),
+            1
+        );
+    }
+
+    #[test]
+    fn raw_string_with_hashes_is_one_token() {
+        let src = "let s = r#\"unsafe { \"inner\" }\"#; done";
+        let t = lex(src);
+        assert!(t.iter().any(|tok| tok.text == "done"));
+        assert!(t.iter().all(|tok| tok.text != "unsafe"));
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let t = kinds("/* a /* b */ c */ x");
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[0].0, TokenKind::BlockComment);
+        assert_eq!(t[1].1, "x");
+    }
+
+    #[test]
+    fn lifetime_vs_char() {
+        let t = kinds("&'a str; let c = 'a'; let s = 'x';");
+        assert!(t
+            .iter()
+            .any(|(k, s)| *k == TokenKind::Lifetime && s == "'a"));
+        assert!(t
+            .iter()
+            .any(|(k, s)| *k == TokenKind::CharLit && s == "'a'"));
+    }
+
+    #[test]
+    fn numbers_with_suffix_and_range() {
+        let t = kinds("0.0f32 1..4 1.5e-3 0x1F");
+        assert_eq!(t[0], (TokenKind::Num, "0.0f32".into()));
+        assert_eq!(t[1], (TokenKind::Num, "1".into()));
+        assert_eq!(t[2], (TokenKind::Punct, "..".into()));
+        assert_eq!(t[3], (TokenKind::Num, "4".into()));
+        assert_eq!(t[4], (TokenKind::Num, "1.5e-3".into()));
+        assert_eq!(t[5], (TokenKind::Num, "0x1F".into()));
+    }
+
+    #[test]
+    fn dotdot_is_one_token() {
+        let t = kinds("S { a, .. }");
+        assert!(t.iter().any(|(k, s)| *k == TokenKind::Punct && s == ".."));
+    }
+
+    #[test]
+    fn line_numbers() {
+        let t = lex("a\nb\n\nc");
+        let lines: Vec<u32> = t.iter().map(|tok| tok.line).collect();
+        assert_eq!(lines, [1, 2, 4]);
+    }
+
+    #[test]
+    fn multiline_string_advances_lines() {
+        let t = lex("let s = \"two\nlines\";\nnext");
+        let next = t.iter().find(|tok| tok.text == "next").unwrap();
+        assert_eq!(next.line, 3);
+    }
+
+    #[test]
+    fn raw_ident() {
+        let t = kinds("r#type x");
+        assert_eq!(t[0], (TokenKind::Ident, "type".into()));
+        assert_eq!(t[1], (TokenKind::Ident, "x".into()));
+    }
+}

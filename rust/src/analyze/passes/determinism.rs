@@ -1,0 +1,230 @@
+//! `determinism` — the nondeterminism sources that would break the
+//! thread-matrix bit-equality contract, split into three rules (each
+//! independently suppressible with `lint: allow(<rule>)`):
+//!
+//! * `hash-collections`: `HashMap`/`HashSet` anywhere in `src/` outside
+//!   `#[cfg(test)]` regions.  Their iteration order is randomized per
+//!   process, so any export, ledger, or checkpoint path that walks one
+//!   produces run-dependent bytes; the crate standardizes on
+//!   `BTreeMap`/`BTreeSet`.
+//! * `float-accum`: f32 running sums in the numeric directories
+//!   (`comm/`, `compress/`, `optim/`, `tensor/`, `transport/`) —
+//!   a `.sum::<f32>()` turbofish, or an f32-typed zero accumulator
+//!   later fed by `+=` in the same scope.  f32 addition does not
+//!   reassociate, so only `kernels::reduce`'s pairwise-f64 trees (and
+//!   explicitly fixed-order loops) may accumulate; everything else sums
+//!   in f64 or delegates.
+//! * `timing`: `Instant::now` / `SystemTime` outside `trace/`,
+//!   `netsim/`, and `util/bench.rs`.  Wall-clock reads in algorithm
+//!   code are how schedule jitter leaks into results; the allowlisted
+//!   modules exist to own time, and genuine deadlines (socket dials,
+//!   watchdogs) carry per-site `lint: allow(timing)` justifications.
+
+use super::super::lexer::TokenKind;
+use super::super::report::Finding;
+use super::{Pass, SourceFile};
+
+pub struct Determinism;
+
+pub const PASS: &str = "determinism";
+pub const RULE_HASH: &str = "hash-collections";
+pub const RULE_FLOAT: &str = "float-accum";
+pub const RULE_TIMING: &str = "timing";
+
+/// Directories whose float code must not keep f32 running sums.
+const FLOAT_DIRS: [&str; 5] =
+    ["comm/", "compress/", "optim/", "tensor/", "transport/"];
+
+/// Modules that legitimately own wall-clock time.
+const TIMING_ALLOW: [&str; 3] = ["trace/", "netsim/", "util/bench.rs"];
+
+impl Pass for Determinism {
+    fn name(&self) -> &'static str {
+        PASS
+    }
+
+    fn run(&self, file: &SourceFile, out: &mut Vec<Finding>) {
+        let Some(sub) = file.rel.strip_prefix("src/") else {
+            // tests/ and benches/ time and hash freely.
+            return;
+        };
+        hash_collections(file, out);
+        if !TIMING_ALLOW.iter().any(|a| sub.starts_with(a)) {
+            timing(file, out);
+        }
+        if FLOAT_DIRS.iter().any(|d| sub.starts_with(d)) {
+            float_accum(file, out);
+        }
+    }
+}
+
+fn hash_collections(file: &SourceFile, out: &mut Vec<Finding>) {
+    let allowed = file.allow_lines(RULE_HASH);
+    for t in &file.tokens {
+        if t.kind == TokenKind::Ident
+            && (t.text == "HashMap" || t.text == "HashSet")
+            && !file.in_test_region(t.line)
+            && !allowed.contains(&t.line)
+        {
+            out.push(Finding::new(
+                PASS,
+                RULE_HASH,
+                &file.rel,
+                t.line,
+                format!(
+                    "{} iteration order is nondeterministic; use \
+                     BTreeMap/BTreeSet",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+fn timing(file: &SourceFile, out: &mut Vec<Finding>) {
+    let allowed = file.allow_lines(RULE_TIMING);
+    for si in 0..file.sig.len() {
+        let t = &file.tokens[file.sig[si]];
+        if t.kind != TokenKind::Ident
+            || file.in_test_region(t.line)
+            || allowed.contains(&t.line)
+        {
+            continue;
+        }
+        let hit = match t.text.as_str() {
+            "SystemTime" => true,
+            "Instant" => {
+                file.sig_punct(si + 1, ":")
+                    && file.sig_punct(si + 2, ":")
+                    && file.sig_ident(si + 3, "now")
+            }
+            _ => false,
+        };
+        if hit {
+            out.push(Finding::new(
+                PASS,
+                RULE_TIMING,
+                &file.rel,
+                t.line,
+                format!(
+                    "{} outside the trace/bench/netsim allowlist",
+                    if t.text == "SystemTime" {
+                        "SystemTime"
+                    } else {
+                        "Instant::now"
+                    }
+                ),
+            ));
+        }
+    }
+}
+
+fn float_accum(file: &SourceFile, out: &mut Vec<Finding>) {
+    let allowed = file.allow_lines(RULE_FLOAT);
+    // Bracket depth at each significant token, for scope tracking.
+    let mut depths = Vec::with_capacity(file.sig.len());
+    let mut depth = 0i32;
+    for &i in &file.sig {
+        depths.push(depth);
+        match file.tokens[i].text.as_str() {
+            "{" | "(" | "[" => depth += 1,
+            "}" | ")" | "]" => depth -= 1,
+            _ => {}
+        }
+    }
+    for si in 0..file.sig.len() {
+        let t = &file.tokens[file.sig[si]];
+        if file.in_test_region(t.line) || allowed.contains(&t.line) {
+            continue;
+        }
+        // `.sum::<f32>()` turbofish.
+        if t.kind == TokenKind::Punct
+            && t.text == "."
+            && file.sig_ident(si + 1, "sum")
+            && file.sig_punct(si + 2, ":")
+            && file.sig_punct(si + 3, ":")
+            && file.sig_punct(si + 4, "<")
+            && file.sig_ident(si + 5, "f32")
+        {
+            out.push(Finding::new(
+                PASS,
+                RULE_FLOAT,
+                &file.rel,
+                t.line,
+                "f32 running sum; accumulate in f64 or use \
+                 kernels::reduce"
+                    .to_string(),
+            ));
+            continue;
+        }
+        // `let mut x = 0.0f32` (or `let mut x: f32 = 0.0`) later fed
+        // by `x +=` in the same scope.
+        if t.kind != TokenKind::Ident || t.text != "let" {
+            continue;
+        }
+        if !file.sig_ident(si + 1, "mut") {
+            continue;
+        }
+        let Some(name_tok) = file
+            .sig_tok(si + 2)
+            .filter(|n| n.kind == TokenKind::Ident)
+        else {
+            continue;
+        };
+        let name = name_tok.text.clone();
+        let (zero_si, annotated) = if file.sig_punct(si + 3, ":")
+            && file.sig_ident(si + 4, "f32")
+            && file.sig_punct(si + 5, "=")
+        {
+            (si + 6, true)
+        } else if file.sig_punct(si + 3, "=") {
+            (si + 4, false)
+        } else {
+            continue;
+        };
+        let Some(zero) = file
+            .sig_tok(zero_si)
+            .filter(|z| z.kind == TokenKind::Num)
+        else {
+            continue;
+        };
+        let zt = zero.text.replace('_', "");
+        let is_f32 = match zt.as_str() {
+            "0.0f32" | "0f32" | "0.f32" => true,
+            "0.0" | "0." => annotated,
+            _ => false,
+        };
+        if !is_f32 {
+            continue;
+        }
+        // Walk the remainder of the scope looking for `name +=`.
+        let d0 = depths[si];
+        for k in si + 1..file.sig.len() {
+            if depths[k] < d0 {
+                break;
+            }
+            let tk = &file.tokens[file.sig[k]];
+            if tk.kind == TokenKind::Ident
+                && tk.text == name
+                && file.sig_punct(k + 1, "+")
+                && file.sig_punct(k + 2, "=")
+            {
+                if !allowed.contains(&tk.line)
+                    && !file.in_test_region(tk.line)
+                {
+                    out.push(Finding::new(
+                        PASS,
+                        RULE_FLOAT,
+                        &file.rel,
+                        tk.line,
+                        format!(
+                            "f32 `+=` accumulation into `{name}`; \
+                             accumulate in f64 or use kernels::reduce"
+                        ),
+                    ));
+                }
+                break;
+            }
+        }
+    }
+}

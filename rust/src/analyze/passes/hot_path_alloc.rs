@@ -1,0 +1,154 @@
+//! `hot-path-alloc` — no heap allocation inside `// lint: hot-path`
+//! fences.
+//!
+//! The armed trace recorder, the `CompressedAllreduce` arena kernels,
+//! and the fused element/reduce kernels all promise zero steady-state
+//! allocation; the fence comments turn that convention into a build
+//! break.  Syntax:
+//!
+//! ```text
+//! // lint: hot-path — optional justification
+//! fn kernel(...) { ... }
+//! // lint: end
+//! ```
+//!
+//! Inside a fence the pass flags `Vec::new` / `Vec::with_capacity`,
+//! `vec!`, `Box::new`, `String::from` / `String::new`, `format!`, and
+//! `.to_vec()` / `.to_string()` / `.clone()` calls.  Fences are
+//! file-local and must not nest; an unclosed fence is itself a finding
+//! so a typo cannot silently disarm the pass.
+
+use super::super::lexer::TokenKind;
+use super::super::report::Finding;
+use super::{Pass, SourceFile};
+
+pub struct HotPathAlloc;
+
+pub const RULE: &str = "hot-path-alloc";
+
+impl Pass for HotPathAlloc {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn run(&self, file: &SourceFile, out: &mut Vec<Finding>) {
+        let fences = collect_fences(file, out);
+        if fences.is_empty() {
+            return;
+        }
+        let allowed = file.allow_lines(RULE);
+        let fenced = |line: u32| {
+            fences.iter().any(|&(a, b)| a <= line && line <= b)
+        };
+        for si in 0..file.sig.len() {
+            let t = &file.tokens[file.sig[si]];
+            if !fenced(t.line) || allowed.contains(&t.line) {
+                continue;
+            }
+            let flag = |what: &str, out: &mut Vec<Finding>| {
+                out.push(Finding::new(
+                    RULE,
+                    RULE,
+                    &file.rel,
+                    t.line,
+                    format!("{what} inside a hot-path fence"),
+                ));
+            };
+            match t.kind {
+                TokenKind::Ident => match t.text.as_str() {
+                    "vec" | "format" if file.sig_punct(si + 1, "!") => {
+                        flag(&format!("{}!", t.text), out);
+                    }
+                    "Vec" | "String" | "Box"
+                        if file.sig_punct(si + 1, ":")
+                            && file.sig_punct(si + 2, ":") =>
+                    {
+                        let ctor = file
+                            .sig_tok(si + 3)
+                            .map(|c| c.text.clone())
+                            .unwrap_or_default();
+                        let hit = match t.text.as_str() {
+                            "Vec" => {
+                                ctor == "new" || ctor == "with_capacity"
+                            }
+                            "String" => ctor == "new" || ctor == "from",
+                            _ => ctor == "new",
+                        };
+                        if hit {
+                            flag(&format!("{}::{ctor}", t.text), out);
+                        }
+                    }
+                    _ => {}
+                },
+                TokenKind::Punct if t.text == "." => {
+                    let method = file
+                        .sig_tok(si + 1)
+                        .filter(|m| m.kind == TokenKind::Ident)
+                        .map(|m| m.text.clone())
+                        .unwrap_or_default();
+                    if matches!(
+                        method.as_str(),
+                        "to_vec" | "to_string" | "clone"
+                    ) && file.sig_punct(si + 2, "(")
+                    {
+                        flag(&format!(".{method}()"), out);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Extract `(open, close)` fence line ranges from the line comments,
+/// reporting unbalanced markers as findings.
+fn collect_fences(
+    file: &SourceFile,
+    out: &mut Vec<Finding>,
+) -> Vec<(u32, u32)> {
+    let mut fences = Vec::new();
+    let mut open: Option<u32> = None;
+    for t in &file.tokens {
+        if t.kind != TokenKind::LineComment {
+            continue;
+        }
+        let body = t.comment_body();
+        if body.starts_with("lint: hot-path") {
+            if let Some(prev) = open {
+                out.push(Finding::new(
+                    RULE,
+                    RULE,
+                    &file.rel,
+                    t.line,
+                    format!(
+                        "nested hot-path fence (previous opened on \
+                         line {prev})"
+                    ),
+                ));
+            }
+            open = Some(t.line);
+        } else if body.starts_with("lint: end") {
+            match open.take() {
+                Some(a) => fences.push((a, t.line)),
+                None => out.push(Finding::new(
+                    RULE,
+                    RULE,
+                    &file.rel,
+                    t.line,
+                    "`lint: end` without an open hot-path fence"
+                        .to_string(),
+                )),
+            }
+        }
+    }
+    if let Some(a) = open {
+        out.push(Finding::new(
+            RULE,
+            RULE,
+            &file.rel,
+            a,
+            "unclosed hot-path fence".to_string(),
+        ));
+    }
+    fences
+}

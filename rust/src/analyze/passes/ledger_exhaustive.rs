@@ -1,0 +1,97 @@
+//! `ledger-exhaustive` — no `..` rest pattern on the stats ledgers.
+//!
+//! `CommStats`, `TransportStats`, and `RecoveryStats` are accounting
+//! contracts: every consumer (reconciliation tests, the trace-stats
+//! registry, netsim twins) destructures them exhaustively so that
+//! adding a field breaks every site that would otherwise silently drop
+//! it from the books.  This pass flags a bare `..` rest pattern at the
+//! top nesting level of a `Ledger { ... }` brace group.  Functional
+//! update syntax (`..expr`) is allowed — the rest there is an
+//! expression, not an elision — as are the type's own declaration and
+//! impl blocks.
+
+use super::super::lexer::TokenKind;
+use super::super::report::Finding;
+use super::{Pass, SourceFile};
+
+pub struct LedgerExhaustive;
+
+pub const RULE: &str = "ledger-exhaustive";
+
+/// The protected accounting structs.
+pub const LEDGERS: [&str; 3] =
+    ["CommStats", "TransportStats", "RecoveryStats"];
+
+impl Pass for LedgerExhaustive {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn run(&self, file: &SourceFile, out: &mut Vec<Finding>) {
+        let allowed = file.allow_lines(RULE);
+        for si in 0..file.sig.len() {
+            let t = &file.tokens[file.sig[si]];
+            if t.kind != TokenKind::Ident
+                || !LEDGERS.contains(&t.text.as_str())
+            {
+                continue;
+            }
+            // Declarations and impl headers aren't uses of the pattern.
+            if si > 0 {
+                let prev = &file.tokens[file.sig[si - 1]];
+                if prev.kind == TokenKind::Ident
+                    && matches!(
+                        prev.text.as_str(),
+                        "struct"
+                            | "impl"
+                            | "enum"
+                            | "trait"
+                            | "union"
+                            | "for"
+                            | "mod"
+                    )
+                {
+                    continue;
+                }
+            }
+            if !file.sig_punct(si + 1, "{") {
+                continue;
+            }
+            // Walk the brace group; flag a top-level bare `..` whose
+            // next token closes the group.
+            let mut depth = 0i32;
+            let mut k = si + 1;
+            while let Some(tok) = file.sig_tok(k) {
+                match tok.text.as_str() {
+                    "{" | "(" | "[" => depth += 1,
+                    "}" | ")" | "]" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    ".." if depth == 1 => {
+                        if file.sig_punct(k + 1, "}")
+                            && !allowed.contains(&tok.line)
+                        {
+                            out.push(Finding::new(
+                                RULE,
+                                RULE,
+                                &file.rel,
+                                tok.line,
+                                format!(
+                                    "{} destructure uses a `..` rest \
+                                     pattern; list every field so new \
+                                     ones cannot escape accounting",
+                                    t.text
+                                ),
+                            ));
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! The pluggable lint passes and their shared token-stream helpers.
+//!
+//! Every pass sees the same pre-lexed [`SourceFile`] and appends
+//! [`Finding`]s; the engine in [`crate::analyze`] owns file discovery
+//! and report assembly.  Suppression is uniform across passes: a
+//! comment containing `lint: allow(<rule>)` silences that rule on the
+//! comment's own lines and on the first code line after the comment
+//! block — so a multi-line justification above the site works, as does
+//! a trailing comment on the line itself.
+
+pub mod determinism;
+pub mod hot_path_alloc;
+pub mod ledger_exhaustive;
+pub mod safety_comment;
+
+use std::collections::BTreeSet;
+
+use super::lexer::{Token, TokenKind};
+use super::report::Finding;
+
+/// One lexed source file, with the derived views every pass needs.
+pub struct SourceFile {
+    /// Path relative to the crate root, `/`-separated
+    /// (e.g. `src/comm/compressed.rs`, `tests/trace.rs`).
+    pub rel: String,
+    pub tokens: Vec<Token>,
+    /// Indices of non-comment tokens, in order.
+    pub sig: Vec<usize>,
+    /// Line ranges (inclusive) of `#[cfg(test)] mod ... { }` blocks.
+    pub test_regions: Vec<(u32, u32)>,
+    pub lines: usize,
+}
+
+impl SourceFile {
+    pub fn new(rel: &str, text: &str) -> SourceFile {
+        let tokens = super::lexer::lex(text);
+        let sig: Vec<usize> = tokens
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| !t.is_comment())
+            .map(|(i, _)| i)
+            .collect();
+        let test_regions = find_test_regions(&tokens, &sig);
+        SourceFile {
+            rel: rel.to_string(),
+            tokens,
+            sig,
+            test_regions,
+            lines: text.lines().count(),
+        }
+    }
+
+    /// The `si`-th significant token (None past the end).
+    pub fn sig_tok(&self, si: usize) -> Option<&Token> {
+        self.sig.get(si).map(|&i| &self.tokens[i])
+    }
+
+    /// Is the significant token at `si` an ident with this text?
+    pub fn sig_ident(&self, si: usize, text: &str) -> bool {
+        self.sig_tok(si)
+            .is_some_and(|t| t.kind == TokenKind::Ident && t.text == text)
+    }
+
+    /// Is the significant token at `si` a punct with this text?
+    pub fn sig_punct(&self, si: usize, text: &str) -> bool {
+        self.sig_tok(si)
+            .is_some_and(|t| t.kind == TokenKind::Punct && t.text == text)
+    }
+
+    pub fn in_test_region(&self, line: u32) -> bool {
+        self.test_regions.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// Lines on which `rule` findings are suppressed by
+    /// `lint: allow(<rule>)` comments.
+    pub fn allow_lines(&self, rule: &str) -> BTreeSet<u32> {
+        let needle = format!("lint: allow({rule})");
+        let mut out = BTreeSet::new();
+        for (i, t) in self.tokens.iter().enumerate() {
+            if !t.is_comment() || !t.text.contains(&needle) {
+                continue;
+            }
+            let span = t.text.matches('\n').count() as u32;
+            for l in t.line..=t.line + span {
+                out.insert(l);
+            }
+            // ... plus the first code line after the comment block.
+            if let Some(next) = self.tokens[i + 1..]
+                .iter()
+                .find(|n| !n.is_comment())
+            {
+                out.insert(next.line);
+            }
+        }
+        out
+    }
+}
+
+/// A lint pass: stateless, sees one file at a time.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, file: &SourceFile, out: &mut Vec<Finding>);
+}
+
+/// The shipped pass set, in report order.
+pub fn all_passes() -> Vec<Box<dyn Pass>> {
+    vec![
+        Box::new(hot_path_alloc::HotPathAlloc),
+        Box::new(safety_comment::SafetyComment),
+        Box::new(ledger_exhaustive::LedgerExhaustive),
+        Box::new(determinism::Determinism),
+    ]
+}
+
+/// Locate `#[cfg(test)] (pub)? mod name { ... }` blocks so passes can
+/// skip test-only code (tests legitimately allocate, time, and hash).
+fn find_test_regions(
+    tokens: &[Token],
+    sig: &[usize],
+) -> Vec<(u32, u32)> {
+    let mut regions = Vec::new();
+    let text_at =
+        |si: usize| sig.get(si).map(|&i| tokens[i].text.as_str());
+    for si in 0..sig.len() {
+        let window: Vec<&str> = (si..si + 7)
+            .map(|k| text_at(k).unwrap_or(""))
+            .collect();
+        if window != ["#", "[", "cfg", "(", "test", ")", "]"] {
+            continue;
+        }
+        let mut k = si + 7;
+        if text_at(k) == Some("pub") {
+            k += 1;
+        }
+        if text_at(k) != Some("mod") {
+            continue;
+        }
+        // Scan to the opening brace (a `;` means an out-of-line test
+        // module file — no region in this file).
+        while let Some(t) = text_at(k) {
+            if t == ";" || t == "{" {
+                break;
+            }
+            k += 1;
+        }
+        if text_at(k) != Some("{") {
+            continue;
+        }
+        let start_line = tokens[sig[k]].line;
+        let mut depth = 0i32;
+        for &i in &sig[k..] {
+            match tokens[i].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        regions.push((start_line, tokens[i].line));
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    regions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_region_detection() {
+        let src = "fn a() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn b() {}\n\
+                   }\n\
+                   fn c() {}\n";
+        let f = SourceFile::new("src/x.rs", src);
+        assert_eq!(f.test_regions, vec![(3, 5)]);
+        assert!(f.in_test_region(4));
+        assert!(!f.in_test_region(6));
+    }
+
+    #[test]
+    fn allow_lines_cover_comment_and_next_code_line() {
+        let src = "fn a() {\n\
+                   // lint: allow(timing): one-line reason\n\
+                   // continued explanation\n\
+                   let t = now();\n\
+                   let u = now();\n\
+                   }\n";
+        let f = SourceFile::new("src/x.rs", src);
+        let allowed = f.allow_lines("timing");
+        assert!(allowed.contains(&2));
+        assert!(allowed.contains(&4), "first code line after comment");
+        assert!(!allowed.contains(&5));
+    }
+
+    #[test]
+    fn cfg_test_mod_decl_without_braces_is_no_region() {
+        let src = "#[cfg(test)]\npub mod alloc_track;\nfn x() {}\n";
+        let f = SourceFile::new("src/util/mod.rs", src);
+        assert!(f.test_regions.is_empty());
+    }
+}

@@ -1,0 +1,59 @@
+//! `safety-comment` — every `unsafe` must carry a nearby `// SAFETY:`.
+//!
+//! An `unsafe` token (block, fn, impl, trait) is compliant when some
+//! comment within the preceding eight lines (or on its own line)
+//! contains `SAFETY:`.  The window tolerates an attribute or a
+//! multi-line signature between the comment and the keyword without
+//! letting a stale comment at the top of the file vouch for the whole
+//! module.
+
+use super::super::lexer::TokenKind;
+use super::super::report::Finding;
+use super::{Pass, SourceFile};
+
+pub struct SafetyComment;
+
+pub const RULE: &str = "safety-comment";
+
+/// How far above the `unsafe` token a `SAFETY:` comment may sit.
+const WINDOW: u32 = 8;
+
+impl Pass for SafetyComment {
+    fn name(&self) -> &'static str {
+        RULE
+    }
+
+    fn run(&self, file: &SourceFile, out: &mut Vec<Finding>) {
+        let allowed = file.allow_lines(RULE);
+        let mut safety_lines = Vec::new();
+        for t in &file.tokens {
+            if t.is_comment() && t.text.contains("SAFETY:") {
+                let span = t.text.matches('\n').count() as u32;
+                safety_lines.push((t.line, t.line + span));
+            }
+        }
+        for t in &file.tokens {
+            if t.kind != TokenKind::Ident || t.text != "unsafe" {
+                continue;
+            }
+            if allowed.contains(&t.line) {
+                continue;
+            }
+            let lo = t.line.saturating_sub(WINDOW);
+            let covered = safety_lines
+                .iter()
+                .any(|&(a, b)| b >= lo && a <= t.line);
+            if !covered {
+                out.push(Finding::new(
+                    RULE,
+                    RULE,
+                    &file.rel,
+                    t.line,
+                    "`unsafe` without a `// SAFETY:` comment in the \
+                     preceding 8 lines"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+}

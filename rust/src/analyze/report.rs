@@ -1,0 +1,188 @@
+//! Machine-readable lint findings: `ANALYZE_report.json`.
+//!
+//! The report is the analyzer's single output contract — the CLI renders
+//! it for humans, CI uploads it as an artifact, and `tests/analyze.rs`
+//! round-trips it through [`crate::util::json`].
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// One rule violation at a source location.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// The pass that produced it (`hot-path-alloc`, `safety-comment`,
+    /// `ledger-exhaustive`, `determinism`).
+    pub pass: String,
+    /// The specific rule — equals the pass name except for
+    /// `determinism`, whose sub-rules are `hash-collections`,
+    /// `float-accum`, and `timing`.  This is the id that
+    /// `// lint: allow(<rule>)` suppresses.
+    pub rule: String,
+    /// Path relative to the crate root, `/`-separated.
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(
+        pass: &str,
+        rule: &str,
+        file: &str,
+        line: u32,
+        message: String,
+    ) -> Finding {
+        Finding {
+            pass: pass.to_string(),
+            rule: rule.to_string(),
+            file: file.to_string(),
+            line,
+            message,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("pass".to_string(), Json::Str(self.pass.clone()));
+        m.insert("rule".to_string(), Json::Str(self.rule.clone()));
+        m.insert("file".to_string(), Json::Str(self.file.clone()));
+        m.insert("line".to_string(), Json::Num(self.line as f64));
+        m.insert("message".to_string(), Json::Str(self.message.clone()));
+        Json::Obj(m)
+    }
+}
+
+/// A full analyzer run: every finding plus scan statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    pub lines_scanned: usize,
+    pub scan_ms: f64,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Stable order: file, then line, then rule — independent of pass
+    /// execution order.
+    pub fn sort(&mut self) {
+        self.findings.sort_by(|a, b| {
+            (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule))
+        });
+    }
+
+    /// Findings per pass, sorted by pass name (for the summary line).
+    pub fn per_pass_counts(&self) -> BTreeMap<String, usize> {
+        let mut counts = BTreeMap::new();
+        for f in &self.findings {
+            *counts.entry(f.pass.clone()).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "findings".to_string(),
+            Json::Arr(self.findings.iter().map(Finding::to_json).collect()),
+        );
+        m.insert(
+            "files_scanned".to_string(),
+            Json::Num(self.files_scanned as f64),
+        );
+        m.insert(
+            "lines_scanned".to_string(),
+            Json::Num(self.lines_scanned as f64),
+        );
+        m.insert("scan_ms".to_string(), Json::Num(self.scan_ms));
+        m.insert("clean".to_string(), Json::Bool(self.clean()));
+        Json::Obj(m)
+    }
+
+    /// Human-readable rendering for the CLI: one `file:line` block per
+    /// finding plus a summary line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{}:{}: [{}] {}\n",
+                f.file, f.line, f.rule, f.message
+            ));
+        }
+        let per_pass: Vec<String> = self
+            .per_pass_counts()
+            .iter()
+            .map(|(p, c)| format!("{p}={c}"))
+            .collect();
+        out.push_str(&format!(
+            "analyze: {} finding(s) ({}) over {} files / {} lines in \
+             {:.1} ms\n",
+            self.findings.len(),
+            if per_pass.is_empty() {
+                "clean".to_string()
+            } else {
+                per_pass.join(", ")
+            },
+            self.files_scanned,
+            self.lines_scanned,
+            self.scan_ms,
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_round_trip() {
+        let mut r = Report::default();
+        r.findings.push(Finding::new(
+            "determinism",
+            "timing",
+            "src/x.rs",
+            7,
+            "Instant::now outside the allowlist".to_string(),
+        ));
+        r.files_scanned = 3;
+        r.lines_scanned = 120;
+        r.scan_ms = 1.25;
+        let text = r.to_json().to_string_pretty();
+        let back = Json::parse(&text).expect("parse");
+        assert_eq!(back.usize_of("files_scanned").unwrap(), 3);
+        assert!(!back.get("clean").unwrap().as_bool().unwrap());
+        let arr = back.arr_of("findings").unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].str_of("rule").unwrap(), "timing");
+        assert_eq!(arr[0].usize_of("line").unwrap(), 7);
+    }
+
+    #[test]
+    fn sort_is_stable_by_location() {
+        let mut r = Report::default();
+        let f = |file: &str, line: u32| {
+            Finding::new("p", "r", file, line, "m".to_string())
+        };
+        r.findings = vec![f("b.rs", 2), f("a.rs", 9), f("a.rs", 3)];
+        r.sort();
+        let locs: Vec<(String, u32)> = r
+            .findings
+            .iter()
+            .map(|f| (f.file.clone(), f.line))
+            .collect();
+        assert_eq!(
+            locs,
+            [
+                ("a.rs".to_string(), 3),
+                ("a.rs".to_string(), 9),
+                ("b.rs".to_string(), 2)
+            ]
+        );
+    }
+}

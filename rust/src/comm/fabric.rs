@@ -104,6 +104,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "multi-rank fan-out is prohibitively slow under Miri")]
     fn threaded_matches_sequential_bit_for_bit() {
         for (n, len) in [(2usize, 100usize), (4, 1000), (8, 4097)] {
             let mut seq =
@@ -160,6 +161,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "multi-rank fan-out is prohibitively slow under Miri")]
     fn chaos_fabric_matches_the_clean_fabric_bit_for_bit() {
         // A lossy wire below the fabric repairs itself: same bits, same
         // stats, with the repair work visible in the recovery ledger.

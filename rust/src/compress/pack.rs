@@ -23,6 +23,10 @@ pub fn pack_signs(x: &[f32]) -> Vec<u32> {
     words
 }
 
+// lint: hot-path — the `*_into` / fused bit kernels below are the wire
+// format's inner loops, called per chunk per step against arena slices;
+// they must never allocate.  (`pack_signs` / `unpack_signs` above are
+// the allocating convenience wrappers and stay outside the fence.)
 /// Allocation-free variant of [`pack_signs`].
 ///
 /// Full 32-lane words go through `chunks_exact` (constant trip count —
@@ -50,6 +54,7 @@ pub fn pack_signs_into(x: &[f32], words: &mut [u32]) {
         words[full] = w;
     }
 }
+// lint: end
 
 /// Unpack `n` signs into ±1.0 values.
 pub fn unpack_signs(words: &[u32], n: usize) -> Vec<f32> {
@@ -57,6 +62,9 @@ pub fn unpack_signs(words: &[u32], n: usize) -> Vec<f32> {
     unpack_signs_scaled(words, 1.0, &mut out);
     out
 }
+
+// lint: hot-path — see the fence note above; everything from here to the
+// test module is steady-state wire-domain kernel code.
 
 /// Unpack signs into `out` scaled by `scale` (the dequantize step).
 ///
@@ -197,6 +205,7 @@ pub fn quantize_pack_ec(comp_err: &mut [f32], scale: f32, words: &mut [u32]) {
         words[full] = w;
     }
 }
+// lint: end
 
 #[cfg(test)]
 mod tests {

@@ -575,6 +575,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "multi-rank fan-out is prohibitively slow under Miri")]
     fn overlap_presets_build_configs_and_drive_an_optimizer() {
         use crate::comm::overlap::BucketCodecPolicy;
         for p in OVERLAP_PRESETS {
@@ -644,6 +645,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "multi-rank fan-out is prohibitively slow under Miri")]
     fn chaos_presets_materialize_and_drive_the_fabric() {
         // Every preset builds a seeded runtime scenario, and the lossy
         // one actually repairs a collective bit-for-bit.

@@ -113,6 +113,8 @@ pub fn train(
     let mut sim_time = 0.0f64;
     let n = opt.n_workers();
     for step in 0..opts.steps {
+        // lint: allow(timing): wall_time is reporting-only metadata on
+        // StepRecord; the training state itself is simulated-clock only.
         let wall0 = Instant::now();
         let mut grads: Vec<Vec<f32>> = Vec::with_capacity(n);
         let mut loss_sum = 0.0f64;

@@ -73,6 +73,10 @@ impl AdamConsts {
     }
 }
 
+// lint: hot-path — the fused element kernels (through the compensate
+// family) run once per step over every parameter; zero allocation is
+// part of their contract.  The `*_par` dispatchers sit outside the
+// fences: they build one small task vector per call by design.
 #[inline(always)]
 fn adam_block(
     c: AdamConsts,
@@ -123,6 +127,7 @@ pub fn adam_step_fused(
     }
     adam_block(c, pt, mt, vt, gt);
 }
+// lint: end
 
 /// [`adam_step_fused`] over contiguous sub-slices on up to `threads`
 /// scoped threads (bit-identical: the kernel is pure elementwise).
@@ -155,6 +160,7 @@ pub fn adam_step_par(
     });
 }
 
+// lint: hot-path — momentum / refresh / precond fused kernels.
 #[inline(always)]
 fn momentum_block(beta: f32, omb: f32, m: &mut [f32], g: &[f32]) {
     for i in 0..g.len() {
@@ -254,6 +260,7 @@ pub fn precond_step_fused(
     }
     precond_block(eps, lr, pt, mt, vt);
 }
+// lint: end
 
 /// [`precond_step_fused`] over contiguous sub-slices on up to `threads`
 /// scoped threads; sequential below [`PAR_MIN_LEN`].
@@ -283,6 +290,8 @@ pub fn precond_step_par(
     });
 }
 
+// lint: hot-path — EC compensate kernels (the per-step error-feedback
+// inner loops of both compress paths).
 /// Block size of the L1-norm accumulation: f32 partial sums inside a
 /// block (lane-parallel), f64 across blocks — no catastrophic
 /// accumulation for n up to 10⁹.
@@ -379,6 +388,7 @@ pub fn compensate_l1_in_place(value: &[f32], err: &mut [f32]) -> f32 {
     }
     (l1 / n as f64) as f32
 }
+// lint: end
 
 #[cfg(test)]
 mod tests {

@@ -27,6 +27,8 @@
 /// with the f32 input streams.
 pub const REDUCE_BLK: usize = 1024;
 
+// lint: hot-path — the deterministic reduction tree; runs per block per
+// step over every worker's gradient and must stay allocation-free.
 /// Pairwise-tree sum of `inputs[w][offset + i]` over `w` into `acc[i]`.
 /// `acc.len()` must be ≤ [`REDUCE_BLK`] (enforced by the temp buffers).
 fn tree_sum_block(inputs: &[&[f32]], offset: usize, acc: &mut [f64]) {
@@ -107,6 +109,7 @@ pub fn tree_sum_into(inputs: &[&[f32]], offset: usize, acc: &mut [f64]) {
     assert!(acc.len() <= REDUCE_BLK);
     tree_sum_block(inputs, offset, acc);
 }
+// lint: end
 
 #[cfg(test)]
 mod tests {

@@ -18,8 +18,15 @@
 //! [`kernels`] for the fused elementwise/reduction hot loops everything
 //! dispatches to, and [`transport`] for the framed wire protocol +
 //! TCP/in-memory backends that run the same collectives over real
-//! sockets.
+//! sockets.  [`analyze`] is the first-party linter (`obadam analyze`)
+//! that mechanically enforces the crate's cross-cutting invariants.
 
+// Every unsafe operation inside an `unsafe fn` must sit in its own
+// `unsafe {}` block with a `// SAFETY:` comment (the `safety-comment`
+// lint pass checks the comments; this lint forces the blocks).
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analyze;
 pub mod comm;
 pub mod config;
 pub mod compress;

@@ -216,6 +216,24 @@ impl Event {
 /// ~3.5 MiB per recording thread.
 pub const DEFAULT_CAPACITY: usize = 1 << 16;
 
+// Atomic-ordering audit (all four statics):
+//
+// * Every load/store below is `Relaxed`, and that is sufficient — no
+//   event data is ever published *through* these atomics.  Events live
+//   in plain per-thread rings behind a `RefCell`; cross-thread handoff
+//   happens exclusively under the `COLLECTED` mutex (drain-on-drop or
+//   `flush_thread`), whose lock/unlock provides the acquire/release
+//   edges for the payload.
+// * `ENABLED` is an advisory gate: a span racing an enable/disable
+//   edge may be missed or half-recorded-then-dropped, never torn —
+//   there is no other memory whose visibility must be ordered with it.
+// * `CAPACITY` is read once per thread at first-record to size the
+//   ring; a racing `enable_with_capacity` can only make a brand-new
+//   thread pick the old size, which is benign.
+// * `DROPPED` is a monotonic statistics counter (`fetch_add`/load);
+//   callers only read it after the producing threads have joined.
+// * `EPOCH` is a `OnceLock`, which internally synchronizes its one
+//   initialization; timestamps derived from it are plain data.
 static ENABLED: AtomicBool = AtomicBool::new(false);
 static CAPACITY: AtomicUsize = AtomicUsize::new(DEFAULT_CAPACITY);
 static DROPPED: AtomicUsize = AtomicUsize::new(0);
@@ -298,6 +316,9 @@ impl Ring {
         }
     }
 
+    // lint: hot-path — the armed ring write; the one-time
+    // `reserve_exact` below is the only allocation a ring ever makes
+    // (`push` past it never reallocates, overflow overwrites in place).
     #[inline]
     fn record(&mut self, mut ev: Event) {
         ev.rank = self.rank;
@@ -315,6 +336,7 @@ impl Ring {
             self.dropped += 1;
         }
     }
+    // lint: end
 
     /// Move the buffered events out in record order.
     fn drain(&mut self) -> Vec<Event> {
@@ -353,6 +375,9 @@ fn collected() -> std::sync::MutexGuard<'static, Vec<Event>> {
     COLLECTED.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
+// lint: hot-path — armed recording entry points: everything from here
+// to the collection section runs inside instrumented per-step code and
+// is bench-asserted zero-alloc (`benches/trace_overhead.rs`).
 #[inline]
 fn record(ev: Event) {
     LOCAL.with(|l| l.borrow_mut().ring.record(ev));
@@ -447,6 +472,7 @@ pub fn counter(kind: SpanKind, value: u64) {
         aux: value,
     });
 }
+// lint: end
 
 // ---- collection ------------------------------------------------------------
 

@@ -560,6 +560,9 @@ pub fn run_elastic_worker(
             }
             Err(e) if is_peer_failure(&e) && attempt + 1 < opts.max_epochs => {
                 trace::instant(SpanKind::PeerFailure, m.epoch as u64);
+                // lint: allow(timing): stamps the real failure instant
+                // so the recovery window can be measured against the
+                // modeled epoch-change bound; reporting-only.
                 failed_at = Some(Instant::now());
                 if report.resume_step.is_none() {
                     report.pre_fail_step_ms = mean_ms(&step_ms);
@@ -607,6 +610,8 @@ fn run_epoch(
 
     while st.t < opts.steps {
         let t = st.t;
+        // lint: allow(timing): per-step wall time feeds the
+        // pre/post-resume step-time report, never optimizer state.
         let started = Instant::now();
         if !opts.pace.is_zero() {
             std::thread::sleep(opts.pace);

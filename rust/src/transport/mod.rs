@@ -710,6 +710,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real sockets are unsupported under Miri")]
     fn tcp_mesh_delivers_in_order() {
         for n in [2usize, 4] {
             let eps =
@@ -720,6 +721,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real sockets are unsupported under Miri")]
     fn tcp_survives_large_bursts_without_deadlock() {
         // Both sides of every pair send a multi-megabyte burst before
         // either receives: without the dedicated receive threads this
@@ -757,6 +759,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real sockets are unsupported under Miri")]
     fn send_to_unknown_rank_errors() {
         let mut eps = in_memory_mesh(2);
         assert!(eps[0].send(5, &[1, 2, 3]).is_err());
@@ -782,6 +785,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real sockets are unsupported under Miri")]
     fn attempt_timeout_exceeding_total_budget_is_a_typed_config_error() {
         // Regression: a per-probe wait longer than the total dead-peer
         // budget used to be accepted silently and degenerate the retry
@@ -862,6 +866,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real sockets are unsupported under Miri")]
     fn dead_peer_recv_times_out_within_the_configured_bound() {
         // A silent-but-alive peer (the dead-rank failure mode: wedged,
         // not disconnected) must unwind recv within the *configured*

@@ -1265,6 +1265,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "multi-rank fan-out is prohibitively slow under Miri")]
     fn in_memory_flat_equals_sequential_reference_property() {
         // The tentpole contract, reference backend: arbitrary lengths ×
         // ranks 1–8 × every CompressionKind, multiple EC steps.
@@ -1285,6 +1286,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real sockets are unsupported under Miri")]
     fn tcp_flat_equals_sequential_reference_property() {
         // Same contract over real loopback sockets (smaller sweep — each
         // case builds a fresh socket mesh).
@@ -1305,6 +1307,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real sockets are unsupported under Miri")]
     fn tcp_flat_covers_the_acceptance_corners() {
         // Pinned corners on TCP: 8 ranks, length 4096 and an uneven
         // length, all kinds, 3 steps each.
@@ -1385,6 +1388,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "multi-rank fan-out is prohibitively slow under Miri")]
     fn in_memory_hierarchical_equals_reference_property() {
         // Two-level topology over the wire == in-process hierarchy, for
         // every kind (the identity kind exercises the exact-f64 leg),
@@ -1419,6 +1423,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real sockets are unsupported under Miri")]
     fn tcp_hierarchical_equals_reference() {
         for (kind_idx, group, len) in
             [(0usize, 2usize, 1500usize), (1, 4, 777), (2, 3, 64)]
@@ -1464,6 +1469,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "multi-rank fan-out is prohibitively slow under Miri")]
     fn plain_average_equals_in_process_engine_property() {
         // The transported warmup average: bit-identical outputs and
         // identical (ring-convention) CommStats.
@@ -1501,6 +1507,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real sockets are unsupported under Miri")]
     fn tcp_plain_average_matches_in_memory() {
         let (workers, len) = (5usize, 2000usize);
         let inputs = random_inputs(workers, len, 77);

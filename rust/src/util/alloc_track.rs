@@ -32,17 +32,28 @@ fn bump() {
     let _ = ALLOC_COUNT.try_with(|c| c.set(c.get() + 1));
 }
 
+// SAFETY: pure pass-through to `System`; the only added work is a
+// `thread_local` `Cell` bump that is `const`-initialized (no lazy init,
+// no destructor) and therefore can never allocate or re-enter us.
 unsafe impl GlobalAlloc for CountingAllocator {
+    // SAFETY: caller upholds `GlobalAlloc::alloc`'s contract (nonzero
+    // layout); we forward it unchanged to the system allocator.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         bump();
-        System.alloc(layout)
+        // SAFETY: same layout, same contract, delegated to `System`.
+        unsafe { System.alloc(layout) }
     }
 
+    // SAFETY: identical delegation; zeroing is handled by `System`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         bump();
-        System.alloc_zeroed(layout)
+        // SAFETY: same layout, same contract, delegated to `System`.
+        unsafe { System.alloc_zeroed(layout) }
     }
 
+    // SAFETY: caller guarantees `ptr` came from this allocator with
+    // `layout`, which is exactly what `System.realloc` requires since
+    // every pointer we hand out comes from `System`.
     unsafe fn realloc(
         &self,
         ptr: *mut u8,
@@ -50,11 +61,15 @@ unsafe impl GlobalAlloc for CountingAllocator {
         new_size: usize,
     ) -> *mut u8 {
         bump();
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: `ptr`/`layout` pair is valid per the caller's contract.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 
+    // SAFETY: caller guarantees `ptr` was allocated here with `layout`;
+    // all our pointers originate from `System`, so the free is matched.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: matched allocator and layout per the caller's contract.
+        unsafe { System.dealloc(ptr, layout) }
     }
 }
 

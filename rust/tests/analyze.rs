@@ -1,0 +1,332 @@
+//! Tier-1 tests for `obadam analyze` — the first-party invariant
+//! linter.
+//!
+//! Two halves:
+//! * seeded-violation fixtures (in-memory sources through
+//!   [`analyze::scan_source`]) proving every pass fires and every
+//!   suppression mechanism works, and
+//! * the full-tree scan over this crate's own sources, which must be
+//!   clean and fast — the same gate `obadam analyze` enforces in CI.
+//!
+//! The fixtures live in raw strings on purpose: the analyzer lexes
+//! string literals as opaque tokens, so the violations seeded here are
+//! invisible to the full-tree scan below.  (That property is itself
+//! asserted: the scan of `tests/analyze.rs` yields nothing.)
+
+use onebit_adam::analyze::{self, report::Finding};
+
+fn rules(findings: &[Finding]) -> Vec<&str> {
+    findings.iter().map(|f| f.rule.as_str()).collect()
+}
+
+// ---- hot-path-alloc --------------------------------------------------------
+
+#[test]
+fn hot_path_alloc_fires_on_each_forbidden_form() {
+    let src = r#"
+// lint: hot-path
+fn kernel(x: &mut Vec<f32>) {
+    let a = Vec::new();
+    let b = vec![0.0f32; 8];
+    let c = x.clone();
+    let d = format!("{a:?}{b:?}{c:?}");
+    let e = Box::new(0u32);
+    let f = String::from("x");
+    let g = x.to_vec();
+}
+// lint: end
+"#;
+    let got = analyze::scan_source("src/comm/fixture.rs", src);
+    let hot: Vec<&Finding> = got
+        .iter()
+        .filter(|f| f.rule == "hot-path-alloc")
+        .collect();
+    assert_eq!(hot.len(), 7, "one per seeded allocation: {got:?}");
+    let lines: Vec<u32> = hot.iter().map(|f| f.line).collect();
+    assert_eq!(lines, [4, 5, 6, 7, 8, 9, 10]);
+}
+
+#[test]
+fn hot_path_alloc_ignores_code_outside_fences() {
+    let src = r#"
+fn setup() -> Vec<f32> {
+    let mut v = Vec::new();
+    v.push(1.0);
+    v.clone()
+}
+"#;
+    assert!(analyze::scan_source("src/comm/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn hot_path_alloc_allow_comment_suppresses() {
+    let src = r#"
+// lint: hot-path
+fn kernel() {
+    // lint: allow(hot-path-alloc): one-time init, measured cold.
+    let a = Vec::new();
+    let b: Vec<u32> = a;
+    drop(b);
+}
+// lint: end
+"#;
+    assert!(analyze::scan_source("src/comm/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn hot_path_unbalanced_fences_are_findings() {
+    let unclosed = "// lint: hot-path\nfn f() {}\n";
+    let got = analyze::scan_source("src/comm/fixture.rs", unclosed);
+    assert_eq!(rules(&got), ["hot-path-alloc"]);
+    assert!(got[0].message.contains("unclosed"));
+
+    let stray = "fn f() {}\n// lint: end\n";
+    let got = analyze::scan_source("src/comm/fixture.rs", stray);
+    assert_eq!(rules(&got), ["hot-path-alloc"]);
+    assert!(got[0].message.contains("without an open"));
+}
+
+// ---- safety-comment --------------------------------------------------------
+
+#[test]
+fn safety_comment_fires_on_bare_unsafe() {
+    let src = r#"
+fn peek(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+"#;
+    let got = analyze::scan_source("src/util/fixture.rs", src);
+    assert_eq!(rules(&got), ["safety-comment"]);
+    assert_eq!(got[0].line, 3);
+}
+
+#[test]
+fn safety_comment_satisfied_by_nearby_comment() {
+    let src = r#"
+fn peek(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees `p` is valid for reads.
+    unsafe { *p }
+}
+"#;
+    assert!(analyze::scan_source("src/util/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn safety_comment_window_does_not_reach_across_items() {
+    let src = r#"
+// SAFETY: this comment is too far above to vouch for the block.
+fn a() {}
+fn b() {}
+fn c() {}
+fn d() {}
+fn e() {}
+fn f() {}
+fn g() {}
+fn h() {}
+fn peek(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+"#;
+    let got = analyze::scan_source("src/util/fixture.rs", src);
+    assert_eq!(rules(&got), ["safety-comment"]);
+}
+
+// ---- ledger-exhaustive -----------------------------------------------------
+
+#[test]
+fn ledger_exhaustive_fires_on_rest_pattern() {
+    let src = r#"
+fn ingest(s: &CommStats) -> u64 {
+    let CommStats { bits_sent, .. } = *s;
+    bits_sent
+}
+"#;
+    let got = analyze::scan_source("src/trace/fixture.rs", src);
+    assert_eq!(rules(&got), ["ledger-exhaustive"]);
+    assert_eq!(got[0].line, 3);
+    assert!(got[0].message.contains("CommStats"));
+}
+
+#[test]
+fn ledger_exhaustive_accepts_exhaustive_and_functional_update() {
+    let src = r#"
+fn ingest(s: &TransportStats) -> u64 {
+    let TransportStats { frames, bytes } = *s;
+    frames + bytes
+}
+fn grow(s: TransportStats) -> TransportStats {
+    TransportStats { frames: s.frames + 1, ..s }
+}
+impl RecoveryStats {
+    fn reset(&mut self) {}
+}
+struct CommStats {
+    bits_sent: u64,
+}
+"#;
+    assert!(analyze::scan_source("src/trace/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn ledger_exhaustive_ignores_nested_rest_on_other_types() {
+    // The `..` belongs to the nested non-ledger pattern, not to the
+    // ledger destructure itself.
+    let src = r#"
+fn f(s: Wrapper) {
+    let Wrapper { inner: CommStats { bits_sent }, other: Other { .. } } =
+        s;
+    let _ = bits_sent;
+}
+"#;
+    assert!(analyze::scan_source("src/trace/fixture.rs", src).is_empty());
+}
+
+// ---- determinism -----------------------------------------------------------
+
+#[test]
+fn determinism_flags_hash_collections_in_src_only() {
+    let src = r#"
+use std::collections::HashMap;
+fn f() -> HashMap<u32, u32> {
+    HashMap::new()
+}
+"#;
+    let got = analyze::scan_source("src/metrics/fixture.rs", src);
+    assert_eq!(rules(&got), ["hash-collections"; 3]);
+    // Test regions and non-src files hash freely.
+    let test_src = r#"
+fn lib_code() {}
+#[cfg(test)]
+mod tests {
+    use std::collections::HashSet;
+    fn t() -> HashSet<u8> {
+        HashSet::new()
+    }
+}
+"#;
+    assert!(analyze::scan_source("src/metrics/fixture.rs", test_src)
+        .is_empty());
+    assert!(!analyze::scan_source("tests/fixture.rs", src)
+        .iter()
+        .any(|f| f.rule == "hash-collections"));
+}
+
+#[test]
+fn determinism_flags_f32_running_sums_in_numeric_dirs() {
+    let turbofish = r#"
+fn norm(x: &[f32]) -> f32 {
+    x.iter().map(|v| v.abs()).sum::<f32>()
+}
+"#;
+    let got = analyze::scan_source("src/compress/fixture.rs", turbofish);
+    assert_eq!(rules(&got), ["float-accum"]);
+
+    let accum = r#"
+fn total(x: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for v in x {
+        acc += v;
+    }
+    acc
+}
+"#;
+    let got = analyze::scan_source("src/optim/fixture.rs", accum);
+    assert_eq!(rules(&got), ["float-accum"]);
+    assert_eq!(got[0].line, 5, "flagged at the `+=`, not the `let`");
+
+    // The blessed pattern — f64 accumulator — is clean, and kernels/
+    // (home of the pairwise tree reduce) is exempt by directory.
+    let blessed = r#"
+fn total(x: &[f32]) -> f32 {
+    let mut acc = 0.0f64;
+    for v in x {
+        acc += *v as f64;
+    }
+    acc as f32
+}
+"#;
+    assert!(analyze::scan_source("src/optim/fixture.rs", blessed)
+        .is_empty());
+    assert!(analyze::scan_source("src/kernels/fixture.rs", accum)
+        .is_empty());
+}
+
+#[test]
+fn determinism_flags_timing_outside_allowlist() {
+    let src = r#"
+use std::time::Instant;
+fn step() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+"#;
+    let got = analyze::scan_source("src/optim/fixture.rs", src);
+    assert_eq!(rules(&got), ["timing"]);
+    assert_eq!(got[0].line, 4, "`use` alone is not a wall-clock read");
+    // trace/ owns time; an allow fence justifies a deadline site.
+    assert!(analyze::scan_source("src/trace/fixture.rs", src).is_empty());
+    let allowed = r#"
+use std::time::Instant;
+fn dial() {
+    // lint: allow(timing): socket dial deadline, justified.
+    let deadline = Instant::now();
+    let _ = deadline;
+}
+"#;
+    assert!(analyze::scan_source("src/transport/fixture.rs", allowed)
+        .is_empty());
+}
+
+// ---- the real tree ---------------------------------------------------------
+
+#[test]
+#[cfg_attr(miri, ignore = "reads the filesystem, blocked by Miri isolation")]
+fn full_tree_scan_is_clean_and_fast() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let t0 = std::time::Instant::now();
+    let report = analyze::run_all(root).expect("scan");
+    let elapsed = t0.elapsed();
+    assert!(
+        report.clean(),
+        "shipped tree must be lint-clean:\n{}",
+        report.render_text()
+    );
+    assert!(
+        report.files_scanned > 50,
+        "suspiciously few files scanned: {}",
+        report.files_scanned
+    );
+    assert!(
+        elapsed.as_secs_f64() < 5.0,
+        "full-tree scan took {elapsed:?} (budget 5 s)"
+    );
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "reads the filesystem, blocked by Miri isolation")]
+fn report_json_round_trips_through_util_json() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = analyze::run_all(root).expect("scan");
+    let text = report.to_json().to_string_pretty();
+    let back = onebit_adam::util::json::Json::parse(&text).expect("parse");
+    assert!(back.get("clean").unwrap().as_bool().unwrap());
+    assert_eq!(
+        back.usize_of("files_scanned").unwrap(),
+        report.files_scanned
+    );
+    assert_eq!(back.arr_of("findings").unwrap().len(), 0);
+    assert!(back.f64_of("scan_ms").unwrap() >= 0.0);
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "reads the filesystem, blocked by Miri isolation")]
+fn seeded_fixtures_in_this_file_are_invisible_to_the_tree_scan() {
+    // The fixtures above hold violations inside raw strings; the lexer
+    // must treat them as opaque literals when scanning this very file.
+    let text = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/analyze.rs"
+    ))
+    .expect("read self");
+    assert!(analyze::scan_source("tests/analyze.rs", &text).is_empty());
+}

@@ -45,6 +45,7 @@ fn hyper() -> AdamHyper {
 
 /// Figure 4(a) claim: 1-bit Adam matches Adam's sample-wise convergence.
 #[test]
+#[cfg_attr(miri, ignore = "full training loop is prohibitively slow under Miri")]
 fn onebit_adam_matches_adam_on_quadratic() {
     let steps = 3000;
     let mut adam = Adam::new(WORKERS, init(1)).with_hyper(hyper());
@@ -72,6 +73,7 @@ fn onebit_adam_matches_adam_on_quadratic() {
 /// per-coordinate scale information Adam's variance needs), so this oracle
 /// spans a 200x spectrum.
 #[test]
+#[cfg_attr(miri, ignore = "full training loop is prohibitively slow under Miri")]
 fn naive_compression_lags_both() {
     // Mid-training comparison (constant lr, no anneal): the naive variant's
     // handicap is a slower descent — with enough decay both settle into
@@ -98,6 +100,7 @@ fn naive_compression_lags_both() {
 
 /// The "32-bits" ablation: freezing v alone (no compression) converges.
 #[test]
+#[cfg_attr(miri, ignore = "full training loop is prohibitively slow under Miri")]
 fn frozen_variance_uncompressed_converges() {
     let steps = 2000;
     let mut opt = OneBitAdam::new(
@@ -117,6 +120,7 @@ fn frozen_variance_uncompressed_converges() {
 /// Supplementary Figures 10/11: the SGD-family baselines all converge on
 /// the (well-conditioned-enough) oracle.
 #[test]
+#[cfg_attr(miri, ignore = "full training loop is prohibitively slow under Miri")]
 fn sgd_family_baselines_converge() {
     let steps = 2500;
     let mut ds = DoubleSqueeze::new(WORKERS, init(4));
@@ -135,6 +139,7 @@ fn sgd_family_baselines_converge() {
 /// Non-convex sanity (Assumption 1 setting): 1-bit Adam drives the
 /// gradient norm down on the ripple oracle.
 #[test]
+#[cfg_attr(miri, ignore = "full training loop is prohibitively slow under Miri")]
 fn onebit_adam_on_nonconvex_ripple() {
     let mut oracle = RippleOracle::new(64, 4, 0.1, 0.3, 3.0, 5);
     let x0 = Rng::new(6).normal_vec(64, 2.0);
@@ -163,6 +168,7 @@ fn onebit_adam_on_nonconvex_ripple() {
 /// Volume claim: 1-bit Adam's measured end-to-end traffic matches the
 /// 1/(w + (1−w)/32) fp32 formula within 20%.
 #[test]
+#[cfg_attr(miri, ignore = "full training loop is prohibitively slow under Miri")]
 fn measured_volume_matches_formula() {
     let steps = 500;
     let warmup = 100;

@@ -29,6 +29,7 @@ fn hyper() -> AdamHyper {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "full training loop is prohibitively slow under Miri")]
 fn lm_onebit_adam_reduces_loss_through_both_phases() {
     let Some(rt) = runtime() else { return };
     let workers = 2;
@@ -71,6 +72,7 @@ fn lm_onebit_adam_reduces_loss_through_both_phases() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "full training loop is prohibitively slow under Miri")]
 fn lm_deterministic_across_runs() {
     let Some(rt) = runtime() else { return };
     let mut finals = Vec::new();
@@ -100,6 +102,7 @@ fn lm_deterministic_across_runs() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "full training loop is prohibitively slow under Miri")]
 fn cnn_adam_vs_onebit_parity_short() {
     let Some(rt) = runtime() else { return };
     let workers = 4;
@@ -151,6 +154,7 @@ fn cnn_adam_vs_onebit_parity_short() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "full training loop is prohibitively slow under Miri")]
 fn gan_both_optimizers_stay_finite() {
     let Some(rt) = runtime() else { return };
     use onebit_adam::coordinator::gan::GanTrainer;

@@ -73,6 +73,7 @@ fn launch(
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "spawns obadam subprocesses, unsupported under Miri")]
 fn failure_free_run_bit_matches_the_in_process_engine() {
     let dir = test_dir("clean");
     let mode = ElasticMode::OneBit { warmup_steps: 3 };
@@ -106,6 +107,7 @@ fn failure_free_run_bit_matches_the_in_process_engine() {
 /// at `M−1` and their resumed trajectory bit-matches a fresh `M−1` run
 /// restored from the same checkpoint.
 #[test]
+#[cfg_attr(miri, ignore = "spawns obadam subprocesses, unsupported under Miri")]
 fn chaos_straggler_epoch_change_bit_matches_fresh_m1_restore() {
     let dir = test_dir("chaos");
     let mode = ElasticMode::OneBit { warmup_steps: 3 };
@@ -176,6 +178,7 @@ fn chaos_straggler_epoch_change_bit_matches_fresh_m1_restore() {
 /// first step is a sync step, and the trajectory still bit-matches the
 /// in-process restore.
 #[test]
+#[cfg_attr(miri, ignore = "spawns obadam subprocesses, unsupported under Miri")]
 fn zeroone_recovery_resumes_at_a_variance_sync_boundary() {
     let dir = test_dir("zeroone");
     let mode = ElasticMode::ZeroOne { var_sync_base: 1 };

@@ -137,6 +137,7 @@ fn hierarchical_stats_are_the_leader_count_chunk_scan() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "multi-rank fan-out is prohibitively slow under Miri")]
 fn transported_stats_match_the_in_process_ledger() {
     // The runner computes its ledger independently (closed form over
     // the frames it actually sends); it must agree with the chunk-scan
@@ -175,6 +176,7 @@ fn transported_stats_match_the_in_process_ledger() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "multi-rank fan-out is prohibitively slow under Miri")]
 fn overlap_pipeline_ledger_is_the_per_bucket_sum() {
     // The new producer: a bucketed step's merged CommStats must equal
     // the chunk model summed over its buckets (each bucket is its own

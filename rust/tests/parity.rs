@@ -27,6 +27,7 @@ fn runtime() -> Option<Rc<Runtime>> {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "loads HLO artifacts from the filesystem (Miri isolation)")]
 fn onebit_compress_artifact_matches_native() {
     let Some(rt) = runtime() else { return };
     let mut rng = Rng::new(0);
@@ -41,6 +42,7 @@ fn onebit_compress_artifact_matches_native() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "loads HLO artifacts from the filesystem (Miri isolation)")]
 fn adam_step_artifact_matches_native() {
     let Some(rt) = runtime() else { return };
     let mut rng = Rng::new(1);
@@ -65,6 +67,7 @@ fn adam_step_artifact_matches_native() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "loads HLO artifacts from the filesystem (Miri isolation)")]
 fn momentum_and_precond_artifacts_match_native() {
     let Some(rt) = runtime() else { return };
     let mut rng = Rng::new(2);
@@ -85,6 +88,7 @@ fn momentum_and_precond_artifacts_match_native() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "loads HLO artifacts from the filesystem (Miri isolation)")]
 fn pjrt_backend_trait_object_works() {
     let Some(rt) = runtime() else { return };
     let backend = PjrtBackend::new(rt);
@@ -106,6 +110,7 @@ fn pjrt_backend_trait_object_works() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "loads HLO artifacts from the filesystem (Miri isolation)")]
 fn lm_train_step_loss_is_sane_and_grads_flow() {
     let Some(rt) = runtime() else { return };
     let spec = rt
@@ -141,6 +146,7 @@ fn lm_train_step_loss_is_sane_and_grads_flow() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "loads HLO artifacts from the filesystem (Miri isolation)")]
 fn cnn_train_step_descends_with_pjrt_adam() {
     // Mini end-to-end: 5 Adam steps on the CNN artifact must reduce loss on
     // a fixed batch — all compute through PJRT, no Python.
@@ -174,6 +180,7 @@ fn cnn_train_step_descends_with_pjrt_adam() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "loads HLO artifacts from the filesystem (Miri isolation)")]
 fn gan_artifacts_execute() {
     let Some(rt) = runtime() else { return };
     let spec = rt.manifest().get("gan_d_step").expect("gan").clone();
@@ -198,6 +205,7 @@ fn gan_artifacts_execute() {
 }
 
 #[test]
+#[cfg_attr(miri, ignore = "loads HLO artifacts from the filesystem (Miri isolation)")]
 fn input_validation_rejects_wrong_shapes() {
     let Some(rt) = runtime() else { return };
     let bad = vec![0.0f32; 7];

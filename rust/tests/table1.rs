@@ -50,6 +50,7 @@ fn model_row(r: &Row) -> (f64, f64) {
 /// Every multi-node allreduce time within 45% of the paper's measurement
 /// (the 2-node Ethernet row is the loosest; most rows land within 15%).
 #[test]
+#[cfg_attr(miri, ignore = "multi-rank fan-out is prohibitively slow under Miri")]
 fn allreduce_times_within_tolerance() {
     for (i, r) in ROWS.iter().enumerate() {
         let (ms, _) = model_row(r);
@@ -65,6 +66,7 @@ fn allreduce_times_within_tolerance() {
 
 /// allreduce%% within 12 percentage points on every row.
 #[test]
+#[cfg_attr(miri, ignore = "multi-rank fan-out is prohibitively slow under Miri")]
 fn allreduce_percentages_within_tolerance() {
     for (i, r) in ROWS.iter().enumerate() {
         let (_, pct) = model_row(r);
@@ -79,6 +81,7 @@ fn allreduce_percentages_within_tolerance() {
 /// The two qualitative Table 1 takeaways the paper draws:
 /// comm%% grows with node count and shrinks with gradient accumulation.
 #[test]
+#[cfg_attr(miri, ignore = "multi-rank fan-out is prohibitively slow under Miri")]
 fn qualitative_trends() {
     let pct = |gpus: usize, accum: usize| {
         let net = NetworkModel::ethernet();
